@@ -1,0 +1,59 @@
+//! Quickstart: LAG-WK vs batch GD on a 9-worker synthetic problem.
+//!
+//! ```bash
+//! cargo run --release --example quickstart            # native engine
+//! cargo run --release --example quickstart -- pjrt    # AOT artifacts (make artifacts)
+//! ```
+
+use lag::coordinator::{run, Algorithm, RunOptions};
+use lag::data::synthetic;
+use lag::experiments::report;
+use lag::grad::NativeEngine;
+use lag::runtime::PjrtEngine;
+
+fn main() -> anyhow::Result<()> {
+    let use_pjrt = std::env::args().nth(1).as_deref() == Some("pjrt");
+
+    // The paper's Fig. 3 workload: 9 workers, 50 samples × 50 features
+    // each, smoothness constants L_m = (1.3^{m-1} + 1)².
+    let problem = synthetic::linreg_increasing_l(9, 50, 50, 1234);
+    println!(
+        "problem: {} (M = {}, d = {}, L = {:.2})",
+        problem.name,
+        problem.m(),
+        problem.d,
+        problem.l_total
+    );
+    println!(
+        "worker smoothness L_m: {:?}\n",
+        problem.l_m.iter().map(|l| l.round()).collect::<Vec<_>>()
+    );
+
+    let opts = RunOptions {
+        max_iters: 20_000,
+        target_err: Some(1e-8), // the paper's accuracy target
+        ..Default::default()
+    };
+
+    let mut traces = Vec::new();
+    for algo in [Algorithm::Gd, Algorithm::LagPs, Algorithm::LagWk] {
+        let trace = if use_pjrt {
+            let mut engine = PjrtEngine::new(&problem, "artifacts")?;
+            run(&problem, algo, &opts, &mut engine)
+        } else {
+            let mut engine = NativeEngine::new(&problem);
+            run(&problem, algo, &opts, &mut engine)
+        };
+        println!("{}", trace.summary());
+        traces.push(trace);
+    }
+
+    println!("\n{}", report::comparison_table(&traces, 1e-8));
+    print!("{}", report::savings_vs_gd(&traces));
+    println!(
+        "\nLAG reaches the same 1e-8 accuracy with a fraction of GD's uploads —\n\
+         the gradients of smooth workers barely change between rounds, so the\n\
+         trigger rule (15a) lets them stay silent."
+    );
+    Ok(())
+}

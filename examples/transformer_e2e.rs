@@ -1,0 +1,94 @@
+//! End-to-end driver: distributed training of a transformer language model
+//! under LAG, through the full three-layer stack.
+//!
+//! The per-worker computation — full-batch loss + gradients of a
+//! decoder-only LM (Pallas blocked-matmul in the MLP, fwd AND bwd) — was
+//! AOT-lowered by `python/compile/aot.py` to `transformer_step_e2e.hlo.txt`
+//! (~865k parameters). This binary loads it via PJRT and trains across 4
+//! workers holding heterogeneous synthetic corpora, with LAG-WK deciding
+//! every round which workers upload.
+//!
+//! ```bash
+//! make artifacts
+//! cargo run --release --example transformer_e2e -- [--steps 300] [--workers 4]
+//!     [--algo lag-wk|gd] [--lr 0.4] [--artifact transformer_step_e2e] [--csv out.csv]
+//! ```
+//!
+//! The run for EXPERIMENTS.md §E2E: 300 steps, 4 workers, both algorithms —
+//! the loss curves match while LAG-WK uploads a fraction of GD's budget.
+
+use lag::coordinator::Algorithm;
+use lag::transformer::{lag_train, synth_corpus, LmTrainOptions, TransformerTrainer};
+use lag::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let steps = args.opt_usize("steps", 300)?;
+    let workers = args.opt_usize("workers", 4)?;
+    let lr = args.opt_f64("lr", 0.4)?;
+    let artifact = args.opt_or("artifact", "transformer_step_e2e");
+    let algo = Algorithm::parse(&args.opt_or("algo", "lag-wk"))?;
+
+    let trainer = TransformerTrainer::new("artifacts", &artifact)?;
+    println!(
+        "model: {} — {} params in {} blocks, vocab {}, batch {}x{}",
+        artifact,
+        trainer.meta.n_params,
+        trainer.meta.params.len(),
+        trainer.meta.vocab,
+        trainer.meta.batch,
+        trainer.meta.seq_len
+    );
+    let corpora: Vec<Vec<i32>> =
+        (0..workers).map(|m| synth_corpus(&trainer.meta, m, 99)).collect();
+    println!("workers: {workers} (distinct Markov corpora — heterogeneous objectives)");
+
+    let opts = LmTrainOptions {
+        algo,
+        steps,
+        // lr on the mean objective → α = lr / M on the sum that LAG sees
+        alpha: lr / workers as f64,
+        d_history: 10,
+        xi: 0.1,
+    };
+    println!("training {} for {steps} steps (α = {:.3e} on Σ_m L_m)...\n", algo.name(), opts.alpha);
+    let t0 = std::time::Instant::now();
+    let recs = lag_train(&trainer, &corpora, &opts)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("{:>6} {:>10} {:>9} {:>10}", "step", "mean loss", "uploads", "upload/GD");
+    for r in recs.iter().filter(|r| r.step % (steps / 15).max(1) == 0 || r.step == 1) {
+        println!(
+            "{:>6} {:>10.4} {:>9} {:>9.0}%",
+            r.step,
+            r.mean_loss,
+            r.cum_uploads,
+            100.0 * r.cum_uploads as f64 / (r.step * workers) as f64
+        );
+    }
+    let last = recs.last().unwrap();
+    println!(
+        "\n{}: loss {:.4} -> {:.4} in {steps} steps ({:.1}s, {:.0}ms/step/worker)",
+        algo.name(),
+        recs[0].mean_loss,
+        last.mean_loss,
+        wall,
+        1e3 * wall / (steps * workers) as f64
+    );
+    println!(
+        "uploads: {} of {} (GD budget) = {:.0}% communication",
+        last.cum_uploads,
+        steps * workers,
+        100.0 * last.cum_uploads as f64 / (steps * workers) as f64
+    );
+
+    if let Some(csv) = args.opt("csv") {
+        let mut w = lag::util::csv::CsvWriter::create(csv, &["step", "mean_loss", "cum_uploads"])?;
+        for r in &recs {
+            w.row(&[r.step.to_string(), format!("{:.6}", r.mean_loss), r.cum_uploads.to_string()])?;
+        }
+        w.finish()?;
+        println!("wrote {csv}");
+    }
+    Ok(())
+}

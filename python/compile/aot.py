@@ -1,0 +1,153 @@
+"""AOT pipeline: lower every (task, shape) to HLO text + manifest.
+
+Run once at build time (``make artifacts``); the Rust runtime then loads
+``artifacts/manifest.json`` and compiles each ``*.hlo.txt`` on the PJRT CPU
+client.  Interchange is HLO **text**, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects; the text parser reassigns ids and round-trips cleanly.
+
+Incremental: a content hash of the compile package is stored in the
+manifest; unchanged inputs make this a no-op.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+# f64 artifacts: the paper's experiments target objective error 1e-8, below
+# f32 resolution at the loss magnitudes involved.
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model, shapes, transformer  # noqa: E402
+
+F64 = jnp.float64
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sources_digest() -> str:
+    """Hash of every .py file under compile/ — the incremental-build key."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for root, _dirs, files in sorted(os.walk(here)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(f.encode())
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def _lower_regression(kind: str, n: int, d: int):
+    spec_x = jax.ShapeDtypeStruct((n, d), F64)
+    spec_v = jax.ShapeDtypeStruct((n,), F64)
+    spec_t = jax.ShapeDtypeStruct((d,), F64)
+    fn = model.linreg_worker if kind == "linreg" else model.logreg_worker
+    return jax.jit(fn).lower(spec_x, spec_v, spec_v, spec_t)
+
+
+def _lower_transformer(cfg: shapes.TransformerConfig):
+    specs = [jax.ShapeDtypeStruct(tuple(s["shape"]), F32)
+             for s in transformer.param_specs(cfg)]
+    tok = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+    fn = lambda params, tokens: transformer.loss_and_grads(params, tokens, cfg)  # noqa: E731
+    return jax.jit(fn).lower(specs, tok)
+
+
+def build(out_dir: str, *, force: bool = False, include_100m: bool = False,
+          verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    digest = _sources_digest()
+
+    if not force and os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as f:
+                old = json.load(f)
+            if old.get("digest") == digest and all(
+                os.path.exists(os.path.join(out_dir, e["file"]))
+                for e in old.get("entries", [])
+            ):
+                if verbose:
+                    print(f"artifacts up to date ({len(old['entries'])} entries)")
+                return old
+        except (json.JSONDecodeError, KeyError):
+            pass
+
+    entries = []
+
+    def emit(name: str, lowered, extra: dict):
+        t0 = time.time()
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entries.append({"name": name, "file": fname, **extra})
+        if verbose:
+            print(f"  {name}: {len(text)} chars in {time.time() - t0:.1f}s")
+
+    if verbose:
+        print("lowering regression artifacts (f64)...")
+    for (n, d) in shapes.LINREG_SHAPES:
+        emit(shapes.linreg_name(n, d), _lower_regression("linreg", n, d),
+             {"kind": "linreg", "n": n, "d": d, "dtype": "f64",
+              "outputs": ["grad", "loss"]})
+    for (n, d) in shapes.LOGREG_SHAPES:
+        emit(shapes.logreg_name(n, d), _lower_regression("logreg", n, d),
+             {"kind": "logreg", "n": n, "d": d, "dtype": "f64",
+              "lam": shapes.LOGREG_LAMBDA, "outputs": ["grad", "loss"]})
+
+    if verbose:
+        print("lowering transformer artifacts (f32)...")
+    for cname, cfg in shapes.TRANSFORMER_CONFIGS.items():
+        if cname == "gpt100m" and not include_100m:
+            continue
+        emit(shapes.transformer_name(cfg), _lower_transformer(cfg),
+             {"kind": "transformer", "dtype": "f32",
+              "config": {"vocab": cfg.vocab, "d_model": cfg.d_model,
+                         "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+                         "d_ff": cfg.d_ff, "seq_len": cfg.seq_len,
+                         "batch": cfg.batch,
+                         "n_params": cfg.n_params()},
+              "params": transformer.param_specs(cfg),
+              "outputs": ["loss", "grads..."]})
+
+    manifest = {"version": 1, "digest": digest, "entries": entries}
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(f"wrote {manifest_path} ({len(entries)} entries)")
+    return manifest
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--include-100m", action="store_true",
+                    default=os.environ.get("LAG_AOT_100M") == "1")
+    args = ap.parse_args()
+    build(args.out, force=args.force, include_100m=args.include_100m)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,7 @@
+"""L1 Pallas kernels (build-time only; lowered into the AOT artifacts)."""
+
+from .linreg_grad import linreg_grad
+from .logreg_grad import logreg_grad
+from .matmul import pmatmul
+
+__all__ = ["linreg_grad", "logreg_grad", "pmatmul"]

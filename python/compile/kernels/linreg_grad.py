@@ -1,0 +1,79 @@
+"""Pallas kernel: weighted least-squares gradient + loss.
+
+The per-worker hot spot of LAG for linear regression (paper eq. (85)):
+
+    loss = sum_i w_i (x_i.theta - y_i)^2
+    grad = 2 X^T (w ⊙ (X theta - y))
+
+TPU mapping (see DESIGN.md §8): X is streamed HBM→VMEM in row panels of
+``block_n`` rows; the residual is produced per panel and the rank-``block_n``
+update ``2 * r @ X_panel`` accumulates into a VMEM-resident [d] output block
+(same output block revisited every grid step — the canonical Pallas
+reduction schedule).  The two panel products are MXU-shaped matmuls.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO, which is what the Rust
+runtime loads.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..shapes import pick_block
+
+
+def _kernel(x_ref, y_ref, w_ref, th_ref, g_ref, l_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    xb = x_ref[...]                       # [bn, d] panel in VMEM
+    res = xb @ th_ref[...] - y_ref[...]   # [bn]
+    r = w_ref[...] * res                  # weighted residual
+    g_ref[...] += 2.0 * (r @ xb)          # rank-bn update of the [d] grad
+    l_ref[...] += jnp.sum(r * res)[None]  # scalar loss accumulator
+
+
+def linreg_grad(x, y, w, theta, *, block_n: int | None = None):
+    """Compute (grad, loss) with the Pallas pipeline. Shapes: x [n,d], y/w [n], theta [d]."""
+    n, d = x.shape
+    bn = block_n or pick_block(n)
+    if n % bn != 0:
+        raise ValueError(f"block_n={bn} must divide n={n}")
+    dt = x.dtype
+    grid = (n // bn,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d,), dt),
+            jax.ShapeDtypeStruct((1,), dt),
+        ],
+        interpret=True,
+    )(x, y, w, theta)
+
+
+@functools.lru_cache(maxsize=None)
+def vmem_estimate(n: int, d: int, block_n: int | None = None, bytes_per_el: int = 8) -> int:
+    """Estimated VMEM footprint (bytes) of one grid step — recorded in §Perf."""
+    bn = block_n or pick_block(n)
+    # X panel + y + w blocks + theta + grad accumulator + loss
+    return bytes_per_el * (bn * d + bn + bn + d + d + 1)

@@ -1,0 +1,86 @@
+"""Blocked Pallas matmul with a custom VJP, used by the transformer MLP.
+
+Forward and both backward products route through the same kernel, so the
+Pallas hot-spot sits inside the lowered fwd+bwd HLO that the Rust runtime
+executes.  Grid is (M/bm, N/bn, K/bk) with the K axis innermost and the
+output block revisited across the K loop (accumulate-in-VMEM schedule; on a
+real TPU this targets the MXU with one [bm,bk]x[bk,bn] systolic pass per
+step).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += a_ref[...] @ b_ref[...]
+
+
+def _largest_divisor(n: int, target: int) -> int:
+    best = 1
+    for b in range(1, min(n, target) + 1):
+        if n % b == 0:
+            best = b
+    return best
+
+
+# Default block target: 256 keeps the three VMEM panels (A, B, accumulator)
+# under ~1 MB f32 — comfortably inside a TPU core's ~16 MB VMEM — while
+# minimizing grid steps (the dominant cost in interpret mode too: the §Perf
+# sweep measured 64→256 as a 4.3x step-time reduction on the e2e model).
+_BLOCK_TARGET = 256
+
+
+def _pallas_matmul(a, b, *, bm: int | None = None, bn: int | None = None,
+                   bk: int | None = None):
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm = bm or _largest_divisor(m, _BLOCK_TARGET)
+    bn = bn or _largest_divisor(n, _BLOCK_TARGET)
+    bk = bk or _largest_divisor(k, _BLOCK_TARGET)
+    return pl.pallas_call(
+        _kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+@jax.custom_vjp
+def pmatmul(a, b):
+    """``a @ b`` through the blocked Pallas kernel, differentiable."""
+    return _pallas_matmul(a, b)
+
+
+def _fwd(a, b):
+    return _pallas_matmul(a, b), (a, b)
+
+
+def _bwd(res, g):
+    a, b = res
+    # dA = g @ B^T, dB = A^T @ g — both through the same Pallas kernel.
+    da = _pallas_matmul(g, b.T)
+    db = _pallas_matmul(a.T, g)
+    return da, db
+
+
+pmatmul.defvjp(_fwd, _bwd)
+
+
+def vmem_estimate(m: int, n: int, k: int, bm: int = 64, bn: int = 64,
+                  bk: int = 64, bytes_per_el: int = 4) -> int:
+    """VMEM bytes per grid step (A panel + B panel + output accumulator)."""
+    return bytes_per_el * (bm * bk + bk * bn + bm * bn)

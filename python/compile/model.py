@@ -1,0 +1,43 @@
+"""L2: per-worker LAG computations, wired to the L1 Pallas kernels.
+
+Each function here is the computation a worker executes once per contacted
+round: full-batch gradient + loss over its (padded) shard.  ``aot.py``
+lowers these, at the shapes in ``shapes.py``, to the HLO-text artifacts the
+Rust runtime loads.
+
+Python never runs on the training path: these exist only to be lowered.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import kernels
+from .shapes import LOGREG_LAMBDA
+
+
+def linreg_worker(x, y, w, theta):
+    """Weighted least-squares (grad, loss) for one worker shard.
+
+    Padding rows carry w=0 and contribute exactly nothing, so one compiled
+    executable serves every worker of an experiment.
+    """
+    grad, loss = kernels.linreg_grad(x, y, w, theta)
+    return grad, loss[0]
+
+
+def logreg_worker(x, y, w, theta, lam: float = LOGREG_LAMBDA):
+    """l2-regularized logistic (grad, loss) for one worker shard (y in +-1)."""
+    grad, loss = kernels.logreg_grad(x, y, w, theta, lam=lam)
+    return grad, loss[0]
+
+
+def linreg_worker_ref(x, y, w, theta):
+    """Pure-jnp path (oracle); used by tests and HLO-level cross-checks."""
+    from .kernels import ref
+    return ref.linreg_grad_ref(x, y, w, theta)
+
+
+def logreg_worker_ref(x, y, w, theta, lam: float = LOGREG_LAMBDA):
+    from .kernels import ref
+    return ref.logreg_grad_ref(x, y, w, theta, lam)

@@ -1,0 +1,109 @@
+"""Artifact shape registry.
+
+Every AOT artifact is identified by (kind, n, d) or a named transformer
+config.  The Rust runtime loads ``artifacts/manifest.json`` (written by
+``aot.py``) and resolves executables by these names, so this file is the
+single source of truth shared by the compile path and the tests.
+
+Per-worker shards are zero-padded (weight ``w = 0``) up to the registered
+``n`` so a single compiled executable serves every worker of an experiment.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+def pick_block(n: int, target: int = 64) -> int:
+    """Largest divisor of ``n`` that is <= ``target``.
+
+    Pallas grids here require the row-block to divide ``n`` exactly; the
+    registered shapes are chosen so a reasonable divisor always exists.
+    """
+    best = 1
+    for b in range(1, min(n, target) + 1):
+        if n % b == 0:
+            best = b
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Regression artifacts (f64: the paper's MATLAB experiments are double
+# precision and Table 5 targets an absolute objective error of 1e-8, which is
+# below f32 resolution at these loss magnitudes).
+# ---------------------------------------------------------------------------
+
+#: (n, d) per worker: synthetic experiments (Figs. 2-4) use 50 samples of
+#: dimension 50 per worker; the "real data" experiments (Figs. 5-6, Table 5)
+#: pad each shard to a common shape per task.
+LINREG_SHAPES: list[tuple[int, int]] = [
+    (50, 50),   # synthetic, Figs. 2-3
+    (176, 8),   # Housing/Bodyfat/Abalone shards (max shard 169 @ M=9)
+]
+
+LOGREG_SHAPES: list[tuple[int, int]] = [
+    (50, 50),    # synthetic, Fig. 4
+    (544, 34),   # Ionosphere/Adult/Derm shards (max shard 535 @ M=9)
+    (224, 4837), # Gisette, Fig. 7 (2000 samples over 9 workers)
+]
+
+#: ℓ2 regularization for logistic regression (paper §4).
+LOGREG_LAMBDA = 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Transformer configs (f32) for the end-to-end LAG training driver.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int
+    batch: int
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def n_params(self) -> int:
+        d, f = self.d_model, self.d_ff
+        per_layer = 2 * d + 4 * d * d + 2 * d + d * f + f + f * d + d
+        return self.vocab * d + self.seq_len * d + self.n_layers * per_layer + 2 * d
+
+
+TRANSFORMER_CONFIGS: dict[str, TransformerConfig] = {
+    # Small enough for unit tests and the pytest suite.
+    "tiny": TransformerConfig(
+        name="tiny", vocab=64, d_model=32, n_layers=2, n_heads=2,
+        d_ff=64, seq_len=16, batch=4,
+    ),
+    # The end-to-end driver: ~1.3M params, a few hundred LAG steps on CPU.
+    "e2e": TransformerConfig(
+        name="e2e", vocab=512, d_model=128, n_layers=4, n_heads=4,
+        d_ff=512, seq_len=64, batch=8,
+    ),
+    # Paper-scale config (~110M params). Registered so the config system is
+    # complete; AOT-compiled only when LAG_AOT_100M=1 (hours on CPU).
+    "gpt100m": TransformerConfig(
+        name="gpt100m", vocab=32768, d_model=768, n_layers=12, n_heads=12,
+        d_ff=3072, seq_len=256, batch=8,
+    ),
+}
+
+
+def linreg_name(n: int, d: int) -> str:
+    return f"linreg_grad_{n}x{d}"
+
+
+def logreg_name(n: int, d: int) -> str:
+    return f"logreg_grad_{n}x{d}"
+
+
+def transformer_name(cfg: TransformerConfig) -> str:
+    return f"transformer_step_{cfg.name}"

@@ -1,0 +1,135 @@
+"""L2: decoder-only transformer LM whose MLP matmuls route through the
+Pallas blocked-matmul kernel (L1).
+
+Used by the end-to-end driver: Rust runs LAG across workers whose local
+gradients are this model's full-batch grads, computed by the AOT artifact
+``transformer_step_<cfg>``.
+
+Parameters travel as a *flat ordered list* of arrays; the ordering and the
+init scheme are recorded in the manifest so the Rust side can materialize
+initial parameters without Python.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.matmul import pmatmul
+from .shapes import TransformerConfig
+
+F32 = jnp.float32
+
+
+def param_specs(cfg: TransformerConfig) -> list[dict]:
+    """Ordered parameter manifest: name, shape, init ('normal'/'zeros'/'ones'), std."""
+    d, f = cfg.d_model, cfg.d_ff
+    std = 0.02
+    specs: list[dict] = [
+        {"name": "tok_emb", "shape": [cfg.vocab, d], "init": "normal", "std": std},
+        {"name": "pos_emb", "shape": [cfg.seq_len, d], "init": "normal", "std": std},
+    ]
+    for l in range(cfg.n_layers):
+        p = f"layer{l}."
+        specs += [
+            {"name": p + "ln1_scale", "shape": [d], "init": "ones", "std": 0.0},
+            {"name": p + "ln1_bias", "shape": [d], "init": "zeros", "std": 0.0},
+            {"name": p + "wq", "shape": [d, d], "init": "normal", "std": std},
+            {"name": p + "wk", "shape": [d, d], "init": "normal", "std": std},
+            {"name": p + "wv", "shape": [d, d], "init": "normal", "std": std},
+            {"name": p + "wo", "shape": [d, d], "init": "normal", "std": std},
+            {"name": p + "ln2_scale", "shape": [d], "init": "ones", "std": 0.0},
+            {"name": p + "ln2_bias", "shape": [d], "init": "zeros", "std": 0.0},
+            {"name": p + "w1", "shape": [d, f], "init": "normal", "std": std},
+            {"name": p + "b1", "shape": [f], "init": "zeros", "std": 0.0},
+            {"name": p + "w2", "shape": [f, d], "init": "normal", "std": std},
+            {"name": p + "b2", "shape": [d], "init": "zeros", "std": 0.0},
+        ]
+    specs += [
+        {"name": "lnf_scale", "shape": [d], "init": "ones", "std": 0.0},
+        {"name": "lnf_bias", "shape": [d], "init": "zeros", "std": 0.0},
+    ]
+    return specs
+
+
+def init_params(cfg: TransformerConfig, seed: int = 0) -> list[jnp.ndarray]:
+    """Reference initializer (tests only; Rust re-derives from the manifest)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for s in param_specs(cfg):
+        if s["init"] == "normal":
+            out.append(jnp.asarray(rng.normal(0.0, s["std"], s["shape"]), F32))
+        elif s["init"] == "ones":
+            out.append(jnp.ones(s["shape"], F32))
+        else:
+            out.append(jnp.zeros(s["shape"], F32))
+    return out
+
+
+def _layernorm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def _mlp_matmul(x2d, w):
+    """Route through the Pallas kernel when block shapes divide; jnp fallback
+    keeps the tiny test config valid for arbitrary sizes."""
+    m, k = x2d.shape
+    n = w.shape[1]
+    if m % 16 == 0 and k % 16 == 0 and n % 16 == 0:
+        return pmatmul(x2d, w)
+    return x2d @ w
+
+
+def forward_loss(params: list, tokens: jnp.ndarray, cfg: TransformerConfig):
+    """Next-token cross-entropy over a [B, T] int32 batch. Tied output head."""
+    it = iter(params)
+    tok_emb = next(it)
+    pos_emb = next(it)
+    b, t = tokens.shape
+    h = tok_emb[tokens] + pos_emb[None, :t, :]
+
+    mask = jnp.tril(jnp.ones((t, t), F32))
+    neg = jnp.asarray(-1e9, F32)
+
+    for _ in range(cfg.n_layers):
+        ln1_s, ln1_b = next(it), next(it)
+        wq, wk, wv, wo = next(it), next(it), next(it), next(it)
+        ln2_s, ln2_b = next(it), next(it)
+        w1, b1, w2, b2 = next(it), next(it), next(it), next(it)
+
+        x = _layernorm(h, ln1_s, ln1_b)
+        q = (x @ wq).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        k = (x @ wk).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        v = (x @ wv).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        att = jnp.einsum("bihd,bjhd->bhij", q, k) / jnp.sqrt(
+            jnp.asarray(cfg.head_dim, F32))
+        att = jnp.where(mask[None, None, :, :] > 0, att, neg)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhij,bjhd->bihd", att, v).reshape(b, t, cfg.d_model)
+        h = h + o @ wo
+
+        x = _layernorm(h, ln2_s, ln2_b)
+        x2 = x.reshape(b * t, cfg.d_model)
+        hmid = jax.nn.gelu(_mlp_matmul(x2, w1) + b1)
+        out = _mlp_matmul(hmid, w2) + b2
+        h = h + out.reshape(b, t, cfg.d_model)
+
+    lnf_s, lnf_b = next(it), next(it)
+    h = _layernorm(h, lnf_s, lnf_b)
+    logits = h @ tok_emb.T  # tied head, [B, T, V]
+
+    # next-token prediction: positions 0..T-2 predict tokens 1..T-1
+    lp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def loss_and_grads(params: list, tokens: jnp.ndarray, cfg: TransformerConfig):
+    """(loss, grads...) — the AOT'd per-worker LAG computation."""
+    loss, grads = jax.value_and_grad(
+        lambda ps: forward_loss(ps, tokens, cfg))(params)
+    return (loss, *grads)

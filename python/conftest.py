@@ -1,0 +1,9 @@
+import os
+import sys
+
+# Regression artifacts are f64; enable x64 before any test imports jax arrays.
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

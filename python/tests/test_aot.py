@@ -1,0 +1,75 @@
+"""AOT pipeline: manifest round-trip, HLO text validity, incrementality."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, shapes
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.build(str(out), force=True, verbose=False)
+    return str(out), manifest
+
+
+def test_manifest_entries_complete(built):
+    out, manifest = built
+    names = {e["name"] for e in manifest["entries"]}
+    for (n, d) in shapes.LINREG_SHAPES:
+        assert shapes.linreg_name(n, d) in names
+    for (n, d) in shapes.LOGREG_SHAPES:
+        assert shapes.logreg_name(n, d) in names
+    assert "transformer_step_tiny" in names
+    assert "transformer_step_e2e" in names
+    # 100M config is registered but not AOT'd by default
+    assert "transformer_step_gpt100m" not in names
+
+
+def test_hlo_files_exist_and_parse_shape(built):
+    out, manifest = built
+    for e in manifest["entries"]:
+        path = os.path.join(out, e["file"])
+        assert os.path.exists(path)
+        text = open(path).read()
+        assert "ENTRY" in text and "HloModule" in text
+        if e["kind"] in ("linreg", "logreg"):
+            # f64 artifacts with the registered shapes in the signature
+            assert f"f64[{e['n']},{e['d']}]" in text
+            assert e["dtype"] == "f64"
+
+
+def test_manifest_json_loads(built):
+    out, _ = built
+    with open(os.path.join(out, "manifest.json")) as f:
+        m = json.load(f)
+    assert m["version"] == 1
+    assert m["digest"]
+
+
+def test_incremental_noop(built):
+    out, _ = built
+    before = {f: os.path.getmtime(os.path.join(out, f)) for f in os.listdir(out)}
+    aot.build(out, force=False, verbose=False)
+    after = {f: os.path.getmtime(os.path.join(out, f)) for f in os.listdir(out)}
+    assert before == after
+
+
+def test_transformer_entry_has_param_manifest(built):
+    _, manifest = built
+    e = next(x for x in manifest["entries"] if x["name"] == "transformer_step_e2e")
+    assert e["config"]["n_params"] == shapes.TRANSFORMER_CONFIGS["e2e"].n_params()
+    specs = e["params"]
+    assert specs[0]["name"] == "tok_emb"
+    for s in specs:
+        assert s["init"] in ("normal", "zeros", "ones")
+        assert all(isinstance(v, int) for v in s["shape"])
+
+
+def test_logreg_entries_record_lambda(built):
+    _, manifest = built
+    for e in manifest["entries"]:
+        if e["kind"] == "logreg":
+            assert e["lam"] == shapes.LOGREG_LAMBDA

@@ -1,0 +1,240 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes, dtypes, block sizes, and degenerate inputs; these
+are the core correctness signal for everything the Rust runtime executes.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile import kernels
+from compile.kernels import ref
+from compile.kernels.matmul import _pallas_matmul
+from compile.shapes import pick_block
+
+hypothesis.settings.register_profile(
+    "lag", deadline=None, max_examples=25,
+    suppress_health_check=list(hypothesis.HealthCheck))
+hypothesis.settings.load_profile("lag")
+
+
+def _tol(dt):
+    return dict(rtol=1e-10, atol=1e-10) if dt == jnp.float64 else dict(rtol=2e-4, atol=2e-4)
+
+
+def _data(rng, n, d, dt):
+    x = jnp.asarray(rng.normal(size=(n, d)), dt)
+    y = jnp.asarray(rng.normal(size=n), dt)
+    w = jnp.asarray((rng.random(n) > 0.25).astype(np.float64), dt)
+    th = jnp.asarray(rng.normal(size=d), dt)
+    return x, y, w, th
+
+
+# ---------------------------------------------------------------------------
+# linreg_grad
+# ---------------------------------------------------------------------------
+
+@given(n=st.sampled_from([8, 20, 50, 64, 176]),
+       d=st.integers(1, 40),
+       dt64=st.booleans(),
+       seed=st.integers(0, 2**31 - 1))
+def test_linreg_matches_ref(n, d, dt64, seed):
+    dt = jnp.float64 if dt64 else jnp.float32
+    rng = np.random.default_rng(seed)
+    x, y, w, th = _data(rng, n, d, dt)
+    g, l = kernels.linreg_grad(x, y, w, th)
+    gr, lr = ref.linreg_grad_ref(x, y, w, th)
+    np.testing.assert_allclose(g, gr, **_tol(dt))
+    np.testing.assert_allclose(l[0], lr, **_tol(dt))
+
+
+@given(bn=st.sampled_from([1, 2, 5, 10, 25, 50]), seed=st.integers(0, 1000))
+def test_linreg_block_size_invariant(bn, seed):
+    """Result is independent of the HBM->VMEM row-panel schedule."""
+    rng = np.random.default_rng(seed)
+    x, y, w, th = _data(rng, 50, 13, jnp.float64)
+    g, l = kernels.linreg_grad(x, y, w, th, block_n=bn)
+    gr, lr = ref.linreg_grad_ref(x, y, w, th)
+    np.testing.assert_allclose(g, gr, rtol=1e-10)
+    np.testing.assert_allclose(l[0], lr, rtol=1e-10)
+
+
+def test_linreg_all_padded_rows_zero():
+    """w = 0 everywhere (fully padded shard) gives exactly zero grad/loss."""
+    rng = np.random.default_rng(0)
+    x, y, _w, th = _data(rng, 50, 7, jnp.float64)
+    w = jnp.zeros(50, jnp.float64)
+    g, l = kernels.linreg_grad(x, y, w, th)
+    assert float(jnp.max(jnp.abs(g))) == 0.0
+    assert float(l[0]) == 0.0
+
+
+def test_linreg_padding_invariance():
+    """Zero-weight padding rows change nothing — the property that lets one
+    artifact serve all workers."""
+    rng = np.random.default_rng(3)
+    x, y, w, th = _data(rng, 40, 9, jnp.float64)
+    w = jnp.ones(40, jnp.float64)
+    g0, l0 = kernels.linreg_grad(x, y, w, th, block_n=8)
+    xp = jnp.concatenate([x, jnp.asarray(rng.normal(size=(24, 9)))])
+    yp = jnp.concatenate([y, jnp.asarray(rng.normal(size=24))])
+    wp = jnp.concatenate([w, jnp.zeros(24)])
+    g1, l1 = kernels.linreg_grad(xp, yp, wp, th, block_n=8)
+    np.testing.assert_allclose(g0, g1, rtol=1e-12)
+    np.testing.assert_allclose(l0, l1, rtol=1e-12)
+
+
+def test_linreg_grad_is_autodiff_grad():
+    """The analytic kernel gradient equals jax.grad of the weighted loss."""
+    rng = np.random.default_rng(5)
+    x, y, w, th = _data(rng, 30, 6, jnp.float64)
+    loss_fn = lambda t: jnp.sum(w * (x @ t - y) ** 2)  # noqa: E731
+    g_auto = jax.grad(loss_fn)(th)
+    g, l = kernels.linreg_grad(x, y, w, th, block_n=10)
+    np.testing.assert_allclose(g, g_auto, rtol=1e-10)
+    np.testing.assert_allclose(l[0], loss_fn(th), rtol=1e-10)
+
+
+def test_linreg_rejects_bad_block():
+    rng = np.random.default_rng(0)
+    x, y, w, th = _data(rng, 50, 3, jnp.float64)
+    with pytest.raises(ValueError):
+        kernels.linreg_grad(x, y, w, th, block_n=7)
+
+
+# ---------------------------------------------------------------------------
+# logreg_grad
+# ---------------------------------------------------------------------------
+
+@given(n=st.sampled_from([8, 20, 50, 64, 224]),
+       d=st.integers(1, 40),
+       lam=st.sampled_from([0.0, 1e-3, 0.1]),
+       seed=st.integers(0, 2**31 - 1))
+def test_logreg_matches_ref(n, d, lam, seed):
+    rng = np.random.default_rng(seed)
+    x, _y, w, th = _data(rng, n, d, jnp.float64)
+    y = jnp.asarray(rng.choice([-1.0, 1.0], size=n))
+    g, l = kernels.logreg_grad(x, y, w, th, lam=lam)
+    gr, lr = ref.logreg_grad_ref(x, y, w, th, lam)
+    np.testing.assert_allclose(g, gr, rtol=1e-10, atol=1e-12)
+    np.testing.assert_allclose(l[0], lr, rtol=1e-10)
+
+
+@given(scale=st.sampled_from([1e2, 1e4, 1e8]), seed=st.integers(0, 100))
+def test_logreg_extreme_margins_stable(scale, seed):
+    """No overflow/NaN at |margin| up to 1e8 — the stable-sigmoid path."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(20, 4)) * scale)
+    y = jnp.asarray(rng.choice([-1.0, 1.0], size=20))
+    w = jnp.ones(20, jnp.float64)
+    th = jnp.asarray(rng.normal(size=4))
+    g, l = kernels.logreg_grad(x, y, w, th, lam=1e-3)
+    gr, lr = ref.logreg_grad_ref(x, y, w, th, 1e-3)
+    assert np.isfinite(np.asarray(g)).all() and np.isfinite(float(l[0]))
+    np.testing.assert_allclose(g, gr, rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(l[0], lr, rtol=1e-9)
+
+
+def test_logreg_grad_is_autodiff_grad():
+    rng = np.random.default_rng(7)
+    x, _y, w, th = _data(rng, 24, 5, jnp.float64)
+    y = jnp.asarray(rng.choice([-1.0, 1.0], size=24))
+    lam = 1e-3
+
+    def loss_fn(t):
+        return jnp.sum(w * jnp.logaddexp(0.0, -y * (x @ t))) + 0.5 * lam * jnp.dot(t, t)
+
+    g_auto = jax.grad(loss_fn)(th)
+    g, l = kernels.logreg_grad(x, y, w, th, lam=lam, block_n=8)
+    np.testing.assert_allclose(g, g_auto, rtol=1e-9)
+    np.testing.assert_allclose(l[0], loss_fn(th), rtol=1e-12)
+
+
+def test_logreg_regularizer_applied_exactly_once():
+    """Multi-block grids must not re-add lam*theta per block."""
+    rng = np.random.default_rng(11)
+    x, _y, w, th = _data(rng, 48, 6, jnp.float64)
+    y = jnp.asarray(rng.choice([-1.0, 1.0], size=48))
+    for bn in (48, 16, 8, 4, 1):
+        g, l = kernels.logreg_grad(x, y, w, th, lam=0.5, block_n=bn)
+        gr, lr = ref.logreg_grad_ref(x, y, w, th, 0.5)
+        np.testing.assert_allclose(g, gr, rtol=1e-10, err_msg=f"bn={bn}")
+        np.testing.assert_allclose(l[0], lr, rtol=1e-10, err_msg=f"bn={bn}")
+
+
+def test_logreg_zero_lambda_no_reg():
+    rng = np.random.default_rng(13)
+    x, _y, w, _ = _data(rng, 16, 3, jnp.float64)
+    y = jnp.asarray(rng.choice([-1.0, 1.0], size=16))
+    th = jnp.zeros(3, jnp.float64)
+    _, l = kernels.logreg_grad(x, y, w, th, lam=0.0)
+    # at theta = 0 the loss is sum(w) * log(2)
+    np.testing.assert_allclose(l[0], float(jnp.sum(w)) * np.log(2.0), rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# blocked matmul
+# ---------------------------------------------------------------------------
+
+@given(m=st.sampled_from([16, 32, 64, 128]),
+       k=st.sampled_from([16, 32, 64]),
+       n=st.sampled_from([16, 48, 64]),
+       seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    np.testing.assert_allclose(kernels.pmatmul(a, b), a @ b, rtol=2e-4, atol=2e-4)
+
+
+@given(bm=st.sampled_from([8, 16, 32, 64]),
+       bk=st.sampled_from([8, 16, 32]),
+       bn=st.sampled_from([8, 16, 64]))
+def test_matmul_block_schedule_invariant(bm, bk, bn):
+    rng = np.random.default_rng(42)
+    a = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(32, 64)), jnp.float32)
+    out = _pallas_matmul(a, b, bm=bm, bk=bk, bn=bn)
+    np.testing.assert_allclose(out, a @ b, rtol=2e-4, atol=2e-4)
+
+
+def test_matmul_vjp_matches_autodiff():
+    rng = np.random.default_rng(9)
+    a = jnp.asarray(rng.normal(size=(32, 16)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(16, 48)), jnp.float32)
+    f1 = lambda a, b: jnp.sum(jnp.tanh(kernels.pmatmul(a, b)))  # noqa: E731
+    f2 = lambda a, b: jnp.sum(jnp.tanh(a @ b))  # noqa: E731
+    g1a, g1b = jax.grad(f1, argnums=(0, 1))(a, b)
+    g2a, g2b = jax.grad(f2, argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(g1a, g2a, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(g1b, g2b, rtol=1e-3, atol=1e-4)
+
+
+def test_matmul_f64():
+    rng = np.random.default_rng(10)
+    a = jnp.asarray(rng.normal(size=(32, 32)), jnp.float64)
+    b = jnp.asarray(rng.normal(size=(32, 32)), jnp.float64)
+    np.testing.assert_allclose(kernels.pmatmul(a, b), a @ b, rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# pick_block
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(1, 4096), target=st.integers(1, 256))
+def test_pick_block_divides_and_bounded(n, target):
+    b = pick_block(n, target)
+    assert n % b == 0
+    assert 1 <= b <= min(n, target)
+
+
+@given(n=st.integers(1, 512))
+def test_pick_block_maximal(n):
+    b = pick_block(n, 64)
+    for cand in range(b + 1, min(n, 64) + 1):
+        assert n % cand != 0, f"{cand} is a larger valid divisor than {b}"

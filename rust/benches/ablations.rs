@@ -1,0 +1,97 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! * ξ sweep — communication vs iteration tradeoff of the trigger weight
+//!   (eq. (24): larger ξ → fewer uploads/iter, more iterations).
+//! * D sweep — history depth (paper uses D = 10).
+//! * WK vs PS — worker-side rule is provably lazier (15b ⇒ 15a).
+//! * heterogeneity sweep — savings as a function of the L_m spread.
+//!
+//! `cargo bench --bench ablations`
+
+use lag::coordinator::{run, Algorithm, RunOptions};
+use lag::data::{synthetic, Task};
+use lag::grad::NativeEngine;
+
+fn main() {
+    let p = synthetic::linreg_increasing_l(9, 50, 50, 1234);
+    let target = 1e-8;
+
+    println!("== xi sweep (LAG-WK, D = 10) ==");
+    println!("{:<8} {:>8} {:>10}", "xi", "iters", "uploads");
+    for xi in [0.0, 0.01, 0.05, 0.1, 0.3, 0.5, 0.9] {
+        let opts = RunOptions {
+            max_iters: 100_000,
+            target_err: Some(target),
+            wk_xi: xi,
+            ..Default::default()
+        };
+        let t = run(&p, Algorithm::LagWk, &opts, &mut NativeEngine::new(&p));
+        println!(
+            "{:<8} {:>8} {:>10}",
+            xi,
+            t.converged_iter.map(|k| k.to_string()).unwrap_or("—".into()),
+            t.uploads_at_target.map(|u| u.to_string()).unwrap_or("—".into())
+        );
+    }
+
+    println!("\n== D sweep (LAG-WK, xi = 1/D) ==");
+    println!("{:<8} {:>8} {:>10}", "D", "iters", "uploads");
+    for d in [1, 2, 5, 10, 20, 50] {
+        let opts = RunOptions {
+            max_iters: 100_000,
+            target_err: Some(target),
+            d_history: d,
+            wk_xi: 1.0 / d as f64,
+            ..Default::default()
+        };
+        let t = run(&p, Algorithm::LagWk, &opts, &mut NativeEngine::new(&p));
+        println!(
+            "{:<8} {:>8} {:>10}",
+            d,
+            t.converged_iter.map(|k| k.to_string()).unwrap_or("—".into()),
+            t.uploads_at_target.map(|u| u.to_string()).unwrap_or("—".into())
+        );
+    }
+
+    println!("\n== WK vs PS at matched xi ==");
+    println!("{:<8} {:>10} {:>10}", "xi", "wk", "ps");
+    for xi in [0.1, 0.5, 1.0] {
+        let mk = |wk: bool| RunOptions {
+            max_iters: 100_000,
+            target_err: Some(target),
+            wk_xi: if wk { xi } else { 0.1 },
+            ps_xi: if wk { 1.0 } else { xi },
+            ..Default::default()
+        };
+        let wk = run(&p, Algorithm::LagWk, &mk(true), &mut NativeEngine::new(&p));
+        let ps = run(&p, Algorithm::LagPs, &mk(false), &mut NativeEngine::new(&p));
+        println!(
+            "{:<8} {:>10} {:>10}",
+            xi,
+            wk.uploads_at_target.map(|u| u.to_string()).unwrap_or("—".into()),
+            ps.uploads_at_target.map(|u| u.to_string()).unwrap_or("—".into())
+        );
+    }
+
+    println!("\n== heterogeneity sweep (base of L_m growth) ==");
+    println!("{:<8} {:>12} {:>12} {:>9}", "base", "gd uploads", "wk uploads", "savings");
+    for base in [1.0, 1.2, 1.3, 1.5] {
+        let targets: Vec<f64> = (0..9)
+            .map(|mi| {
+                let b: f64 = base;
+                let v = b.powi(mi as i32) + 1.0;
+                v * v
+            })
+            .collect();
+        let pb = synthetic::synthetic_with_targets(Task::LinReg, &targets, 50, 50, 777);
+        let opts =
+            RunOptions { max_iters: 100_000, target_err: Some(target), ..Default::default() };
+        let gd = run(&pb, Algorithm::Gd, &opts, &mut NativeEngine::new(&pb));
+        let wk = run(&pb, Algorithm::LagWk, &opts, &mut NativeEngine::new(&pb));
+        let (g, w) = (
+            gd.uploads_at_target.unwrap_or(gd.total_uploads()),
+            wk.uploads_at_target.unwrap_or(wk.total_uploads()),
+        );
+        println!("{:<8} {:>12} {:>12} {:>8.1}x", base, g, w, g as f64 / w.max(1) as f64);
+    }
+}

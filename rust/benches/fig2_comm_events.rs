@@ -1,0 +1,22 @@
+//! Bench: regenerate Fig. 2's communication-event pattern and verify the
+//! Lemma 4 frequency ordering. `cargo bench --bench fig2_comm_events`.
+
+use lag::coordinator::{run, Algorithm, RunOptions};
+use lag::data::synthetic;
+use lag::grad::NativeEngine;
+use lag::metrics::ascii_event_plot;
+
+fn main() {
+    let p = synthetic::linreg_increasing_l(9, 50, 50, 1234);
+    let opts = RunOptions { max_iters: 1000, stop_at_target: false, ..Default::default() };
+    let t0 = std::time::Instant::now();
+    let trace = run(&p, Algorithm::LagWk, &opts, &mut NativeEngine::new(&p));
+    let wall = t0.elapsed().as_secs_f64();
+    println!("bench fig2: LAG-WK, 1000 iterations in {wall:.3}s");
+    print!("{}", ascii_event_plot(&trace, &[0, 2, 4, 6, 8], 72));
+    println!("\nuploads per worker (L_1 < ... < L_9):");
+    for (m, e) in trace.upload_events.iter().enumerate() {
+        println!("  worker {:>2}: {:>5}  (H = {:.4})", m + 1, e.len(), p.importance()[m]);
+    }
+    println!("total uploads: {} / {} (GD budget)", trace.total_uploads(), 1000 * 9);
+}

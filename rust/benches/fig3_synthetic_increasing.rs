@@ -1,0 +1,39 @@
+//! Bench: regenerate Fig. 3 (synthetic linreg, increasing L_m) end-to-end
+//! and time the runs. `cargo bench --bench fig3_synthetic_increasing`.
+//!
+//! Engine: native by default; set LAG_BENCH_ENGINE=pjrt to drive the AOT
+//! artifacts (requires `make artifacts`).
+
+use lag::data::synthetic;
+use lag::experiments::{paper_opts, report, EngineKind, ExpContext};
+
+fn ctx() -> ExpContext {
+    ExpContext {
+        engine: match std::env::var("LAG_BENCH_ENGINE").as_deref() {
+            Ok("pjrt") => EngineKind::Pjrt,
+            _ => EngineKind::Native,
+        },
+        quick: std::env::var("LAG_BENCH_QUICK").is_ok(),
+        ..Default::default()
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let ctx = ctx();
+    let p = synthetic::linreg_increasing_l(9, 50, 50, 1234);
+    println!("bench fig3: synthetic linreg, increasing L_m, M = 9, eps = {:.0e}", ctx.target());
+    let t0 = std::time::Instant::now();
+    let traces = ctx.compare(&p, |algo| paper_opts(&ctx, algo, p.m(), 60_000))?;
+    println!("{}", report::comparison_table(&traces, ctx.target()));
+    print!("{}", report::savings_vs_gd(&traces));
+    for t in &traces {
+        println!(
+            "  {:<10} wall={:.3}s  ({:.1} iters/ms)",
+            t.algo,
+            t.wall_secs,
+            t.records.last().map(|r| r.k).unwrap_or(0) as f64 / (t.wall_secs * 1e3).max(1e-9)
+        );
+    }
+    println!("total bench wall: {:.2}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,23 @@
+//! Bench: regenerate Fig. 6 (logreg on simulated Ionosphere/Adult/Derm).
+//! `cargo bench --bench fig6_logreg_real`.
+
+use lag::experiments::{fig6, paper_opts, report, EngineKind, ExpContext};
+
+fn main() -> anyhow::Result<()> {
+    let ctx = ExpContext {
+        engine: match std::env::var("LAG_BENCH_ENGINE").as_deref() {
+            Ok("pjrt") => EngineKind::Pjrt,
+            _ => EngineKind::Native,
+        },
+        quick: std::env::var("LAG_BENCH_QUICK").is_ok(),
+        ..Default::default()
+    };
+    let p = fig6::problem(3)?;
+    println!("bench fig6: logreg real trio, M = 9, d = 34, eps = {:.0e}", ctx.target());
+    let t0 = std::time::Instant::now();
+    let traces = ctx.compare(&p, |algo| paper_opts(&ctx, algo, p.m(), 150_000))?;
+    println!("{}", report::comparison_table(&traces, ctx.target()));
+    print!("{}", report::savings_vs_gd(&traces));
+    println!("total bench wall: {:.2}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,38 @@
+//! Bench: regenerate Fig. 7 (logreg on simulated Gisette, 2000x4837).
+//! `cargo bench --bench fig7_gisette` — heavier than the other benches;
+//! runs in quick mode unless LAG_BENCH_FULL=1.
+
+use lag::coordinator::Algorithm;
+use lag::experiments::{fig7, paper_opts, report, EngineKind, ExpContext};
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::var("LAG_BENCH_FULL").is_ok();
+    let ctx = ExpContext {
+        engine: match std::env::var("LAG_BENCH_ENGINE").as_deref() {
+            Ok("pjrt") => EngineKind::Pjrt,
+            _ => EngineKind::Native,
+        },
+        quick: !full,
+        ..Default::default()
+    };
+    println!("bench fig7: simulated Gisette, M = 9, eps = {:.0e} (full={full})", ctx.target());
+    let t0 = std::time::Instant::now();
+    let p = fig7::problem()?;
+    println!("problem built in {:.1}s (L = {:.4})", t0.elapsed().as_secs_f64(), p.l_total);
+    let t1 = std::time::Instant::now();
+    let traces = ctx.compare(&p, |algo| {
+        let mut o = paper_opts(&ctx, algo, p.m(), 40_000);
+        if matches!(algo, Algorithm::CycIag | Algorithm::NumIag) {
+            o.eval_every = 10;
+            o.record_every = 10;
+        }
+        o
+    })?;
+    println!("{}", report::comparison_table(&traces, ctx.target()));
+    print!("{}", report::savings_vs_gd(&traces));
+    for t in &traces {
+        println!("  {:<10} wall={:.2}s", t.algo, t.wall_secs);
+    }
+    println!("total bench wall: {:.2}s", t1.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Microbenchmarks of the L3 hot paths — the inputs to the §Perf pass:
+//!
+//! * trigger check (DiffHistory + RHS + comparison)
+//! * server update step (axpy + dist2 + history push)
+//! * native worker gradient (linreg 50x50, logreg 544x34)
+//! * PJRT worker gradient incl. theta staging (if artifacts present)
+//! * full LAG-WK iteration (9 workers, native)
+//!
+//! `cargo bench --bench hotpath`
+
+use lag::coordinator::trigger::{DiffHistory, TriggerConfig};
+use lag::coordinator::{run, Algorithm, ParameterServer, RunOptions};
+use lag::data::synthetic;
+use lag::grad::{GradEngine, NativeEngine};
+use lag::util::timer::{bench, fmt_dur};
+use std::time::Duration;
+
+fn main() {
+    let budget = Duration::from_millis(300);
+
+    // trigger check
+    {
+        let mut h = DiffHistory::new(10);
+        for i in 0..10 {
+            h.push(1.0 + i as f64);
+        }
+        let t = TriggerConfig::uniform(10, 0.1);
+        let mut acc = 0u64;
+        let s = bench(
+            || {
+                let rhs = t.rhs(0.01, 9, &h);
+                if t.wk_violated(0.5, rhs) {
+                    acc += 1;
+                }
+            },
+            1000,
+            budget,
+        );
+        println!("{}", s.report("trigger_check          "));
+        std::hint::black_box(acc);
+    }
+
+    // server step (d = 50)
+    {
+        let mut s = ParameterServer::new(50, 9, 10, vec![0.0; 50]);
+        s.apply_delta(0, &vec![1e-3; 50]);
+        let st = bench(|| { s.step(1e-3); }, 1000, budget);
+        println!("{}", st.report("server_step(d=50)      "));
+    }
+
+    // native gradients
+    {
+        let p = synthetic::linreg_increasing_l(9, 50, 50, 1);
+        let mut e = NativeEngine::new(&p);
+        let theta = vec![0.1; 50];
+        let st = bench(|| { std::hint::black_box(e.grad(0, &theta)); }, 50, budget);
+        println!("{}", st.report("native_grad linreg 50x50 "));
+    }
+    {
+        let p = lag::experiments::fig6::problem(3).expect("fig6");
+        let mut e = NativeEngine::new(&p);
+        let theta = vec![0.1; 34];
+        let st = bench(|| { std::hint::black_box(e.grad(3, &theta)); }, 20, budget);
+        println!("{}", st.report("native_grad logreg 544x34"));
+    }
+
+    // PJRT gradient (skipped without artifacts)
+    if lag::runtime::Manifest::load("artifacts").is_ok() {
+        let p = synthetic::linreg_increasing_l(9, 50, 50, 1);
+        let mut e = lag::runtime::PjrtEngine::new(&p, "artifacts").expect("pjrt engine");
+        let theta = vec![0.1; 50];
+        let st = bench(|| { std::hint::black_box(e.grad(0, &theta)); }, 20, budget);
+        println!("{}", st.report("pjrt_grad   linreg 50x50 "));
+    } else {
+        println!("pjrt_grad: SKIP (run `make artifacts`)");
+    }
+
+    // full LAG-WK iteration (native, M = 9, d = 50): measured as total/iters
+    {
+        let p = synthetic::linreg_increasing_l(9, 50, 50, 1);
+        let opts = RunOptions { max_iters: 2000, stop_at_target: false, ..Default::default() };
+        let t0 = std::time::Instant::now();
+        let tr = run(&p, Algorithm::LagWk, &opts, &mut NativeEngine::new(&p));
+        let per_iter = t0.elapsed().as_secs_f64() / 2000.0;
+        println!(
+            "lag_wk_iteration(M=9,d=50): {} per iteration ({} uploads total)",
+            fmt_dur(per_iter),
+            tr.total_uploads()
+        );
+    }
+}

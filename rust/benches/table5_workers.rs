@@ -1,0 +1,23 @@
+//! Bench: regenerate Table 5 — uploads to eps = 1e-8 for M in {9, 18, 27} on
+//! both real-data tasks, all five algorithms, printed next to the paper's
+//! numbers. `cargo bench --bench table5_workers`
+//! (LAG_BENCH_QUICK=1 restricts to M = 9 with a relaxed target).
+
+use lag::experiments::{table5, EngineKind, ExpContext};
+
+fn main() -> anyhow::Result<()> {
+    let ctx = ExpContext {
+        engine: match std::env::var("LAG_BENCH_ENGINE").as_deref() {
+            Ok("pjrt") => EngineKind::Pjrt,
+            _ => EngineKind::Native,
+        },
+        quick: std::env::var("LAG_BENCH_QUICK").is_ok(),
+        ..Default::default()
+    };
+    let ms: &[usize] = if ctx.quick { &[3] } else { &[3, 6, 9] };
+    let t0 = std::time::Instant::now();
+    let res = table5::measure(&ctx, ms)?;
+    print!("{}", table5::render(&res, ms));
+    println!("total bench wall: {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,228 @@
+//! Declarative run configs: JSON files describing (problem, algorithm,
+//! options, engine) — the front door for scripted sweeps and deployments
+//! (`lag run --config cfg.json`).
+//!
+//! ```json
+//! {
+//!   "problem": {"kind": "synthetic", "task": "linreg", "profile": "increasing",
+//!                "m": 9, "n": 50, "d": 50, "seed": 1234},
+//!   "algorithm": "lag-wk",
+//!   "engine": "native",
+//!   "options": {"max_iters": 20000, "target_err": 1e-8, "wk_xi": 0.1, "d_history": 10},
+//!   "trace_out": "results/run.csv"
+//! }
+//! ```
+
+use crate::coordinator::{Algorithm, RunOptions};
+use crate::data::{synthetic, Problem, Task};
+use crate::experiments::EngineKind;
+use crate::util::json::{parse, Json};
+
+/// What data the run uses.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ProblemSpec {
+    Synthetic {
+        task: Task,
+        profile: synthetic::LProfile,
+        m: usize,
+        n: usize,
+        d: usize,
+        seed: u64,
+    },
+    /// The paper's real-data trios (simulated): `shards_each` workers per
+    /// dataset (3 → M = 9).
+    UciLinreg { shards_each: usize },
+    UciLogreg { shards_each: usize },
+    Gisette,
+}
+
+impl ProblemSpec {
+    pub fn build(&self) -> anyhow::Result<Problem> {
+        Ok(match self {
+            ProblemSpec::Synthetic { task, profile, m, n, d, seed } => {
+                synthetic::synthetic_problem(*task, *profile, *m, *n, *d, *seed)
+            }
+            ProblemSpec::UciLinreg { shards_each } => {
+                crate::experiments::fig5::problem(*shards_each)?
+            }
+            ProblemSpec::UciLogreg { shards_each } => {
+                crate::experiments::fig6::problem(*shards_each)?
+            }
+            ProblemSpec::Gisette => crate::experiments::fig7::problem()?,
+        })
+    }
+}
+
+/// A fully described run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub problem: ProblemSpec,
+    pub algorithm: Algorithm,
+    pub engine: EngineKind,
+    pub options: RunOptions,
+    pub artifacts_dir: String,
+    pub trace_out: Option<String>,
+}
+
+impl RunConfig {
+    pub fn from_file(path: &str) -> anyhow::Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read config {path}: {e}"))?;
+        RunConfig::from_json_str(&text)
+    }
+
+    pub fn from_json_str(text: &str) -> anyhow::Result<RunConfig> {
+        let root = parse(text)?;
+        let problem = parse_problem(root.get("problem")?)?;
+        let algorithm = Algorithm::parse(
+            root.get("algorithm").ok().and_then(|v| v.as_str()).unwrap_or("lag-wk"),
+        )?;
+        let engine = EngineKind::parse(
+            root.get("engine").ok().and_then(|v| v.as_str()).unwrap_or("native"),
+        )?;
+        let mut options = RunOptions::default();
+        if let Ok(o) = root.get("options") {
+            apply_options(o, &mut options)?;
+        }
+        Ok(RunConfig {
+            problem,
+            algorithm,
+            engine,
+            options,
+            artifacts_dir: root
+                .get("artifacts")
+                .ok()
+                .and_then(|v| v.as_str())
+                .unwrap_or("artifacts")
+                .to_string(),
+            trace_out: root.get("trace_out").ok().and_then(|v| v.as_str()).map(String::from),
+        })
+    }
+}
+
+fn parse_task(j: &Json) -> anyhow::Result<Task> {
+    Ok(match j.get("task")?.as_str().unwrap_or("linreg") {
+        "linreg" => Task::LinReg,
+        "logreg" => Task::LogReg {
+            lam: j.get("lam").ok().and_then(|v| v.as_f64()).unwrap_or(1e-3),
+        },
+        other => anyhow::bail!("unknown task '{other}'"),
+    })
+}
+
+fn parse_problem(j: &Json) -> anyhow::Result<ProblemSpec> {
+    match j.get("kind")?.as_str().unwrap_or("") {
+        "synthetic" => {
+            let profile = match j.get("profile").ok().and_then(|v| v.as_str()).unwrap_or("increasing") {
+                "increasing" => synthetic::LProfile::Increasing,
+                "uniform" => synthetic::LProfile::Uniform(
+                    j.get("uniform_l").ok().and_then(|v| v.as_f64()).unwrap_or(4.0),
+                ),
+                other => anyhow::bail!("unknown profile '{other}'"),
+            };
+            Ok(ProblemSpec::Synthetic {
+                task: parse_task(j)?,
+                profile,
+                m: j.get("m")?.as_usize().unwrap_or(9),
+                n: j.get("n").ok().and_then(|v| v.as_usize()).unwrap_or(50),
+                d: j.get("d").ok().and_then(|v| v.as_usize()).unwrap_or(50),
+                seed: j.get("seed").ok().and_then(|v| v.as_f64()).unwrap_or(1234.0) as u64,
+            })
+        }
+        "uci-linreg" => Ok(ProblemSpec::UciLinreg {
+            shards_each: j.get("shards_each").ok().and_then(|v| v.as_usize()).unwrap_or(3),
+        }),
+        "uci-logreg" => Ok(ProblemSpec::UciLogreg {
+            shards_each: j.get("shards_each").ok().and_then(|v| v.as_usize()).unwrap_or(3),
+        }),
+        "gisette" => Ok(ProblemSpec::Gisette),
+        other => anyhow::bail!("unknown problem kind '{other}'"),
+    }
+}
+
+fn apply_options(j: &Json, o: &mut RunOptions) -> anyhow::Result<()> {
+    let obj = j.as_obj().ok_or_else(|| anyhow::anyhow!("options must be an object"))?;
+    for (k, v) in obj {
+        match k.as_str() {
+            "max_iters" => o.max_iters = v.as_usize().unwrap_or(o.max_iters),
+            "target_err" => o.target_err = v.as_f64(),
+            "stop_at_target" => {
+                o.stop_at_target = matches!(v, Json::Bool(true));
+            }
+            "d_history" => o.d_history = v.as_usize().unwrap_or(o.d_history),
+            "wk_xi" => o.wk_xi = v.as_f64().unwrap_or(o.wk_xi),
+            "ps_xi" => o.ps_xi = v.as_f64().unwrap_or(o.ps_xi),
+            "alpha" => o.alpha = v.as_f64(),
+            "seed" => o.seed = v.as_f64().unwrap_or(0.0) as u64,
+            "record_every" => o.record_every = v.as_usize().unwrap_or(1),
+            "eval_every" => o.eval_every = v.as_usize().unwrap_or(1),
+            other => anyhow::bail!("unknown option '{other}'"),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "problem": {"kind": "synthetic", "task": "logreg", "lam": 0.001,
+                   "profile": "uniform", "uniform_l": 4.0,
+                   "m": 6, "n": 30, "d": 20, "seed": 7},
+      "algorithm": "lag-ps",
+      "engine": "native",
+      "options": {"max_iters": 500, "target_err": 1e-6, "ps_xi": 0.5},
+      "trace_out": "out.csv"
+    }"#;
+
+    #[test]
+    fn parses_full_config() {
+        let c = RunConfig::from_json_str(SAMPLE).unwrap();
+        assert_eq!(c.algorithm, Algorithm::LagPs);
+        assert_eq!(c.engine, EngineKind::Native);
+        assert_eq!(c.options.max_iters, 500);
+        assert_eq!(c.options.target_err, Some(1e-6));
+        assert_eq!(c.options.ps_xi, 0.5);
+        assert_eq!(c.trace_out.as_deref(), Some("out.csv"));
+        match c.problem {
+            ProblemSpec::Synthetic { task, m, n, d, seed, .. } => {
+                assert_eq!(task, Task::LogReg { lam: 0.001 });
+                assert_eq!((m, n, d, seed), (6, 30, 20, 7));
+            }
+            other => panic!("wrong spec {other:?}"),
+        }
+    }
+
+    #[test]
+    fn builds_and_runs() {
+        let c = RunConfig::from_json_str(SAMPLE).unwrap();
+        let p = c.problem.build().unwrap();
+        assert_eq!(p.m(), 6);
+        assert_eq!(p.d, 20);
+        let mut e = crate::grad::NativeEngine::new(&p);
+        let t = crate::coordinator::run(&p, c.algorithm, &c.options, &mut e);
+        assert!(t.iters() > 1);
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let c = RunConfig::from_json_str(
+            r#"{"problem": {"kind": "uci-linreg"}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.algorithm, Algorithm::LagWk);
+        assert_eq!(c.engine, EngineKind::Native);
+        assert!(matches!(c.problem, ProblemSpec::UciLinreg { shards_each: 3 }));
+    }
+
+    #[test]
+    fn rejects_unknown_fields() {
+        assert!(RunConfig::from_json_str(
+            r#"{"problem": {"kind": "synthetic", "task": "linreg", "m": 3},
+                 "options": {"bogus": 1}}"#
+        )
+        .is_err());
+        assert!(RunConfig::from_json_str(r#"{"problem": {"kind": "mnist"}}"#).is_err());
+    }
+}

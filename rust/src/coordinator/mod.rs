@@ -1,0 +1,131 @@
+//! L3 coordinator — the paper's contribution.
+//!
+//! * [`trigger`] — the LAG-WK (15a) and LAG-PS (15b) conditions and the
+//!   D-deep iterate-difference history they share.
+//! * [`server`] — parameter-server state: θ, the lazily aggregated gradient
+//!   recursion (4), stored worker copies {θ̂_m}.
+//! * [`run`] — the deterministic synchronous driver implementing GD,
+//!   LAG-WK, LAG-PS, Cyc-IAG and Num-IAG with exact communication
+//!   accounting (used by every experiment).
+//! * [`transport`] — a real message-passing deployment: worker threads,
+//!   channels, a serial-uplink latency model.
+//! * [`lyapunov`] — the Lyapunov function (16) used by the convergence
+//!   property tests.
+
+pub mod checkpoint;
+pub mod lyapunov;
+pub mod proximal;
+pub mod quantize;
+pub mod robust;
+pub mod run;
+pub mod server;
+pub mod tcp;
+pub mod transport;
+pub mod trigger;
+pub mod wire;
+
+pub use checkpoint::TrainState;
+pub use proximal::{prox_run, ProxOptions};
+pub use quantize::QuantizedVec;
+pub use robust::{robust_run, Attack, RobustOptions};
+pub use run::{run, RunOptions};
+pub use server::ParameterServer;
+pub use tcp::{run_leader, run_worker};
+pub use transport::{parallel_run, TransportOptions};
+pub use trigger::{DiffHistory, TriggerConfig};
+pub use wire::WireMsg;
+
+pub use crate::metrics::{IterRecord, RunTrace};
+
+/// The five algorithms of the paper's evaluation (§4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    /// Batch gradient descent, iteration (2): every worker uploads fresh
+    /// gradients every round. α = 1/L.
+    Gd,
+    /// LAG with the worker-side rule (15a), Algorithm 1. α = 1/L.
+    LagWk,
+    /// LAG with the server-side rule (15b), Algorithm 2. α = 1/L.
+    LagPs,
+    /// Cyclic incremental aggregated gradient: one worker refreshed per
+    /// round, round-robin. α = 1/(M·L).
+    CycIag,
+    /// IAG with importance sampling: one random worker per round,
+    /// P(m) ∝ L_m. α = 1/(M·L).
+    NumIag,
+}
+
+impl Algorithm {
+    pub const ALL: [Algorithm; 5] =
+        [Algorithm::CycIag, Algorithm::NumIag, Algorithm::LagPs, Algorithm::LagWk, Algorithm::Gd];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Gd => "batch-gd",
+            Algorithm::LagWk => "lag-wk",
+            Algorithm::LagPs => "lag-ps",
+            Algorithm::CycIag => "cyc-iag",
+            Algorithm::NumIag => "num-iag",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Algorithm> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "gd" | "batch-gd" | "batchgd" => Algorithm::Gd,
+            "lag-wk" | "lagwk" | "wk" => Algorithm::LagWk,
+            "lag-ps" | "lagps" | "ps" => Algorithm::LagPs,
+            "cyc-iag" | "cyciag" | "cyc" | "cyclic-iag" => Algorithm::CycIag,
+            "num-iag" | "numiag" | "num" => Algorithm::NumIag,
+            other => anyhow::bail!("unknown algorithm '{other}'"),
+        })
+    }
+
+    /// Paper stepsize: 1/L for GD and LAG, 1/(M·L) for the IAG baselines
+    /// ("to optimize performance and guarantee stability", §4).
+    pub fn default_alpha(&self, l_total: f64, m: usize) -> f64 {
+        match self {
+            Algorithm::Gd | Algorithm::LagWk | Algorithm::LagPs => 1.0 / l_total,
+            Algorithm::CycIag | Algorithm::NumIag => 1.0 / (m as f64 * l_total),
+        }
+    }
+}
+
+/// Exact communication & computation accounting.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CommStats {
+    /// Worker→server gradient(-delta) messages — the paper's communication
+    /// complexity unit (Table 5 counts uploads).
+    pub uploads: u64,
+    /// Server→worker parameter sends (broadcast counts M).
+    pub downloads: u64,
+    /// Local gradient evaluations across workers.
+    pub grad_evals: u64,
+}
+
+impl CommStats {
+    pub fn total_messages(&self) -> u64 {
+        self.uploads + self.downloads
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for a in Algorithm::ALL {
+            assert_eq!(Algorithm::parse(a.name()).unwrap(), a);
+        }
+        assert!(Algorithm::parse("sgd").is_err());
+    }
+
+    #[test]
+    fn default_alphas_follow_paper() {
+        let l = 4.0;
+        assert_eq!(Algorithm::Gd.default_alpha(l, 9), 0.25);
+        assert_eq!(Algorithm::LagWk.default_alpha(l, 9), 0.25);
+        assert_eq!(Algorithm::CycIag.default_alpha(l, 9), 0.25 / 9.0);
+        assert_eq!(Algorithm::NumIag.default_alpha(l, 9), 0.25 / 9.0);
+    }
+}

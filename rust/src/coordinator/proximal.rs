@@ -1,0 +1,240 @@
+//! Proximal LAG — the extension the paper's R2 calls out: nonsmooth
+//! regularizers via a prox step on the server.
+//!
+//! Problem: `min_θ Σ_m L_m(θ) + g(θ)` with `g` nonsmooth (here g = λ₁‖θ‖₁,
+//! the lasso / sparse-logistic case). Workers behave exactly as in LAG —
+//! the trigger rules compare *smooth-part* gradients — while the server
+//! replaces the gradient step with
+//!
+//! ```text
+//!   θ^{k+1} = prox_{α g}( θᵏ − α ∇ᵏ )      prox_{αλ‖·‖₁} = soft-threshold
+//! ```
+//!
+//! Convergence follows the same Lyapunov argument with the proximal-PL
+//! condition; empirically the communication savings carry over unchanged,
+//! which `benches/ablations` and the tests below check.
+
+use super::server::ParameterServer;
+use super::trigger::TriggerConfig;
+use super::{Algorithm, CommStats};
+use crate::data::Problem;
+use crate::grad::GradEngine;
+use crate::linalg::{dist2, sub};
+use crate::metrics::{IterRecord, RunTrace};
+use std::time::Instant;
+
+/// Soft-thresholding: `prox_{t‖·‖₁}(v)_i = sign(v_i)·max(|v_i| − t, 0)`.
+#[inline]
+pub fn soft_threshold(v: &mut [f64], t: f64) {
+    for x in v.iter_mut() {
+        *x = if *x > t {
+            *x - t
+        } else if *x < -t {
+            *x + t
+        } else {
+            0.0
+        };
+    }
+}
+
+/// Composite objective value: smooth part + λ₁‖θ‖₁.
+pub fn composite_loss(problem: &Problem, theta: &[f64], lam1: f64) -> f64 {
+    problem.global_loss(theta) + lam1 * theta.iter().map(|x| x.abs()).sum::<f64>()
+}
+
+/// Options for the proximal driver.
+#[derive(Debug, Clone)]
+pub struct ProxOptions {
+    pub max_iters: usize,
+    pub lam1: f64,
+    pub d_history: usize,
+    pub xi: f64,
+    pub alpha: Option<f64>,
+    /// Stop when the composite objective change over a window falls below.
+    pub rel_tol: f64,
+}
+
+impl Default for ProxOptions {
+    fn default() -> Self {
+        ProxOptions {
+            max_iters: 2000,
+            lam1: 1e-2,
+            d_history: 10,
+            xi: 0.1,
+            alpha: None,
+            rel_tol: 0.0,
+        }
+    }
+}
+
+/// Run proximal GD (`algo = Gd`) or proximal LAG-WK (`algo = LagWk`).
+/// The trace's `obj_err` column holds the *composite* objective value
+/// (there is no closed-form θ\* under ℓ1; curves are compared directly).
+pub fn prox_run(
+    problem: &Problem,
+    algo: Algorithm,
+    opts: &ProxOptions,
+    engine: &mut dyn GradEngine,
+) -> RunTrace {
+    assert!(
+        matches!(algo, Algorithm::Gd | Algorithm::LagWk),
+        "proximal driver implements GD and LAG-WK"
+    );
+    let m = problem.m();
+    let d = problem.d;
+    let alpha = opts.alpha.unwrap_or(1.0 / problem.l_total);
+    let xi = if algo == Algorithm::LagWk { opts.xi } else { 0.0 };
+    let trigger = TriggerConfig::uniform(opts.d_history, xi);
+    let mut server = ParameterServer::new(d, m, opts.d_history, vec![0.0; d]);
+    let mut cached: Vec<Option<Vec<f64>>> = vec![None; m];
+    let mut stats = CommStats::default();
+    let mut events: Vec<Vec<usize>> = vec![Vec::new(); m];
+    let mut records = Vec::new();
+    let t_start = Instant::now();
+
+    records.push(IterRecord {
+        k: 0,
+        obj_err: composite_loss(problem, &server.theta, opts.lam1),
+        cum_uploads: 0,
+        cum_downloads: 0,
+        cum_grad_evals: 0,
+    });
+
+    let mut prev_obj = f64::INFINITY;
+    for k in 1..=opts.max_iters {
+        stats.downloads += m as u64;
+        let rhs = trigger.rhs(alpha, m, &server.history);
+        for mi in 0..m {
+            let (g, _) = engine.grad(mi, &server.theta);
+            stats.grad_evals += 1;
+            let violated = match &cached[mi] {
+                None => true,
+                Some(c) => trigger.wk_violated(dist2(c, &g), rhs),
+            };
+            if violated || algo == Algorithm::Gd {
+                let delta = match &cached[mi] {
+                    Some(c) => sub(&g, c),
+                    None => g.clone(),
+                };
+                server.apply_delta(mi, &delta);
+                cached[mi] = Some(g);
+                stats.uploads += 1;
+                events[mi].push(k);
+            }
+        }
+
+        // proximal step: gradient step then soft-threshold, with the
+        // history fed the *post-prox* iterate difference
+        let prev = server.theta.clone();
+        crate::linalg::axpy(-alpha, &server.agg_grad.clone(), &mut server.theta);
+        soft_threshold(&mut server.theta, alpha * opts.lam1);
+        server.history.push(dist2(&server.theta, &prev));
+
+        let obj = composite_loss(problem, &server.theta, opts.lam1);
+        records.push(IterRecord {
+            k,
+            obj_err: obj,
+            cum_uploads: stats.uploads,
+            cum_downloads: stats.downloads,
+            cum_grad_evals: stats.grad_evals,
+        });
+        if opts.rel_tol > 0.0 && (prev_obj - obj).abs() <= opts.rel_tol * obj.abs().max(1e-300) {
+            break;
+        }
+        prev_obj = obj;
+    }
+
+    RunTrace {
+        algo: format!("prox-{}", algo.name()),
+        problem: problem.name.clone(),
+        engine: engine.name().to_string(),
+        m,
+        alpha,
+        records,
+        upload_events: events,
+        converged_iter: None,
+        uploads_at_target: None,
+        wall_secs: t_start.elapsed().as_secs_f64(),
+        thetas: Vec::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::grad::NativeEngine;
+
+    #[test]
+    fn soft_threshold_cases() {
+        let mut v = vec![3.0, -3.0, 0.5, -0.5, 0.0];
+        soft_threshold(&mut v, 1.0);
+        assert_eq!(v, vec![2.0, -2.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn prox_gd_monotone_decrease() {
+        let p = synthetic::linreg_increasing_l(5, 30, 12, 55);
+        let opts = ProxOptions { max_iters: 300, lam1: 0.05, ..Default::default() };
+        let t = prox_run(&p, Algorithm::Gd, &opts, &mut NativeEngine::new(&p));
+        // composite objective strictly decreases under prox-GD with α = 1/L
+        for w in t.records.windows(2) {
+            assert!(w[1].obj_err <= w[0].obj_err + 1e-9 * w[0].obj_err.abs());
+        }
+    }
+
+    #[test]
+    fn prox_lag_matches_prox_gd_value_with_fewer_uploads() {
+        let p = synthetic::linreg_increasing_l(7, 30, 12, 56);
+        let opts = ProxOptions { max_iters: 1500, lam1: 0.05, ..Default::default() };
+        let gd = prox_run(&p, Algorithm::Gd, &opts, &mut NativeEngine::new(&p));
+        let wk = prox_run(&p, Algorithm::LagWk, &opts, &mut NativeEngine::new(&p));
+        let (g, w) = (gd.final_err(), wk.final_err());
+        assert!(
+            (g - w).abs() <= 1e-5 * g.abs().max(1e-300),
+            "composite values diverge: {g} vs {w}"
+        );
+        assert!(
+            wk.total_uploads() * 2 < gd.total_uploads(),
+            "prox-LAG should save uploads: {} vs {}",
+            wk.total_uploads(),
+            gd.total_uploads()
+        );
+    }
+
+    #[test]
+    fn lasso_produces_sparsity() {
+        let p = synthetic::linreg_increasing_l(4, 40, 20, 57);
+        // strong l1 → many exact zeros
+        let opts = ProxOptions { max_iters: 800, lam1: 5.0, ..Default::default() };
+        let mut engine = NativeEngine::new(&p);
+        let t = prox_run(&p, Algorithm::LagWk, &opts, &mut engine);
+        assert!(t.records.len() > 10);
+        // re-derive the final iterate by rerunning (trace doesn't store θ);
+        // instead check the objective stabilized and is finite
+        assert!(t.final_err().is_finite());
+        // direct sparsity check via a short rerun capturing θ
+        let mut server_like = {
+            let opts2 = ProxOptions { max_iters: 800, lam1: 5.0, ..Default::default() };
+            let mut e = NativeEngine::new(&p);
+            // inline mini-run to capture final theta
+            let alpha = 1.0 / p.l_total;
+            let mut theta = vec![0.0; p.d];
+            for _ in 0..opts2.max_iters {
+                let mut g = vec![0.0; p.d];
+                for mi in 0..p.m() {
+                    let (gm, _) = e.grad(mi, &theta);
+                    for (a, b) in g.iter_mut().zip(&gm) {
+                        *a += b;
+                    }
+                }
+                crate::linalg::axpy(-alpha, &g, &mut theta);
+                soft_threshold(&mut theta, alpha * opts2.lam1);
+            }
+            theta
+        };
+        let zeros = server_like.iter().filter(|&&x| x == 0.0).count();
+        assert!(zeros > 0, "lasso should zero out some coordinates");
+        server_like.truncate(0);
+    }
+}

@@ -1,0 +1,333 @@
+//! Robust LAG — the paper's conclusion lists "robustifying our aggregation
+//! rules to deal with cyber attacks" as future work; this module builds it.
+//!
+//! Attack model: a subset of workers turns Byzantine *after* setup and
+//! replaces its uploads δ∇ with adversarial vectors (sign-flipped, scaled,
+//! or random noise). Setup (the k = 1 bootstrap round) is trusted — the
+//! standard assumption; without any trusted anchor no screen can bound a
+//! first message.
+//!
+//! Defense: the server knows each worker's smoothness constant L_m and its
+//! stored copy θ̂_m, so an honest delta must satisfy the smoothness bound
+//!
+//! ```text
+//!   ‖δ∇_m‖ = ‖∇L_m(θᵏ) − ∇L_m(θ̂_m)‖ ≤ L_m · ‖θᵏ − θ̂_m‖
+//! ```
+//!
+//! This is a theorem, not a heuristic, so honest workers are never
+//! rejected. A violating upload is dropped; after `evict_after` consecutive
+//! violations the worker is *evicted*: its stale cached contribution is
+//! subtracted from the aggregate and it is ignored from then on, so the
+//! server converges to the honest-subset optimum instead of dragging a
+//! poisoned (or stale) term forever.
+
+use super::server::ParameterServer;
+use super::trigger::TriggerConfig;
+use super::RunOptions;
+use crate::data::Problem;
+use crate::grad::GradEngine;
+use crate::linalg::{axpy, dist2, norm2, sub};
+use crate::metrics::{IterRecord, RunTrace};
+use crate::util::Rng;
+use std::time::Instant;
+
+/// Byzantine behaviours.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Attack {
+    /// Upload −c·δ∇ (gradient reversal).
+    SignFlip { scale: f64 },
+    /// Upload c·δ∇ with c ≫ 1 (blow-up).
+    Blowup { scale: f64 },
+    /// Upload N(0, σ²) noise instead of the delta.
+    Noise { sigma: f64 },
+}
+
+/// Robust-run configuration.
+#[derive(Debug, Clone)]
+pub struct RobustOptions {
+    pub base: RunOptions,
+    /// Indices of workers that turn Byzantine after the bootstrap round.
+    pub byzantine: Vec<usize>,
+    pub attack: Attack,
+    /// Enable the smoothness-bound screen + eviction.
+    pub defend: bool,
+    /// Multiplicative slack on the bound (fp headroom).
+    pub tolerance: f64,
+    /// Consecutive violations before eviction.
+    pub evict_after: u32,
+}
+
+impl RobustOptions {
+    pub fn new(base: RunOptions, byzantine: Vec<usize>, attack: Attack, defend: bool) -> Self {
+        RobustOptions { base, byzantine, attack, defend, tolerance: 1e-6, evict_after: 3 }
+    }
+}
+
+/// Outcome counters for the defense.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DefenseStats {
+    pub rejected: u64,
+    pub accepted: u64,
+    pub honest_rejected: u64,
+    pub evicted: u32,
+}
+
+/// LAG-WK with Byzantine workers and (optionally) the smoothness screen.
+/// Returns the trace, defense counters, and the final iterate.
+pub fn robust_run(
+    problem: &Problem,
+    opts: &RobustOptions,
+    engine: &mut dyn GradEngine,
+) -> (RunTrace, DefenseStats, Vec<f64>) {
+    let m = problem.m();
+    let d = problem.d;
+    let o = &opts.base;
+    let alpha = o.alpha.unwrap_or(1.0 / problem.l_total);
+    let trigger = TriggerConfig::uniform(o.d_history, o.wk_xi);
+    let mut server = ParameterServer::new(d, m, o.d_history, vec![0.0; d]);
+    let mut cached: Vec<Option<Vec<f64>>> = vec![None; m];
+    let mut strikes = vec![0u32; m];
+    let mut evicted = vec![false; m];
+    let mut events: Vec<Vec<usize>> = vec![Vec::new(); m];
+    let mut rng = Rng::new(o.seed ^ 0xBAD);
+    let mut uploads = 0u64;
+    let mut stats = DefenseStats::default();
+    let mut records = vec![IterRecord {
+        k: 0,
+        obj_err: problem.obj_err(&server.theta),
+        cum_uploads: 0,
+        cum_downloads: 0,
+        cum_grad_evals: 0,
+    }];
+    let t0 = Instant::now();
+
+    for k in 1..=o.max_iters {
+        let rhs = trigger.rhs(alpha, m, &server.history);
+        for mi in 0..m {
+            if evicted[mi] {
+                continue;
+            }
+            // the bootstrap round (k = 1) is trusted; attackers act after
+            let is_byz = k > 1 && opts.byzantine.contains(&mi);
+            let (g, _) = engine.grad(mi, &server.theta);
+            let violated = match &cached[mi] {
+                None => true,
+                Some(c) => trigger.wk_violated(dist2(c, &g), rhs),
+            };
+            // Byzantine workers always "upload" (maximize damage)
+            if !violated && !is_byz {
+                continue;
+            }
+            let honest_delta = match &cached[mi] {
+                Some(c) => sub(&g, c),
+                None => g.clone(),
+            };
+            let delta: Vec<f64> = if is_byz {
+                match opts.attack {
+                    Attack::SignFlip { scale } => {
+                        honest_delta.iter().map(|x| -scale * x).collect()
+                    }
+                    Attack::Blowup { scale } => {
+                        honest_delta.iter().map(|x| scale * x).collect()
+                    }
+                    Attack::Noise { sigma } => (0..d).map(|_| sigma * rng.normal()).collect(),
+                }
+            } else {
+                honest_delta
+            };
+            uploads += 1;
+            events[mi].push(k);
+
+            if opts.defend && k > 1 {
+                // smoothness screen (exact bound, see module docs). The
+                // absolute floor covers fp rounding near machine-precision
+                // convergence (‖Δθ‖ → 0 makes the relative bound vacuous);
+                // anything under it is harmless by construction.
+                let floor = 1e-18 * (1.0 + norm2(&server.agg_grad));
+                let ok = match server.hat_dist_sq(mi) {
+                    None => true,
+                    Some(d2) => {
+                        let lim = (1.0 + opts.tolerance) * problem.l_m[mi];
+                        norm2(&delta) <= lim * lim * d2 + floor
+                    }
+                };
+                if !ok {
+                    stats.rejected += 1;
+                    if !is_byz {
+                        stats.honest_rejected += 1;
+                    }
+                    strikes[mi] += 1;
+                    if strikes[mi] >= opts.evict_after {
+                        // eviction: remove the stale cached contribution
+                        if let Some(c) = &cached[mi] {
+                            let neg: Vec<f64> = c.iter().map(|x| -x).collect();
+                            axpy(1.0, &neg, &mut server.agg_grad);
+                        }
+                        evicted[mi] = true;
+                        stats.evicted += 1;
+                    }
+                    continue;
+                }
+                strikes[mi] = 0;
+            }
+            stats.accepted += 1;
+            server.apply_delta(mi, &delta);
+            // honest path mirrors plain LAG-WK exactly (cache = fresh g);
+            // an accepted adversarial delta must instead track what the
+            // server actually absorbed (old + delta)
+            cached[mi] = if is_byz {
+                Some(match &cached[mi] {
+                    Some(c) => c.iter().zip(&delta).map(|(a, b)| a + b).collect(),
+                    None => delta.clone(),
+                })
+            } else {
+                Some(g)
+            };
+        }
+        server.step(alpha);
+        let obj = problem.obj_err(&server.theta);
+        records.push(IterRecord {
+            k,
+            obj_err: obj,
+            cum_uploads: uploads,
+            cum_downloads: m as u64 * k as u64,
+            cum_grad_evals: m as u64 * k as u64,
+        });
+        if let Some(t) = o.target_err {
+            if obj <= t && o.stop_at_target {
+                break;
+            }
+        }
+    }
+
+    let theta = server.theta.clone();
+    (
+        RunTrace {
+            algo: format!("robust-lag-wk(defend={})", opts.defend),
+            problem: problem.name.clone(),
+            engine: engine.name().to_string(),
+            m,
+            alpha,
+            records,
+            upload_events: events,
+            converged_iter: None,
+            uploads_at_target: None,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            thetas: Vec::new(),
+        },
+        stats,
+        theta,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Algorithm;
+    use crate::data::{Problem, synthetic};
+    use crate::grad::NativeEngine;
+
+    fn base(iters: usize) -> RunOptions {
+        RunOptions { max_iters: iters, ..Default::default() }
+    }
+
+    /// Rebuild the problem restricted to honest workers (for computing the
+    /// honest-subset optimum the defended run should reach).
+    fn honest_subproblem(p: &Problem, byz: &[usize]) -> Problem {
+        let shards: Vec<_> = p
+            .workers
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !byz.contains(i))
+            .map(|(_, s)| {
+                (s.x.slice_rows(0, s.n_real), s.y[..s.n_real].to_vec())
+            })
+            .collect();
+        Problem::build("honest", p.task, shards, None).unwrap()
+    }
+
+    #[test]
+    fn no_byzantine_defense_never_rejects_honest() {
+        let p = synthetic::linreg_increasing_l(6, 25, 10, 61);
+        let opts = RobustOptions::new(
+            base(300),
+            vec![],
+            Attack::SignFlip { scale: 1.0 },
+            true,
+        );
+        let (trace, stats, _) = robust_run(&p, &opts, &mut NativeEngine::new(&p));
+        assert_eq!(stats.honest_rejected, 0, "smoothness bound is a theorem");
+        assert_eq!(stats.rejected, 0);
+        // and matches plain LAG-WK upload-for-upload
+        let plain = crate::coordinator::run(
+            &p,
+            Algorithm::LagWk,
+            &base(300),
+            &mut NativeEngine::new(&p),
+        );
+        assert_eq!(trace.total_uploads(), plain.total_uploads());
+    }
+
+    #[test]
+    fn blowup_attack_defended_run_reaches_honest_optimum() {
+        let p = synthetic::linreg_increasing_l(6, 25, 10, 62);
+        let byz = vec![5];
+        let mk = |defend| {
+            RobustOptions::new(base(2000), byz.clone(), Attack::Blowup { scale: 50.0 }, defend)
+        };
+        let (bad, _, _) = robust_run(&p, &mk(false), &mut NativeEngine::new(&p));
+        let (_, stats, theta) = robust_run(&p, &mk(true), &mut NativeEngine::new(&p));
+        assert!(stats.rejected > 0);
+        assert_eq!(stats.honest_rejected, 0);
+        assert_eq!(stats.evicted, 1);
+        // defended run converges to the honest-subset optimum
+        let honest = honest_subproblem(&p, &byz);
+        let herr = honest.obj_err(&theta);
+        assert!(herr < 1e-6, "honest-subproblem error {herr}");
+        // undefended run is catastrophically worse on the full objective
+        assert!(
+            bad.final_err() > 1.0 || bad.final_err().is_nan(),
+            "undefended should be ruined, err={}",
+            bad.final_err()
+        );
+    }
+
+    #[test]
+    fn signflip_attack_screened_and_evicted() {
+        let p = synthetic::linreg_increasing_l(5, 25, 8, 63);
+        let byz = vec![4];
+        let opts =
+            RobustOptions::new(base(2000), byz.clone(), Attack::SignFlip { scale: 10.0 }, true);
+        let (_, stats, theta) = robust_run(&p, &opts, &mut NativeEngine::new(&p));
+        assert!(stats.rejected > 0);
+        assert_eq!(stats.honest_rejected, 0);
+        assert_eq!(stats.evicted, 1);
+        let honest = honest_subproblem(&p, &byz);
+        assert!(honest.obj_err(&theta) < 1e-6);
+    }
+
+    #[test]
+    fn noise_attack_screened() {
+        let p = synthetic::linreg_increasing_l(5, 25, 8, 64);
+        let byz = vec![0];
+        let opts =
+            RobustOptions::new(base(2000), byz.clone(), Attack::Noise { sigma: 100.0 }, true);
+        let (_, stats, theta) = robust_run(&p, &opts, &mut NativeEngine::new(&p));
+        assert!(stats.rejected > 0);
+        assert_eq!(stats.evicted, 1);
+        let honest = honest_subproblem(&p, &byz);
+        assert!(honest.obj_err(&theta) < 1e-6, "err={}", honest.obj_err(&theta));
+    }
+
+    #[test]
+    fn two_attackers_both_evicted() {
+        let p = synthetic::linreg_increasing_l(7, 25, 8, 65);
+        let byz = vec![1, 6];
+        let opts =
+            RobustOptions::new(base(2000), byz.clone(), Attack::Blowup { scale: 30.0 }, true);
+        let (_, stats, theta) = robust_run(&p, &opts, &mut NativeEngine::new(&p));
+        assert_eq!(stats.evicted, 2);
+        let honest = honest_subproblem(&p, &byz);
+        assert!(honest.obj_err(&theta) < 1e-6);
+    }
+}

@@ -1,0 +1,396 @@
+//! Synchronous deterministic driver for all five algorithms with exact
+//! communication accounting. Every experiment and bench goes through here;
+//! the threaded deployment in [`super::transport`] reproduces the same
+//! traces over real message passing.
+
+use super::server::ParameterServer;
+use super::trigger::TriggerConfig;
+use super::{Algorithm, CommStats};
+use crate::data::Problem;
+use crate::grad::GradEngine;
+use crate::linalg::{dist2, sub};
+use crate::metrics::{IterRecord, RunTrace};
+use crate::util::Rng;
+use std::time::Instant;
+
+/// Options for a run. Defaults follow the paper's §4 settings.
+#[derive(Debug, Clone)]
+pub struct RunOptions {
+    pub max_iters: usize,
+    /// Stop (and record `uploads_at_target`) once `L(θ) − L(θ*) ≤ ε`.
+    pub target_err: Option<f64>,
+    /// Stop at the target (true, default) or keep iterating for full curves.
+    pub stop_at_target: bool,
+    /// D — history depth (paper: 10).
+    pub d_history: usize,
+    /// ξ for LAG-WK (paper: 1/D).
+    pub wk_xi: f64,
+    /// ξ for LAG-PS (paper: the more aggressive 10/D).
+    pub ps_xi: f64,
+    /// Stepsize override (default: the paper's per-algorithm choice).
+    pub alpha: Option<f64>,
+    /// RNG seed (Num-IAG worker sampling).
+    pub seed: u64,
+    /// Initial iterate (default zeros).
+    pub theta0: Option<Vec<f64>>,
+    /// Record every n-th iteration (1 = all).
+    pub record_every: usize,
+    /// Evaluate the (monitoring-only) global objective every n-th iteration.
+    /// On large problems the objective pass dominates; target detection then
+    /// has ±n-iteration granularity, which the experiments account for.
+    pub eval_every: usize,
+    /// Keep the iterate sequence in the trace (Lyapunov property tests).
+    pub record_thetas: bool,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        RunOptions {
+            max_iters: 1000,
+            target_err: None,
+            stop_at_target: true,
+            d_history: 10,
+            wk_xi: 1.0 / 10.0,
+            ps_xi: 10.0 / 10.0,
+            alpha: None,
+            seed: 0,
+            theta0: None,
+            record_every: 1,
+            eval_every: 1,
+            record_thetas: false,
+        }
+    }
+}
+
+/// Contact worker `mi`: compute a fresh gradient at θᵏ, upload the delta
+/// against the worker's cached gradient, refine the server aggregate (4).
+#[allow(clippy::too_many_arguments)]
+fn contact(
+    server: &mut ParameterServer,
+    cached: &mut [Option<Vec<f64>>],
+    engine: &mut dyn GradEngine,
+    stats: &mut CommStats,
+    events: &mut [Vec<usize>],
+    mi: usize,
+    k: usize,
+) {
+    let (g, _loss) = engine.grad(mi, &server.theta);
+    stats.grad_evals += 1;
+    let delta = match &cached[mi] {
+        Some(c) => sub(&g, c),
+        None => g.clone(),
+    };
+    server.apply_delta(mi, &delta);
+    cached[mi] = Some(g);
+    stats.uploads += 1;
+    events[mi].push(k);
+}
+
+/// Run `algo` on `problem` with gradients from `engine`. Deterministic for
+/// a fixed seed.
+pub fn run(
+    problem: &Problem,
+    algo: Algorithm,
+    opts: &RunOptions,
+    engine: &mut dyn GradEngine,
+) -> RunTrace {
+    let m = problem.m();
+    let d = problem.d;
+    let alpha = opts.alpha.unwrap_or_else(|| algo.default_alpha(problem.l_total, m));
+    let xi = match algo {
+        Algorithm::LagWk => opts.wk_xi,
+        Algorithm::LagPs => opts.ps_xi,
+        _ => 0.0,
+    };
+    let trigger = TriggerConfig::uniform(opts.d_history, xi);
+    let theta0 = opts.theta0.clone().unwrap_or_else(|| vec![0.0; d]);
+    let mut server = ParameterServer::new(d, m, opts.d_history, theta0);
+    let mut cached: Vec<Option<Vec<f64>>> = vec![None; m];
+    let mut stats = CommStats::default();
+    let mut events: Vec<Vec<usize>> = vec![Vec::new(); m];
+    let mut rng = Rng::new(opts.seed);
+    let mut records = Vec::with_capacity(opts.max_iters / opts.record_every + 2);
+    let mut thetas: Vec<Vec<f64>> = Vec::new();
+
+    records.push(IterRecord {
+        k: 0,
+        obj_err: problem.obj_err(&server.theta),
+        cum_uploads: 0,
+        cum_downloads: 0,
+        cum_grad_evals: 0,
+    });
+    if opts.record_thetas {
+        thetas.push(server.theta.clone());
+    }
+
+    let mut converged_iter = None;
+    let mut uploads_at_target = None;
+    let t_start = Instant::now();
+
+    for k in 1..=opts.max_iters {
+        match algo {
+            Algorithm::Gd => {
+                stats.downloads += m as u64; // broadcast θᵏ
+                for mi in 0..m {
+                    contact(&mut server, &mut cached, engine, &mut stats, &mut events, mi, k);
+                }
+            }
+            Algorithm::LagWk => {
+                stats.downloads += m as u64; // broadcast θᵏ
+                let rhs = trigger.rhs(alpha, m, &server.history);
+                for mi in 0..m {
+                    // every worker computes; only violators upload (Alg. 1)
+                    let (g, _loss) = engine.grad(mi, &server.theta);
+                    stats.grad_evals += 1;
+                    let violated = match &cached[mi] {
+                        None => true,
+                        Some(c) => trigger.wk_violated(dist2(c, &g), rhs),
+                    };
+                    if violated {
+                        let delta = match &cached[mi] {
+                            Some(c) => sub(&g, c),
+                            None => g.clone(),
+                        };
+                        server.apply_delta(mi, &delta);
+                        cached[mi] = Some(g);
+                        stats.uploads += 1;
+                        events[mi].push(k);
+                    }
+                }
+            }
+            Algorithm::LagPs => {
+                let rhs = trigger.rhs(alpha, m, &server.history);
+                for mi in 0..m {
+                    // server decides *before* any communication (Alg. 2)
+                    let violated = match server.hat_dist_sq(mi) {
+                        None => true,
+                        Some(d2) => trigger.ps_violated(problem.l_m[mi], d2, rhs),
+                    };
+                    if violated {
+                        stats.downloads += 1; // send θᵏ to worker mi only
+                        contact(&mut server, &mut cached, engine, &mut stats, &mut events, mi, k);
+                    }
+                }
+            }
+            Algorithm::CycIag => {
+                let mi = (k - 1) % m;
+                stats.downloads += 1;
+                contact(&mut server, &mut cached, engine, &mut stats, &mut events, mi, k);
+            }
+            Algorithm::NumIag => {
+                let mi = rng.weighted(&problem.l_m);
+                stats.downloads += 1;
+                contact(&mut server, &mut cached, engine, &mut stats, &mut events, mi, k);
+            }
+        }
+
+        server.step(alpha);
+        if opts.record_thetas {
+            thetas.push(server.theta.clone());
+        }
+        if k % opts.eval_every != 0 && k != opts.max_iters {
+            continue;
+        }
+        let obj = problem.obj_err(&server.theta);
+
+        let at_target = opts.target_err.map(|t| obj <= t).unwrap_or(false);
+        if k % opts.record_every == 0 || k == opts.max_iters || at_target {
+            records.push(IterRecord {
+                k,
+                obj_err: obj,
+                cum_uploads: stats.uploads,
+                cum_downloads: stats.downloads,
+                cum_grad_evals: stats.grad_evals,
+            });
+        }
+        if at_target && converged_iter.is_none() {
+            converged_iter = Some(k);
+            uploads_at_target = Some(stats.uploads);
+            if opts.stop_at_target {
+                break;
+            }
+        }
+    }
+
+    RunTrace {
+        algo: algo.name().to_string(),
+        problem: problem.name.clone(),
+        engine: engine.name().to_string(),
+        m,
+        alpha,
+        records,
+        upload_events: events,
+        converged_iter,
+        uploads_at_target,
+        wall_secs: t_start.elapsed().as_secs_f64(),
+        thetas,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::grad::NativeEngine;
+    use crate::linalg::{axpy, norm};
+
+    fn toy() -> Problem {
+        synthetic::linreg_increasing_l(5, 20, 8, 11)
+    }
+
+    #[test]
+    fn gd_converges_linearly() {
+        let p = toy();
+        let mut e = NativeEngine::new(&p);
+        let opts = RunOptions { max_iters: 3000, target_err: Some(1e-10), ..Default::default() };
+        let t = run(&p, Algorithm::Gd, &opts, &mut e);
+        assert!(t.converged_iter.is_some(), "final_err={}", t.final_err());
+        // uploads = M per iteration
+        assert_eq!(t.total_uploads(), (t.iters() as u64 - 1) * 5);
+    }
+
+    #[test]
+    fn lag_wk_converges_with_fewer_uploads() {
+        let p = toy();
+        let opts = RunOptions { max_iters: 5000, target_err: Some(1e-10), ..Default::default() };
+        let mut e1 = NativeEngine::new(&p);
+        let gd = run(&p, Algorithm::Gd, &opts, &mut e1);
+        let mut e2 = NativeEngine::new(&p);
+        let wk = run(&p, Algorithm::LagWk, &opts, &mut e2);
+        assert!(wk.converged_iter.is_some());
+        assert!(
+            wk.uploads_at_target.unwrap() < gd.uploads_at_target.unwrap(),
+            "LAG-WK {} vs GD {}",
+            wk.uploads_at_target.unwrap(),
+            gd.uploads_at_target.unwrap()
+        );
+    }
+
+    #[test]
+    fn lag_ps_converges() {
+        let p = toy();
+        let opts = RunOptions { max_iters: 8000, target_err: Some(1e-10), ..Default::default() };
+        let mut e = NativeEngine::new(&p);
+        let t = run(&p, Algorithm::LagPs, &opts, &mut e);
+        assert!(t.converged_iter.is_some(), "final_err={}", t.final_err());
+    }
+
+    #[test]
+    fn iag_variants_converge_slowly_but_cheaply_per_iter() {
+        let p = toy();
+        let opts = RunOptions { max_iters: 20000, target_err: Some(1e-8), ..Default::default() };
+        for algo in [Algorithm::CycIag, Algorithm::NumIag] {
+            let mut e = NativeEngine::new(&p);
+            let t = run(&p, algo, &opts, &mut e);
+            assert!(t.converged_iter.is_some(), "{:?} err={}", algo, t.final_err());
+            // exactly one upload per iteration
+            assert_eq!(t.total_uploads(), t.records.last().unwrap().k as u64);
+        }
+    }
+
+    #[test]
+    fn lag_wk_with_zero_xi_equals_gd_exactly() {
+        // ξ = 0 → RHS = 0 → every nonzero gradient change triggers an upload
+        let p = toy();
+        let opts = RunOptions { max_iters: 50, wk_xi: 0.0, ..Default::default() };
+        let mut e1 = NativeEngine::new(&p);
+        let gd = run(&p, Algorithm::Gd, &opts, &mut e1);
+        let mut e2 = NativeEngine::new(&p);
+        let wk = run(&p, Algorithm::LagWk, &opts, &mut e2);
+        for (a, b) in gd.records.iter().zip(&wk.records) {
+            assert_eq!(a.obj_err, b.obj_err, "iteration {}", a.k);
+        }
+        assert_eq!(gd.total_uploads(), wk.total_uploads());
+    }
+
+    #[test]
+    fn aggregate_never_drifts_from_cached_sum() {
+        // invariant (i) of DESIGN.md §5: ∇ᵏ == Σ_m cached_m up to fp noise
+        let p = toy();
+        let opts = RunOptions { max_iters: 200, ..Default::default() };
+        // re-run manually to introspect (mirror of run())
+        let mut e = NativeEngine::new(&p);
+        let t = run(&p, Algorithm::LagWk, &opts, &mut e);
+        assert!(t.iters() > 0);
+        // re-execute and check at the end via a fresh run with thetas
+        let opts2 = RunOptions { max_iters: 200, record_thetas: true, ..Default::default() };
+        let mut e2 = NativeEngine::new(&p);
+        let t2 = run(&p, Algorithm::LagWk, &opts2, &mut e2);
+        // recompute final aggregate from scratch: for each worker, gradient
+        // at its last upload iterate
+        let mut agg = vec![0.0; p.d];
+        for (mi, evs) in t2.upload_events.iter().enumerate() {
+            let last_k = *evs.last().unwrap();
+            // θ at iteration last_k is thetas[last_k - 1]  (thetas[0] = θ¹)
+            let theta_hat = &t2.thetas[last_k - 1];
+            let (g, _) = crate::grad::worker_grad(p.task, &p.workers[mi], theta_hat);
+            axpy(1.0, &g, &mut agg);
+        }
+        // final step used agg_grad == this sum; verify via the recorded step:
+        // θ_last = θ_prev − α·agg
+        let n = t2.thetas.len();
+        let step: Vec<f64> = t2.thetas[n - 1]
+            .iter()
+            .zip(&t2.thetas[n - 2])
+            .map(|(a, b)| b - a)
+            .collect();
+        let expect: Vec<f64> = agg.iter().map(|g| g * t2.alpha).collect();
+        let diff: f64 = step.iter().zip(&expect).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff < 1e-9 * (1.0 + norm(&expect)), "drift={diff}");
+    }
+
+    #[test]
+    fn comm_rounds_per_iter_bounded_by_gd() {
+        let p = toy();
+        let opts = RunOptions { max_iters: 300, ..Default::default() };
+        for algo in [Algorithm::LagWk, Algorithm::LagPs] {
+            let mut e = NativeEngine::new(&p);
+            let t = run(&p, algo, &opts, &mut e);
+            let iters = t.records.last().unwrap().k as u64;
+            assert!(t.total_uploads() <= iters * p.m() as u64);
+        }
+    }
+
+    #[test]
+    fn num_iag_seed_changes_trace() {
+        let p = toy();
+        let a = run(
+            &p,
+            Algorithm::NumIag,
+            &RunOptions { max_iters: 50, seed: 1, ..Default::default() },
+            &mut NativeEngine::new(&p),
+        );
+        let b = run(
+            &p,
+            Algorithm::NumIag,
+            &RunOptions { max_iters: 50, seed: 2, ..Default::default() },
+            &mut NativeEngine::new(&p),
+        );
+        assert_ne!(
+            a.upload_events, b.upload_events,
+            "different seeds should sample different workers"
+        );
+    }
+
+    #[test]
+    fn record_every_thins_trace() {
+        let p = toy();
+        let opts = RunOptions { max_iters: 100, record_every: 10, ..Default::default() };
+        let t = run(&p, Algorithm::Gd, &opts, &mut NativeEngine::new(&p));
+        assert!(t.records.len() <= 12);
+        assert_eq!(t.records.last().unwrap().k, 100);
+    }
+
+    #[test]
+    fn downloads_accounting_per_algorithm() {
+        let p = toy();
+        let opts = RunOptions { max_iters: 40, ..Default::default() };
+        let gd = run(&p, Algorithm::Gd, &opts, &mut NativeEngine::new(&p));
+        assert_eq!(gd.total_downloads(), 40 * 5);
+        let cyc = run(&p, Algorithm::CycIag, &opts, &mut NativeEngine::new(&p));
+        assert_eq!(cyc.total_downloads(), 40);
+        let ps = run(&p, Algorithm::LagPs, &opts, &mut NativeEngine::new(&p));
+        // PS only sends θ to contacted workers: downloads == uploads
+        assert_eq!(ps.total_downloads(), ps.total_uploads());
+    }
+}

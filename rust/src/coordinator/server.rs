@@ -1,0 +1,121 @@
+//! Parameter-server state: the model θ, the lazily aggregated gradient of
+//! recursion (4), the stored worker copies {θ̂_m}, and the shared
+//! iterate-difference history.
+//!
+//! The server never recomputes `Σ_m ∇L_m(θ̂_m)` from scratch — it refines
+//! the previous aggregate with the received deltas (`∇ᵏ = ∇^{k-1} + Σ δ∇`),
+//! which is the whole point of the paper: O(d) work per received message,
+//! independent of M.
+
+use super::trigger::DiffHistory;
+use crate::linalg::{axpy, dist2};
+
+#[derive(Debug, Clone)]
+pub struct ParameterServer {
+    /// Current iterate θᵏ.
+    pub theta: Vec<f64>,
+    /// Lazily aggregated gradient ∇ᵏ = Σ_m ∇L_m(θ̂ᵏ_m), maintained via (4).
+    pub agg_grad: Vec<f64>,
+    /// Server-side copies θ̂_m (`None` until worker m first communicates —
+    /// forces a first contact under LAG-PS).
+    pub hat_theta: Vec<Option<Vec<f64>>>,
+    /// Ring of ‖θ^{j+1} − θ^j‖².
+    pub history: DiffHistory,
+    /// Scratch: previous iterate (avoids allocating in `step`).
+    prev_theta: Vec<f64>,
+}
+
+impl ParameterServer {
+    pub fn new(d: usize, m: usize, d_history: usize, theta0: Vec<f64>) -> Self {
+        assert_eq!(theta0.len(), d);
+        ParameterServer {
+            prev_theta: theta0.clone(),
+            theta: theta0,
+            agg_grad: vec![0.0; d],
+            hat_theta: vec![None; m],
+            history: DiffHistory::new(d_history),
+        }
+    }
+
+    pub fn d(&self) -> usize {
+        self.theta.len()
+    }
+
+    pub fn m(&self) -> usize {
+        self.hat_theta.len()
+    }
+
+    /// Apply an upload from worker m: `∇ ← ∇ + δ` (recursion (4)) and record
+    /// the server-side copy θ̂_m = θᵏ.
+    pub fn apply_delta(&mut self, m: usize, delta: &[f64]) {
+        axpy(1.0, delta, &mut self.agg_grad);
+        match &mut self.hat_theta[m] {
+            Some(t) => t.copy_from_slice(&self.theta),
+            slot @ None => *slot = Some(self.theta.clone()),
+        }
+    }
+
+    /// `‖θ̂_m − θᵏ‖²` for the LAG-PS rule; `None` if the worker has never
+    /// communicated (treated as an unconditional violation).
+    pub fn hat_dist_sq(&self, m: usize) -> Option<f64> {
+        self.hat_theta[m].as_ref().map(|t| dist2(t, &self.theta))
+    }
+
+    /// Gradient step θ^{k+1} = θᵏ − α ∇ᵏ; pushes ‖θ^{k+1} − θᵏ‖² into the
+    /// history. Returns the squared step length.
+    pub fn step(&mut self, alpha: f64) -> f64 {
+        self.prev_theta.copy_from_slice(&self.theta);
+        axpy(-alpha, &self.agg_grad.clone(), &mut self.theta);
+        let sq = dist2(&self.theta, &self.prev_theta);
+        self.history.push(sq);
+        sq
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::norm2;
+
+    #[test]
+    fn apply_delta_refines_aggregate() {
+        let mut s = ParameterServer::new(2, 2, 3, vec![0.0, 0.0]);
+        s.apply_delta(0, &[1.0, 2.0]);
+        s.apply_delta(1, &[0.5, -1.0]);
+        assert_eq!(s.agg_grad, vec![1.5, 1.0]);
+        assert!(s.hat_theta.iter().all(|t| t.is_some()));
+    }
+
+    #[test]
+    fn step_is_gradient_descent_and_records_history() {
+        let mut s = ParameterServer::new(2, 1, 2, vec![1.0, 1.0]);
+        s.apply_delta(0, &[2.0, 4.0]);
+        let sq = s.step(0.5);
+        assert_eq!(s.theta, vec![0.0, -1.0]);
+        assert_eq!(sq, norm2(&[1.0, 2.0]));
+        assert_eq!(s.history.get(1), sq);
+    }
+
+    #[test]
+    fn hat_dist_none_until_first_contact() {
+        let mut s = ParameterServer::new(2, 2, 2, vec![0.0, 0.0]);
+        assert!(s.hat_dist_sq(0).is_none());
+        s.apply_delta(0, &[1.0, 0.0]);
+        assert_eq!(s.hat_dist_sq(0), Some(0.0));
+        assert!(s.hat_dist_sq(1).is_none());
+        // after a step, the stored copy lags the iterate
+        s.step(1.0);
+        assert!(s.hat_dist_sq(0).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn step_uses_current_aggregate_each_time() {
+        let mut s = ParameterServer::new(1, 1, 4, vec![0.0]);
+        s.apply_delta(0, &[1.0]);
+        s.step(1.0);
+        s.step(1.0); // same stale aggregate applied again
+        assert_eq!(s.theta, vec![-2.0]);
+        assert_eq!(s.history.get(1), 1.0);
+        assert_eq!(s.history.get(2), 1.0);
+    }
+}

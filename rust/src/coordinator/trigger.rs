@@ -1,0 +1,201 @@
+//! The LAG trigger rules (paper eqs. (15a)/(15b)) and the iterate-difference
+//! history both sides share.
+//!
+//! At iteration k the skip condition compares a gradient (or iterate) change
+//! against
+//!
+//! ```text
+//!   RHS = (1 / (α² M²)) · Σ_{d=1..D} ξ_d · ‖θ^{k+1−d} − θ^{k−d}‖²
+//! ```
+//!
+//! * **LAG-WK (15a)**, checked at the worker after computing a fresh
+//!   gradient:  skip the upload iff `‖∇L_m(θ̂) − ∇L_m(θᵏ)‖² ≤ RHS`.
+//! * **LAG-PS (15b)**, checked at the server before contacting a worker:
+//!   skip iff `L_m² ‖θ̂_m − θᵏ‖² ≤ RHS` (needs the smoothness constants).
+
+/// Fixed-capacity ring of the last D squared iterate differences,
+/// `h_1` = most recent. Allocation-free on the hot path.
+#[derive(Debug, Clone)]
+pub struct DiffHistory {
+    buf: Vec<f64>,
+    head: usize,
+    len: usize,
+}
+
+impl DiffHistory {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        DiffHistory { buf: vec![0.0; capacity], head: 0, len: 0 }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Record `‖θ^{k+1} − θᵏ‖²` after a server update.
+    pub fn push(&mut self, sq_diff: f64) {
+        self.head = (self.head + 1) % self.buf.len();
+        self.buf[self.head] = sq_diff;
+        self.len = (self.len + 1).min(self.buf.len());
+    }
+
+    /// `h_d` for d = 1..=len (1 = newest). Returns 0 beyond recorded length
+    /// (the paper initializes θ^{1−D} = … = θ¹, i.e. zero differences).
+    pub fn get(&self, d: usize) -> f64 {
+        debug_assert!(d >= 1);
+        if d > self.len {
+            return 0.0;
+        }
+        let idx = (self.head + self.buf.len() - (d - 1)) % self.buf.len();
+        self.buf[idx]
+    }
+
+    /// `Σ ξ_d · h_d` — the weighted history sum in the RHS.
+    pub fn weighted_sum(&self, xi: &[f64]) -> f64 {
+        let mut s = 0.0;
+        for (i, &w) in xi.iter().enumerate() {
+            let h = self.get(i + 1);
+            if h == 0.0 {
+                continue;
+            }
+            s += w * h;
+        }
+        s
+    }
+}
+
+/// Trigger parameters: D and the weights ξ_1 ≥ … ≥ ξ_D (Lemma 4 requires a
+/// nonincreasing sequence; the paper uses the constant ξ_d = ξ).
+#[derive(Debug, Clone)]
+pub struct TriggerConfig {
+    pub xi: Vec<f64>,
+}
+
+impl TriggerConfig {
+    /// Uniform weights ξ_d = xi, d = 1..=d_history (the paper's choice:
+    /// ξ = 1/D for LAG-WK, a more aggressive ξ = 10/D for LAG-PS).
+    pub fn uniform(d_history: usize, xi: f64) -> Self {
+        assert!(d_history > 0);
+        assert!(xi >= 0.0);
+        TriggerConfig { xi: vec![xi; d_history] }
+    }
+
+    pub fn d(&self) -> usize {
+        self.xi.len()
+    }
+
+    /// Validate Lemma 4's monotonicity requirement.
+    pub fn is_nonincreasing(&self) -> bool {
+        self.xi.windows(2).all(|w| w[0] >= w[1])
+    }
+
+    /// The trigger RHS at stepsize α with M workers.
+    #[inline]
+    pub fn rhs(&self, alpha: f64, m: usize, history: &DiffHistory) -> f64 {
+        let denom = alpha * alpha * (m * m) as f64;
+        history.weighted_sum(&self.xi) / denom
+    }
+
+    /// LAG-WK (15a): does worker m *violate* the skip condition (and thus
+    /// upload)? `grad_diff_sq = ‖∇L_m(θ̂) − ∇L_m(θᵏ)‖²`.
+    #[inline]
+    pub fn wk_violated(&self, grad_diff_sq: f64, rhs: f64) -> bool {
+        grad_diff_sq > rhs
+    }
+
+    /// LAG-PS (15b): does the server contact worker m?
+    /// `iter_diff_sq = ‖θ̂_m − θᵏ‖²`.
+    #[inline]
+    pub fn ps_violated(&self, l_m: f64, iter_diff_sq: f64, rhs: f64) -> bool {
+        l_m * l_m * iter_diff_sq > rhs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn history_newest_first() {
+        let mut h = DiffHistory::new(3);
+        h.push(1.0);
+        h.push(2.0);
+        h.push(3.0);
+        assert_eq!(h.get(1), 3.0);
+        assert_eq!(h.get(2), 2.0);
+        assert_eq!(h.get(3), 1.0);
+        h.push(4.0); // evicts 1.0
+        assert_eq!(h.get(1), 4.0);
+        assert_eq!(h.get(3), 2.0);
+    }
+
+    #[test]
+    fn history_zero_beyond_len() {
+        let mut h = DiffHistory::new(5);
+        h.push(7.0);
+        assert_eq!(h.get(1), 7.0);
+        assert_eq!(h.get(2), 0.0);
+        assert_eq!(h.get(5), 0.0);
+    }
+
+    #[test]
+    fn weighted_sum_matches_manual() {
+        let mut h = DiffHistory::new(4);
+        for v in [1.0, 2.0, 3.0] {
+            h.push(v);
+        }
+        let xi = vec![0.4, 0.3, 0.2, 0.1];
+        // h_1=3, h_2=2, h_3=1, h_4=0
+        let expect = 0.4 * 3.0 + 0.3 * 2.0 + 0.2 * 1.0;
+        assert!((h.weighted_sum(&xi) - expect).abs() < 1e-15);
+    }
+
+    #[test]
+    fn rhs_scaling() {
+        let mut h = DiffHistory::new(2);
+        h.push(1.0);
+        let t = TriggerConfig::uniform(2, 0.5);
+        // RHS = (0.5·1.0) / (α² M²)
+        let rhs = t.rhs(0.5, 4, &h);
+        assert!((rhs - 0.5 / (0.25 * 16.0)).abs() < 1e-15);
+        // larger α or M shrink the RHS (harder to skip)
+        assert!(t.rhs(1.0, 4, &h) < rhs);
+        assert!(t.rhs(0.5, 8, &h) < rhs);
+    }
+
+    #[test]
+    fn empty_history_forces_communication() {
+        // with no recorded differences RHS = 0 → any nonzero change violates
+        let h = DiffHistory::new(10);
+        let t = TriggerConfig::uniform(10, 0.1);
+        let rhs = t.rhs(0.1, 9, &h);
+        assert_eq!(rhs, 0.0);
+        assert!(t.wk_violated(1e-30, rhs));
+        assert!(!t.wk_violated(0.0, rhs)); // identical gradients may skip
+    }
+
+    #[test]
+    fn ps_uses_smoothness() {
+        let mut h = DiffHistory::new(1);
+        h.push(4.0);
+        let t = TriggerConfig::uniform(1, 1.0);
+        let rhs = t.rhs(1.0, 1, &h); // = 4
+        assert!(!t.ps_violated(1.0, 3.9, rhs)); // 1·3.9 ≤ 4 → skip
+        assert!(t.ps_violated(2.0, 1.1, rhs)); // 4·1.1 > 4 → contact
+    }
+
+    #[test]
+    fn uniform_is_nonincreasing() {
+        assert!(TriggerConfig::uniform(10, 0.1).is_nonincreasing());
+        let bad = TriggerConfig { xi: vec![0.1, 0.2] };
+        assert!(!bad.is_nonincreasing());
+    }
+}

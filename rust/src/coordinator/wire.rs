@@ -1,0 +1,199 @@
+//! Wire protocol for the TCP deployment: length-prefixed frames with a
+//! 1-byte tag and little-endian payloads. No serde in the offline crate
+//! universe, so the codec is explicit — and tested for exact round-trips.
+
+use std::io::{Read, Write};
+
+/// Messages exchanged between the leader and workers.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireMsg {
+    /// Worker → leader on connect: worker index.
+    Hello { worker: u32 },
+    /// Leader → worker: new round with the current iterate and trigger RHS.
+    Round { k: u64, rhs: f64, theta: Vec<f64> },
+    /// Worker → leader: gradient delta (empty → skipped upload).
+    Delta { k: u64, worker: u32, delta: Option<Vec<f64>> },
+    /// Leader → workers: training is over.
+    Shutdown,
+}
+
+const TAG_HELLO: u8 = 1;
+const TAG_ROUND: u8 = 2;
+const TAG_DELTA: u8 = 3;
+const TAG_SHUTDOWN: u8 = 4;
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+fn put_vec(buf: &mut Vec<u8>, v: &[f64]) {
+    put_u64(buf, v.len() as u64);
+    for x in v {
+        put_f64(buf, *x);
+    }
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(self.pos + n <= self.b.len(), "truncated frame");
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn vec(&mut self) -> anyhow::Result<Vec<f64>> {
+        let n = self.u64()? as usize;
+        anyhow::ensure!(n <= 1 << 28, "vector too large: {n}");
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.f64()?);
+        }
+        Ok(v)
+    }
+}
+
+impl WireMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut body = Vec::new();
+        match self {
+            WireMsg::Hello { worker } => {
+                body.push(TAG_HELLO);
+                put_u32(&mut body, *worker);
+            }
+            WireMsg::Round { k, rhs, theta } => {
+                body.push(TAG_ROUND);
+                put_u64(&mut body, *k);
+                put_f64(&mut body, *rhs);
+                put_vec(&mut body, theta);
+            }
+            WireMsg::Delta { k, worker, delta } => {
+                body.push(TAG_DELTA);
+                put_u64(&mut body, *k);
+                put_u32(&mut body, *worker);
+                match delta {
+                    Some(d) => {
+                        body.push(1);
+                        put_vec(&mut body, d);
+                    }
+                    None => body.push(0),
+                }
+            }
+            WireMsg::Shutdown => body.push(TAG_SHUTDOWN),
+        }
+        let mut out = Vec::with_capacity(4 + body.len());
+        put_u32(&mut out, body.len() as u32);
+        out.extend_from_slice(&body);
+        out
+    }
+
+    pub fn decode(body: &[u8]) -> anyhow::Result<WireMsg> {
+        anyhow::ensure!(!body.is_empty(), "empty frame");
+        let mut c = Cursor { b: body, pos: 1 };
+        Ok(match body[0] {
+            TAG_HELLO => WireMsg::Hello { worker: c.u32()? },
+            TAG_ROUND => WireMsg::Round { k: c.u64()?, rhs: c.f64()?, theta: c.vec()? },
+            TAG_DELTA => {
+                let k = c.u64()?;
+                let worker = c.u32()?;
+                let has = c.take(1)?[0];
+                let delta = if has == 1 { Some(c.vec()?) } else { None };
+                WireMsg::Delta { k, worker, delta }
+            }
+            TAG_SHUTDOWN => WireMsg::Shutdown,
+            t => anyhow::bail!("unknown wire tag {t}"),
+        })
+    }
+
+    /// Write a frame to a stream.
+    pub fn write_to<W: Write>(&self, w: &mut W) -> anyhow::Result<()> {
+        w.write_all(&self.encode())?;
+        Ok(())
+    }
+
+    /// Read a frame from a stream (blocking).
+    pub fn read_from<R: Read>(r: &mut R) -> anyhow::Result<WireMsg> {
+        let mut len = [0u8; 4];
+        r.read_exact(&mut len)?;
+        let n = u32::from_le_bytes(len) as usize;
+        anyhow::ensure!(n <= 1 << 30, "frame too large: {n}");
+        let mut body = vec![0u8; n];
+        r.read_exact(&mut body)?;
+        WireMsg::decode(&body)
+    }
+
+    /// Wire size in bytes (frame header included) — communication-volume
+    /// accounting for the TCP deployment.
+    pub fn wire_bytes(&self) -> u64 {
+        self.encode().len() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(m: WireMsg) {
+        let enc = m.encode();
+        let dec = WireMsg::decode(&enc[4..]).unwrap();
+        assert_eq!(m, dec);
+    }
+
+    #[test]
+    fn roundtrip_all_variants() {
+        roundtrip(WireMsg::Hello { worker: 7 });
+        roundtrip(WireMsg::Round { k: 42, rhs: 1.5e-3, theta: vec![1.0, -2.5, 0.0] });
+        roundtrip(WireMsg::Delta { k: 3, worker: 1, delta: Some(vec![0.25; 10]) });
+        roundtrip(WireMsg::Delta { k: 3, worker: 1, delta: None });
+        roundtrip(WireMsg::Shutdown);
+    }
+
+    #[test]
+    fn stream_roundtrip_multiple_frames() {
+        let msgs = vec![
+            WireMsg::Hello { worker: 0 },
+            WireMsg::Round { k: 1, rhs: 0.0, theta: vec![3.25; 5] },
+            WireMsg::Shutdown,
+        ];
+        let mut buf = Vec::new();
+        for m in &msgs {
+            m.write_to(&mut buf).unwrap();
+        }
+        let mut r = &buf[..];
+        for m in &msgs {
+            assert_eq!(&WireMsg::read_from(&mut r).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(WireMsg::decode(&[]).is_err());
+        assert!(WireMsg::decode(&[99]).is_err());
+        assert!(WireMsg::decode(&[TAG_ROUND, 1, 2]).is_err()); // truncated
+    }
+
+    #[test]
+    fn skipped_delta_is_tiny_on_wire() {
+        let skip = WireMsg::Delta { k: 9, worker: 3, delta: None };
+        let full = WireMsg::Delta { k: 9, worker: 3, delta: Some(vec![0.0; 1000]) };
+        assert!(skip.wire_bytes() < 32);
+        assert!(full.wire_bytes() > 8000);
+    }
+}

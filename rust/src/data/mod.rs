@@ -1,0 +1,335 @@
+//! Data substrate: tasks, datasets, worker shards, and fully-specified
+//! distributed problems (smoothness constants, exact minimizers, reference
+//! optimal values — everything the paper's experiments need).
+
+pub mod gisette;
+pub mod partition;
+pub mod synthetic;
+pub mod uci;
+
+use crate::linalg::{
+    self, cholesky_solve, log1pexp, logreg_newton, power_iteration_gram, Matrix,
+};
+
+/// Learning task. Losses follow the paper exactly:
+/// * LinReg — eq. (85): `L_m(θ) = Σ_i (y_i − x_iᵀθ)²` (no ½ factor),
+/// * LogReg — eq. (86): `L_m(θ) = Σ_i log(1+exp(−y_i x_iᵀθ)) + λ/2 ‖θ‖²`
+///   per worker (so the *global* regularizer is `M·λ/2 ‖θ‖²`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Task {
+    LinReg,
+    LogReg { lam: f64 },
+}
+
+impl Task {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::LinReg => "linreg",
+            Task::LogReg { .. } => "logreg",
+        }
+    }
+}
+
+/// A raw dataset before sharding (simulated UCI analog or synthetic).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub x: Matrix,
+    pub y: Vec<f64>,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.x.rows
+    }
+    pub fn d(&self) -> usize {
+        self.x.cols
+    }
+    /// Trim to the first `k` features (paper: every real dataset group is
+    /// trimmed to its minimum feature count).
+    pub fn with_features(&self, k: usize) -> Dataset {
+        Dataset { name: self.name.clone(), x: self.x.take_cols(k), y: self.y.clone() }
+    }
+}
+
+/// One worker's (padded) shard. Padding rows are all-zero with weight 0, so
+/// they contribute exactly nothing to gradient or loss — this is what lets
+/// one AOT executable serve every worker of an experiment.
+#[derive(Debug, Clone)]
+pub struct WorkerShard {
+    pub x: Matrix,
+    pub y: Vec<f64>,
+    pub w: Vec<f64>,
+    pub n_real: usize,
+}
+
+impl WorkerShard {
+    pub fn n_padded(&self) -> usize {
+        self.x.rows
+    }
+    pub fn d(&self) -> usize {
+        self.x.cols
+    }
+}
+
+/// A fully-specified distributed problem: shards plus every derived
+/// quantity the algorithms and the evaluation need.
+#[derive(Debug, Clone)]
+pub struct Problem {
+    pub name: String,
+    pub task: Task,
+    pub d: usize,
+    pub workers: Vec<WorkerShard>,
+    /// Per-worker smoothness constants `L_m` (power iteration, exact).
+    pub l_m: Vec<f64>,
+    /// Global smoothness `L` of `Σ_m L_m`.
+    pub l_total: f64,
+    /// Minimizer of the global objective (Cholesky / Newton-CG).
+    pub theta_star: Vec<f64>,
+    /// `L(θ*)` — the reference value for objective-error curves.
+    pub loss_star: f64,
+}
+
+impl Problem {
+    pub fn m(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Importance factors `H(m) = L_m / L` (paper Lemma 4).
+    pub fn importance(&self) -> Vec<f64> {
+        self.l_m.iter().map(|lm| lm / self.l_total).collect()
+    }
+
+    /// Heterogeneity score function `h(γ)` of eq. (22): the fraction of
+    /// workers with `H²(m) ≤ γ`.
+    pub fn heterogeneity_score(&self, gamma: f64) -> f64 {
+        let hs = self.importance();
+        let count = hs.iter().filter(|h| *h * *h <= gamma).count();
+        count as f64 / hs.len() as f64
+    }
+
+    /// Global objective at θ (native f64; monitoring path, not counted as
+    /// communication).
+    pub fn global_loss(&self, theta: &[f64]) -> f64 {
+        self.workers.iter().map(|s| worker_loss(self.task, s, theta)).sum()
+    }
+
+    /// Objective error `L(θ) − L(θ*)`.
+    pub fn obj_err(&self, theta: &[f64]) -> f64 {
+        self.global_loss(theta) - self.loss_star
+    }
+
+    /// Build a problem from raw shards: computes smoothness constants, the
+    /// exact minimizer and optimal value. `pad_to` of `None` pads to the
+    /// largest shard.
+    pub fn build(
+        name: &str,
+        task: Task,
+        shards: Vec<(Matrix, Vec<f64>)>,
+        pad_to: Option<usize>,
+    ) -> anyhow::Result<Problem> {
+        anyhow::ensure!(!shards.is_empty(), "no shards");
+        let d = shards[0].0.cols;
+        let m = shards.len();
+        let max_n = shards.iter().map(|(x, _)| x.rows).max().unwrap();
+        let pad = pad_to.unwrap_or(max_n);
+        anyhow::ensure!(pad >= max_n, "pad_to {pad} < largest shard {max_n}");
+
+        // per-worker smoothness
+        let mut l_m = Vec::with_capacity(m);
+        for (x, _) in &shards {
+            anyhow::ensure!(x.cols == d, "shard feature dims differ");
+            let lam_max = power_iteration_gram(x, 1e-12, 50_000);
+            l_m.push(match task {
+                Task::LinReg => 2.0 * lam_max,
+                Task::LogReg { lam } => 0.25 * lam_max + lam,
+            });
+        }
+
+        // global data (stacked) for L and θ*
+        let n_total: usize = shards.iter().map(|(x, _)| x.rows).sum();
+        let mut x_all = Matrix::zeros(n_total, d);
+        let mut y_all = Vec::with_capacity(n_total);
+        let mut row = 0;
+        for (x, y) in &shards {
+            for i in 0..x.rows {
+                x_all.row_mut(row).copy_from_slice(x.row(i));
+                row += 1;
+            }
+            y_all.extend_from_slice(y);
+        }
+        let lam_max_all = power_iteration_gram(&x_all, 1e-12, 50_000);
+
+        let (l_total, theta_star, loss_star) = match task {
+            Task::LinReg => {
+                let l = 2.0 * lam_max_all;
+                // normal equations XᵀXθ = Xᵀy (with a relative jitter retry
+                // for PL-but-singular designs)
+                let mut g = x_all.gram();
+                let b = x_all.t_matvec(&y_all);
+                let theta = match cholesky_solve(&g, &b) {
+                    Ok(t) => t,
+                    Err(_) => {
+                        let trace: f64 = (0..d).map(|i| g.get(i, i)).sum();
+                        let jitter = 1e-12 * trace / d as f64;
+                        for i in 0..d {
+                            g.set(i, i, g.get(i, i) + jitter);
+                        }
+                        cholesky_solve(&g, &b)?
+                    }
+                };
+                let r = x_all.matvec(&theta);
+                let loss: f64 =
+                    r.iter().zip(&y_all).map(|(a, b)| (a - b) * (a - b)).sum();
+                (l, theta, loss)
+            }
+            Task::LogReg { lam } => {
+                let reg = m as f64 * lam;
+                let l = 0.25 * lam_max_all + reg;
+                let w = vec![1.0; n_total];
+                let (theta, loss) =
+                    logreg_newton(&x_all, &y_all, &w, reg, 1e-13, 200);
+                (l, theta, loss)
+            }
+        };
+
+        let workers = shards
+            .into_iter()
+            .map(|(x, y)| partition::pad_shard(x, y, pad))
+            .collect();
+
+        Ok(Problem {
+            name: name.to_string(),
+            task,
+            d,
+            workers,
+            l_m,
+            l_total,
+            theta_star,
+            loss_star,
+        })
+    }
+}
+
+/// Native per-worker loss (mirrors the L1 kernels exactly).
+pub fn worker_loss(task: Task, s: &WorkerShard, theta: &[f64]) -> f64 {
+    let z = s.x.matvec(theta);
+    match task {
+        Task::LinReg => {
+            let mut loss = 0.0;
+            for i in 0..s.x.rows {
+                let r = z[i] - s.y[i];
+                loss += s.w[i] * r * r;
+            }
+            loss
+        }
+        Task::LogReg { lam } => {
+            let mut loss = 0.5 * lam * linalg::norm2(theta);
+            for i in 0..s.x.rows {
+                loss += s.w[i] * log1pexp(-s.y[i] * z[i]);
+            }
+            loss
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn toy_shards(m: usize, n: usize, d: usize, seed: u64) -> Vec<(Matrix, Vec<f64>)> {
+        let mut rng = Rng::new(seed);
+        let theta0 = rng.normal_vec(d);
+        (0..m)
+            .map(|_| {
+                let x = Matrix::from_vec(n, d, rng.normal_vec(n * d));
+                let y: Vec<f64> = (0..n)
+                    .map(|i| linalg::dot(x.row(i), &theta0) + 0.1 * rng.normal())
+                    .collect();
+                (x, y)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn build_linreg_minimizer_has_zero_gradient() {
+        let p = Problem::build("t", Task::LinReg, toy_shards(3, 20, 5, 1), None).unwrap();
+        // ∇L(θ*) = 2 Σ Xᵀ(Xθ*−y) ≈ 0
+        let mut g = vec![0.0; 5];
+        for s in &p.workers {
+            let z = s.x.matvec(&p.theta_star);
+            let r: Vec<f64> = (0..s.x.rows).map(|i| s.w[i] * (z[i] - s.y[i])).collect();
+            let gm = s.x.t_matvec(&r);
+            for (a, b) in g.iter_mut().zip(&gm) {
+                *a += 2.0 * b;
+            }
+        }
+        assert!(linalg::norm(&g) < 1e-8, "‖∇L(θ*)‖ = {}", linalg::norm(&g));
+    }
+
+    #[test]
+    fn obj_err_nonnegative_and_zero_at_star() {
+        let p = Problem::build("t", Task::LinReg, toy_shards(3, 20, 5, 2), None).unwrap();
+        assert!(p.obj_err(&p.theta_star).abs() < 1e-9);
+        let mut rng = Rng::new(9);
+        for _ in 0..10 {
+            let theta: Vec<f64> = p.theta_star.iter().map(|t| t + 0.1 * rng.normal()).collect();
+            assert!(p.obj_err(&theta) >= -1e-10);
+        }
+    }
+
+    #[test]
+    fn build_logreg_minimizer_optimal() {
+        let mut shards = toy_shards(3, 30, 4, 3);
+        for (_x, y) in shards.iter_mut() {
+            for v in y.iter_mut() {
+                *v = if *v > 0.0 { 1.0 } else { -1.0 };
+            }
+        }
+        let p = Problem::build("t", Task::LogReg { lam: 1e-2 }, shards, None).unwrap();
+        assert!(p.obj_err(&p.theta_star).abs() < 1e-9);
+        let mut rng = Rng::new(10);
+        for _ in 0..10 {
+            let theta: Vec<f64> =
+                p.theta_star.iter().map(|t| t + 0.05 * rng.normal()).collect();
+            assert!(p.obj_err(&theta) > 0.0);
+        }
+    }
+
+    #[test]
+    fn smoothness_constants_positive_and_global_dominates() {
+        let p = Problem::build("t", Task::LinReg, toy_shards(4, 25, 6, 4), None).unwrap();
+        for lm in &p.l_m {
+            assert!(*lm > 0.0);
+            // L ≤ Σ L_m and L ≥ max L_m
+            assert!(*lm <= p.l_total + 1e-9);
+        }
+        let sum: f64 = p.l_m.iter().sum();
+        assert!(p.l_total <= sum + 1e-9);
+    }
+
+    #[test]
+    fn padding_preserves_losses() {
+        let shards = toy_shards(2, 10, 3, 5);
+        let p1 = Problem::build("a", Task::LinReg, shards.clone(), None).unwrap();
+        let p2 = Problem::build("b", Task::LinReg, shards, Some(64)).unwrap();
+        let mut rng = Rng::new(6);
+        let theta = rng.normal_vec(3);
+        assert!((p1.global_loss(&theta) - p2.global_loss(&theta)).abs() < 1e-10);
+        assert!((p1.loss_star - p2.loss_star).abs() < 1e-10);
+        assert_eq!(p2.workers[0].n_padded(), 64);
+    }
+
+    #[test]
+    fn heterogeneity_score_monotone() {
+        let p = Problem::build("t", Task::LinReg, toy_shards(5, 15, 4, 7), None).unwrap();
+        let mut prev = 0.0;
+        for g in [1e-6, 1e-4, 1e-2, 1.0, 100.0] {
+            let h = p.heterogeneity_score(g);
+            assert!(h >= prev);
+            prev = h;
+        }
+        assert_eq!(p.heterogeneity_score(f64::INFINITY), 1.0);
+    }
+}

@@ -1,0 +1,124 @@
+//! Sharding across workers + zero-weight padding.
+
+use super::WorkerShard;
+use crate::linalg::Matrix;
+
+/// Split `(x, y)` into `k` near-even contiguous shards (first `n % k`
+/// shards get one extra row), mirroring the paper's "evenly split into
+/// three workers".
+pub fn split_even(x: &Matrix, y: &[f64], k: usize) -> Vec<(Matrix, Vec<f64>)> {
+    assert!(k > 0 && x.rows >= k, "need at least one row per shard");
+    assert_eq!(x.rows, y.len());
+    let n = x.rows;
+    let base = n / k;
+    let extra = n % k;
+    let mut out = Vec::with_capacity(k);
+    let mut lo = 0;
+    for i in 0..k {
+        let size = base + usize::from(i < extra);
+        let hi = lo + size;
+        out.push((x.slice_rows(lo, hi), y[lo..hi].to_vec()));
+        lo = hi;
+    }
+    debug_assert_eq!(lo, n);
+    out
+}
+
+/// Pad a shard to `pad_to` rows with all-zero features and weight 0. The
+/// padded rows contribute exactly nothing to gradients or losses; they exist
+/// so one AOT artifact shape serves every worker.
+pub fn pad_shard(x: Matrix, y: Vec<f64>, pad_to: usize) -> WorkerShard {
+    let n_real = x.rows;
+    assert!(pad_to >= n_real, "pad_to {pad_to} < shard rows {n_real}");
+    let d = x.cols;
+    let mut data = x.data;
+    data.resize(pad_to * d, 0.0);
+    let mut y_pad = y;
+    y_pad.resize(pad_to, 0.0);
+    let mut w = vec![1.0; n_real];
+    w.resize(pad_to, 0.0);
+    WorkerShard { x: Matrix::from_vec(pad_to, d, data), y: y_pad, w, n_real }
+}
+
+/// Interleave several datasets' shards into a single worker list, keeping
+/// the paper's worker-index assignment (e.g. Housing → workers 1-3,
+/// Bodyfat → 4-6, Abalone → 7-9).
+pub fn shards_per_dataset(
+    datasets: &[(Matrix, Vec<f64>)],
+    shards_each: usize,
+) -> Vec<(Matrix, Vec<f64>)> {
+    let mut out = Vec::new();
+    for (x, y) in datasets {
+        out.extend(split_even(x, y, shards_each));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn toy(n: usize, d: usize, seed: u64) -> (Matrix, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        (Matrix::from_vec(n, d, rng.normal_vec(n * d)), rng.normal_vec(n))
+    }
+
+    #[test]
+    fn split_covers_all_rows_in_order() {
+        let (x, y) = toy(10, 3, 1);
+        let shards = split_even(&x, &y, 3);
+        assert_eq!(shards.iter().map(|(s, _)| s.rows).collect::<Vec<_>>(), vec![4, 3, 3]);
+        let mut row = 0;
+        for (sx, sy) in &shards {
+            for i in 0..sx.rows {
+                assert_eq!(sx.row(i), x.row(row));
+                assert_eq!(sy[i], y[row]);
+                row += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn split_exact_division() {
+        let (x, y) = toy(9, 2, 2);
+        let shards = split_even(&x, &y, 3);
+        assert!(shards.iter().all(|(s, _)| s.rows == 3));
+    }
+
+    #[test]
+    fn pad_preserves_real_rows_and_masks_rest() {
+        let (x, y) = toy(5, 4, 3);
+        let s = pad_shard(x.clone(), y.clone(), 8);
+        assert_eq!(s.n_real, 5);
+        assert_eq!(s.n_padded(), 8);
+        for i in 0..5 {
+            assert_eq!(s.x.row(i), x.row(i));
+            assert_eq!(s.w[i], 1.0);
+        }
+        for i in 5..8 {
+            assert!(s.x.row(i).iter().all(|&v| v == 0.0));
+            assert_eq!(s.w[i], 0.0);
+            assert_eq!(s.y[i], 0.0);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn pad_too_small_panics() {
+        let (x, y) = toy(5, 2, 4);
+        pad_shard(x, y, 3);
+    }
+
+    #[test]
+    fn shards_per_dataset_ordering() {
+        let a = toy(6, 2, 5);
+        let b = toy(4, 2, 6);
+        let shards = shards_per_dataset(&[a.clone(), b.clone()], 2);
+        assert_eq!(shards.len(), 4);
+        assert_eq!(shards[0].0.rows, 3); // a first half
+        assert_eq!(shards[2].0.rows, 2); // b first half
+        assert_eq!(shards[0].0.row(0), a.0.row(0));
+        assert_eq!(shards[2].0.row(0), b.0.row(0));
+    }
+}

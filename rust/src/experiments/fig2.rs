@@ -1,0 +1,66 @@
+//! Fig. 2 — communication events of workers 1, 3, 5, 7, 9 over 1,000
+//! iterations of LAG-WK on the increasing-L_m synthetic linreg workload.
+//! Workers with small smoothness constants should upload rarely (Lemma 4).
+
+use super::ExpContext;
+use crate::coordinator::{Algorithm, RunOptions};
+use crate::data::synthetic;
+use crate::metrics::ascii_event_plot;
+
+pub fn run(ctx: &ExpContext) -> anyhow::Result<()> {
+    let p = synthetic::linreg_increasing_l(9, 50, 50, 1234);
+    let opts = RunOptions {
+        max_iters: ctx.cap(1000),
+        target_err: None,
+        stop_at_target: false,
+        ..Default::default()
+    };
+    let trace = ctx.run_algo(&p, Algorithm::LagWk, &opts)?;
+
+    println!("Fig. 2 — LAG-WK upload events (|= upload), L_1 < ... < L_9:");
+    print!("{}", ascii_event_plot(&trace, &[0, 2, 4, 6, 8], 72));
+
+    // Lemma 4 check: upload frequency should increase with L_m
+    let freqs: Vec<f64> = trace
+        .upload_events
+        .iter()
+        .map(|e| e.len() as f64 / opts.max_iters as f64)
+        .collect();
+    println!("\nper-worker upload frequency vs importance H(m) = L_m/L:");
+    for (m, (f, h)) in freqs.iter().zip(p.importance()).enumerate() {
+        println!("  worker {:>2}: H={:.4}  upload freq={:.4}", m + 1, h, f);
+    }
+
+    let dir = std::path::Path::new(&ctx.out_dir).join("fig2");
+    std::fs::create_dir_all(&dir)?;
+    trace.write_events_csv(dir.join("events.csv"))?;
+    trace.write_csv(dir.join("lag-wk.csv"))?;
+    println!("\nwrote {}", dir.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_runs_and_low_l_workers_upload_less() {
+        let ctx = ExpContext { quick: true, ..Default::default() };
+        let p = synthetic::linreg_increasing_l(9, 50, 50, 1234);
+        let opts = RunOptions {
+            max_iters: 400,
+            target_err: None,
+            stop_at_target: false,
+            ..Default::default()
+        };
+        let t = ctx.run_algo(&p, Algorithm::LagWk, &opts).unwrap();
+        let counts: Vec<usize> = t.upload_events.iter().map(|e| e.len()).collect();
+        // the smoothest worker communicates strictly less than the roughest
+        assert!(
+            counts[0] < counts[8],
+            "worker1 (small L) {} !< worker9 (large L) {}",
+            counts[0],
+            counts[8]
+        );
+    }
+}

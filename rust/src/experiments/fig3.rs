@@ -1,0 +1,47 @@
+//! Fig. 3 — iteration & communication complexity on synthetic linear
+//! regression with increasing smoothness constants L_m = (1.3^{m-1} + 1)².
+
+use super::{paper_opts, report, ExpContext};
+use crate::data::synthetic;
+
+pub fn run(ctx: &ExpContext) -> anyhow::Result<()> {
+    let p = synthetic::linreg_increasing_l(9, 50, 50, 1234);
+    println!(
+        "Fig. 3 — synthetic linreg, increasing L_m (L = {:.2}, κ-regime), M = 9",
+        p.l_total
+    );
+    let traces = ctx.compare(&p, |algo| paper_opts(ctx, algo, p.m(), 60_000))?;
+    print!("{}", report::comparison_table(&traces, ctx.target()));
+    print!("{}", report::savings_vs_gd(&traces));
+    for t in &traces {
+        if t.algo == "lag-wk" || t.algo == "batch-gd" {
+            let pts: Vec<(f64, f64)> =
+                t.records.iter().map(|r| (r.cum_uploads as f64, r.obj_err)).collect();
+            print!("{}", report::ascii_curve(&pts, 64, 10, &format!("{} err vs uploads", t.algo)));
+        }
+    }
+    ctx.write_traces("fig3", &traces)?;
+    println!("wrote {}/fig3", ctx.out_dir);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Algorithm;
+
+    #[test]
+    fn fig3_lag_wk_beats_gd_in_uploads() {
+        let ctx = ExpContext { quick: true, ..Default::default() };
+        let p = synthetic::linreg_increasing_l(9, 50, 50, 1234);
+        let gd = ctx
+            .run_algo(&p, Algorithm::Gd, &paper_opts(&ctx, Algorithm::Gd, 9, 3000))
+            .unwrap();
+        let wk = ctx
+            .run_algo(&p, Algorithm::LagWk, &paper_opts(&ctx, Algorithm::LagWk, 9, 3000))
+            .unwrap();
+        assert!(gd.converged_iter.is_some());
+        assert!(wk.converged_iter.is_some());
+        assert!(wk.uploads_at_target.unwrap() * 3 < gd.uploads_at_target.unwrap());
+    }
+}

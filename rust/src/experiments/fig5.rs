@@ -1,0 +1,70 @@
+//! Fig. 5 — linear regression on the (simulated) Housing / Bodyfat /
+//! Abalone trio: each dataset evenly split across 3 workers (9 total),
+//! features trimmed to the group minimum d = 8, shards padded to the
+//! registered artifact shape 176×8.
+
+use super::{paper_opts, report, ExpContext};
+use crate::data::{partition, uci, Problem, Task};
+
+/// Build the Fig. 5 problem with `shards_each` workers per dataset
+/// (3 → M = 9; Table 5 reuses this with 6 and 9).
+pub fn problem(shards_each: usize) -> anyhow::Result<Problem> {
+    let trio = uci::linreg_trio();
+    let dmin = uci::min_features(&trio);
+    let raw: Vec<_> = trio
+        .iter()
+        .map(|ds| {
+            let t = ds.with_features(dmin);
+            (t.x, t.y)
+        })
+        .collect();
+    let shards = partition::shards_per_dataset(&raw, shards_each);
+    // pad to the registered linreg artifact shape (176×8)
+    Problem::build(
+        &format!("linreg_real_m{}", shards.len()),
+        Task::LinReg,
+        shards,
+        Some(176),
+    )
+}
+
+pub fn run(ctx: &ExpContext) -> anyhow::Result<()> {
+    let p = problem(3)?;
+    println!(
+        "Fig. 5 — linreg on simulated Housing/Bodyfat/Abalone, M = 9, d = {} (L = {:.3})",
+        p.d, p.l_total
+    );
+    println!("per-worker L_m: {:?}", p.l_m.iter().map(|l| (l * 100.0).round() / 100.0).collect::<Vec<_>>());
+    let traces = ctx.compare(&p, |algo| paper_opts(ctx, algo, p.m(), 100_000))?;
+    print!("{}", report::comparison_table(&traces, ctx.target()));
+    print!("{}", report::savings_vs_gd(&traces));
+    ctx.write_traces("fig5", &traces)?;
+    println!("wrote {}/fig5", ctx.out_dir);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_problem_shape() {
+        let p = problem(3).unwrap();
+        assert_eq!(p.m(), 9);
+        assert_eq!(p.d, 8);
+        // all shards padded to the artifact shape
+        assert!(p.workers.iter().all(|s| s.n_padded() == 176));
+        // shard sizes: housing 506 → 169/169/168, bodyfat 252 → 84, abalone 417 → 139
+        assert_eq!(p.workers[0].n_real, 169);
+        assert_eq!(p.workers[3].n_real, 84);
+        assert_eq!(p.workers[6].n_real, 139);
+    }
+
+    #[test]
+    fn fig5_heterogeneous_lm() {
+        let p = problem(3).unwrap();
+        let max = p.l_m.iter().cloned().fold(0.0, f64::max);
+        let min = p.l_m.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(max / min > 5.0, "L_m spread too small: {:?}", p.l_m);
+    }
+}

@@ -1,0 +1,66 @@
+//! Fig. 6 — logistic regression on the (simulated) Ionosphere / Adult /
+//! Derm trio: 3 workers per dataset, d = 34, λ = 1e-3, shards padded to the
+//! registered artifact shape 544×34.
+
+use super::{paper_opts, report, ExpContext};
+use crate::data::{partition, uci, Problem, Task};
+
+pub fn problem(shards_each: usize) -> anyhow::Result<Problem> {
+    let trio = uci::logreg_trio();
+    let dmin = uci::min_features(&trio);
+    let raw: Vec<_> = trio
+        .iter()
+        .map(|ds| {
+            let t = ds.with_features(dmin);
+            (t.x, t.y)
+        })
+        .collect();
+    let shards = partition::shards_per_dataset(&raw, shards_each);
+    Problem::build(
+        &format!("logreg_real_m{}", shards.len()),
+        Task::LogReg { lam: 1e-3 },
+        shards,
+        Some(544),
+    )
+}
+
+pub fn run(ctx: &ExpContext) -> anyhow::Result<()> {
+    let p = problem(3)?;
+    println!(
+        "Fig. 6 — logreg on simulated Ionosphere/Adult/Derm, M = 9, d = {} (L = {:.3})",
+        p.d, p.l_total
+    );
+    let traces = ctx.compare(&p, |algo| paper_opts(ctx, algo, p.m(), 150_000))?;
+    print!("{}", report::comparison_table(&traces, ctx.target()));
+    print!("{}", report::savings_vs_gd(&traces));
+    ctx.write_traces("fig6", &traces)?;
+    println!("wrote {}/fig6", ctx.out_dir);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_problem_shape() {
+        let p = problem(3).unwrap();
+        assert_eq!(p.m(), 9);
+        assert_eq!(p.d, 34);
+        assert!(p.workers.iter().all(|s| s.n_padded() == 544));
+        // ionosphere 351 → 117, adult 1605 → 535, derm 358 → 120 (firsts)
+        assert_eq!(p.workers[0].n_real, 117);
+        assert_eq!(p.workers[3].n_real, 535);
+        assert_eq!(p.workers[6].n_real, 120);
+    }
+
+    #[test]
+    fn fig6_labels_pm1() {
+        let p = problem(3).unwrap();
+        for s in &p.workers {
+            for i in 0..s.n_real {
+                assert!(s.y[i] == 1.0 || s.y[i] == -1.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,207 @@
+//! Experiment harness: one module per paper figure/table, all driven
+//! through a common context (engine choice, output dir, quick mode).
+//!
+//! | id     | paper artifact | module |
+//! |--------|----------------|--------|
+//! | fig2   | communication events stick plot | [`fig2`] |
+//! | fig3   | synthetic linreg, increasing L_m | [`fig3`] |
+//! | fig4   | synthetic logreg, uniform L_m | [`fig4`] |
+//! | fig5   | linreg on (simulated) Housing/Bodyfat/Abalone | [`fig5`] |
+//! | fig6   | logreg on (simulated) Ionosphere/Adult/Derm | [`fig6`] |
+//! | fig7   | logreg on (simulated) Gisette | [`fig7`] |
+//! | table5 | uploads to ε = 1e-8 for M ∈ {9, 18, 27} | [`table5`] |
+
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod nonconvex;
+pub mod report;
+pub mod table5;
+
+use crate::coordinator::{run, Algorithm, RunOptions, RunTrace};
+use crate::data::Problem;
+use crate::grad::NativeEngine;
+use crate::runtime::PjrtEngine;
+
+/// Which gradient engine the experiments use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// AOT JAX+Pallas artifacts through PJRT — the production path
+    /// (requires `make artifacts`).
+    Pjrt,
+    /// Pure-Rust oracle (fast, used for cross-checks and CI).
+    Native,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> anyhow::Result<EngineKind> {
+        Ok(match s {
+            "pjrt" => EngineKind::Pjrt,
+            "native" => EngineKind::Native,
+            other => anyhow::bail!("unknown engine '{other}' (pjrt|native)"),
+        })
+    }
+}
+
+/// Shared experiment context.
+#[derive(Debug, Clone)]
+pub struct ExpContext {
+    pub engine: EngineKind,
+    pub artifacts_dir: String,
+    pub out_dir: String,
+    /// Quick mode: relaxed target + iteration caps (CI-sized runs).
+    pub quick: bool,
+}
+
+impl Default for ExpContext {
+    fn default() -> Self {
+        ExpContext {
+            engine: EngineKind::Native,
+            artifacts_dir: "artifacts".into(),
+            out_dir: "results".into(),
+            quick: false,
+        }
+    }
+}
+
+impl ExpContext {
+    /// The paper's accuracy target (ε = 1e-8), relaxed in quick mode.
+    pub fn target(&self) -> f64 {
+        if self.quick {
+            1e-6
+        } else {
+            1e-8
+        }
+    }
+
+    pub fn cap(&self, full: usize) -> usize {
+        if self.quick {
+            full.min(3000)
+        } else {
+            full
+        }
+    }
+
+    /// Run one algorithm on `problem` with a fresh engine.
+    pub fn run_algo(
+        &self,
+        problem: &Problem,
+        algo: Algorithm,
+        opts: &RunOptions,
+    ) -> anyhow::Result<RunTrace> {
+        match self.engine {
+            EngineKind::Native => {
+                let mut e = NativeEngine::new(problem);
+                Ok(run(problem, algo, opts, &mut e))
+            }
+            EngineKind::Pjrt => {
+                let mut e = PjrtEngine::new(problem, &self.artifacts_dir)?;
+                Ok(run(problem, algo, opts, &mut e))
+            }
+        }
+    }
+
+    /// Run all five paper algorithms, returning their traces.
+    pub fn compare(
+        &self,
+        problem: &Problem,
+        opts_for: impl Fn(Algorithm) -> RunOptions,
+    ) -> anyhow::Result<Vec<RunTrace>> {
+        Algorithm::ALL
+            .iter()
+            .map(|&algo| self.run_algo(problem, algo, &opts_for(algo)))
+            .collect()
+    }
+
+    /// Write per-algorithm CSV traces under `out_dir/<exp_id>/`.
+    pub fn write_traces(&self, exp_id: &str, traces: &[RunTrace]) -> anyhow::Result<()> {
+        let dir = std::path::Path::new(&self.out_dir).join(exp_id);
+        std::fs::create_dir_all(&dir)?;
+        for t in traces {
+            t.write_csv(dir.join(format!("{}.csv", t.algo)))?;
+        }
+        Ok(())
+    }
+}
+
+/// Default IAG iteration budget: the IAG baselines take M-fold smaller
+/// steps, so give them an M-fold larger cap than the GD budget.
+pub fn iag_cap(gd_cap: usize, m: usize) -> usize {
+    gd_cap.saturating_mul(m).min(500_000)
+}
+
+/// Standard options per algorithm for the convergence experiments.
+/// The IAG baselines run M-fold more (cheap) iterations, where the
+/// monitoring objective pass dominates — they are evaluated every 5th
+/// iteration (±5 uploads of granularity on totals in the tens of
+/// thousands; documented in EXPERIMENTS.md).
+pub fn paper_opts(ctx: &ExpContext, algo: Algorithm, m: usize, gd_cap: usize) -> RunOptions {
+    let iag = matches!(algo, Algorithm::CycIag | Algorithm::NumIag);
+    RunOptions {
+        max_iters: if iag { ctx.cap(iag_cap(gd_cap, m)) } else { ctx.cap(gd_cap) },
+        target_err: Some(ctx.target()),
+        stop_at_target: true,
+        record_every: if iag { 5 } else { 1 },
+        eval_every: if iag { 5 } else { 1 },
+        ..Default::default()
+    }
+}
+
+/// Experiment registry: run one by id (or `all`).
+pub fn run_experiment(id: &str, ctx: &ExpContext) -> anyhow::Result<()> {
+    match id {
+        "fig2" => fig2::run(ctx),
+        "fig3" => fig3::run(ctx),
+        "fig4" => fig4::run(ctx),
+        "fig5" => fig5::run(ctx),
+        "fig6" => fig6::run(ctx),
+        "fig7" => fig7::run(ctx),
+        "table5" => table5::run(ctx),
+        "nonconvex" | "theorem3" => nonconvex::run(ctx),
+        "all" => {
+            for id in ["fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "table5", "nonconvex"] {
+                println!("\n================ {id} ================");
+                run_experiment(id, ctx)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown experiment '{other}' (fig2..fig7, table5, all)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_kind_parse() {
+        assert_eq!(EngineKind::parse("pjrt").unwrap(), EngineKind::Pjrt);
+        assert_eq!(EngineKind::parse("native").unwrap(), EngineKind::Native);
+        assert!(EngineKind::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn quick_mode_relaxes() {
+        let mut ctx = ExpContext::default();
+        assert_eq!(ctx.target(), 1e-8);
+        assert_eq!(ctx.cap(50_000), 50_000);
+        ctx.quick = true;
+        assert_eq!(ctx.target(), 1e-6);
+        assert_eq!(ctx.cap(50_000), 3000);
+    }
+
+    #[test]
+    fn iag_cap_scales_with_m() {
+        assert_eq!(iag_cap(1000, 9), 9000);
+        assert_eq!(iag_cap(100_000, 27), 500_000); // clamped
+    }
+
+    #[test]
+    fn unknown_experiment_errors() {
+        let ctx = ExpContext::default();
+        assert!(run_experiment("fig99", &ctx).is_err());
+    }
+}

@@ -1,0 +1,213 @@
+//! Theorem 3 validation — the nonconvex case.
+//!
+//! Workload: distributed *sigmoid-loss* binary classification,
+//! `ℓ(θ; x, y) = σ(−y·xᵀθ)` — a bounded, genuinely nonconvex loss (its
+//! Hessian changes sign), smooth with `|ℓ''| ≤ L₂ ≈ 0.0962` so
+//! `L_m = L₂·λmax(X_mᵀX_m)`.
+//!
+//! Theorem 3 asserts that LAG drives `min_k ‖∇L(θᵏ)‖² = o(1/K)` — same
+//! order as GD — while still saving communication. This experiment runs
+//! GD and LAG-WK to a gradient-norm target and reports iterations,
+//! uploads, and the `K · min_k ‖∇L‖²` sequence (which must decay).
+
+use crate::coordinator::server::ParameterServer;
+use crate::coordinator::trigger::TriggerConfig;
+use crate::data::synthetic::{self, LProfile};
+use crate::data::{Problem, Task};
+use crate::linalg::{self, dist2, sub};
+use crate::util::csv::CsvWriter;
+
+use super::ExpContext;
+
+/// max |σ''(u)| = 1/(6√3) — the sigmoid-loss curvature constant.
+pub const SIGMOID_L2: f64 = 0.09622504486493764;
+
+/// Per-worker sigmoid-loss gradient + loss (native; the nonconvex analog
+/// of `grad::worker_grad`).
+pub fn sigmoid_worker_grad(s: &crate::data::WorkerShard, theta: &[f64]) -> (Vec<f64>, f64) {
+    let z = s.x.matvec(theta);
+    let n = s.x.rows;
+    let mut r = vec![0.0; n];
+    let mut loss = 0.0;
+    for i in 0..n {
+        let u = -s.y[i] * z[i];
+        let sig = linalg::sigmoid(u);
+        loss += s.w[i] * sig;
+        // d/dθ σ(−y z) = −y σ(u)(1−σ(u)) x
+        r[i] = s.w[i] * (-s.y[i]) * sig * (1.0 - sig);
+    }
+    (s.x.t_matvec(&r), loss)
+}
+
+/// Build the nonconvex problem: reuse the synthetic generator's shards and
+/// re-derive the sigmoid-loss smoothness constants (the `Problem`'s
+/// logistic θ*/L are ignored here — nonconvex has no global reference).
+pub fn problem(m: usize, n: usize, d: usize, seed: u64) -> (Problem, Vec<f64>, f64) {
+    let p = synthetic::synthetic_problem(Task::LogReg { lam: 0.0 }, LProfile::Increasing, m, n, d, seed);
+    let l_m: Vec<f64> = p
+        .workers
+        .iter()
+        .map(|s| SIGMOID_L2 * linalg::power_iteration_gram(&s.x, 1e-12, 20_000))
+        .collect();
+    // L of the sum ≤ L₂·λmax over stacked data; bound by the sum (safe)
+    let l_total: f64 = l_m.iter().sum();
+    (p, l_m, l_total)
+}
+
+/// One nonconvex run; returns (iters, uploads, min-grad-norm² trace).
+pub fn run_nonconvex(
+    p: &Problem,
+    l_total: f64,
+    lag: bool,
+    max_iters: usize,
+    grad_target: f64,
+) -> (usize, u64, Vec<(usize, f64)>) {
+    let m = p.m();
+    let d = p.d;
+    let alpha = 1.0 / l_total;
+    let xi = if lag { 0.1 } else { 0.0 };
+    let trigger = TriggerConfig::uniform(10, xi);
+    let mut server = ParameterServer::new(d, m, 10, vec![0.0; d]);
+    let mut cached: Vec<Option<Vec<f64>>> = vec![None; m];
+    let mut uploads = 0u64;
+    let mut min_gn = f64::INFINITY;
+    let mut trace = Vec::new();
+    let mut iters = max_iters;
+
+    for k in 1..=max_iters {
+        let rhs = trigger.rhs(alpha, m, &server.history);
+        let mut global_grad = vec![0.0; d];
+        for mi in 0..m {
+            let (g, _) = sigmoid_worker_grad(&p.workers[mi], &server.theta);
+            linalg::axpy(1.0, &g, &mut global_grad);
+            let violated = match &cached[mi] {
+                None => true,
+                Some(c) => trigger.wk_violated(dist2(c, &g), rhs),
+            };
+            if violated {
+                let delta = match &cached[mi] {
+                    Some(c) => sub(&g, c),
+                    None => g.clone(),
+                };
+                server.apply_delta(mi, &delta);
+                cached[mi] = Some(g);
+                uploads += 1;
+            }
+        }
+        server.step(alpha);
+        let gn = linalg::norm2(&global_grad);
+        min_gn = min_gn.min(gn);
+        if k.is_power_of_two() || k == max_iters {
+            trace.push((k, min_gn));
+        }
+        if min_gn <= grad_target {
+            iters = k;
+            break;
+        }
+    }
+    (iters, uploads, trace)
+}
+
+pub fn run(ctx: &ExpContext) -> anyhow::Result<()> {
+    let (p, _lm, l_total) = problem(9, 50, 50, 31337);
+    let cap = ctx.cap(60_000);
+    let target = if ctx.quick { 1e-10 } else { 1e-12 };
+    println!("Theorem 3 — nonconvex sigmoid loss, M = 9 (L = {l_total:.3}), target ‖∇L‖² ≤ {target:.0e}");
+    let (gi, gu, gt) = run_nonconvex(&p, l_total, false, cap, target);
+    let (li, lu, lt) = run_nonconvex(&p, l_total, true, cap, target);
+    println!("{:<10} {:>8} {:>10}", "algorithm", "iters", "uploads");
+    println!("{:<10} {:>8} {:>10}", "batch-gd", gi, gu);
+    println!("{:<10} {:>8} {:>10}", "lag-wk", li, lu);
+    println!("\nK · min_k ‖∇L‖² (must decay → o(1/K), Theorem 3):");
+    println!("{:>8} {:>14} {:>14}", "K", "GD", "LAG-WK");
+    for ((k, g), (_, l)) in gt.iter().zip(&lt) {
+        println!("{:>8} {:>14.3e} {:>14.3e}", k, *k as f64 * g, *k as f64 * l);
+    }
+    let dir = std::path::Path::new(&ctx.out_dir).join("nonconvex");
+    std::fs::create_dir_all(&dir)?;
+    let mut w = CsvWriter::create(dir.join("theorem3.csv"), &["k", "gd_min_gn2", "lag_min_gn2"])?;
+    for ((k, g), (_, l)) in gt.iter().zip(&lt) {
+        w.row(&[k.to_string(), format!("{g:.6e}"), format!("{l:.6e}")])?;
+    }
+    w.finish()?;
+    println!("\nwrote {}/nonconvex", ctx.out_dir);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigmoid_grad_matches_finite_differences() {
+        let (p, _, _) = problem(3, 15, 6, 1);
+        let mut rng = crate::util::Rng::new(2);
+        let theta = rng.normal_vec(6);
+        let s = &p.workers[0];
+        let (g, _) = sigmoid_worker_grad(s, &theta);
+        let h = 1e-6;
+        for j in 0..6 {
+            let mut tp = theta.clone();
+            tp[j] += h;
+            let mut tm = theta.clone();
+            tm[j] -= h;
+            let (_, lp) = sigmoid_worker_grad(s, &tp);
+            let (_, lm) = sigmoid_worker_grad(s, &tm);
+            let fd = (lp - lm) / (2.0 * h);
+            assert!((g[j] - fd).abs() < 1e-5 * (1.0 + fd.abs()), "{} vs {fd}", g[j]);
+        }
+    }
+
+    #[test]
+    fn loss_is_nonconvex_here() {
+        // find two points where the Hessian quadratic form changes sign
+        let (p, _, _) = problem(2, 20, 4, 3);
+        let s = &p.workers[0];
+        let probe = |theta: &[f64], v: &[f64]| {
+            // second directional difference
+            let h = 1e-4;
+            let tp: Vec<f64> = theta.iter().zip(v).map(|(a, b)| a + h * b).collect();
+            let tm: Vec<f64> = theta.iter().zip(v).map(|(a, b)| a - h * b).collect();
+            let (_, l0) = sigmoid_worker_grad(s, theta);
+            let (_, lp) = sigmoid_worker_grad(s, &tp);
+            let (_, lm) = sigmoid_worker_grad(s, &tm);
+            (lp + lm - 2.0 * l0) / (h * h)
+        };
+        let mut rng = crate::util::Rng::new(4);
+        let mut saw_pos = false;
+        let mut saw_neg = false;
+        for _ in 0..200 {
+            let theta = rng.normal_vec(4).iter().map(|x| 3.0 * x).collect::<Vec<_>>();
+            let v = rng.normal_vec(4);
+            let c = probe(&theta, &v);
+            if c > 1e-8 {
+                saw_pos = true;
+            }
+            if c < -1e-8 {
+                saw_neg = true;
+            }
+        }
+        assert!(saw_pos && saw_neg, "sigmoid loss should be indefinite");
+    }
+
+    #[test]
+    fn theorem3_gradient_norm_decays_and_lag_saves() {
+        let (p, _, l_total) = problem(6, 30, 10, 5);
+        let (gi, gu, gt) = run_nonconvex(&p, l_total, false, 4000, 0.0);
+        let (li, lu, lt) = run_nonconvex(&p, l_total, true, 4000, 0.0);
+        assert_eq!(gi, 4000);
+        assert_eq!(li, 4000);
+        // min grad-norm decays by orders of magnitude for both (nonconvex
+        // sigmoid plateaus make the tail slow; 1e-4 relative over 4000
+        // iterations is the measured regime)
+        assert!(gt.last().unwrap().1 < 1e-4 * gt[0].1);
+        assert!(lt.last().unwrap().1 < 1e-4 * lt[0].1);
+        // LAG communicates (much) less than GD's M-per-iteration
+        assert!(lu * 2 < gu, "LAG {lu} !< GD {gu}");
+        // K · min ‖∇‖² decreasing over the tail (the o(1/K) signature)
+        let tail: Vec<f64> = gt.iter().rev().take(4).map(|(k, g)| *k as f64 * g).collect();
+        for w in tail.windows(2) {
+            assert!(w[0] <= w[1] * 1.5, "K·min‖∇‖² should trend down: {tail:?}");
+        }
+    }
+}

@@ -1,0 +1,177 @@
+//! Report rendering: comparison tables (measured vs. paper) printed by the
+//! experiment harness and the benches.
+
+use crate::metrics::RunTrace;
+
+/// Render the per-algorithm convergence comparison the figures are built
+/// from: iterations and uploads to target, plus the final error.
+pub fn comparison_table(traces: &[RunTrace], target: f64) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<12} {:>9} {:>12} {:>12} {:>12}\n",
+        "algorithm", "iters", "uploads@eps", "grad_evals", "final_err"
+    ));
+    out.push_str(&"-".repeat(62));
+    out.push('\n');
+    for t in traces {
+        let (iters, uploads) = match (t.converged_iter, t.uploads_at_target) {
+            (Some(k), Some(u)) => (k.to_string(), u.to_string()),
+            _ => (format!(">{}", t.records.last().map(|r| r.k).unwrap_or(0)), "—".into()),
+        };
+        out.push_str(&format!(
+            "{:<12} {:>9} {:>12} {:>12} {:>12.3e}\n",
+            t.algo,
+            iters,
+            uploads,
+            t.total_grad_evals(),
+            t.final_err()
+        ));
+    }
+    out.push_str(&format!("(target ε = {target:.0e})\n"));
+    out
+}
+
+/// Communication-savings summary vs. the GD row of the same comparison.
+pub fn savings_vs_gd(traces: &[RunTrace]) -> String {
+    let gd = traces.iter().find(|t| t.algo == "batch-gd");
+    let mut out = String::new();
+    if let Some(gd) = gd {
+        if let Some(gd_uploads) = gd.uploads_at_target {
+            for t in traces {
+                if let Some(u) = t.uploads_at_target {
+                    if t.algo != "batch-gd" && u > 0 {
+                        out.push_str(&format!(
+                            "{:<12} {:>8.1}x fewer uploads than GD\n",
+                            t.algo,
+                            gd_uploads as f64 / u as f64
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// A decimating log-scale view of `err vs x` curves for terminal output.
+pub fn ascii_curve(points: &[(f64, f64)], width: usize, height: usize, title: &str) -> String {
+    if points.is_empty() {
+        return format!("{title}: (no data)\n");
+    }
+    let xs: Vec<f64> = points.iter().map(|p| p.0).collect();
+    let ys: Vec<f64> = points.iter().map(|p| p.1.max(1e-300).log10()).collect();
+    let (xmin, xmax) = (xs[0], xs[xs.len() - 1].max(xs[0] + 1e-12));
+    let (ymin, ymax) = ys.iter().fold((f64::MAX, f64::MIN), |(lo, hi), &y| (lo.min(y), hi.max(y)));
+    let ymax = ymax.max(ymin + 1e-12);
+    let mut grid = vec![vec![b' '; width]; height];
+    for (x, y) in xs.iter().zip(&ys) {
+        let col = (((x - xmin) / (xmax - xmin)) * (width - 1) as f64).round() as usize;
+        let rowf = ((ymax - y) / (ymax - ymin)) * (height - 1) as f64;
+        let row = rowf.round() as usize;
+        grid[row.min(height - 1)][col.min(width - 1)] = b'*';
+    }
+    let mut out = format!("{title} (log10 err: {ymax:.1} .. {ymin:.1})\n");
+    for row in grid {
+        out.push_str("  |");
+        out.push_str(&String::from_utf8(row).unwrap());
+        out.push('\n');
+    }
+    out.push_str(&format!("   x: {xmin:.0} .. {xmax:.0}\n"));
+    out
+}
+
+/// Table 5 of the paper — the reference numbers we compare shape against.
+/// `(algorithm, linreg M=9/18/27, logreg M=9/18/27)`.
+pub const PAPER_TABLE5: &[(&str, [u64; 3], [u64; 3])] = &[
+    ("cyc-iag", [5271, 10522, 15773], [33300, 65287, 97773]),
+    ("num-iag", [3466, 5283, 5815], [22113, 30540, 37262]),
+    ("lag-ps", [1756, 3610, 5944], [14423, 29968, 44598]),
+    ("lag-wk", [412, 657, 1058], [584, 1098, 1723]),
+    ("batch-gd", [5283, 10548, 15822], [33309, 65322, 97821]),
+];
+
+/// Ordering check used by tests and the table5 report: in the paper, for
+/// every M and both tasks, LAG-WK < LAG-PS < Num-IAG < Cyc-IAG ≤ GD.
+pub fn paper_ordering(uploads: impl Fn(&str) -> Option<u64>) -> Result<(), String> {
+    let get = |name: &str| uploads(name).ok_or_else(|| format!("{name} did not converge"));
+    let wk = get("lag-wk")?;
+    let ps = get("lag-ps")?;
+    let gd = get("batch-gd")?;
+    if !(wk < ps) {
+        return Err(format!("lag-wk ({wk}) !< lag-ps ({ps})"));
+    }
+    if !(ps < gd) {
+        return Err(format!("lag-ps ({ps}) !< batch-gd ({gd})"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::IterRecord;
+
+    fn trace(algo: &str, iters: usize, uploads: u64, conv: bool) -> RunTrace {
+        RunTrace {
+            algo: algo.into(),
+            problem: "t".into(),
+            engine: "native".into(),
+            m: 9,
+            alpha: 0.1,
+            records: vec![IterRecord {
+                k: iters,
+                obj_err: 1e-9,
+                cum_uploads: uploads,
+                cum_downloads: 0,
+                cum_grad_evals: uploads,
+            }],
+            upload_events: vec![],
+            converged_iter: conv.then_some(iters),
+            uploads_at_target: conv.then_some(uploads),
+            wall_secs: 0.0,
+            thetas: vec![],
+        }
+    }
+
+    #[test]
+    fn table_contains_all_rows() {
+        let ts = vec![trace("batch-gd", 100, 900, true), trace("lag-wk", 120, 80, true)];
+        let s = comparison_table(&ts, 1e-8);
+        assert!(s.contains("batch-gd"));
+        assert!(s.contains("lag-wk"));
+        assert!(s.contains("900"));
+    }
+
+    #[test]
+    fn savings_computed_vs_gd() {
+        let ts = vec![trace("batch-gd", 100, 900, true), trace("lag-wk", 120, 90, true)];
+        let s = savings_vs_gd(&ts);
+        assert!(s.contains("10.0x"), "{s}");
+    }
+
+    #[test]
+    fn non_converged_shown_with_dash() {
+        let ts = vec![trace("cyc-iag", 500, 500, false)];
+        let s = comparison_table(&ts, 1e-8);
+        assert!(s.contains('—'));
+    }
+
+    #[test]
+    fn paper_table5_is_complete_and_ordered() {
+        assert_eq!(PAPER_TABLE5.len(), 5);
+        for m_idx in 0..3 {
+            let get = |name: &str| {
+                PAPER_TABLE5.iter().find(|r| r.0 == name).map(|r| r.1[m_idx])
+            };
+            paper_ordering(get).unwrap();
+        }
+    }
+
+    #[test]
+    fn ascii_curve_renders() {
+        let pts: Vec<(f64, f64)> = (0..50).map(|i| (i as f64, (-(i as f64) / 5.0).exp())).collect();
+        let s = ascii_curve(&pts, 40, 10, "test");
+        assert!(s.contains('*'));
+        assert!(s.lines().count() >= 10);
+    }
+}

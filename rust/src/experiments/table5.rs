@@ -1,0 +1,104 @@
+//! Table 5 — communication complexity (total uploads) to reach ε = 1e-8
+//! for M ∈ {9, 18, 27} workers, on both real-data tasks, all five
+//! algorithms. Prints measured values side-by-side with the paper's.
+
+use super::{fig5, fig6, paper_opts, report, ExpContext};
+use crate::coordinator::Algorithm;
+use crate::util::csv::CsvWriter;
+use std::collections::BTreeMap;
+
+pub struct Table5Result {
+    /// uploads[task][m_index][algo] (m_index: 0 → M=9, 1 → 18, 2 → 27).
+    pub uploads: BTreeMap<(String, usize, String), Option<u64>>,
+}
+
+pub fn measure(ctx: &ExpContext, ms: &[usize]) -> anyhow::Result<Table5Result> {
+    let mut uploads = BTreeMap::new();
+    for (task_name, gd_cap) in [("linreg", 100_000usize), ("logreg", 150_000usize)] {
+        for (mi, &shards_each) in ms.iter().enumerate() {
+            let p = if task_name == "linreg" {
+                fig5::problem(shards_each)?
+            } else {
+                fig6::problem(shards_each)?
+            };
+            let m = p.m();
+            println!("  table5: {task_name} M={m} ...");
+            for algo in Algorithm::ALL {
+                let t = ctx.run_algo(&p, algo, &paper_opts(ctx, algo, m, gd_cap))?;
+                uploads.insert(
+                    (task_name.to_string(), mi, algo.name().to_string()),
+                    t.uploads_at_target,
+                );
+            }
+        }
+    }
+    Ok(Table5Result { uploads })
+}
+
+pub fn render(res: &Table5Result, ms: &[usize]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<10} | {:>26} | {:>26}\n",
+        "", "linear regression", "logistic regression"
+    ));
+    out.push_str(&format!(
+        "{:<10} | {:>8} {:>8} {:>8} | {:>8} {:>8} {:>8}\n",
+        "algorithm",
+        format!("M={}", ms[0] * 3),
+        format!("M={}", ms.get(1).map(|s| s * 3).unwrap_or(0)),
+        format!("M={}", ms.get(2).map(|s| s * 3).unwrap_or(0)),
+        "", "", ""
+    ));
+    out.push_str(&"-".repeat(70));
+    out.push('\n');
+    for algo in ["cyc-iag", "num-iag", "lag-ps", "lag-wk", "batch-gd"] {
+        let cell = |task: &str, mi: usize| -> String {
+            match res.uploads.get(&(task.to_string(), mi, algo.to_string())) {
+                Some(Some(u)) => u.to_string(),
+                _ => "—".into(),
+            }
+        };
+        out.push_str(&format!(
+            "{:<10} | {:>8} {:>8} {:>8} | {:>8} {:>8} {:>8}\n",
+            algo,
+            cell("linreg", 0),
+            cell("linreg", 1),
+            cell("linreg", 2),
+            cell("logreg", 0),
+            cell("logreg", 1),
+            cell("logreg", 2),
+        ));
+    }
+    out.push_str("\npaper's Table 5 (absolute numbers differ — simulated data &\n");
+    out.push_str("testbed — but the ordering/shape should match):\n");
+    for (algo, lin, log) in report::PAPER_TABLE5 {
+        out.push_str(&format!(
+            "{:<10} | {:>8} {:>8} {:>8} | {:>8} {:>8} {:>8}\n",
+            algo, lin[0], lin[1], lin[2], log[0], log[1], log[2]
+        ));
+    }
+    out
+}
+
+pub fn run(ctx: &ExpContext) -> anyhow::Result<()> {
+    println!("Table 5 — uploads to ε = {:.0e}, M ∈ {{9, 18, 27}}", ctx.target());
+    let ms: &[usize] = if ctx.quick { &[3] } else { &[3, 6, 9] };
+    let res = measure(ctx, ms)?;
+    print!("{}", render(&res, ms));
+
+    // CSV export
+    let dir = std::path::Path::new(&ctx.out_dir).join("table5");
+    std::fs::create_dir_all(&dir)?;
+    let mut w = CsvWriter::create(dir.join("table5.csv"), &["task", "m", "algorithm", "uploads"])?;
+    for ((task, mi, algo), u) in &res.uploads {
+        w.row(&[
+            task.clone(),
+            (ms[*mi] * 3).to_string(),
+            algo.clone(),
+            u.map(|v| v.to_string()).unwrap_or_else(|| "NA".into()),
+        ])?;
+    }
+    w.finish()?;
+    println!("wrote {}/table5", ctx.out_dir);
+    Ok(())
+}

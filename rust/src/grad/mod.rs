@@ -1,0 +1,189 @@
+//! Gradient engines.
+//!
+//! The coordinator is generic over *how* a worker's gradient is computed:
+//!
+//! * [`NativeEngine`] — pure-Rust f64 oracle (this module); mirrors the L1
+//!   Pallas kernels bit-for-bit in semantics. Used by tests, property
+//!   checks, and as the `--engine native` fast path.
+//! * [`crate::runtime::PjrtEngine`] — the production path: the AOT'd
+//!   JAX+Pallas artifact executed through the PJRT C API.
+//!
+//! Tests assert both engines agree to float tolerance on identical shards.
+
+use crate::data::{Problem, Task, WorkerShard};
+use crate::linalg::{self, sigmoid};
+
+/// Anything that can produce `(∇L_m(θ), L_m(θ))` for worker `m`.
+pub trait GradEngine {
+    fn grad(&mut self, m: usize, theta: &[f64]) -> (Vec<f64>, f64);
+    fn name(&self) -> &'static str;
+    /// Total gradient evaluations so far (computation accounting).
+    fn calls(&self) -> u64;
+}
+
+/// Pure-Rust reference engine.
+pub struct NativeEngine<'a> {
+    problem: &'a Problem,
+    calls: u64,
+}
+
+impl<'a> NativeEngine<'a> {
+    pub fn new(problem: &'a Problem) -> Self {
+        NativeEngine { problem, calls: 0 }
+    }
+}
+
+impl GradEngine for NativeEngine<'_> {
+    fn grad(&mut self, m: usize, theta: &[f64]) -> (Vec<f64>, f64) {
+        self.calls += 1;
+        worker_grad(self.problem.task, &self.problem.workers[m], theta)
+    }
+    fn name(&self) -> &'static str {
+        "native"
+    }
+    fn calls(&self) -> u64 {
+        self.calls
+    }
+}
+
+/// Native `(grad, loss)` for one shard — the exact semantics of the L1
+/// kernels (`linreg_grad.py` / `logreg_grad.py`).
+pub fn worker_grad(task: Task, s: &WorkerShard, theta: &[f64]) -> (Vec<f64>, f64) {
+    let z = s.x.matvec(theta);
+    match task {
+        Task::LinReg => {
+            let n = s.x.rows;
+            let mut r = vec![0.0; n];
+            let mut loss = 0.0;
+            for i in 0..n {
+                let res = z[i] - s.y[i];
+                r[i] = s.w[i] * res;
+                loss += r[i] * res;
+            }
+            let mut g = s.x.t_matvec(&r);
+            for v in &mut g {
+                *v *= 2.0;
+            }
+            (g, loss)
+        }
+        Task::LogReg { lam } => {
+            let n = s.x.rows;
+            let mut r = vec![0.0; n];
+            let mut loss = 0.5 * lam * linalg::norm2(theta);
+            for i in 0..n {
+                let u = -s.y[i] * z[i];
+                r[i] = s.w[i] * (-s.y[i]) * sigmoid(u);
+                loss += s.w[i] * linalg::log1pexp(u);
+            }
+            let mut g = s.x.t_matvec(&r);
+            linalg::axpy(lam, theta, &mut g);
+            (g, loss)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::partition::pad_shard;
+    use crate::linalg::Matrix;
+    use crate::util::Rng;
+
+    fn shard(n: usize, d: usize, seed: u64, pm_labels: bool) -> WorkerShard {
+        let mut rng = Rng::new(seed);
+        let x = Matrix::from_vec(n, d, rng.normal_vec(n * d));
+        let y: Vec<f64> = if pm_labels {
+            (0..n).map(|_| rng.sign()).collect()
+        } else {
+            rng.normal_vec(n)
+        };
+        pad_shard(x, y, n)
+    }
+
+    /// Central-difference check of the analytic gradient.
+    fn check_grad(task: Task, s: &WorkerShard, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let theta = rng.normal_vec(s.d());
+        let (g, _) = worker_grad(task, s, &theta);
+        let h = 1e-6;
+        for j in 0..s.d().min(8) {
+            let mut tp = theta.clone();
+            let mut tm = theta.clone();
+            tp[j] += h;
+            tm[j] -= h;
+            let (_, lp) = worker_grad(task, s, &tp);
+            let (_, lm) = worker_grad(task, s, &tm);
+            let fd = (lp - lm) / (2.0 * h);
+            assert!(
+                (g[j] - fd).abs() < 1e-4 * (1.0 + fd.abs()),
+                "{:?} d{j}: analytic={} fd={fd}",
+                task,
+                g[j]
+            );
+        }
+    }
+
+    #[test]
+    fn linreg_gradient_matches_finite_differences() {
+        check_grad(Task::LinReg, &shard(30, 10, 1, false), 2);
+    }
+
+    #[test]
+    fn logreg_gradient_matches_finite_differences() {
+        check_grad(Task::LogReg { lam: 1e-3 }, &shard(30, 10, 3, true), 4);
+    }
+
+    #[test]
+    fn padding_rows_contribute_nothing() {
+        let mut rng = Rng::new(5);
+        let x = Matrix::from_vec(10, 4, rng.normal_vec(40));
+        let y = rng.normal_vec(10);
+        let theta = rng.normal_vec(4);
+        let s1 = pad_shard(x.clone(), y.clone(), 10);
+        let s2 = pad_shard(x, y, 32);
+        for task in [Task::LinReg, Task::LogReg { lam: 1e-3 }] {
+            let (g1, l1) = worker_grad(task, &s1, &theta);
+            let (g2, l2) = worker_grad(task, &s2, &theta);
+            assert_eq!(g1, g2);
+            assert_eq!(l1, l2);
+        }
+    }
+
+    #[test]
+    fn native_engine_counts_calls() {
+        let p = crate::data::synthetic::linreg_increasing_l(3, 10, 4, 6);
+        let mut e = NativeEngine::new(&p);
+        let theta = vec![0.0; 4];
+        for m in 0..3 {
+            e.grad(m, &theta);
+        }
+        assert_eq!(e.calls(), 3);
+        assert_eq!(e.name(), "native");
+    }
+
+    #[test]
+    fn engine_grad_sums_to_global_gradient() {
+        let p = crate::data::synthetic::linreg_increasing_l(4, 12, 5, 7);
+        let mut e = NativeEngine::new(&p);
+        let mut rng = Rng::new(8);
+        let theta = rng.normal_vec(5);
+        let mut g = vec![0.0; 5];
+        let mut loss = 0.0;
+        for m in 0..4 {
+            let (gm, lm) = e.grad(m, &theta);
+            linalg::axpy(1.0, &gm, &mut g);
+            loss += lm;
+        }
+        assert!((loss - p.global_loss(&theta)).abs() < 1e-9);
+        // finite-difference the global loss
+        let h = 1e-6;
+        for j in 0..3 {
+            let mut tp = theta.clone();
+            tp[j] += h;
+            let mut tm = theta.clone();
+            tm[j] -= h;
+            let fd = (p.global_loss(&tp) - p.global_loss(&tm)) / (2.0 * h);
+            assert!((g[j] - fd).abs() < 1e-4 * (1.0 + fd.abs()));
+        }
+    }
+}

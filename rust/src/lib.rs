@@ -1,0 +1,56 @@
+//! # LAG — Lazily Aggregated Gradient
+//!
+//! A production-grade reproduction of *"LAG: Lazily Aggregated Gradient for
+//! Communication-Efficient Distributed Learning"* (Chen, Giannakis, Sun,
+//! Yin — NeurIPS 2018) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the parameter server, worker fleet, the LAG-WK /
+//!   LAG-PS trigger rules (paper eqs. (15a)/(15b)), the lazy aggregation
+//!   recursion (4), all evaluation baselines (GD, Cyc-IAG, Num-IAG), exact
+//!   communication accounting, the experiment harness regenerating every
+//!   figure/table of the paper, and a threaded message-passing deployment.
+//! * **L2 (JAX, build time)** — per-worker gradient/loss computations and a
+//!   transformer LM, lowered once to HLO text in `artifacts/`.
+//! * **L1 (Pallas, build time)** — the gradient hot-spots as tiled kernels,
+//!   lowered inside the L2 graphs.
+//!
+//! Python never runs on the training path: [`runtime`] loads the AOT
+//! artifacts through the PJRT C API (`xla` crate) and executes them from
+//! the coordinator hot loop.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use lag::prelude::*;
+//!
+//! // 9 workers with geometrically increasing smoothness (paper Fig. 3).
+//! let problem = lag::data::synthetic::linreg_increasing_l(9, 50, 50, 1234);
+//! let opts = RunOptions { max_iters: 2000, target_err: Some(1e-8), ..Default::default() };
+//! let mut engine = lag::grad::NativeEngine::new(&problem);
+//! let trace = lag::coordinator::run(&problem, Algorithm::LagWk, &opts, &mut engine);
+//! println!("LAG-WK uploads to 1e-8: {}", trace.total_uploads());
+//! ```
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod grad;
+pub mod linalg;
+pub mod metrics;
+pub mod runtime;
+pub mod transformer;
+pub mod util;
+
+/// Common imports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::coordinator::{
+        run, Algorithm, CommStats, RunOptions, RunTrace,
+    };
+    pub use crate::data::{Dataset, Problem, Task, WorkerShard};
+    pub use crate::grad::{GradEngine, NativeEngine};
+    pub use crate::linalg::Matrix;
+}
+
+/// Crate-level result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,276 @@
+//! Dense linear algebra substrate.
+//!
+//! Everything the coordinator and the data layer need on the CPU in f64:
+//! row-major matrices, matvec, Gram products, power iteration (smoothness
+//! constants `L_m`), Cholesky (exact least-squares minimizers), conjugate
+//! gradients and Newton-CG (high-precision logistic minimizers for the
+//! `L(θ*)` reference values of every experiment).
+
+pub mod solvers;
+
+pub use solvers::{
+    cg_solve, cholesky_solve, log1pexp, logreg_newton, power_iteration_gram, sigmoid,
+};
+
+/// Row-major dense matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f64>>) -> Matrix {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(r * c);
+        for row in &rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Matrix { rows: r, cols: c, data }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Matrix {
+        assert_eq!(data.len(), rows * cols);
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// `y = A x` (rows·cols flops).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            y[i] = dot(self.row(i), x);
+        }
+        y
+    }
+
+    /// `y = Aᵀ x`.
+    pub fn t_matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows);
+        let mut y = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let row = self.row(i);
+            for (yj, aij) in y.iter_mut().zip(row) {
+                *yj += aij * xi;
+            }
+        }
+        y
+    }
+
+    /// Gram matrix `AᵀA` (cols × cols). Only used at setup time for small d.
+    pub fn gram(&self) -> Matrix {
+        let d = self.cols;
+        let mut g = Matrix::zeros(d, d);
+        for i in 0..self.rows {
+            let row = self.row(i);
+            for a in 0..d {
+                let ra = row[a];
+                if ra == 0.0 {
+                    continue;
+                }
+                let grow = g.row_mut(a);
+                for (b, rb) in row.iter().enumerate() {
+                    grow[b] += ra * rb;
+                }
+            }
+        }
+        g
+    }
+
+    /// Select the first `k` columns (the paper trims every real dataset to
+    /// the minimum feature count of its task group).
+    pub fn take_cols(&self, k: usize) -> Matrix {
+        assert!(k <= self.cols);
+        let mut out = Matrix::zeros(self.rows, k);
+        for i in 0..self.rows {
+            out.row_mut(i).copy_from_slice(&self.row(i)[..k]);
+        }
+        out
+    }
+
+    /// Select a contiguous row range [lo, hi).
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Matrix {
+        assert!(lo <= hi && hi <= self.rows);
+        Matrix {
+            rows: hi - lo,
+            cols: self.cols,
+            data: self.data[lo * self.cols..hi * self.cols].to_vec(),
+        }
+    }
+
+    /// In-place scalar multiply.
+    pub fn scale(&mut self, s: f64) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Vector ops used on the server hot path (allocation-free variants provided
+// for the trigger checks).
+// ---------------------------------------------------------------------------
+
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled: this is inside every trigger check and server update.
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for j in chunks * 4..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+#[inline]
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a)
+}
+
+#[inline]
+pub fn norm(a: &[f64]) -> f64 {
+    norm2(a).sqrt()
+}
+
+/// Squared Euclidean distance ‖a − b‖² without allocating.
+#[inline]
+pub fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        let d = x - y;
+        s += d * d;
+    }
+    s
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `y = x` copy helper.
+#[inline]
+pub fn assign(y: &mut [f64], x: &[f64]) {
+    y.copy_from_slice(x);
+}
+
+/// Elementwise subtraction `a - b` (allocating; setup paths only).
+pub fn sub(a: &[f64], b: &[f64]) -> Vec<f64> {
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_identity() {
+        let mut a = Matrix::zeros(3, 3);
+        for i in 0..3 {
+            a.set(i, i, 1.0);
+        }
+        let x = vec![1.0, 2.0, 3.0];
+        assert_eq!(a.matvec(&x), x);
+    }
+
+    #[test]
+    fn matvec_known() {
+        let a = Matrix::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(a.matvec(&[1.0, 1.0]), vec![3.0, 7.0]);
+        assert_eq!(a.t_matvec(&[1.0, 1.0]), vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn gram_matches_manual() {
+        let a = Matrix::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        let g = a.gram();
+        // AᵀA = [[35, 44], [44, 56]]
+        assert_eq!(g.get(0, 0), 35.0);
+        assert_eq!(g.get(0, 1), 44.0);
+        assert_eq!(g.get(1, 0), 44.0);
+        assert_eq!(g.get(1, 1), 56.0);
+    }
+
+    #[test]
+    fn dot_unrolled_matches_naive() {
+        let a: Vec<f64> = (0..103).map(|i| i as f64 * 0.37).collect();
+        let b: Vec<f64> = (0..103).map(|i| (i as f64).sin()).collect();
+        let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-9 * naive.abs().max(1.0));
+    }
+
+    #[test]
+    fn dist2_matches_sub_norm() {
+        let a = vec![1.0, 2.0, 3.0];
+        let b = vec![0.5, -1.0, 2.0];
+        assert!((dist2(&a, &b) - norm2(&sub(&a, &b))).abs() < 1e-15);
+    }
+
+    #[test]
+    fn take_cols_and_slice_rows() {
+        let a = Matrix::from_rows(vec![vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        let b = a.take_cols(2);
+        assert_eq!(b.row(1), &[4.0, 5.0]);
+        let c = a.slice_rows(1, 2);
+        assert_eq!(c.rows, 1);
+        assert_eq!(c.row(0), &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn axpy_known() {
+        let mut y = vec![1.0, 1.0];
+        axpy(2.0, &[3.0, 4.0], &mut y);
+        assert_eq!(y, vec![7.0, 9.0]);
+    }
+}

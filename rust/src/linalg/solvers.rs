@@ -1,0 +1,346 @@
+//! Numerical solvers used at experiment-setup time:
+//!
+//! * `power_iteration_gram` — λmax(XᵀX) without forming the Gram matrix,
+//!   the building block for every smoothness constant `L_m` in the paper.
+//! * `cholesky_solve` — exact least-squares minimizer θ\* (normal equations).
+//! * `cg_solve` — conjugate gradients for large-d SPD systems.
+//! * `logreg_newton` — Newton-CG minimizer of the ℓ2-regularized logistic
+//!   loss; gives the `L(θ*)` reference value each figure/table needs.
+
+use super::{axpy, dot, norm, norm2, Matrix};
+
+/// Largest eigenvalue of `XᵀX` by power iteration with matvec-only access.
+/// Deterministic start vector; converges to relative tolerance `tol`.
+pub fn power_iteration_gram(x: &Matrix, tol: f64, max_iters: usize) -> f64 {
+    let d = x.cols;
+    if d == 0 || x.rows == 0 {
+        return 0.0;
+    }
+    // deterministic, dense start vector (mixed signs to avoid orthogonal
+    // start against the principal eigenvector)
+    let mut v: Vec<f64> = (0..d)
+        .map(|j| 1.0 + 0.3 * ((j as f64 * 12.9898).sin()))
+        .collect();
+    let nv = norm(&v);
+    v.iter_mut().for_each(|z| *z /= nv);
+
+    let mut lambda = 0.0;
+    for _ in 0..max_iters {
+        let xv = x.matvec(&v);
+        let mut w = x.t_matvec(&xv);
+        let new_lambda = dot(&v, &w);
+        let nw = norm(&w);
+        if nw == 0.0 {
+            return 0.0;
+        }
+        w.iter_mut().for_each(|z| *z /= nw);
+        let done = (new_lambda - lambda).abs() <= tol * new_lambda.abs().max(1e-300);
+        lambda = new_lambda;
+        v = w;
+        if done {
+            break;
+        }
+    }
+    lambda
+}
+
+/// Solve `A x = b` for symmetric positive-definite `A` via Cholesky.
+/// Consumes a copy of `A`; O(d³/3). Returns an error if `A` is not SPD.
+pub fn cholesky_solve(a: &Matrix, b: &[f64]) -> anyhow::Result<Vec<f64>> {
+    anyhow::ensure!(a.rows == a.cols, "cholesky: non-square");
+    anyhow::ensure!(b.len() == a.rows, "cholesky: dim mismatch");
+    let d = a.rows;
+    let mut l = a.clone();
+    // in-place lower Cholesky
+    for j in 0..d {
+        let mut diag = l.get(j, j);
+        for k in 0..j {
+            let v = l.get(j, k);
+            diag -= v * v;
+        }
+        anyhow::ensure!(diag > 0.0, "cholesky: matrix not positive definite (pivot {j})");
+        let diag = diag.sqrt();
+        l.set(j, j, diag);
+        for i in j + 1..d {
+            let mut v = l.get(i, j);
+            for k in 0..j {
+                v -= l.get(i, k) * l.get(j, k);
+            }
+            l.set(i, j, v / diag);
+        }
+    }
+    // forward solve L y = b
+    let mut y = b.to_vec();
+    for i in 0..d {
+        for k in 0..i {
+            y[i] -= l.get(i, k) * y[k];
+        }
+        y[i] /= l.get(i, i);
+    }
+    // back solve Lᵀ x = y
+    let mut xs = y;
+    for i in (0..d).rev() {
+        for k in i + 1..d {
+            xs[i] -= l.get(k, i) * xs[k];
+        }
+        xs[i] /= l.get(i, i);
+    }
+    Ok(xs)
+}
+
+/// Conjugate gradients for SPD `A x = b` given only the matvec `av`.
+pub fn cg_solve<F: FnMut(&[f64]) -> Vec<f64>>(
+    mut av: F,
+    b: &[f64],
+    tol: f64,
+    max_iters: usize,
+) -> Vec<f64> {
+    let d = b.len();
+    let mut x = vec![0.0; d];
+    let mut r = b.to_vec();
+    let mut p = r.clone();
+    let mut rs = norm2(&r);
+    let b2 = rs.max(1e-300);
+    for _ in 0..max_iters {
+        if rs <= tol * tol * b2 {
+            break;
+        }
+        let ap = av(&p);
+        let alpha = rs / dot(&p, &ap).max(1e-300);
+        axpy(alpha, &p, &mut x);
+        axpy(-alpha, &ap, &mut r);
+        let rs_new = norm2(&r);
+        let beta = rs_new / rs;
+        for (pi, ri) in p.iter_mut().zip(&r) {
+            *pi = ri + beta * *pi;
+        }
+        rs = rs_new;
+    }
+    x
+}
+
+/// Stable sigmoid.
+#[inline]
+pub fn sigmoid(u: f64) -> f64 {
+    if u >= 0.0 {
+        1.0 / (1.0 + (-u).exp())
+    } else {
+        let e = u.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// `log(1 + e^u)` without overflow.
+#[inline]
+pub fn log1pexp(u: f64) -> f64 {
+    if u > 0.0 {
+        u + (-u).exp().ln_1p()
+    } else {
+        u.exp().ln_1p()
+    }
+}
+
+/// Newton-CG minimizer of
+/// `f(θ) = Σ_i w_i log(1 + exp(-y_i x_iᵀθ)) + (reg/2)‖θ‖²`
+/// (for the *global* problem, `reg = M·λ` because every worker carries its
+/// own λ/2-term, paper eq. (86)). Hessian-vector products avoid forming the
+/// d×d Hessian, so Gisette-sized problems (d=4837) are fine.
+///
+/// Returns (θ*, f(θ*)); converges to gradient norm ≤ `tol`.
+pub fn logreg_newton(
+    x: &Matrix,
+    y: &[f64],
+    w: &[f64],
+    reg: f64,
+    tol: f64,
+    max_iters: usize,
+) -> (Vec<f64>, f64) {
+    let d = x.cols;
+    let n = x.rows;
+    assert_eq!(y.len(), n);
+    assert_eq!(w.len(), n);
+    let mut theta = vec![0.0; d];
+
+    let value = |theta: &[f64]| -> f64 {
+        let z = x.matvec(theta);
+        let mut f = 0.5 * reg * norm2(theta);
+        for i in 0..n {
+            f += w[i] * log1pexp(-y[i] * z[i]);
+        }
+        f
+    };
+
+    let mut f_cur = value(&theta);
+    for _ in 0..max_iters {
+        let z = x.matvec(&theta);
+        // gradient and the diagonal Hessian weights
+        let mut r = vec![0.0; n];
+        let mut hw = vec![0.0; n];
+        for i in 0..n {
+            let s = sigmoid(-y[i] * z[i]);
+            r[i] = w[i] * (-y[i]) * s;
+            hw[i] = w[i] * s * (1.0 - s);
+        }
+        let mut g = x.t_matvec(&r);
+        axpy(reg, &theta, &mut g);
+        let gn = norm(&g);
+        if gn <= tol {
+            break;
+        }
+        // Newton direction: (XᵀHX + reg I) p = g via CG
+        let hess_v = |v: &[f64]| -> Vec<f64> {
+            let xv = x.matvec(v);
+            let hx: Vec<f64> = xv.iter().zip(&hw).map(|(a, h)| a * h).collect();
+            let mut out = x.t_matvec(&hx);
+            axpy(reg, v, &mut out);
+            out
+        };
+        // inexact Newton: CG capped at 400 iterations (plenty for the
+        // regularized Hessians here; keeps Gisette-sized setups fast)
+        let p = cg_solve(hess_v, &g, 1e-12, (4 * d.min(n) + 50).min(400));
+        // backtracking line search on θ ← θ − t p
+        let gp = dot(&g, &p);
+        let mut t = 1.0;
+        let mut accepted = false;
+        for _ in 0..60 {
+            let cand: Vec<f64> = theta.iter().zip(&p).map(|(a, b)| a - t * b).collect();
+            let f_new = value(&cand);
+            if f_new <= f_cur - 1e-4 * t * gp {
+                theta = cand;
+                f_cur = f_new;
+                accepted = true;
+                break;
+            }
+            t *= 0.5;
+        }
+        if !accepted {
+            break; // at numerical precision
+        }
+    }
+    (theta, f_cur)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_matrix(rng: &mut Rng, n: usize, d: usize) -> Matrix {
+        Matrix::from_vec(n, d, rng.normal_vec(n * d))
+    }
+
+    #[test]
+    fn power_iteration_diagonal() {
+        // X = diag(1, 2, 3) → λmax(XᵀX) = 9
+        let mut x = Matrix::zeros(3, 3);
+        x.set(0, 0, 1.0);
+        x.set(1, 1, 2.0);
+        x.set(2, 2, 3.0);
+        let l = power_iteration_gram(&x, 1e-14, 10_000);
+        assert!((l - 9.0).abs() < 1e-9, "λ={l}");
+    }
+
+    #[test]
+    fn power_iteration_matches_gram_trace_bound() {
+        let mut rng = Rng::new(1);
+        let x = rand_matrix(&mut rng, 40, 8);
+        let l = power_iteration_gram(&x, 1e-13, 20_000);
+        let g = x.gram();
+        let trace: f64 = (0..8).map(|i| g.get(i, i)).sum();
+        assert!(l <= trace + 1e-9);
+        assert!(l >= trace / 8.0 - 1e-9);
+        // Rayleigh check: λmax ≥ vᵀGv for random unit v
+        for seed in 0..5 {
+            let mut r2 = Rng::new(seed);
+            let mut v = r2.normal_vec(8);
+            let nv = norm(&v);
+            v.iter_mut().for_each(|z| *z /= nv);
+            let gv = g.matvec(&v);
+            assert!(dot(&v, &gv) <= l + 1e-6);
+        }
+    }
+
+    #[test]
+    fn cholesky_solves_known_system() {
+        let a = Matrix::from_rows(vec![vec![4.0, 2.0], vec![2.0, 3.0]]);
+        let x = cholesky_solve(&a, &[10.0, 8.0]).unwrap();
+        // verify residual
+        let r = a.matvec(&x);
+        assert!((r[0] - 10.0).abs() < 1e-12 && (r[1] - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_rows(vec![vec![1.0, 2.0], vec![2.0, 1.0]]);
+        assert!(cholesky_solve(&a, &[1.0, 1.0]).is_err());
+    }
+
+    #[test]
+    fn cg_matches_cholesky() {
+        let mut rng = Rng::new(2);
+        let x = rand_matrix(&mut rng, 30, 6);
+        let mut g = x.gram();
+        for i in 0..6 {
+            g.set(i, i, g.get(i, i) + 0.1);
+        }
+        let b = rng.normal_vec(6);
+        let exact = cholesky_solve(&g, &b).unwrap();
+        let approx = cg_solve(|v| g.matvec(v), &b, 1e-14, 500);
+        for (a, e) in approx.iter().zip(&exact) {
+            assert!((a - e).abs() < 1e-8, "{a} vs {e}");
+        }
+    }
+
+    #[test]
+    fn sigmoid_stable_extremes() {
+        assert_eq!(sigmoid(1e9), 1.0);
+        assert_eq!(sigmoid(-1e9), 0.0);
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-15);
+        assert!(log1pexp(1e9).is_finite());
+        assert!((log1pexp(0.0) - std::f64::consts::LN_2).abs() < 1e-15);
+    }
+
+    #[test]
+    fn newton_drives_gradient_to_zero() {
+        let mut rng = Rng::new(3);
+        let n = 120;
+        let d = 10;
+        let x = rand_matrix(&mut rng, n, d);
+        let theta0 = rng.normal_vec(d);
+        let y: Vec<f64> = (0..n)
+            .map(|i| if dot(x.row(i), &theta0) + 0.3 * rng.normal() > 0.0 { 1.0 } else { -1.0 })
+            .collect();
+        let w = vec![1.0; n];
+        let reg = 1e-2;
+        let (theta, f) = logreg_newton(&x, &y, &w, reg, 1e-12, 100);
+        // gradient at θ* is ~0
+        let z = x.matvec(&theta);
+        let mut g = x.t_matvec(
+            &(0..n).map(|i| -y[i] * sigmoid(-y[i] * z[i])).collect::<Vec<_>>(),
+        );
+        axpy(reg, &theta, &mut g);
+        assert!(norm(&g) < 1e-9, "‖g‖={}", norm(&g));
+        assert!(f > 0.0 && f.is_finite());
+    }
+
+    #[test]
+    fn newton_value_is_global_min() {
+        // any perturbation increases the strongly convex objective
+        let mut rng = Rng::new(4);
+        let x = rand_matrix(&mut rng, 50, 5);
+        let y: Vec<f64> = (0..50).map(|_| rng.sign()).collect();
+        let w = vec![1.0; 50];
+        let (theta, f) = logreg_newton(&x, &y, &w, 1e-3, 1e-12, 100);
+        for trial in 0..10 {
+            let mut r2 = Rng::new(100 + trial);
+            let pert: Vec<f64> =
+                theta.iter().map(|t| t + 1e-3 * r2.normal()).collect();
+            let z = x.matvec(&pert);
+            let mut fp = 0.5 * 1e-3 * norm2(&pert);
+            for i in 0..50 {
+                fp += log1pexp(-y[i] * z[i]);
+            }
+            assert!(fp >= f - 1e-12);
+        }
+    }
+}

@@ -1,0 +1,250 @@
+//! `lag` — the leader CLI.
+//!
+//! ```text
+//! lag exp <fig2|fig3|fig4|fig5|fig6|fig7|table5|all> [--engine pjrt|native]
+//!         [--artifacts DIR] [--out DIR] [--quick]
+//! lag train --task linreg|logreg --algo lag-wk|lag-ps|gd|cyc-iag|num-iag
+//!         [--m 9] [--n 50] [--d 50] [--iters 1000] [--target 1e-8]
+//!         [--engine pjrt|native] [--seed 1234] [--profile increasing|uniform]
+//! lag info [--artifacts DIR]
+//! ```
+
+use lag::coordinator::{run, Algorithm, RunOptions};
+use lag::data::{synthetic, Task};
+use lag::experiments::{run_experiment, EngineKind, ExpContext};
+use lag::grad::NativeEngine;
+use lag::runtime::{Manifest, PjrtEngine};
+use lag::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.subcommand.as_deref() {
+        Some("exp") => cmd_exp(&args),
+        Some("run") => cmd_run(&args),
+        Some("train") => cmd_train(&args),
+        Some("info") => cmd_info(&args),
+        Some("leader") => cmd_leader(&args),
+        Some("worker") => cmd_worker(&args),
+        Some("plot") => cmd_plot(&args),
+        Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => Err(anyhow::anyhow!("unknown subcommand '{other}'")),
+    };
+    if let Err(e) = code {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "lag — Lazily Aggregated Gradient (NeurIPS 2018) reproduction\n\n\
+         subcommands:\n  \
+         exp <id>     regenerate a paper figure/table (fig2..fig7, table5, nonconvex, all)\n  \
+         run          execute a declarative JSON run config: lag run --config cfg.json\n  \
+         train        run one algorithm on a synthetic problem\n  \
+         leader       TCP parameter server: --addr 0.0.0.0:7070 --m 9 [--algo lag-wk]\n  \
+         worker       TCP worker: --addr host:7070 --index 0 (same problem flags)\n  \
+         plot         render a results CSV as an ASCII curve: lag plot results/fig3/lag-wk.csv\n  \
+         info         list AOT artifacts\n\n\
+         common flags: --engine pjrt|native  --artifacts DIR  --out DIR  --quick"
+    );
+}
+
+fn ctx_from(args: &Args) -> anyhow::Result<ExpContext> {
+    Ok(ExpContext {
+        engine: EngineKind::parse(&args.opt_or("engine", "native"))?,
+        artifacts_dir: args.opt_or("artifacts", "artifacts"),
+        out_dir: args.opt_or("out", "results"),
+        quick: args.has_flag("quick"),
+    })
+}
+
+fn cmd_exp(args: &Args) -> anyhow::Result<()> {
+    let id = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: lag exp <fig2..fig7|table5|all>"))?;
+    let ctx = ctx_from(args)?;
+    run_experiment(id, &ctx)
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .opt("config")
+        .or(args.positional.first().map(|s| s.as_str()))
+        .ok_or_else(|| anyhow::anyhow!("usage: lag run --config cfg.json"))?;
+    let cfg = lag::config::RunConfig::from_file(path)?;
+    let problem = cfg.problem.build()?;
+    println!(
+        "config {path}: {} on {} (M = {}, d = {}, engine {:?})",
+        cfg.algorithm.name(),
+        problem.name,
+        problem.m(),
+        problem.d,
+        cfg.engine
+    );
+    let trace = match cfg.engine {
+        EngineKind::Native => {
+            let mut e = NativeEngine::new(&problem);
+            run(&problem, cfg.algorithm, &cfg.options, &mut e)
+        }
+        EngineKind::Pjrt => {
+            let mut e = PjrtEngine::new(&problem, &cfg.artifacts_dir)?;
+            run(&problem, cfg.algorithm, &cfg.options, &mut e)
+        }
+    };
+    println!("{}", trace.summary());
+    if let Some(out) = &cfg.trace_out {
+        trace.write_csv(out)?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let task = match args.opt_or("task", "linreg").as_str() {
+        "linreg" => Task::LinReg,
+        "logreg" => Task::LogReg { lam: args.opt_f64("lam", 1e-3)? },
+        other => anyhow::bail!("unknown task '{other}'"),
+    };
+    let algo = Algorithm::parse(&args.opt_or("algo", "lag-wk"))?;
+    let m = args.opt_usize("m", 9)?;
+    let n = args.opt_usize("n", 50)?;
+    let d = args.opt_usize("d", 50)?;
+    let seed = args.opt_usize("seed", 1234)? as u64;
+    let profile = match args.opt_or("profile", "increasing").as_str() {
+        "increasing" => synthetic::LProfile::Increasing,
+        "uniform" => synthetic::LProfile::Uniform(args.opt_f64("uniform-l", 4.0)?),
+        other => anyhow::bail!("unknown profile '{other}'"),
+    };
+    let problem = synthetic::synthetic_problem(task, profile, m, n, d, seed);
+    let opts = RunOptions {
+        max_iters: args.opt_usize("iters", 1000)?,
+        target_err: args.opt("target").map(|s| s.parse()).transpose()?,
+        wk_xi: args.opt_f64("wk-xi", 0.1)?,
+        ps_xi: args.opt_f64("ps-xi", 1.0)?,
+        d_history: args.opt_usize("d-history", 10)?,
+        seed,
+        ..Default::default()
+    };
+    println!(
+        "training: {} on {} (M={m}, n={n}, d={d}, L={:.3}, α={:.3e})",
+        algo.name(),
+        problem.name,
+        problem.l_total,
+        opts.alpha.unwrap_or_else(|| algo.default_alpha(problem.l_total, m)),
+    );
+    let trace = match EngineKind::parse(&args.opt_or("engine", "native"))? {
+        EngineKind::Native => {
+            let mut e = NativeEngine::new(&problem);
+            run(&problem, algo, &opts, &mut e)
+        }
+        EngineKind::Pjrt => {
+            let mut e = PjrtEngine::new(&problem, args.opt_or("artifacts", "artifacts"))?;
+            println!("engine: pjrt (artifact {})", e.artifact);
+            run(&problem, algo, &opts, &mut e)
+        }
+    };
+    println!("{}", trace.summary());
+    if let Some(out) = args.opt("trace-out") {
+        trace.write_csv(out)?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+/// Both sides of the TCP deployment derive the same problem from shared
+/// flags (task/m/n/d/seed); in a real deployment each worker holds local
+/// data and the leader only needs shapes + smoothness metadata.
+fn tcp_problem(args: &Args) -> anyhow::Result<lag::data::Problem> {
+    let task = match args.opt_or("task", "linreg").as_str() {
+        "linreg" => Task::LinReg,
+        "logreg" => Task::LogReg { lam: args.opt_f64("lam", 1e-3)? },
+        other => anyhow::bail!("unknown task '{other}'"),
+    };
+    let m = args.opt_usize("m", 9)?;
+    let n = args.opt_usize("n", 50)?;
+    let d = args.opt_usize("d", 50)?;
+    let seed = args.opt_usize("seed", 1234)? as u64;
+    Ok(synthetic::synthetic_problem(task, synthetic::LProfile::Increasing, m, n, d, seed))
+}
+
+fn cmd_leader(args: &Args) -> anyhow::Result<()> {
+    let addr = args.opt_or("addr", "127.0.0.1:7070");
+    let problem = tcp_problem(args)?;
+    let algo = Algorithm::parse(&args.opt_or("algo", "lag-wk"))?;
+    let opts = RunOptions {
+        max_iters: args.opt_usize("iters", 2000)?,
+        target_err: args.opt("target").map(|s| s.parse()).transpose()?,
+        ..Default::default()
+    };
+    println!("leader on {addr}: waiting for {} workers...", problem.m());
+    let (trace, stats) = lag::coordinator::run_leader(&addr, &problem, algo, &opts)?;
+    println!("{}", trace.summary());
+    println!(
+        "wire volume: {:.1} KB down, {:.1} KB up",
+        stats.bytes_down as f64 / 1024.0,
+        stats.bytes_up as f64 / 1024.0
+    );
+    Ok(())
+}
+
+fn cmd_worker(args: &Args) -> anyhow::Result<()> {
+    let addr = args.opt_or("addr", "127.0.0.1:7070");
+    let index = args.opt_usize("index", 0)?;
+    let problem = tcp_problem(args)?;
+    anyhow::ensure!(index < problem.m(), "--index {index} out of range");
+    println!("worker {index}: connecting to {addr}...");
+    let rounds =
+        lag::coordinator::run_worker(&addr, index, problem.task, &problem.workers[index])?;
+    println!("worker {index}: served {rounds} rounds, shutting down");
+    Ok(())
+}
+
+fn cmd_plot(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: lag plot <trace.csv> [--x cum_uploads] [--y obj_err]"))?;
+    let x = args.opt_or("x", "cum_uploads");
+    let y = args.opt_or("y", "obj_err");
+    let table = lag::util::csv_read::CsvTable::read(path)?;
+    let pts = table.xy(&x, &y)?;
+    print!(
+        "{}",
+        lag::experiments::report::ascii_curve(&pts, 72, 16, &format!("{path}: {y} vs {x}"))
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let dir = args.opt_or("artifacts", "artifacts");
+    let m = Manifest::load(&dir)?;
+    println!("artifacts in {dir} (digest {}):", &m.digest[..12.min(m.digest.len())]);
+    for e in &m.entries {
+        match &e.transformer {
+            Some(t) => println!(
+                "  {:<28} kind={:<11} params={} ({} blocks) batch={}x{}",
+                e.name,
+                e.kind,
+                t.n_params,
+                t.params.len(),
+                t.batch,
+                t.seq_len
+            ),
+            None => println!(
+                "  {:<28} kind={:<11} shape={}x{} dtype={}{}",
+                e.name,
+                e.kind,
+                e.n,
+                e.d,
+                e.dtype,
+                e.lam.map(|l| format!(" λ={l}")).unwrap_or_default()
+            ),
+        }
+    }
+    Ok(())
+}

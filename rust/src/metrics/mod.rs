@@ -1,0 +1,191 @@
+//! Run traces and exporters: iteration/communication curves (the paper's
+//! figures), convergence detection, CSV/JSON output under `results/`.
+
+use crate::util::csv::CsvWriter;
+use std::path::Path;
+
+/// One training iteration's record.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IterRecord {
+    pub k: usize,
+    /// `L(θᵏ) − L(θ*)`.
+    pub obj_err: f64,
+    /// Cumulative worker→server uploads after this iteration.
+    pub cum_uploads: u64,
+    /// Cumulative server→worker parameter sends.
+    pub cum_downloads: u64,
+    /// Cumulative gradient evaluations across workers.
+    pub cum_grad_evals: u64,
+}
+
+/// Full trace of one algorithm run.
+#[derive(Debug, Clone)]
+pub struct RunTrace {
+    pub algo: String,
+    pub problem: String,
+    pub engine: String,
+    pub m: usize,
+    pub alpha: f64,
+    pub records: Vec<IterRecord>,
+    /// Per-worker upload iteration indices (Fig. 2's stick plot).
+    pub upload_events: Vec<Vec<usize>>,
+    /// First iteration where obj_err ≤ target (if a target was set and hit).
+    pub converged_iter: Option<usize>,
+    /// Cumulative uploads at convergence (the paper's communication
+    /// complexity metric, Table 5).
+    pub uploads_at_target: Option<u64>,
+    pub wall_secs: f64,
+    /// Iterate sequence θ¹, θ², … (only populated when
+    /// `RunOptions::record_thetas` is set; used by the Lyapunov tests).
+    pub thetas: Vec<Vec<f64>>,
+}
+
+impl RunTrace {
+    pub fn total_uploads(&self) -> u64 {
+        self.records.last().map(|r| r.cum_uploads).unwrap_or(0)
+    }
+    pub fn total_downloads(&self) -> u64 {
+        self.records.last().map(|r| r.cum_downloads).unwrap_or(0)
+    }
+    pub fn total_grad_evals(&self) -> u64 {
+        self.records.last().map(|r| r.cum_grad_evals).unwrap_or(0)
+    }
+    pub fn iters(&self) -> usize {
+        self.records.len()
+    }
+    pub fn final_err(&self) -> f64 {
+        self.records.last().map(|r| r.obj_err).unwrap_or(f64::INFINITY)
+    }
+
+    /// Objective error as a function of cumulative uploads — the paper's
+    /// "communication complexity" x-axis.
+    pub fn err_vs_comm(&self) -> Vec<(u64, f64)> {
+        self.records.iter().map(|r| (r.cum_uploads, r.obj_err)).collect()
+    }
+
+    /// Write the full per-iteration trace as CSV.
+    pub fn write_csv<P: AsRef<Path>>(&self, path: P) -> anyhow::Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &["k", "obj_err", "cum_uploads", "cum_downloads", "cum_grad_evals"],
+        )?;
+        for r in &self.records {
+            w.row(&[
+                r.k.to_string(),
+                format!("{:.17e}", r.obj_err),
+                r.cum_uploads.to_string(),
+                r.cum_downloads.to_string(),
+                r.cum_grad_evals.to_string(),
+            ])?;
+        }
+        w.finish()
+    }
+
+    /// Write per-worker upload events (Fig. 2) as CSV rows `worker,iter`.
+    pub fn write_events_csv<P: AsRef<Path>>(&self, path: P) -> anyhow::Result<()> {
+        let mut w = CsvWriter::create(path, &["worker", "iter"])?;
+        for (m, evs) in self.upload_events.iter().enumerate() {
+            for k in evs {
+                w.row(&[m.to_string(), k.to_string()])?;
+            }
+        }
+        w.finish()
+    }
+
+    /// Compact one-line summary for reports.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<10} iters={:<6} uploads={:<8} final_err={:.3e}{}",
+            self.algo,
+            self.iters(),
+            self.total_uploads(),
+            self.final_err(),
+            match self.uploads_at_target {
+                Some(u) => format!(" uploads@target={u}"),
+                None => String::new(),
+            }
+        )
+    }
+}
+
+/// ASCII rendering of Fig. 2's communication-event stick plot.
+pub fn ascii_event_plot(trace: &RunTrace, workers: &[usize], width: usize) -> String {
+    let max_iter = trace.records.len().max(1);
+    let mut out = String::new();
+    for &m in workers {
+        let mut line = vec![b' '; width];
+        if let Some(evs) = trace.upload_events.get(m) {
+            for &k in evs {
+                let pos = k * width / max_iter;
+                line[pos.min(width - 1)] = b'|';
+            }
+        }
+        out.push_str(&format!(
+            "worker {:>2} [{}] {} uploads\n",
+            m + 1,
+            String::from_utf8(line).unwrap(),
+            trace.upload_events.get(m).map(|e| e.len()).unwrap_or(0)
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_trace() -> RunTrace {
+        RunTrace {
+            algo: "gd".into(),
+            problem: "toy".into(),
+            engine: "native".into(),
+            m: 2,
+            alpha: 0.1,
+            records: vec![
+                IterRecord { k: 1, obj_err: 1.0, cum_uploads: 2, cum_downloads: 2, cum_grad_evals: 2 },
+                IterRecord { k: 2, obj_err: 0.5, cum_uploads: 4, cum_downloads: 4, cum_grad_evals: 4 },
+            ],
+            upload_events: vec![vec![1, 2], vec![1]],
+            converged_iter: Some(2),
+            uploads_at_target: Some(4),
+            wall_secs: 0.0,
+            thetas: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn totals() {
+        let t = toy_trace();
+        assert_eq!(t.total_uploads(), 4);
+        assert_eq!(t.iters(), 2);
+        assert_eq!(t.final_err(), 0.5);
+        assert_eq!(t.err_vs_comm(), vec![(2, 1.0), (4, 0.5)]);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("lag_metrics_test");
+        let p = dir.join("t.csv");
+        toy_trace().write_csv(&p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.starts_with("k,obj_err"));
+        assert_eq!(s.lines().count(), 3);
+    }
+
+    #[test]
+    fn events_csv() {
+        let dir = std::env::temp_dir().join("lag_metrics_test");
+        let p = dir.join("e.csv");
+        toy_trace().write_events_csv(&p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(s.lines().count(), 4); // header + 3 events
+    }
+
+    #[test]
+    fn ascii_plot_contains_sticks() {
+        let t = toy_trace();
+        let plot = ascii_event_plot(&t, &[0, 1], 20);
+        assert!(plot.contains('|'));
+        assert!(plot.contains("worker  1"));
+    }
+}

@@ -1,0 +1,253 @@
+//! `artifacts/manifest.json` — the contract between the Python compile path
+//! and the Rust runtime. Written by `python/compile/aot.py`; describes every
+//! AOT'd computation (name, file, kind, shapes, dtype, and for the
+//! transformer the full ordered parameter manifest).
+
+use crate::util::json::{parse, Json};
+use std::path::{Path, PathBuf};
+
+/// Init scheme for a transformer parameter (mirrors `param_specs`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Init {
+    Normal { std: f64 },
+    Zeros,
+    Ones,
+}
+
+/// One transformer parameter's spec, in artifact argument order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: Init,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Transformer artifact config.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TransformerMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub n_params: usize,
+    pub params: Vec<ParamSpec>,
+}
+
+/// One manifest entry.
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    /// Regression shapes (0 for transformer entries).
+    pub n: usize,
+    pub d: usize,
+    pub dtype: String,
+    pub lam: Option<f64>,
+    pub transformer: Option<TransformerMeta>,
+}
+
+/// The parsed manifest plus its directory (for resolving HLO files).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub digest: String,
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn load<P: AsRef<Path>>(dir: P) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} ({e}); run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let root = parse(&text)?;
+        let digest = root.get("digest")?.as_str().unwrap_or("").to_string();
+        let mut entries = Vec::new();
+        for e in root.get("entries")?.as_arr().unwrap_or(&[]) {
+            entries.push(parse_entry(e)?);
+        }
+        Ok(Manifest { dir, digest, entries })
+    }
+
+    pub fn find(&self, name: &str) -> anyhow::Result<&ManifestEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    /// Find the regression artifact for `(kind, n, d)`.
+    pub fn find_regression(&self, kind: &str, n: usize, d: usize) -> anyhow::Result<&ManifestEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == kind && e.n == n && e.d == d)
+            .ok_or_else(|| {
+                let avail: Vec<String> = self
+                    .entries
+                    .iter()
+                    .filter(|e| e.kind == kind)
+                    .map(|e| format!("{}x{}", e.n, e.d))
+                    .collect();
+                anyhow::anyhow!(
+                    "no {kind} artifact for shape {n}x{d}; available: {avail:?} \
+                     (register the shape in python/compile/shapes.py and re-run `make artifacts`)"
+                )
+            })
+    }
+
+    /// Smallest registered regression shape that fits `(n, d)` exactly in d
+    /// and with padded n ≥ n.
+    pub fn fit_regression(&self, kind: &str, n: usize, d: usize) -> anyhow::Result<&ManifestEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == kind && e.d == d && e.n >= n)
+            .min_by_key(|e| e.n)
+            .ok_or_else(|| anyhow::anyhow!("no {kind} artifact fits n≥{n}, d={d}"))
+    }
+
+    pub fn hlo_path(&self, entry: &ManifestEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+fn parse_entry(e: &Json) -> anyhow::Result<ManifestEntry> {
+    let kind = e.get("kind")?.as_str().unwrap_or("").to_string();
+    let transformer = if kind == "transformer" {
+        let cfg = e.get("config")?;
+        let params = e
+            .get("params")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(parse_param)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Some(TransformerMeta {
+            vocab: cfg.get("vocab")?.as_usize().unwrap_or(0),
+            d_model: cfg.get("d_model")?.as_usize().unwrap_or(0),
+            n_layers: cfg.get("n_layers")?.as_usize().unwrap_or(0),
+            n_heads: cfg.get("n_heads")?.as_usize().unwrap_or(0),
+            d_ff: cfg.get("d_ff")?.as_usize().unwrap_or(0),
+            seq_len: cfg.get("seq_len")?.as_usize().unwrap_or(0),
+            batch: cfg.get("batch")?.as_usize().unwrap_or(0),
+            n_params: cfg.get("n_params")?.as_usize().unwrap_or(0),
+            params,
+        })
+    } else {
+        None
+    };
+    Ok(ManifestEntry {
+        name: e.get("name")?.as_str().unwrap_or("").to_string(),
+        file: e.get("file")?.as_str().unwrap_or("").to_string(),
+        kind,
+        n: e.get("n").ok().and_then(|v| v.as_usize()).unwrap_or(0),
+        d: e.get("d").ok().and_then(|v| v.as_usize()).unwrap_or(0),
+        dtype: e.get("dtype")?.as_str().unwrap_or("f64").to_string(),
+        lam: e.get("lam").ok().and_then(|v| v.as_f64()),
+        transformer,
+    })
+}
+
+fn parse_param(p: &Json) -> anyhow::Result<ParamSpec> {
+    let shape = p
+        .get("shape")?
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|v| v.as_usize())
+        .collect();
+    let init = match p.get("init")?.as_str().unwrap_or("") {
+        "normal" => Init::Normal { std: p.get("std")?.as_f64().unwrap_or(0.02) },
+        "zeros" => Init::Zeros,
+        "ones" => Init::Ones,
+        other => anyhow::bail!("unknown init '{other}'"),
+    };
+    Ok(ParamSpec { name: p.get("name")?.as_str().unwrap_or("").to_string(), shape, init })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn loads_regression_entries() {
+        let dir = std::env::temp_dir().join("lag_manifest_test1");
+        write_manifest(
+            &dir,
+            r#"{"version":1,"digest":"x","entries":[
+              {"name":"linreg_grad_50x50","file":"a.hlo.txt","kind":"linreg",
+               "n":50,"d":50,"dtype":"f64","outputs":["grad","loss"]},
+              {"name":"logreg_grad_544x34","file":"b.hlo.txt","kind":"logreg",
+               "n":544,"d":34,"dtype":"f64","lam":0.001,"outputs":["grad","loss"]}]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let e = m.find_regression("logreg", 544, 34).unwrap();
+        assert_eq!(e.lam, Some(0.001));
+        assert!(m.find_regression("linreg", 10, 10).is_err());
+        assert!(m.find("nope").is_err());
+        assert_eq!(m.hlo_path(e), dir.join("b.hlo.txt"));
+    }
+
+    #[test]
+    fn fit_regression_picks_smallest_fitting() {
+        let dir = std::env::temp_dir().join("lag_manifest_test2");
+        write_manifest(
+            &dir,
+            r#"{"version":1,"digest":"x","entries":[
+              {"name":"a","file":"a","kind":"linreg","n":50,"d":8,"dtype":"f64"},
+              {"name":"b","file":"b","kind":"linreg","n":176,"d":8,"dtype":"f64"}]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.fit_regression("linreg", 40, 8).unwrap().name, "a");
+        assert_eq!(m.fit_regression("linreg", 60, 8).unwrap().name, "b");
+        assert!(m.fit_regression("linreg", 200, 8).is_err());
+        assert!(m.fit_regression("linreg", 40, 9).is_err());
+    }
+
+    #[test]
+    fn parses_transformer_meta() {
+        let dir = std::env::temp_dir().join("lag_manifest_test3");
+        write_manifest(
+            &dir,
+            r#"{"version":1,"digest":"x","entries":[
+              {"name":"transformer_step_tiny","file":"t.hlo.txt","kind":"transformer",
+               "dtype":"f32",
+               "config":{"vocab":64,"d_model":32,"n_layers":2,"n_heads":2,
+                         "d_ff":64,"seq_len":16,"batch":4,"n_params":1234},
+               "params":[{"name":"tok_emb","shape":[64,32],"init":"normal","std":0.02},
+                          {"name":"lnf_scale","shape":[32],"init":"ones","std":0.0}]}]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        let t = m.find("transformer_step_tiny").unwrap().transformer.clone().unwrap();
+        assert_eq!(t.vocab, 64);
+        assert_eq!(t.params.len(), 2);
+        assert_eq!(t.params[0].init, Init::Normal { std: 0.02 });
+        assert_eq!(t.params[0].numel(), 64 * 32);
+        assert_eq!(t.params[1].init, Init::Ones);
+    }
+
+    #[test]
+    fn missing_manifest_is_actionable() {
+        let err = Manifest::load("/nonexistent_dir_lag").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

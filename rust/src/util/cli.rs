@@ -1,0 +1,113 @@
+//! Minimal CLI argument parser (the offline universe has no clap).
+//!
+//! Grammar: `lag <subcommand> [positional...] [--key value | --flag]...`
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                // --key=value or --key value or bare flag
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(key.to_string(), v);
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| anyhow::anyhow!("--{key}: expected integer, got '{s}'")),
+        }
+    }
+
+    pub fn opt_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| anyhow::anyhow!("--{key}: expected float, got '{s}'")),
+        }
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_subcommand_and_positionals() {
+        let a = args("exp fig3 extra");
+        assert_eq!(a.subcommand.as_deref(), Some("exp"));
+        assert_eq!(a.positional, vec!["fig3", "extra"]);
+    }
+
+    #[test]
+    fn parses_options_both_styles() {
+        let a = args("run --engine pjrt --iters=500 --verbose");
+        assert_eq!(a.opt("engine"), Some("pjrt"));
+        assert_eq!(a.opt_usize("iters", 0).unwrap(), 500);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn flag_before_value_option() {
+        let a = args("x --dry-run --alpha 0.5");
+        assert!(a.has_flag("dry-run"));
+        assert_eq!(a.opt_f64("alpha", 0.0).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = args("x --n abc");
+        assert!(a.opt_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args("x");
+        assert_eq!(a.opt_or("missing", "d"), "d");
+        assert_eq!(a.opt_usize("missing", 7).unwrap(), 7);
+    }
+}

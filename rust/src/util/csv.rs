@@ -1,0 +1,66 @@
+//! Tiny CSV writer for experiment traces (read back by plotting tools).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Streaming CSV writer with a fixed header.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> anyhow::Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { out, cols: header.len() })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> anyhow::Result<()> {
+        anyhow::ensure!(fields.len() == self.cols, "row width {} != header {}", fields.len(), self.cols);
+        writeln!(self.out, "{}", fields.join(","))?;
+        Ok(())
+    }
+
+    /// Convenience: write a row of floats (full precision).
+    pub fn row_f64(&mut self, fields: &[f64]) -> anyhow::Result<()> {
+        let v: Vec<String> = fields.iter().map(|x| format!("{x:.17e}")).collect();
+        self.row(&v)
+    }
+
+    pub fn finish(mut self) -> anyhow::Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("lag_csv_test");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        w.row(&["1".into(), "2".into()]).unwrap();
+        w.row_f64(&[0.5, 1.5]).unwrap();
+        w.finish().unwrap();
+        let s = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[0], "a,b");
+        assert_eq!(lines[1], "1,2");
+        assert!(lines[2].starts_with("5.0"));
+    }
+
+    #[test]
+    fn rejects_wrong_width() {
+        let dir = std::env::temp_dir().join("lag_csv_test2");
+        let mut w = CsvWriter::create(dir.join("t.csv"), &["a"]).unwrap();
+        assert!(w.row(&["1".into(), "2".into()]).is_err());
+    }
+}

@@ -1,0 +1,109 @@
+//! Tiny CSV reader — the inverse of [`super::csv`], used by `lag plot` to
+//! render experiment curves back from `results/` and by tests that verify
+//! trace round-trips.
+
+use std::path::Path;
+
+/// A parsed CSV table: header + rows of string fields.
+#[derive(Debug, Clone)]
+pub struct CsvTable {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl CsvTable {
+    pub fn read<P: AsRef<Path>>(path: P) -> anyhow::Result<CsvTable> {
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", path.as_ref().display()))?;
+        CsvTable::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<CsvTable> {
+        let mut lines = text.lines();
+        let header: Vec<String> = lines
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("empty CSV"))?
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .collect();
+        let mut rows = Vec::new();
+        for (i, line) in lines.enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let row: Vec<String> = line.split(',').map(|s| s.trim().to_string()).collect();
+            anyhow::ensure!(
+                row.len() == header.len(),
+                "row {} has {} fields, header has {}",
+                i + 2,
+                row.len(),
+                header.len()
+            );
+            rows.push(row);
+        }
+        Ok(CsvTable { header, rows })
+    }
+
+    pub fn col_index(&self, name: &str) -> anyhow::Result<usize> {
+        self.header
+            .iter()
+            .position(|h| h == name)
+            .ok_or_else(|| anyhow::anyhow!("no column '{name}' (have {:?})", self.header))
+    }
+
+    /// Extract a numeric column.
+    pub fn col_f64(&self, name: &str) -> anyhow::Result<Vec<f64>> {
+        let idx = self.col_index(name)?;
+        self.rows
+            .iter()
+            .map(|r| {
+                r[idx]
+                    .parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("non-numeric '{}' in column {name}", r[idx]))
+            })
+            .collect()
+    }
+
+    /// (x, y) pairs of two numeric columns.
+    pub fn xy(&self, x: &str, y: &str) -> anyhow::Result<Vec<(f64, f64)>> {
+        Ok(self.col_f64(x)?.into_iter().zip(self.col_f64(y)?).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_extract() {
+        let t = CsvTable::parse("k,err\n1,0.5\n2,0.25\n").unwrap();
+        assert_eq!(t.header, vec!["k", "err"]);
+        assert_eq!(t.col_f64("k").unwrap(), vec![1.0, 2.0]);
+        assert_eq!(t.xy("k", "err").unwrap(), vec![(1.0, 0.5), (2.0, 0.25)]);
+    }
+
+    #[test]
+    fn rejects_ragged() {
+        assert!(CsvTable::parse("a,b\n1\n").is_err());
+        assert!(CsvTable::parse("").is_err());
+    }
+
+    #[test]
+    fn roundtrip_with_writer() {
+        let dir = std::env::temp_dir().join("lag_csvr_test");
+        let path = dir.join("t.csv");
+        let mut w = crate::util::csv::CsvWriter::create(&path, &["x", "y"]).unwrap();
+        w.row_f64(&[1.0, 2.0]).unwrap();
+        w.row_f64(&[3.0, 4.0]).unwrap();
+        w.finish().unwrap();
+        let t = CsvTable::read(&path).unwrap();
+        assert_eq!(t.col_f64("x").unwrap(), vec![1.0, 3.0]);
+        assert_eq!(t.col_f64("y").unwrap(), vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn missing_column_errors() {
+        let t = CsvTable::parse("a\n1\n").unwrap();
+        assert!(t.col_f64("b").is_err());
+    }
+}

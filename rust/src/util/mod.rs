@@ -1,0 +1,31 @@
+//! Substrate utilities: deterministic RNG, minimal JSON, CSV, CLI parsing,
+//! timing. The offline crate universe has no `rand`/`serde`/`clap`, so these
+//! are first-class modules with their own tests.
+
+pub mod cli;
+pub mod csv;
+pub mod csv_read;
+pub mod json;
+pub mod rng;
+pub mod timer;
+
+pub use rng::Rng;
+
+/// `format!`-style helper: human-readable large numbers (`12_345` -> "12345",
+/// used by the experiment reports).
+pub fn fmt_count(n: u64) -> String {
+    n.to_string()
+}
+
+/// Format a float in compact scientific form for report tables.
+pub fn fmt_sci(x: f64) -> String {
+    if x == 0.0 {
+        return "0".to_string();
+    }
+    let a = x.abs();
+    if (1e-3..1e6).contains(&a) {
+        format!("{x:.4}")
+    } else {
+        format!("{x:.3e}")
+    }
+}

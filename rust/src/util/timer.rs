@@ -1,0 +1,98 @@
+//! Timing helpers for the bench harness (criterion is unavailable offline,
+//! so the `[[bench]]` targets use these primitives with `harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// Run `f` repeatedly for at least `budget`, returning per-iteration stats.
+pub fn bench<F: FnMut()>(mut f: F, warmup: u32, budget: Duration) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.len() < 5 {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+        if samples.len() > 100_000 {
+            break;
+        }
+    }
+    BenchStats::from_samples(samples)
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl BenchStats {
+    pub fn from_samples(mut s: Vec<f64>) -> BenchStats {
+        assert!(!s.is_empty());
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        let mean = s.iter().sum::<f64>() / n as f64;
+        let q = |p: f64| s[((n as f64 - 1.0) * p).round() as usize];
+        BenchStats { n, mean, p50: q(0.5), p95: q(0.95), min: s[0], max: s[n - 1] }
+    }
+
+    pub fn report(&self, label: &str) -> String {
+        format!(
+            "{label}: n={} mean={} p50={} p95={} min={} max={}",
+            self.n,
+            fmt_dur(self.mean),
+            fmt_dur(self.p50),
+            fmt_dur(self.p95),
+            fmt_dur(self.min),
+            fmt_dur(self.max)
+        )
+    }
+}
+
+/// Human-readable seconds.
+pub fn fmt_dur(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3}s")
+    } else if secs >= 1e-3 {
+        format!("{:.3}ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3}us", secs * 1e6)
+    } else {
+        format!("{:.1}ns", secs * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = BenchStats::from_samples(vec![3.0, 1.0, 2.0, 5.0, 4.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+        assert_eq!(s.mean, 3.0);
+    }
+
+    #[test]
+    fn bench_runs_at_least_five() {
+        let mut count = 0;
+        let st = bench(|| count += 1, 2, Duration::from_millis(1));
+        assert!(st.n >= 5);
+        assert!(count >= st.n);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert!(fmt_dur(2.0).ends_with('s'));
+        assert!(fmt_dur(2e-3).ends_with("ms"));
+        assert!(fmt_dur(2e-6).ends_with("us"));
+        assert!(fmt_dur(2e-9).ends_with("ns"));
+    }
+}

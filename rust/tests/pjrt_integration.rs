@@ -1,0 +1,145 @@
+//! Integration tests over the full three-layer stack: the Rust coordinator
+//! driving gradients through the AOT'd JAX+Pallas artifacts via PJRT.
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise).
+
+use lag::coordinator::{run, Algorithm, RunOptions};
+use lag::data::synthetic;
+use lag::grad::{GradEngine, NativeEngine};
+use lag::runtime::{Manifest, PjrtEngine};
+
+fn artifacts_ready() -> bool {
+    Manifest::load("artifacts").is_ok()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_ready() {
+            eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+            return;
+        }
+    };
+}
+
+#[test]
+fn pjrt_matches_native_linreg_gradients() {
+    require_artifacts!();
+    let p = synthetic::linreg_increasing_l(9, 50, 50, 99);
+    let mut pjrt = PjrtEngine::new(&p, "artifacts").unwrap();
+    let mut native = NativeEngine::new(&p);
+    let mut rng = lag::util::Rng::new(5);
+    for trial in 0..5 {
+        let theta = rng.normal_vec(50);
+        for m in [0, 4, 8] {
+            let (gp, lp) = pjrt.grad(m, &theta);
+            let (gn, ln) = native.grad(m, &theta);
+            let scale = ln.abs().max(1.0);
+            assert!(
+                (lp - ln).abs() < 1e-9 * scale,
+                "trial {trial} worker {m}: loss {lp} vs {ln}"
+            );
+            for (a, b) in gp.iter().zip(&gn) {
+                assert!((a - b).abs() < 1e-9 * (1.0 + b.abs()), "grad mismatch {a} vs {b}");
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_matches_native_logreg_gradients() {
+    require_artifacts!();
+    let p = synthetic::logreg_uniform_l(9, 50, 50, 77);
+    let mut pjrt = PjrtEngine::new(&p, "artifacts").unwrap();
+    let mut native = NativeEngine::new(&p);
+    let mut rng = lag::util::Rng::new(6);
+    for _ in 0..5 {
+        let theta = rng.normal_vec(50);
+        for m in 0..9 {
+            let (gp, lp) = pjrt.grad(m, &theta);
+            let (gn, ln) = native.grad(m, &theta);
+            assert!((lp - ln).abs() < 1e-9 * ln.abs().max(1.0));
+            for (a, b) in gp.iter().zip(&gn) {
+                assert!((a - b).abs() < 1e-9 * (1.0 + b.abs()));
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_full_lag_wk_run_matches_native_trace() {
+    require_artifacts!();
+    let p = synthetic::linreg_increasing_l(9, 50, 50, 1234);
+    let opts = RunOptions { max_iters: 150, target_err: Some(1e-8), ..Default::default() };
+    let mut en = NativeEngine::new(&p);
+    let tn = run(&p, Algorithm::LagWk, &opts, &mut en);
+    let mut ep = PjrtEngine::new(&p, "artifacts").unwrap();
+    let tp = run(&p, Algorithm::LagWk, &opts, &mut ep);
+    // the engines agree to ~1e-12 per gradient; upload patterns may only
+    // differ at exact trigger ties, which don't occur generically
+    assert_eq!(tn.total_uploads(), tp.total_uploads());
+    assert_eq!(tn.upload_events, tp.upload_events);
+    assert_eq!(tn.converged_iter, tp.converged_iter);
+}
+
+#[test]
+fn pjrt_lag_ps_converges_on_real_shapes() {
+    require_artifacts!();
+    // exercise the padded 176x8 artifact through the fig5 problem builder
+    let p = lag::experiments::fig5::problem(3).unwrap();
+    assert_eq!(p.workers[0].n_padded(), 176);
+    let opts = RunOptions { max_iters: 4000, target_err: Some(1e-6), ..Default::default() };
+    let mut e = PjrtEngine::new(&p, "artifacts").unwrap();
+    let t = run(&p, Algorithm::LagPs, &opts, &mut e);
+    assert!(
+        t.final_err() < 1e-4,
+        "LAG-PS should make clear progress on fig5 shapes, err={}",
+        t.final_err()
+    );
+}
+
+#[test]
+fn pjrt_engine_reports_artifact_and_calls() {
+    require_artifacts!();
+    let p = synthetic::linreg_increasing_l(3, 50, 50, 4);
+    let mut e = PjrtEngine::new(&p, "artifacts").unwrap();
+    assert_eq!(e.artifact, "linreg_grad_50x50");
+    assert_eq!(e.name(), "pjrt");
+    let theta = vec![0.0; 50];
+    e.grad(0, &theta);
+    e.grad(1, &theta);
+    assert_eq!(e.calls(), 2);
+}
+
+#[test]
+fn pjrt_rejects_unregistered_shape() {
+    require_artifacts!();
+    // n=50,d=13 has no artifact — the engine must fail with a clear error
+    let p = synthetic::linreg_increasing_l(3, 50, 13, 4);
+    let err = match PjrtEngine::new(&p, "artifacts") {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("expected shape-mismatch error"),
+    };
+    assert!(err.contains("no linreg artifact"), "{err}");
+}
+
+#[test]
+fn transformer_tiny_step_runs_and_improves() {
+    require_artifacts!();
+    use lag::transformer::{lag_train, synth_corpus, LmTrainOptions, TransformerTrainer};
+    let tr = TransformerTrainer::new("artifacts", "transformer_step_tiny").unwrap();
+    let corpora: Vec<Vec<i32>> = (0..2).map(|m| synth_corpus(&tr.meta, m, 3)).collect();
+    let opts = LmTrainOptions {
+        algo: Algorithm::LagWk,
+        steps: 12,
+        alpha: 0.25, // on the 2-worker sum objective
+        d_history: 10,
+        xi: 0.1,
+    };
+    let recs = lag_train(&tr, &corpora, &opts).unwrap();
+    assert_eq!(recs.len(), 12);
+    let first = recs[0].mean_loss;
+    let last = recs.last().unwrap().mean_loss;
+    assert!(last < first, "LM loss should drop: {first} -> {last}");
+    // LAG must not exceed the GD upload budget
+    assert!(recs.last().unwrap().cum_uploads <= 12 * 2);
+}
