@@ -37,8 +37,8 @@ fn main() -> anyhow::Result<()> {
         let problem = build_with_base(m, base);
         let opts =
             RunOptions { max_iters: 60_000, target_err: Some(1e-8), ..Default::default() };
-        let gd = run(&problem, Algorithm::Gd, &opts, &mut NativeEngine::new(&problem));
-        let wk = run(&problem, Algorithm::LagWk, &opts, &mut NativeEngine::new(&problem));
+        let gd = run(&problem, Algorithm::Gd, &opts, &NativeEngine::new(&problem));
+        let wk = run(&problem, Algorithm::LagWk, &opts, &NativeEngine::new(&problem));
         let spread = problem.l_m.iter().cloned().fold(0.0, f64::max)
             / problem.l_m.iter().cloned().fold(f64::MAX, f64::min);
         let (g, w) = (
@@ -58,7 +58,7 @@ fn main() -> anyhow::Result<()> {
     // Lemma 4 view on the paper's own profile (base = 1.3)
     let problem = build_with_base(m, 1.3);
     let opts = RunOptions { max_iters: 1000, stop_at_target: false, ..Default::default() };
-    let t = run(&problem, Algorithm::LagWk, &opts, &mut NativeEngine::new(&problem));
+    let t = run(&problem, Algorithm::LagWk, &opts, &NativeEngine::new(&problem));
     println!("\nper-worker uploads over 1000 iterations (base = 1.3):");
     println!("{:<8} {:>10} {:>12} {:>16}", "worker", "H(m)", "uploads", "h(H²) cum frac");
     for (mi, h) in problem.importance().iter().enumerate() {

@@ -38,11 +38,11 @@ fn main() -> anyhow::Result<()> {
     let mut traces = Vec::new();
     for algo in [Algorithm::Gd, Algorithm::LagPs, Algorithm::LagWk] {
         let trace = if use_pjrt {
-            let mut engine = PjrtEngine::new(&problem, "artifacts")?;
-            run(&problem, algo, &opts, &mut engine)
+            let engine = PjrtEngine::new(&problem, "artifacts")?;
+            run(&problem, algo, &opts, &engine)
         } else {
-            let mut engine = NativeEngine::new(&problem);
-            run(&problem, algo, &opts, &mut engine)
+            let engine = NativeEngine::new(&problem);
+            run(&problem, algo, &opts, &engine)
         };
         println!("{}", trace.summary());
         traces.push(trace);

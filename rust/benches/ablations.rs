@@ -25,7 +25,7 @@ fn main() {
             wk_xi: xi,
             ..Default::default()
         };
-        let t = run(&p, Algorithm::LagWk, &opts, &mut NativeEngine::new(&p));
+        let t = run(&p, Algorithm::LagWk, &opts, &NativeEngine::new(&p));
         println!(
             "{:<8} {:>8} {:>10}",
             xi,
@@ -44,7 +44,7 @@ fn main() {
             wk_xi: 1.0 / d as f64,
             ..Default::default()
         };
-        let t = run(&p, Algorithm::LagWk, &opts, &mut NativeEngine::new(&p));
+        let t = run(&p, Algorithm::LagWk, &opts, &NativeEngine::new(&p));
         println!(
             "{:<8} {:>8} {:>10}",
             d,
@@ -63,8 +63,8 @@ fn main() {
             ps_xi: if wk { 1.0 } else { xi },
             ..Default::default()
         };
-        let wk = run(&p, Algorithm::LagWk, &mk(true), &mut NativeEngine::new(&p));
-        let ps = run(&p, Algorithm::LagPs, &mk(false), &mut NativeEngine::new(&p));
+        let wk = run(&p, Algorithm::LagWk, &mk(true), &NativeEngine::new(&p));
+        let ps = run(&p, Algorithm::LagPs, &mk(false), &NativeEngine::new(&p));
         println!(
             "{:<8} {:>10} {:>10}",
             xi,
@@ -86,8 +86,8 @@ fn main() {
         let pb = synthetic::synthetic_with_targets(Task::LinReg, &targets, 50, 50, 777);
         let opts =
             RunOptions { max_iters: 100_000, target_err: Some(target), ..Default::default() };
-        let gd = run(&pb, Algorithm::Gd, &opts, &mut NativeEngine::new(&pb));
-        let wk = run(&pb, Algorithm::LagWk, &opts, &mut NativeEngine::new(&pb));
+        let gd = run(&pb, Algorithm::Gd, &opts, &NativeEngine::new(&pb));
+        let wk = run(&pb, Algorithm::LagWk, &opts, &NativeEngine::new(&pb));
         let (g, w) = (
             gd.uploads_at_target.unwrap_or(gd.total_uploads()),
             wk.uploads_at_target.unwrap_or(wk.total_uploads()),

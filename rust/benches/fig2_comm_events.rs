@@ -10,7 +10,7 @@ fn main() {
     let p = synthetic::linreg_increasing_l(9, 50, 50, 1234);
     let opts = RunOptions { max_iters: 1000, stop_at_target: false, ..Default::default() };
     let t0 = std::time::Instant::now();
-    let trace = run(&p, Algorithm::LagWk, &opts, &mut NativeEngine::new(&p));
+    let trace = run(&p, Algorithm::LagWk, &opts, &NativeEngine::new(&p));
     let wall = t0.elapsed().as_secs_f64();
     println!("bench fig2: LAG-WK, 1000 iterations in {wall:.3}s");
     print!("{}", ascii_event_plot(&trace, &[0, 2, 4, 6, 8], 72));

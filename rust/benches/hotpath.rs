@@ -2,21 +2,52 @@
 //!
 //! * trigger check (DiffHistory + RHS + comparison)
 //! * server update step (axpy + dist2 + history push)
-//! * native worker gradient (linreg 50x50, logreg 544x34)
+//! * native worker gradient via `grad_into` (linreg 50x50, logreg 544x34)
 //! * PJRT worker gradient incl. theta staging (if artifacts present)
-//! * full LAG-WK iteration (9 workers, native)
+//! * full LAG-WK iteration (9 workers, native), sequential vs pool
 //!
 //! `cargo bench --bench hotpath`
+//!
+//! Besides the human-readable report, writes `BENCH_hotpath.json` into the
+//! working directory so the perf trajectory is tracked across PRs
+//! (per-op nanoseconds, per-iteration times, uploads, speedup).
 
 use lag::coordinator::trigger::{DiffHistory, TriggerConfig};
 use lag::coordinator::{run, Algorithm, ParameterServer, RunOptions};
 use lag::data::synthetic;
 use lag::grad::{GradEngine, NativeEngine};
-use lag::util::timer::{bench, fmt_dur};
+use lag::metrics::RunTrace;
+use lag::util::json::Json;
+use lag::util::timer::{bench, fmt_dur, BenchStats};
 use std::time::Duration;
+
+fn op_json(s: &BenchStats) -> Json {
+    Json::obj(vec![
+        ("n", Json::Num(s.n as f64)),
+        ("mean_ns", Json::Num(s.mean * 1e9)),
+        ("p50_ns", Json::Num(s.p50 * 1e9)),
+        ("p95_ns", Json::Num(s.p95 * 1e9)),
+        ("min_ns", Json::Num(s.min * 1e9)),
+    ])
+}
+
+/// Run 2000 fixed LAG-WK iterations and return (ns/iter, trace).
+fn lag_wk_iteration(threads: usize) -> (f64, RunTrace) {
+    let p = synthetic::linreg_increasing_l(9, 50, 50, 1);
+    let opts = RunOptions {
+        max_iters: 2000,
+        stop_at_target: false,
+        threads,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let tr = run(&p, Algorithm::LagWk, &opts, &NativeEngine::new(&p));
+    (t0.elapsed().as_secs_f64() * 1e9 / 2000.0, tr)
+}
 
 fn main() {
     let budget = Duration::from_millis(300);
+    let mut ops: Vec<(&str, Json)> = Vec::new();
 
     // trigger check
     {
@@ -36,56 +67,115 @@ fn main() {
             1000,
             budget,
         );
-        println!("{}", s.report("trigger_check          "));
+        println!("{}", s.report("trigger_check            "));
+        ops.push(("trigger_check", op_json(&s)));
         std::hint::black_box(acc);
     }
 
     // server step (d = 50)
     {
         let mut s = ParameterServer::new(50, 9, 10, vec![0.0; 50]);
-        s.apply_delta(0, &vec![1e-3; 50]);
+        s.apply_delta(0, &[1e-3; 50]);
         let st = bench(|| { s.step(1e-3); }, 1000, budget);
-        println!("{}", st.report("server_step(d=50)      "));
+        println!("{}", st.report("server_step(d=50)        "));
+        ops.push(("server_step_d50", op_json(&st)));
     }
 
-    // native gradients
+    // native gradients (allocation-free grad_into path)
     {
         let p = synthetic::linreg_increasing_l(9, 50, 50, 1);
-        let mut e = NativeEngine::new(&p);
+        let e = NativeEngine::new(&p);
         let theta = vec![0.1; 50];
-        let st = bench(|| { std::hint::black_box(e.grad(0, &theta)); }, 50, budget);
+        let mut out = vec![0.0; 50];
+        let st = bench(
+            || {
+                std::hint::black_box(e.grad_into(0, &theta, &mut out));
+            },
+            50,
+            budget,
+        );
         println!("{}", st.report("native_grad linreg 50x50 "));
+        ops.push(("native_grad_linreg_50x50", op_json(&st)));
     }
     {
         let p = lag::experiments::fig6::problem(3).expect("fig6");
-        let mut e = NativeEngine::new(&p);
+        let e = NativeEngine::new(&p);
         let theta = vec![0.1; 34];
-        let st = bench(|| { std::hint::black_box(e.grad(3, &theta)); }, 20, budget);
+        let mut out = vec![0.0; 34];
+        let st = bench(
+            || {
+                std::hint::black_box(e.grad_into(3, &theta, &mut out));
+            },
+            20,
+            budget,
+        );
         println!("{}", st.report("native_grad logreg 544x34"));
+        ops.push(("native_grad_logreg_544x34", op_json(&st)));
     }
 
     // PJRT gradient (skipped without artifacts)
     if lag::runtime::Manifest::load("artifacts").is_ok() {
         let p = synthetic::linreg_increasing_l(9, 50, 50, 1);
-        let mut e = lag::runtime::PjrtEngine::new(&p, "artifacts").expect("pjrt engine");
-        let theta = vec![0.1; 50];
-        let st = bench(|| { std::hint::black_box(e.grad(0, &theta)); }, 20, budget);
-        println!("{}", st.report("pjrt_grad   linreg 50x50 "));
+        match lag::runtime::PjrtEngine::new(&p, "artifacts") {
+            Ok(e) => {
+                let theta = vec![0.1; 50];
+                let mut out = vec![0.0; 50];
+                let st = bench(
+                    || {
+                        std::hint::black_box(e.grad_into(0, &theta, &mut out));
+                    },
+                    20,
+                    budget,
+                );
+                println!("{}", st.report("pjrt_grad   linreg 50x50 "));
+                ops.push(("pjrt_grad_linreg_50x50", op_json(&st)));
+            }
+            Err(e) => println!("pjrt_grad: SKIP ({e})"),
+        }
     } else {
         println!("pjrt_grad: SKIP (run `make artifacts`)");
     }
 
-    // full LAG-WK iteration (native, M = 9, d = 50): measured as total/iters
-    {
-        let p = synthetic::linreg_increasing_l(9, 50, 50, 1);
-        let opts = RunOptions { max_iters: 2000, stop_at_target: false, ..Default::default() };
-        let t0 = std::time::Instant::now();
-        let tr = run(&p, Algorithm::LagWk, &opts, &mut NativeEngine::new(&p));
-        let per_iter = t0.elapsed().as_secs_f64() / 2000.0;
-        println!(
-            "lag_wk_iteration(M=9,d=50): {} per iteration ({} uploads total)",
-            fmt_dur(per_iter),
-            tr.total_uploads()
-        );
+    // full LAG-WK iteration (native, M = 9, d = 50): total/iters, both the
+    // sequential driver and the thread pool (must be bit-identical traces)
+    let threads = lag::coordinator::pool::default_threads();
+    let (seq_ns, seq_tr) = lag_wk_iteration(1);
+    let (par_ns, par_tr) = lag_wk_iteration(threads);
+    assert_eq!(
+        seq_tr.upload_events, par_tr.upload_events,
+        "pool must reproduce the sequential trace"
+    );
+    let speedup = seq_ns / par_ns;
+    println!(
+        "lag_wk_iteration(M=9,d=50): {} per iteration sequential, {} with {} threads \
+         ({speedup:.2}x, {} uploads total)",
+        fmt_dur(seq_ns / 1e9),
+        fmt_dur(par_ns / 1e9),
+        threads,
+        seq_tr.total_uploads()
+    );
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("hotpath".into())),
+        ("host_threads", Json::Num(threads as f64)),
+        ("ops", Json::Obj(ops.into_iter().map(|(k, v)| (k.to_string(), v)).collect())),
+        (
+            "lag_wk_iteration",
+            Json::obj(vec![
+                ("m", Json::Num(9.0)),
+                ("d", Json::Num(50.0)),
+                ("iters", Json::Num(2000.0)),
+                ("sequential_ns_per_iter", Json::Num(seq_ns)),
+                ("parallel_ns_per_iter", Json::Num(par_ns)),
+                ("parallel_threads", Json::Num(threads as f64)),
+                ("speedup", Json::Num(speedup)),
+                ("uploads", Json::Num(seq_tr.total_uploads() as f64)),
+            ]),
+        ),
+    ]);
+    let out = "BENCH_hotpath.json";
+    match std::fs::write(out, doc.to_string() + "\n") {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
     }
 }

@@ -113,7 +113,9 @@ fn parse_task(j: &Json) -> anyhow::Result<Task> {
 fn parse_problem(j: &Json) -> anyhow::Result<ProblemSpec> {
     match j.get("kind")?.as_str().unwrap_or("") {
         "synthetic" => {
-            let profile = match j.get("profile").ok().and_then(|v| v.as_str()).unwrap_or("increasing") {
+            let profile_name =
+                j.get("profile").ok().and_then(|v| v.as_str()).unwrap_or("increasing");
+            let profile = match profile_name {
                 "increasing" => synthetic::LProfile::Increasing,
                 "uniform" => synthetic::LProfile::Uniform(
                     j.get("uniform_l").ok().and_then(|v| v.as_f64()).unwrap_or(4.0),
@@ -156,6 +158,7 @@ fn apply_options(j: &Json, o: &mut RunOptions) -> anyhow::Result<()> {
             "seed" => o.seed = v.as_f64().unwrap_or(0.0) as u64,
             "record_every" => o.record_every = v.as_usize().unwrap_or(1),
             "eval_every" => o.eval_every = v.as_usize().unwrap_or(1),
+            "threads" => o.threads = v.as_usize().unwrap_or(0),
             other => anyhow::bail!("unknown option '{other}'"),
         }
     }
@@ -200,8 +203,8 @@ mod tests {
         let p = c.problem.build().unwrap();
         assert_eq!(p.m(), 6);
         assert_eq!(p.d, 20);
-        let mut e = crate::grad::NativeEngine::new(&p);
-        let t = crate::coordinator::run(&p, c.algorithm, &c.options, &mut e);
+        let e = crate::grad::NativeEngine::new(&p);
+        let t = crate::coordinator::run(&p, c.algorithm, &c.options, &e);
         assert!(t.iters() > 1);
     }
 

@@ -93,8 +93,8 @@ mod tests {
             record_thetas: true,
             ..Default::default()
         };
-        let mut e = NativeEngine::new(&p);
-        let t = run(&p, Algorithm::LagWk, &opts, &mut e);
+        let e = NativeEngine::new(&p);
+        let t = run(&p, Algorithm::LagWk, &opts, &e);
         let vs = lyapunov_values(&p, &t.thetas, d_hist, xi, alpha);
         // fp-noise floor: once V falls below ~1e-12·V⁰ the objective error is
         // dominated by the precision of L(θ*) itself
@@ -128,8 +128,8 @@ mod tests {
             record_thetas: true,
             ..Default::default()
         };
-        let mut e = NativeEngine::new(&p);
-        let t = run(&p, Algorithm::LagPs, &opts, &mut e);
+        let e = NativeEngine::new(&p);
+        let t = run(&p, Algorithm::LagPs, &opts, &e);
         let vs = lyapunov_values(&p, &t.thetas, d_hist, xi, alpha);
         let floor = 1e-12 * vs[0];
         for w in vs.windows(2) {

@@ -7,6 +7,9 @@
 //! * [`run`] — the deterministic synchronous driver implementing GD,
 //!   LAG-WK, LAG-PS, Cyc-IAG and Num-IAG with exact communication
 //!   accounting (used by every experiment).
+//! * [`pool`] — persistent scoped worker threads that fan a round's
+//!   gradient evaluations across cores with bit-deterministic traces
+//!   (DESIGN.md §6).
 //! * [`transport`] — a real message-passing deployment: worker threads,
 //!   channels, a serial-uplink latency model.
 //! * [`lyapunov`] — the Lyapunov function (16) used by the convergence
@@ -14,6 +17,7 @@
 
 pub mod checkpoint;
 pub mod lyapunov;
+pub mod pool;
 pub mod proximal;
 pub mod quantize;
 pub mod robust;
@@ -25,6 +29,7 @@ pub mod trigger;
 pub mod wire;
 
 pub use checkpoint::TrainState;
+pub use pool::{with_pool, PoolHandle};
 pub use proximal::{prox_run, ProxOptions};
 pub use quantize::QuantizedVec;
 pub use robust::{robust_run, Attack, RobustOptions};

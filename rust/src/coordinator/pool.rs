@@ -1,0 +1,178 @@
+//! Persistent scoped worker pool for the iteration hot loop.
+//!
+//! The synchronous driver in [`super::run`] contacts workers one at a
+//! time; on a multi-core host that leaves all but one core idle while the
+//! per-worker gradients — the dominant per-iteration cost — are computed.
+//! This pool keeps one OS thread per core alive for the whole run (scoped
+//! threads, like the message-passing deployment in [`super::transport`])
+//! and fans a round's gradient evaluations across them.
+//!
+//! Determinism contract (tested by `tests/determinism.rs`): every worker's
+//! gradient is computed by [`worker_grad_into`] exactly as the sequential
+//! driver would, into a dedicated per-worker slot; the *driver* then reads
+//! the slots and applies uploads in ascending worker order. Thread
+//! scheduling can change only *when* a slot is filled, never its contents
+//! or the order they are consumed in — traces stay bit-identical to the
+//! sequential driver for any thread count.
+//!
+//! Allocation discipline: all slots and the shared θ buffer are allocated
+//! once in [`with_pool`]; a round performs only channel sends and lock
+//! acquisitions (each worker appears at most once per round, so a slot is
+//! never contended within a round).
+
+use crate::data::Problem;
+use crate::grad::worker_grad_into;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Mutex, MutexGuard, RwLock};
+
+/// One worker's result slot: gradient buffer + loss, written by the pool
+/// thread that owns the worker this round, read by the driver afterwards.
+pub struct WorkerOut {
+    pub grad: Vec<f64>,
+    pub loss: f64,
+}
+
+/// Handle the driver uses inside [`with_pool`]'s closure.
+pub struct PoolHandle<'env> {
+    job_txs: Vec<Sender<usize>>,
+    done_rx: Receiver<usize>,
+    slots: &'env [Mutex<WorkerOut>],
+    theta: &'env RwLock<Vec<f64>>,
+    /// Number of pool threads actually spawned.
+    pub threads: usize,
+}
+
+impl PoolHandle<'_> {
+    /// Evaluate gradients at `theta_now` for every worker index yielded by
+    /// `workers`, in parallel; blocks until all are done. Returns the
+    /// number of evaluations performed. Read results back per worker with
+    /// [`PoolHandle::result`].
+    pub fn eval<I: IntoIterator<Item = usize>>(&self, theta_now: &[f64], workers: I) -> usize {
+        self.theta.write().expect("pool theta lock poisoned").copy_from_slice(theta_now);
+        let mut n = 0usize;
+        for mi in workers {
+            // dispatch by enumeration index, not worker id: a sparse
+            // contact set with ids congruent mod T must still spread
+            // across the threads (each worker appears at most once per
+            // round, so slots stay uncontended under any assignment)
+            self.job_txs[n % self.job_txs.len()].send(mi).expect("pool worker thread died");
+            n += 1;
+        }
+        for _ in 0..n {
+            self.done_rx.recv().expect("pool worker thread died");
+        }
+        n
+    }
+
+    /// Borrow worker `m`'s `(grad, loss)` from the last [`PoolHandle::eval`]
+    /// round.
+    pub fn result(&self, m: usize) -> MutexGuard<'_, WorkerOut> {
+        self.slots[m].lock().expect("pool slot lock poisoned")
+    }
+}
+
+/// Number of threads `RunOptions::threads == 0` ("auto") resolves to.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Spin up `threads` pool threads over `problem`'s shards, run `f` with a
+/// [`PoolHandle`], then shut the pool down (channel-drop signals the
+/// threads; the scope joins them).
+pub fn with_pool<R>(
+    problem: &Problem,
+    threads: usize,
+    f: impl FnOnce(&PoolHandle<'_>) -> R,
+) -> R {
+    let m = problem.m();
+    let d = problem.d;
+    let threads = threads.clamp(1, m.max(1));
+    let slots: Vec<Mutex<WorkerOut>> =
+        (0..m).map(|_| Mutex::new(WorkerOut { grad: vec![0.0; d], loss: 0.0 })).collect();
+    let theta = RwLock::new(vec![0.0; d]);
+
+    std::thread::scope(|scope| {
+        let (done_tx, done_rx) = channel::<usize>();
+        let mut job_txs = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            let (tx, rx) = channel::<usize>();
+            job_txs.push(tx);
+            let done = done_tx.clone();
+            let slots = &slots;
+            let theta = &theta;
+            scope.spawn(move || {
+                while let Ok(mi) = rx.recv() {
+                    let th = theta.read().expect("pool theta lock poisoned");
+                    let mut out = slots[mi].lock().expect("pool slot lock poisoned");
+                    let WorkerOut { grad, loss } = &mut *out;
+                    *loss = worker_grad_into(problem.task, &problem.workers[mi], &th, grad);
+                    drop(out);
+                    drop(th);
+                    if done.send(mi).is_err() {
+                        break; // driver gone; shut down
+                    }
+                }
+            });
+        }
+        drop(done_tx);
+        let handle = PoolHandle { job_txs, done_rx, slots: &slots, theta: &theta, threads };
+        f(&handle)
+        // `handle` drops here → job senders close → threads exit → scope joins.
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::grad::worker_grad;
+    use crate::util::Rng;
+
+    #[test]
+    fn pool_results_bitwise_match_direct_evaluation() {
+        let p = synthetic::linreg_increasing_l(7, 20, 10, 17);
+        let mut rng = Rng::new(3);
+        let theta = rng.normal_vec(10);
+        with_pool(&p, 4, |pool| {
+            assert_eq!(pool.threads, 4);
+            let n = pool.eval(&theta, 0..p.m());
+            assert_eq!(n, p.m());
+            for mi in 0..p.m() {
+                let (g, l) = worker_grad(p.task, &p.workers[mi], &theta);
+                let out = pool.result(mi);
+                assert_eq!(out.grad, g, "worker {mi}");
+                assert_eq!(out.loss.to_bits(), l.to_bits(), "worker {mi}");
+            }
+        });
+    }
+
+    #[test]
+    fn pool_handles_subset_rounds_and_reuse() {
+        let p = synthetic::logreg_uniform_l(5, 15, 6, 23);
+        let mut rng = Rng::new(4);
+        with_pool(&p, 2, |pool| {
+            for round in 0..10 {
+                let theta = rng.normal_vec(6);
+                let subset: Vec<usize> =
+                    (0..p.m()).filter(|mi| (mi + round) % 2 == 0).collect();
+                let n = pool.eval(&theta, subset.iter().copied());
+                assert_eq!(n, subset.len());
+                for &mi in &subset {
+                    let (g, l) = worker_grad(p.task, &p.workers[mi], &theta);
+                    let out = pool.result(mi);
+                    assert_eq!(out.grad, g);
+                    assert_eq!(out.loss.to_bits(), l.to_bits());
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn thread_count_clamped_to_workers() {
+        let p = synthetic::linreg_increasing_l(2, 8, 4, 31);
+        with_pool(&p, 64, |pool| {
+            assert_eq!(pool.threads, 2);
+            pool.eval(&[0.0; 4], 0..2);
+        });
+    }
+}

@@ -19,7 +19,7 @@ use super::trigger::TriggerConfig;
 use super::{Algorithm, CommStats};
 use crate::data::Problem;
 use crate::grad::GradEngine;
-use crate::linalg::{dist2, sub};
+use crate::linalg::{axpy, dist2};
 use crate::metrics::{IterRecord, RunTrace};
 use std::time::Instant;
 
@@ -74,7 +74,7 @@ pub fn prox_run(
     problem: &Problem,
     algo: Algorithm,
     opts: &ProxOptions,
-    engine: &mut dyn GradEngine,
+    engine: &dyn GradEngine,
 ) -> RunTrace {
     assert!(
         matches!(algo, Algorithm::Gd | Algorithm::LagWk),
@@ -86,7 +86,11 @@ pub fn prox_run(
     let xi = if algo == Algorithm::LagWk { opts.xi } else { 0.0 };
     let trigger = TriggerConfig::uniform(opts.d_history, xi);
     let mut server = ParameterServer::new(d, m, opts.d_history, vec![0.0; d]);
-    let mut cached: Vec<Option<Vec<f64>>> = vec![None; m];
+    // preallocated workspace — the loop body allocates nothing
+    let mut grad_buf = vec![0.0; d];
+    let mut cached: Vec<Vec<f64>> = vec![vec![0.0; d]; m];
+    let mut has_cached = vec![false; m];
+    let mut prev = vec![0.0; d];
     let mut stats = CommStats::default();
     let mut events: Vec<Vec<usize>> = vec![Vec::new(); m];
     let mut records = Vec::new();
@@ -105,19 +109,18 @@ pub fn prox_run(
         stats.downloads += m as u64;
         let rhs = trigger.rhs(alpha, m, &server.history);
         for mi in 0..m {
-            let (g, _) = engine.grad(mi, &server.theta);
+            engine.grad_into(mi, &server.theta, &mut grad_buf);
             stats.grad_evals += 1;
-            let violated = match &cached[mi] {
-                None => true,
-                Some(c) => trigger.wk_violated(dist2(c, &g), rhs),
-            };
+            let violated = !has_cached[mi]
+                || trigger.wk_violated(dist2(&cached[mi], &grad_buf), rhs);
             if violated || algo == Algorithm::Gd {
-                let delta = match &cached[mi] {
-                    Some(c) => sub(&g, c),
-                    None => g.clone(),
-                };
-                server.apply_delta(mi, &delta);
-                cached[mi] = Some(g);
+                if has_cached[mi] {
+                    server.absorb(mi, &grad_buf, Some(&cached[mi]));
+                } else {
+                    server.absorb(mi, &grad_buf, None);
+                    has_cached[mi] = true;
+                }
+                cached[mi].copy_from_slice(&grad_buf);
                 stats.uploads += 1;
                 events[mi].push(k);
             }
@@ -125,8 +128,8 @@ pub fn prox_run(
 
         // proximal step: gradient step then soft-threshold, with the
         // history fed the *post-prox* iterate difference
-        let prev = server.theta.clone();
-        crate::linalg::axpy(-alpha, &server.agg_grad.clone(), &mut server.theta);
+        prev.copy_from_slice(&server.theta);
+        axpy(-alpha, &server.agg_grad, &mut server.theta);
         soft_threshold(&mut server.theta, alpha * opts.lam1);
         server.history.push(dist2(&server.theta, &prev));
 
@@ -176,7 +179,7 @@ mod tests {
     fn prox_gd_monotone_decrease() {
         let p = synthetic::linreg_increasing_l(5, 30, 12, 55);
         let opts = ProxOptions { max_iters: 300, lam1: 0.05, ..Default::default() };
-        let t = prox_run(&p, Algorithm::Gd, &opts, &mut NativeEngine::new(&p));
+        let t = prox_run(&p, Algorithm::Gd, &opts, &NativeEngine::new(&p));
         // composite objective strictly decreases under prox-GD with α = 1/L
         for w in t.records.windows(2) {
             assert!(w[1].obj_err <= w[0].obj_err + 1e-9 * w[0].obj_err.abs());
@@ -187,8 +190,8 @@ mod tests {
     fn prox_lag_matches_prox_gd_value_with_fewer_uploads() {
         let p = synthetic::linreg_increasing_l(7, 30, 12, 56);
         let opts = ProxOptions { max_iters: 1500, lam1: 0.05, ..Default::default() };
-        let gd = prox_run(&p, Algorithm::Gd, &opts, &mut NativeEngine::new(&p));
-        let wk = prox_run(&p, Algorithm::LagWk, &opts, &mut NativeEngine::new(&p));
+        let gd = prox_run(&p, Algorithm::Gd, &opts, &NativeEngine::new(&p));
+        let wk = prox_run(&p, Algorithm::LagWk, &opts, &NativeEngine::new(&p));
         let (g, w) = (gd.final_err(), wk.final_err());
         assert!(
             (g - w).abs() <= 1e-5 * g.abs().max(1e-300),
@@ -207,8 +210,8 @@ mod tests {
         let p = synthetic::linreg_increasing_l(4, 40, 20, 57);
         // strong l1 → many exact zeros
         let opts = ProxOptions { max_iters: 800, lam1: 5.0, ..Default::default() };
-        let mut engine = NativeEngine::new(&p);
-        let t = prox_run(&p, Algorithm::LagWk, &opts, &mut engine);
+        let engine = NativeEngine::new(&p);
+        let t = prox_run(&p, Algorithm::LagWk, &opts, &engine);
         assert!(t.records.len() > 10);
         // re-derive the final iterate by rerunning (trace doesn't store θ);
         // instead check the objective stabilized and is finite
@@ -216,7 +219,7 @@ mod tests {
         // direct sparsity check via a short rerun capturing θ
         let mut server_like = {
             let opts2 = ProxOptions { max_iters: 800, lam1: 5.0, ..Default::default() };
-            let mut e = NativeEngine::new(&p);
+            let e = NativeEngine::new(&p);
             // inline mini-run to capture final theta
             let alpha = 1.0 / p.l_total;
             let mut theta = vec![0.0; p.d];

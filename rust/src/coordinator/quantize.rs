@@ -85,7 +85,7 @@ pub fn quantized_run(
     algo: Algorithm,
     opts: &RunOptions,
     bits: u8,
-    engine: &mut dyn GradEngine,
+    engine: &dyn GradEngine,
 ) -> QuantizedRunResult {
     assert!(matches!(algo, Algorithm::Gd | Algorithm::LagWk));
     let m = problem.m();
@@ -94,6 +94,7 @@ pub fn quantized_run(
     let xi = if algo == Algorithm::LagWk { opts.wk_xi } else { 0.0 };
     let trigger = TriggerConfig::uniform(opts.d_history, xi);
     let mut server = ParameterServer::new(d, m, opts.d_history, vec![0.0; d]);
+    let mut grad_buf = vec![0.0; d];
     let mut cached: Vec<Option<Vec<f64>>> = vec![None; m];
     let mut rng = Rng::new(opts.seed ^ 0x9A27);
     let mut uploads = 0u64;
@@ -113,17 +114,19 @@ pub fn quantized_run(
     for k in 1..=opts.max_iters {
         let rhs = trigger.rhs(alpha, m, &server.history);
         for mi in 0..m {
-            let (g, _) = engine.grad(mi, &server.theta);
+            engine.grad_into(mi, &server.theta, &mut grad_buf);
             let violated = match &cached[mi] {
                 None => true,
-                Some(c) => trigger.wk_violated(dist2(c, &g), rhs),
+                Some(c) => trigger.wk_violated(dist2(c, &grad_buf), rhs),
             };
             if !violated && algo == Algorithm::LagWk {
                 continue;
             }
+            // the quantized wire format allocates per upload by nature
+            // (codes + dequantized feedback); only the skip path is free
             let delta = match &cached[mi] {
-                Some(c) => sub(&g, c),
-                None => g.clone(),
+                Some(c) => sub(&grad_buf, c),
+                None => grad_buf.clone(),
             };
             let q = QuantizedVec::encode(&delta, bits, &mut rng);
             let deq = q.decode();
@@ -229,7 +232,7 @@ mod tests {
             target_err: Some(1e-8),
             ..Default::default()
         };
-        let q = quantized_run(&p, Algorithm::LagWk, &opts, 12, &mut NativeEngine::new(&p));
+        let q = quantized_run(&p, Algorithm::LagWk, &opts, 12, &NativeEngine::new(&p));
         assert!(q.trace.converged_iter.is_some(), "err={}", q.trace.final_err());
         // 12-bit codes cut uplink bytes vs f64 (header-dominated at d=10;
         // the ratio approaches 64/bits for large d)
@@ -246,8 +249,8 @@ mod tests {
         use crate::grad::NativeEngine;
         let p = synthetic::linreg_increasing_l(4, 20, 8, 72);
         let opts = RunOptions { max_iters: 3000, ..Default::default() };
-        let hi = quantized_run(&p, Algorithm::LagWk, &opts, 16, &mut NativeEngine::new(&p));
-        let lo = quantized_run(&p, Algorithm::LagWk, &opts, 6, &mut NativeEngine::new(&p));
+        let hi = quantized_run(&p, Algorithm::LagWk, &opts, 16, &NativeEngine::new(&p));
+        let lo = quantized_run(&p, Algorithm::LagWk, &opts, 6, &NativeEngine::new(&p));
         assert!(hi.trace.final_err().is_finite());
         assert!(lo.trace.final_err().is_finite());
         // error feedback keeps even 6-bit runs descending

@@ -77,7 +77,7 @@ pub struct DefenseStats {
 pub fn robust_run(
     problem: &Problem,
     opts: &RobustOptions,
-    engine: &mut dyn GradEngine,
+    engine: &dyn GradEngine,
 ) -> (RunTrace, DefenseStats, Vec<f64>) {
     let m = problem.m();
     let d = problem.d;
@@ -255,7 +255,7 @@ mod tests {
             Attack::SignFlip { scale: 1.0 },
             true,
         );
-        let (trace, stats, _) = robust_run(&p, &opts, &mut NativeEngine::new(&p));
+        let (trace, stats, _) = robust_run(&p, &opts, &NativeEngine::new(&p));
         assert_eq!(stats.honest_rejected, 0, "smoothness bound is a theorem");
         assert_eq!(stats.rejected, 0);
         // and matches plain LAG-WK upload-for-upload
@@ -263,7 +263,7 @@ mod tests {
             &p,
             Algorithm::LagWk,
             &base(300),
-            &mut NativeEngine::new(&p),
+            &NativeEngine::new(&p),
         );
         assert_eq!(trace.total_uploads(), plain.total_uploads());
     }
@@ -275,8 +275,8 @@ mod tests {
         let mk = |defend| {
             RobustOptions::new(base(2000), byz.clone(), Attack::Blowup { scale: 50.0 }, defend)
         };
-        let (bad, _, _) = robust_run(&p, &mk(false), &mut NativeEngine::new(&p));
-        let (_, stats, theta) = robust_run(&p, &mk(true), &mut NativeEngine::new(&p));
+        let (bad, _, _) = robust_run(&p, &mk(false), &NativeEngine::new(&p));
+        let (_, stats, theta) = robust_run(&p, &mk(true), &NativeEngine::new(&p));
         assert!(stats.rejected > 0);
         assert_eq!(stats.honest_rejected, 0);
         assert_eq!(stats.evicted, 1);
@@ -298,7 +298,7 @@ mod tests {
         let byz = vec![4];
         let opts =
             RobustOptions::new(base(2000), byz.clone(), Attack::SignFlip { scale: 10.0 }, true);
-        let (_, stats, theta) = robust_run(&p, &opts, &mut NativeEngine::new(&p));
+        let (_, stats, theta) = robust_run(&p, &opts, &NativeEngine::new(&p));
         assert!(stats.rejected > 0);
         assert_eq!(stats.honest_rejected, 0);
         assert_eq!(stats.evicted, 1);
@@ -312,7 +312,7 @@ mod tests {
         let byz = vec![0];
         let opts =
             RobustOptions::new(base(2000), byz.clone(), Attack::Noise { sigma: 100.0 }, true);
-        let (_, stats, theta) = robust_run(&p, &opts, &mut NativeEngine::new(&p));
+        let (_, stats, theta) = robust_run(&p, &opts, &NativeEngine::new(&p));
         assert!(stats.rejected > 0);
         assert_eq!(stats.evicted, 1);
         let honest = honest_subproblem(&p, &byz);
@@ -325,7 +325,7 @@ mod tests {
         let byz = vec![1, 6];
         let opts =
             RobustOptions::new(base(2000), byz.clone(), Attack::Blowup { scale: 30.0 }, true);
-        let (_, stats, theta) = robust_run(&p, &opts, &mut NativeEngine::new(&p));
+        let (_, stats, theta) = robust_run(&p, &opts, &NativeEngine::new(&p));
         assert_eq!(stats.evicted, 2);
         let honest = honest_subproblem(&p, &byz);
         assert!(honest.obj_err(&theta) < 1e-6);

@@ -2,16 +2,34 @@
 //! communication accounting. Every experiment and bench goes through here;
 //! the threaded deployment in [`super::transport`] reproduces the same
 //! traces over real message passing.
+//!
+//! Two perf properties of the hot loop (see DESIGN.md §6):
+//!
+//! * **Allocation-free iterations** — all per-worker gradient caches, the
+//!   gradient scratch buffer and the LAG-PS contact set are preallocated;
+//!   the loop body performs no heap allocation (trace records amortize).
+//! * **Parallel gradient fan-out** — for the broadcast-style algorithms
+//!   (GD, LAG-WK, LAG-PS) on the native engine, a round's gradient
+//!   evaluations run on the persistent thread pool in [`super::pool`].
+//!   Uploads are applied in ascending worker order, so traces are
+//!   bit-identical to the sequential driver for any thread count
+//!   (asserted by `tests/determinism.rs`).
 
+use super::pool::{self, PoolHandle};
 use super::server::ParameterServer;
 use super::trigger::TriggerConfig;
 use super::{Algorithm, CommStats};
 use crate::data::Problem;
 use crate::grad::GradEngine;
-use crate::linalg::{dist2, sub};
+use crate::linalg::dist2;
 use crate::metrics::{IterRecord, RunTrace};
 use crate::util::Rng;
 use std::time::Instant;
+
+/// Below this much per-round work (Σ_m n_m·d multiply-adds) the pool's
+/// round-trip overhead outweighs the parallel gain; `threads == 0` (auto)
+/// then stays sequential. Explicit `threads > 1` always uses the pool.
+const AUTO_PARALLEL_MIN_WORK: usize = 16_000;
 
 /// Options for a run. Defaults follow the paper's §4 settings.
 #[derive(Debug, Clone)]
@@ -41,6 +59,10 @@ pub struct RunOptions {
     pub eval_every: usize,
     /// Keep the iterate sequence in the trace (Lyapunov property tests).
     pub record_thetas: bool,
+    /// Gradient fan-out threads: 0 = auto (all cores when the per-round
+    /// work is large enough), 1 = sequential, n = exactly n pool threads.
+    /// Results are bit-identical for every value.
+    pub threads: usize,
 }
 
 impl Default for RunOptions {
@@ -58,41 +80,131 @@ impl Default for RunOptions {
             record_every: 1,
             eval_every: 1,
             record_thetas: false,
+            threads: 0,
         }
     }
 }
 
-/// Contact worker `mi`: compute a fresh gradient at θᵏ, upload the delta
-/// against the worker's cached gradient, refine the server aggregate (4).
-#[allow(clippy::too_many_arguments)]
+/// Preallocated per-run scratch: the worker gradient caches and the shared
+/// gradient buffer. Everything the loop writes per iteration lives here or
+/// in the [`ParameterServer`]; nothing is allocated per iteration.
+struct Workspace {
+    /// Scratch for the engine's gradient output (sequential path).
+    grad: Vec<f64>,
+    /// Per-worker cached gradients ∇L_m(θ̂_m) (dense, preallocated).
+    cached: Vec<Vec<f64>>,
+    /// Whether worker m has uploaded at least once (`cached[m]` valid).
+    has_cached: Vec<bool>,
+    /// LAG-PS contact set, reused across rounds.
+    contact_set: Vec<usize>,
+}
+
+impl Workspace {
+    fn new(m: usize, d: usize) -> Self {
+        Workspace {
+            grad: vec![0.0; d],
+            cached: vec![vec![0.0; d]; m],
+            has_cached: vec![false; m],
+            contact_set: Vec::with_capacity(m),
+        }
+    }
+}
+
+/// Record an upload of the fresh gradient `g` from worker `mi`: refine the
+/// server aggregate (recursion (4)) against the previous cached gradient
+/// and overwrite the cache — no delta vector is materialized and the first
+/// upload adds `g` directly (no clone).
+fn apply_upload(
+    server: &mut ParameterServer,
+    ws: &mut Workspace,
+    stats: &mut CommStats,
+    events: &mut [Vec<usize>],
+    mi: usize,
+    k: usize,
+    g: &[f64],
+) {
+    if ws.has_cached[mi] {
+        server.absorb(mi, g, Some(&ws.cached[mi]));
+    } else {
+        server.absorb(mi, g, None);
+        ws.has_cached[mi] = true;
+    }
+    ws.cached[mi].copy_from_slice(g);
+    stats.uploads += 1;
+    events[mi].push(k);
+}
+
+/// Contact worker `mi` sequentially: fresh gradient at θᵏ into the scratch
+/// buffer, then upload.
 fn contact(
     server: &mut ParameterServer,
-    cached: &mut [Option<Vec<f64>>],
-    engine: &mut dyn GradEngine,
+    ws: &mut Workspace,
+    engine: &dyn GradEngine,
     stats: &mut CommStats,
     events: &mut [Vec<usize>],
     mi: usize,
     k: usize,
 ) {
-    let (g, _loss) = engine.grad(mi, &server.theta);
+    let mut grad = std::mem::take(&mut ws.grad);
+    engine.grad_into(mi, &server.theta, &mut grad);
     stats.grad_evals += 1;
-    let delta = match &cached[mi] {
-        Some(c) => sub(&g, c),
-        None => g.clone(),
+    apply_upload(server, ws, stats, events, mi, k, &grad);
+    ws.grad = grad;
+}
+
+/// Resolve the thread count for this (problem, algorithm, engine, options)
+/// combination. Only the broadcast-style algorithms fan out (the IAG
+/// baselines contact a single worker per round), and only the native
+/// engine is shared-read across threads (PJRT clients are not `Send`; XLA
+/// parallelizes internally on that path).
+fn effective_threads(
+    problem: &Problem,
+    algo: Algorithm,
+    opts: &RunOptions,
+    engine: &dyn GradEngine,
+) -> usize {
+    if !engine.is_native_for(problem) {
+        return 1;
+    }
+    if !matches!(algo, Algorithm::Gd | Algorithm::LagWk | Algorithm::LagPs) {
+        return 1;
+    }
+    let requested = if opts.threads == 0 {
+        let work: usize = problem.workers.iter().map(|s| s.n_padded() * s.d()).sum();
+        if work < AUTO_PARALLEL_MIN_WORK {
+            return 1;
+        }
+        pool::default_threads()
+    } else {
+        opts.threads
     };
-    server.apply_delta(mi, &delta);
-    cached[mi] = Some(g);
-    stats.uploads += 1;
-    events[mi].push(k);
+    requested.clamp(1, problem.m())
 }
 
 /// Run `algo` on `problem` with gradients from `engine`. Deterministic for
-/// a fixed seed.
+/// a fixed seed — and bit-identical for every `opts.threads` value.
 pub fn run(
     problem: &Problem,
     algo: Algorithm,
     opts: &RunOptions,
-    engine: &mut dyn GradEngine,
+    engine: &dyn GradEngine,
+) -> RunTrace {
+    let threads = effective_threads(problem, algo, opts, engine);
+    if threads > 1 {
+        pool::with_pool(problem, threads, |pool| {
+            run_loop(problem, algo, opts, engine, Some(pool))
+        })
+    } else {
+        run_loop(problem, algo, opts, engine, None)
+    }
+}
+
+fn run_loop(
+    problem: &Problem,
+    algo: Algorithm,
+    opts: &RunOptions,
+    engine: &dyn GradEngine,
+    pool: Option<&PoolHandle<'_>>,
 ) -> RunTrace {
     let m = problem.m();
     let d = problem.d;
@@ -105,7 +217,7 @@ pub fn run(
     let trigger = TriggerConfig::uniform(opts.d_history, xi);
     let theta0 = opts.theta0.clone().unwrap_or_else(|| vec![0.0; d]);
     let mut server = ParameterServer::new(d, m, opts.d_history, theta0);
-    let mut cached: Vec<Option<Vec<f64>>> = vec![None; m];
+    let mut ws = Workspace::new(m, d);
     let mut stats = CommStats::default();
     let mut events: Vec<Vec<usize>> = vec![Vec::new(); m];
     let mut rng = Rng::new(opts.seed);
@@ -131,56 +243,100 @@ pub fn run(
         match algo {
             Algorithm::Gd => {
                 stats.downloads += m as u64; // broadcast θᵏ
-                for mi in 0..m {
-                    contact(&mut server, &mut cached, engine, &mut stats, &mut events, mi, k);
+                if let Some(pool) = pool {
+                    let n = pool.eval(&server.theta, 0..m) as u64;
+                    stats.grad_evals += n;
+                    engine.note_pool_evals(n);
+                    for mi in 0..m {
+                        let out = pool.result(mi);
+                        let g: &[f64] = &out.grad;
+                        apply_upload(&mut server, &mut ws, &mut stats, &mut events, mi, k, g);
+                    }
+                } else {
+                    for mi in 0..m {
+                        contact(&mut server, &mut ws, engine, &mut stats, &mut events, mi, k);
+                    }
                 }
             }
             Algorithm::LagWk => {
                 stats.downloads += m as u64; // broadcast θᵏ
                 let rhs = trigger.rhs(alpha, m, &server.history);
-                for mi in 0..m {
-                    // every worker computes; only violators upload (Alg. 1)
-                    let (g, _loss) = engine.grad(mi, &server.theta);
-                    stats.grad_evals += 1;
-                    let violated = match &cached[mi] {
-                        None => true,
-                        Some(c) => trigger.wk_violated(dist2(c, &g), rhs),
-                    };
-                    if violated {
-                        let delta = match &cached[mi] {
-                            Some(c) => sub(&g, c),
-                            None => g.clone(),
-                        };
-                        server.apply_delta(mi, &delta);
-                        cached[mi] = Some(g);
-                        stats.uploads += 1;
-                        events[mi].push(k);
+                if let Some(pool) = pool {
+                    // every worker computes (in parallel); only violators
+                    // upload, applied in ascending worker order (Alg. 1)
+                    let n = pool.eval(&server.theta, 0..m) as u64;
+                    stats.grad_evals += n;
+                    engine.note_pool_evals(n);
+                    for mi in 0..m {
+                        let out = pool.result(mi);
+                        let violated = !ws.has_cached[mi]
+                            || trigger.wk_violated(dist2(&ws.cached[mi], &out.grad), rhs);
+                        if violated {
+                            let g: &[f64] = &out.grad;
+                            apply_upload(&mut server, &mut ws, &mut stats, &mut events, mi, k, g);
+                        }
+                    }
+                } else {
+                    for mi in 0..m {
+                        // every worker computes; only violators upload (Alg. 1)
+                        let mut grad = std::mem::take(&mut ws.grad);
+                        engine.grad_into(mi, &server.theta, &mut grad);
+                        stats.grad_evals += 1;
+                        let violated = !ws.has_cached[mi]
+                            || trigger.wk_violated(dist2(&ws.cached[mi], &grad), rhs);
+                        if violated {
+                            apply_upload(
+                                &mut server, &mut ws, &mut stats, &mut events, mi, k, &grad,
+                            );
+                        }
+                        ws.grad = grad;
                     }
                 }
             }
             Algorithm::LagPs => {
                 let rhs = trigger.rhs(alpha, m, &server.history);
+                // the server decides the whole contact set *before* any
+                // communication (Alg. 2) — the rule reads only θᵏ and the
+                // stored copies, neither of which changes within a round
+                ws.contact_set.clear();
                 for mi in 0..m {
-                    // server decides *before* any communication (Alg. 2)
                     let violated = match server.hat_dist_sq(mi) {
                         None => true,
                         Some(d2) => trigger.ps_violated(problem.l_m[mi], d2, rhs),
                     };
                     if violated {
-                        stats.downloads += 1; // send θᵏ to worker mi only
-                        contact(&mut server, &mut cached, engine, &mut stats, &mut events, mi, k);
+                        ws.contact_set.push(mi);
                     }
+                }
+                stats.downloads += ws.contact_set.len() as u64; // θᵏ to contacted workers only
+                if let Some(pool) = pool {
+                    let set = std::mem::take(&mut ws.contact_set);
+                    let n = pool.eval(&server.theta, set.iter().copied()) as u64;
+                    stats.grad_evals += n;
+                    engine.note_pool_evals(n);
+                    for &mi in &set {
+                        let out = pool.result(mi);
+                        let g: &[f64] = &out.grad;
+                        apply_upload(&mut server, &mut ws, &mut stats, &mut events, mi, k, g);
+                    }
+                    ws.contact_set = set;
+                } else {
+                    let contact_set = std::mem::take(&mut ws.contact_set);
+                    for &mi in &contact_set {
+                        contact(&mut server, &mut ws, engine, &mut stats, &mut events, mi, k);
+                    }
+                    ws.contact_set = contact_set;
                 }
             }
             Algorithm::CycIag => {
                 let mi = (k - 1) % m;
                 stats.downloads += 1;
-                contact(&mut server, &mut cached, engine, &mut stats, &mut events, mi, k);
+                contact(&mut server, &mut ws, engine, &mut stats, &mut events, mi, k);
             }
             Algorithm::NumIag => {
                 let mi = rng.weighted(&problem.l_m);
                 stats.downloads += 1;
-                contact(&mut server, &mut cached, engine, &mut stats, &mut events, mi, k);
+                contact(&mut server, &mut ws, engine, &mut stats, &mut events, mi, k);
             }
         }
 
@@ -241,9 +397,9 @@ mod tests {
     #[test]
     fn gd_converges_linearly() {
         let p = toy();
-        let mut e = NativeEngine::new(&p);
+        let e = NativeEngine::new(&p);
         let opts = RunOptions { max_iters: 3000, target_err: Some(1e-10), ..Default::default() };
-        let t = run(&p, Algorithm::Gd, &opts, &mut e);
+        let t = run(&p, Algorithm::Gd, &opts, &e);
         assert!(t.converged_iter.is_some(), "final_err={}", t.final_err());
         // uploads = M per iteration
         assert_eq!(t.total_uploads(), (t.iters() as u64 - 1) * 5);
@@ -253,10 +409,8 @@ mod tests {
     fn lag_wk_converges_with_fewer_uploads() {
         let p = toy();
         let opts = RunOptions { max_iters: 5000, target_err: Some(1e-10), ..Default::default() };
-        let mut e1 = NativeEngine::new(&p);
-        let gd = run(&p, Algorithm::Gd, &opts, &mut e1);
-        let mut e2 = NativeEngine::new(&p);
-        let wk = run(&p, Algorithm::LagWk, &opts, &mut e2);
+        let gd = run(&p, Algorithm::Gd, &opts, &NativeEngine::new(&p));
+        let wk = run(&p, Algorithm::LagWk, &opts, &NativeEngine::new(&p));
         assert!(wk.converged_iter.is_some());
         assert!(
             wk.uploads_at_target.unwrap() < gd.uploads_at_target.unwrap(),
@@ -270,8 +424,7 @@ mod tests {
     fn lag_ps_converges() {
         let p = toy();
         let opts = RunOptions { max_iters: 8000, target_err: Some(1e-10), ..Default::default() };
-        let mut e = NativeEngine::new(&p);
-        let t = run(&p, Algorithm::LagPs, &opts, &mut e);
+        let t = run(&p, Algorithm::LagPs, &opts, &NativeEngine::new(&p));
         assert!(t.converged_iter.is_some(), "final_err={}", t.final_err());
     }
 
@@ -280,8 +433,7 @@ mod tests {
         let p = toy();
         let opts = RunOptions { max_iters: 20000, target_err: Some(1e-8), ..Default::default() };
         for algo in [Algorithm::CycIag, Algorithm::NumIag] {
-            let mut e = NativeEngine::new(&p);
-            let t = run(&p, algo, &opts, &mut e);
+            let t = run(&p, algo, &opts, &NativeEngine::new(&p));
             assert!(t.converged_iter.is_some(), "{:?} err={}", algo, t.final_err());
             // exactly one upload per iteration
             assert_eq!(t.total_uploads(), t.records.last().unwrap().k as u64);
@@ -293,10 +445,8 @@ mod tests {
         // ξ = 0 → RHS = 0 → every nonzero gradient change triggers an upload
         let p = toy();
         let opts = RunOptions { max_iters: 50, wk_xi: 0.0, ..Default::default() };
-        let mut e1 = NativeEngine::new(&p);
-        let gd = run(&p, Algorithm::Gd, &opts, &mut e1);
-        let mut e2 = NativeEngine::new(&p);
-        let wk = run(&p, Algorithm::LagWk, &opts, &mut e2);
+        let gd = run(&p, Algorithm::Gd, &opts, &NativeEngine::new(&p));
+        let wk = run(&p, Algorithm::LagWk, &opts, &NativeEngine::new(&p));
         for (a, b) in gd.records.iter().zip(&wk.records) {
             assert_eq!(a.obj_err, b.obj_err, "iteration {}", a.k);
         }
@@ -309,13 +459,11 @@ mod tests {
         let p = toy();
         let opts = RunOptions { max_iters: 200, ..Default::default() };
         // re-run manually to introspect (mirror of run())
-        let mut e = NativeEngine::new(&p);
-        let t = run(&p, Algorithm::LagWk, &opts, &mut e);
+        let t = run(&p, Algorithm::LagWk, &opts, &NativeEngine::new(&p));
         assert!(t.iters() > 0);
         // re-execute and check at the end via a fresh run with thetas
         let opts2 = RunOptions { max_iters: 200, record_thetas: true, ..Default::default() };
-        let mut e2 = NativeEngine::new(&p);
-        let t2 = run(&p, Algorithm::LagWk, &opts2, &mut e2);
+        let t2 = run(&p, Algorithm::LagWk, &opts2, &NativeEngine::new(&p));
         // recompute final aggregate from scratch: for each worker, gradient
         // at its last upload iterate
         let mut agg = vec![0.0; p.d];
@@ -344,8 +492,7 @@ mod tests {
         let p = toy();
         let opts = RunOptions { max_iters: 300, ..Default::default() };
         for algo in [Algorithm::LagWk, Algorithm::LagPs] {
-            let mut e = NativeEngine::new(&p);
-            let t = run(&p, algo, &opts, &mut e);
+            let t = run(&p, algo, &opts, &NativeEngine::new(&p));
             let iters = t.records.last().unwrap().k as u64;
             assert!(t.total_uploads() <= iters * p.m() as u64);
         }
@@ -358,13 +505,13 @@ mod tests {
             &p,
             Algorithm::NumIag,
             &RunOptions { max_iters: 50, seed: 1, ..Default::default() },
-            &mut NativeEngine::new(&p),
+            &NativeEngine::new(&p),
         );
         let b = run(
             &p,
             Algorithm::NumIag,
             &RunOptions { max_iters: 50, seed: 2, ..Default::default() },
-            &mut NativeEngine::new(&p),
+            &NativeEngine::new(&p),
         );
         assert_ne!(
             a.upload_events, b.upload_events,
@@ -376,7 +523,7 @@ mod tests {
     fn record_every_thins_trace() {
         let p = toy();
         let opts = RunOptions { max_iters: 100, record_every: 10, ..Default::default() };
-        let t = run(&p, Algorithm::Gd, &opts, &mut NativeEngine::new(&p));
+        let t = run(&p, Algorithm::Gd, &opts, &NativeEngine::new(&p));
         assert!(t.records.len() <= 12);
         assert_eq!(t.records.last().unwrap().k, 100);
     }
@@ -385,12 +532,37 @@ mod tests {
     fn downloads_accounting_per_algorithm() {
         let p = toy();
         let opts = RunOptions { max_iters: 40, ..Default::default() };
-        let gd = run(&p, Algorithm::Gd, &opts, &mut NativeEngine::new(&p));
+        let gd = run(&p, Algorithm::Gd, &opts, &NativeEngine::new(&p));
         assert_eq!(gd.total_downloads(), 40 * 5);
-        let cyc = run(&p, Algorithm::CycIag, &opts, &mut NativeEngine::new(&p));
+        let cyc = run(&p, Algorithm::CycIag, &opts, &NativeEngine::new(&p));
         assert_eq!(cyc.total_downloads(), 40);
-        let ps = run(&p, Algorithm::LagPs, &opts, &mut NativeEngine::new(&p));
+        let ps = run(&p, Algorithm::LagPs, &opts, &NativeEngine::new(&p));
         // PS only sends θ to contacted workers: downloads == uploads
         assert_eq!(ps.total_downloads(), ps.total_uploads());
+    }
+
+    #[test]
+    fn explicit_thread_counts_reproduce_sequential_traces() {
+        // the full bit-determinism suite lives in tests/determinism.rs;
+        // this is the in-module smoke check
+        let p = toy();
+        for algo in [Algorithm::Gd, Algorithm::LagWk, Algorithm::LagPs] {
+            let seq = run(
+                &p,
+                algo,
+                &RunOptions { max_iters: 60, threads: 1, ..Default::default() },
+                &NativeEngine::new(&p),
+            );
+            let par = run(
+                &p,
+                algo,
+                &RunOptions { max_iters: 60, threads: 3, ..Default::default() },
+                &NativeEngine::new(&p),
+            );
+            assert_eq!(seq.upload_events, par.upload_events, "{algo:?}");
+            for (a, b) in seq.records.iter().zip(&par.records) {
+                assert_eq!(a.obj_err.to_bits(), b.obj_err.to_bits(), "{algo:?} k={}", a.k);
+            }
+        }
     }
 }

@@ -49,6 +49,29 @@ impl ParameterServer {
     /// the server-side copy θ̂_m = θᵏ.
     pub fn apply_delta(&mut self, m: usize, delta: &[f64]) {
         axpy(1.0, delta, &mut self.agg_grad);
+        self.record_hat(m);
+    }
+
+    /// Absorb worker m's *fresh* gradient without materializing the delta:
+    /// `∇ ← ∇ + (g − prev)` where `prev` is the worker's previous upload
+    /// (`None` on first contact, i.e. `∇ ← ∇ + g`). Bit-identical to
+    /// `apply_delta(m, &sub(g, prev))` but allocation-free — this is the
+    /// per-upload O(d) path of the hot loop.
+    pub fn absorb(&mut self, m: usize, g: &[f64], prev: Option<&[f64]>) {
+        match prev {
+            Some(c) => {
+                debug_assert_eq!(g.len(), c.len());
+                for ((a, gi), ci) in self.agg_grad.iter_mut().zip(g).zip(c) {
+                    *a += gi - ci;
+                }
+            }
+            None => axpy(1.0, g, &mut self.agg_grad),
+        }
+        self.record_hat(m);
+    }
+
+    /// θ̂_m = θᵏ (reusing the worker's slot after its first contact).
+    fn record_hat(&mut self, m: usize) {
         match &mut self.hat_theta[m] {
             Some(t) => t.copy_from_slice(&self.theta),
             slot @ None => *slot = Some(self.theta.clone()),
@@ -62,10 +85,11 @@ impl ParameterServer {
     }
 
     /// Gradient step θ^{k+1} = θᵏ − α ∇ᵏ; pushes ‖θ^{k+1} − θᵏ‖² into the
-    /// history. Returns the squared step length.
+    /// history. Returns the squared step length. Allocation-free (disjoint
+    /// field borrows — no aggregate clone).
     pub fn step(&mut self, alpha: f64) -> f64 {
         self.prev_theta.copy_from_slice(&self.theta);
-        axpy(-alpha, &self.agg_grad.clone(), &mut self.theta);
+        axpy(-alpha, &self.agg_grad, &mut self.theta);
         let sq = dist2(&self.theta, &self.prev_theta);
         self.history.push(sq);
         sq
@@ -94,6 +118,25 @@ mod tests {
         assert_eq!(s.theta, vec![0.0, -1.0]);
         assert_eq!(sq, norm2(&[1.0, 2.0]));
         assert_eq!(s.history.get(1), sq);
+    }
+
+    #[test]
+    fn absorb_matches_apply_delta_bitwise() {
+        let mut a = ParameterServer::new(3, 1, 2, vec![0.1, 0.2, 0.3]);
+        let mut b = a.clone();
+        let g1 = [1.0, -2.0, 0.5];
+        a.apply_delta(0, &g1); // first upload: δ = g
+        b.absorb(0, &g1, None);
+        assert_eq!(a.agg_grad, b.agg_grad);
+        a.step(0.1);
+        b.step(0.1);
+        let g2 = [0.5, -1.0, 2.25];
+        let delta: Vec<f64> = g2.iter().zip(&g1).map(|(x, y)| x - y).collect();
+        a.apply_delta(0, &delta);
+        b.absorb(0, &g2, Some(&g1));
+        assert_eq!(a.agg_grad, b.agg_grad);
+        assert_eq!(a.hat_theta, b.hat_theta);
+        assert_eq!(a.theta, b.theta);
     }
 
     #[test]

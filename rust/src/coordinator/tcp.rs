@@ -83,7 +83,11 @@ pub fn run_leader(
     let t0 = Instant::now();
 
     'train: for k in 1..=opts.max_iters {
-        let round = WireMsg::Round { k: k as u64, rhs: trigger.rhs(alpha, m, &history), theta: theta.clone() };
+        let round = WireMsg::Round {
+            k: k as u64,
+            rhs: trigger.rhs(alpha, m, &history),
+            theta: theta.clone(),
+        };
         let frame_bytes = round.wire_bytes();
         for (_, w) in conns.iter_mut() {
             round.write_to(w)?;
@@ -209,25 +213,24 @@ mod tests {
     fn tcp_lag_wk_matches_sync_driver() {
         let p = synthetic::linreg_increasing_l(4, 15, 6, 91);
         let opts = RunOptions { max_iters: 80, ..Default::default() };
-        let sync = run(&p, Algorithm::LagWk, &opts, &mut NativeEngine::new(&p));
+        let sync = run(&p, Algorithm::LagWk, &opts, &NativeEngine::new(&p));
 
         let addr = "127.0.0.1:37411";
-        let (trace, stats) = crossbeam_utils::thread::scope(|scope| {
-            let leader = scope.spawn(|_| run_leader(addr, &p, Algorithm::LagWk, &opts).unwrap());
+        let (trace, stats) = std::thread::scope(|scope| {
+            let leader = scope.spawn(|| run_leader(addr, &p, Algorithm::LagWk, &opts).unwrap());
             std::thread::sleep(std::time::Duration::from_millis(100));
             let mut workers = Vec::new();
             for mi in 0..p.m() {
                 let shard = &p.workers[mi];
                 let task = p.task;
-                workers.push(scope.spawn(move |_| run_worker(addr, mi, task, shard).unwrap()));
+                workers.push(scope.spawn(move || run_worker(addr, mi, task, shard).unwrap()));
             }
             let out = leader.join().unwrap();
             for w in workers {
                 assert!(w.join().unwrap() > 0);
             }
             out
-        })
-        .unwrap();
+        });
 
         assert_eq!(trace.total_uploads(), sync.total_uploads());
         assert_eq!(trace.upload_events, sync.upload_events);
@@ -248,17 +251,16 @@ mod tests {
         let p = synthetic::linreg_increasing_l(3, 12, 5, 92);
         let opts = RunOptions { max_iters: 6000, target_err: Some(1e-8), ..Default::default() };
         let addr = "127.0.0.1:37412";
-        let (trace, _stats) = crossbeam_utils::thread::scope(|scope| {
-            let leader = scope.spawn(|_| run_leader(addr, &p, Algorithm::Gd, &opts).unwrap());
+        let (trace, _stats) = std::thread::scope(|scope| {
+            let leader = scope.spawn(|| run_leader(addr, &p, Algorithm::Gd, &opts).unwrap());
             std::thread::sleep(std::time::Duration::from_millis(100));
             for mi in 0..p.m() {
                 let shard = &p.workers[mi];
                 let task = p.task;
-                scope.spawn(move |_| run_worker(addr, mi, task, shard).unwrap());
+                scope.spawn(move || run_worker(addr, mi, task, shard).unwrap());
             }
             leader.join().unwrap()
-        })
-        .unwrap();
+        });
         assert!(trace.converged_iter.is_some(), "err={}", trace.final_err());
     }
 }

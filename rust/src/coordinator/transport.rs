@@ -1,5 +1,5 @@
-//! Real message-passing deployment: one OS thread per worker, mpsc
-//! channels, and a serial-uplink latency model.
+//! Real message-passing deployment: one OS thread per worker (std scoped
+//! threads), mpsc channels, and a serial-uplink latency model.
 //!
 //! The synchronous driver in [`super::run`] is the ground truth for the
 //! *algorithm*; this module demonstrates (and tests assert) that the same
@@ -75,7 +75,7 @@ pub fn parallel_run(
     let mut converged_iter = None;
     let mut uploads_at_target = None;
 
-    crossbeam_utils::thread::scope(|scope| {
+    std::thread::scope(|scope| {
         // spawn workers
         let mut worker_tx = Vec::with_capacity(m);
         for mi in 0..m {
@@ -85,7 +85,7 @@ pub fn parallel_run(
             let shard = &problem.workers[mi];
             let task = problem.task;
             let use_trigger = algo == Algorithm::LagWk;
-            scope.spawn(move |_| {
+            scope.spawn(move || {
                 // worker-local state: cached gradient at the last upload
                 let mut cached: Option<Vec<f64>> = None;
                 while let Ok(msg) = rx.recv() {
@@ -182,8 +182,7 @@ pub fn parallel_run(
         for tx in &worker_tx {
             let _ = tx.send(ToWorker::Shutdown);
         }
-    })
-    .expect("worker thread panicked");
+    });
 
     RunTrace {
         algo: format!("{}+threads", algo.name()),
@@ -211,7 +210,7 @@ mod tests {
     fn threaded_gd_matches_sync_driver() {
         let p = synthetic::linreg_increasing_l(4, 15, 6, 31);
         let opts = RunOptions { max_iters: 60, ..Default::default() };
-        let sync = run(&p, Algorithm::Gd, &opts, &mut NativeEngine::new(&p));
+        let sync = run(&p, Algorithm::Gd, &opts, &NativeEngine::new(&p));
         let par = parallel_run(&p, Algorithm::Gd, &opts, &TransportOptions::default());
         let err0 = sync.records[0].obj_err;
         for (a, b) in sync.records.iter().zip(&par.records) {
@@ -235,7 +234,7 @@ mod tests {
     fn threaded_lag_wk_matches_sync_driver() {
         let p = synthetic::linreg_increasing_l(5, 15, 6, 32);
         let opts = RunOptions { max_iters: 120, ..Default::default() };
-        let sync = run(&p, Algorithm::LagWk, &opts, &mut NativeEngine::new(&p));
+        let sync = run(&p, Algorithm::LagWk, &opts, &NativeEngine::new(&p));
         let par = parallel_run(&p, Algorithm::LagWk, &opts, &TransportOptions::default());
         assert_eq!(sync.total_uploads(), par.total_uploads());
         assert_eq!(sync.upload_events, par.upload_events);
@@ -267,6 +266,7 @@ mod tests {
     #[should_panic]
     fn rejects_non_broadcast_algorithms() {
         let p = synthetic::linreg_increasing_l(2, 8, 3, 34);
-        let _ = parallel_run(&p, Algorithm::CycIag, &RunOptions::default(), &TransportOptions::default());
+        let topts = TransportOptions::default();
+        let _ = parallel_run(&p, Algorithm::CycIag, &RunOptions::default(), &topts);
     }
 }

@@ -211,14 +211,16 @@ impl Problem {
     }
 }
 
-/// Native per-worker loss (mirrors the L1 kernels exactly).
+/// Native per-worker loss (mirrors the L1 kernels exactly). Fused into a
+/// single allocation-free pass over the shard rows — the monitoring
+/// objective runs every iteration, so it shares the hot-path discipline of
+/// `grad::worker_grad_into`.
 pub fn worker_loss(task: Task, s: &WorkerShard, theta: &[f64]) -> f64 {
-    let z = s.x.matvec(theta);
     match task {
         Task::LinReg => {
             let mut loss = 0.0;
             for i in 0..s.x.rows {
-                let r = z[i] - s.y[i];
+                let r = linalg::dot(s.x.row(i), theta) - s.y[i];
                 loss += s.w[i] * r * r;
             }
             loss
@@ -226,7 +228,7 @@ pub fn worker_loss(task: Task, s: &WorkerShard, theta: &[f64]) -> f64 {
         Task::LogReg { lam } => {
             let mut loss = 0.5 * lam * linalg::norm2(theta);
             for i in 0..s.x.rows {
-                loss += s.w[i] * log1pexp(-s.y[i] * z[i]);
+                loss += s.w[i] * log1pexp(-s.y[i] * linalg::dot(s.x.row(i), theta));
             }
             loss
         }

@@ -94,12 +94,12 @@ impl ExpContext {
     ) -> anyhow::Result<RunTrace> {
         match self.engine {
             EngineKind::Native => {
-                let mut e = NativeEngine::new(problem);
-                Ok(run(problem, algo, opts, &mut e))
+                let e = NativeEngine::new(problem);
+                Ok(run(problem, algo, opts, &e))
             }
             EngineKind::Pjrt => {
-                let mut e = PjrtEngine::new(problem, &self.artifacts_dir)?;
-                Ok(run(problem, algo, opts, &mut e))
+                let e = PjrtEngine::new(problem, &self.artifacts_dir)?;
+                Ok(run(problem, algo, opts, &e))
             }
         }
     }

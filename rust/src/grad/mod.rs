@@ -9,77 +9,131 @@
 //!   JAX+Pallas artifact executed through the PJRT C API.
 //!
 //! Tests assert both engines agree to float tolerance on identical shards.
+//!
+//! The trait is **shared-read, write-into**: `grad_into(&self, …)` takes
+//! `&self` and writes the gradient into a caller-provided buffer, so the
+//! hot loop allocates nothing and the driver can fan evaluations for
+//! several workers across threads (see `coordinator::pool`). Engines use
+//! interior mutability (an atomic counter) for call accounting.
 
 use crate::data::{Problem, Task, WorkerShard};
 use crate::linalg::{self, sigmoid};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Anything that can produce `(∇L_m(θ), L_m(θ))` for worker `m`.
 pub trait GradEngine {
-    fn grad(&mut self, m: usize, theta: &[f64]) -> (Vec<f64>, f64);
+    /// Write `∇L_m(θ)` into `out` (length `d`) and return `L_m(θ)`.
+    fn grad_into(&self, m: usize, theta: &[f64], out: &mut [f64]) -> f64;
+
+    /// Allocating convenience wrapper (cold paths and tests).
+    fn grad(&self, m: usize, theta: &[f64]) -> (Vec<f64>, f64) {
+        let mut out = vec![0.0; theta.len()];
+        let loss = self.grad_into(m, theta, &mut out);
+        (out, loss)
+    }
+
     fn name(&self) -> &'static str;
+
     /// Total gradient evaluations so far (computation accounting).
     fn calls(&self) -> u64;
+
+    /// True iff this engine computes exactly [`worker_grad`] over
+    /// `problem`'s own shards (pointer identity). That property lets the
+    /// driver evaluate workers on the native thread pool with bit-identical
+    /// results; any other engine/problem pairing stays sequential.
+    fn is_native_for(&self, problem: &Problem) -> bool {
+        let _ = problem;
+        false
+    }
+
+    /// Credit `n` gradient evaluations performed on this engine's behalf
+    /// by the driver's thread pool (which computes [`worker_grad`]
+    /// directly, bypassing `grad_into`).
+    fn note_pool_evals(&self, n: u64) {
+        let _ = n;
+    }
 }
 
 /// Pure-Rust reference engine.
 pub struct NativeEngine<'a> {
     problem: &'a Problem,
-    calls: u64,
+    calls: AtomicU64,
 }
 
 impl<'a> NativeEngine<'a> {
     pub fn new(problem: &'a Problem) -> Self {
-        NativeEngine { problem, calls: 0 }
+        NativeEngine { problem, calls: AtomicU64::new(0) }
     }
 }
 
 impl GradEngine for NativeEngine<'_> {
-    fn grad(&mut self, m: usize, theta: &[f64]) -> (Vec<f64>, f64) {
-        self.calls += 1;
-        worker_grad(self.problem.task, &self.problem.workers[m], theta)
+    fn grad_into(&self, m: usize, theta: &[f64], out: &mut [f64]) -> f64 {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        worker_grad_into(self.problem.task, &self.problem.workers[m], theta, out)
     }
     fn name(&self) -> &'static str {
         "native"
     }
     fn calls(&self) -> u64 {
-        self.calls
+        self.calls.load(Ordering::Relaxed)
+    }
+    fn is_native_for(&self, problem: &Problem) -> bool {
+        std::ptr::eq(self.problem, problem)
+    }
+    fn note_pool_evals(&self, n: u64) {
+        self.calls.fetch_add(n, Ordering::Relaxed);
     }
 }
 
-/// Native `(grad, loss)` for one shard — the exact semantics of the L1
-/// kernels (`linreg_grad.py` / `logreg_grad.py`).
-pub fn worker_grad(task: Task, s: &WorkerShard, theta: &[f64]) -> (Vec<f64>, f64) {
-    let z = s.x.matvec(theta);
+/// Native `(grad, loss)` for one shard, fused into a **single pass** over
+/// the shard rows — the exact semantics (and bit-exact results) of the
+/// three-pass `matvec` → residual → `t_matvec` formulation the L1 kernels
+/// use (`linreg_grad.py` / `logreg_grad.py`): per row the residual
+/// coefficient depends only on `x_iᵀθ`, so the `Xᵀr` accumulation can fold
+/// into the same row traversal.
+pub fn worker_grad_into(task: Task, s: &WorkerShard, theta: &[f64], g: &mut [f64]) -> f64 {
+    debug_assert_eq!(g.len(), s.d());
+    g.fill(0.0);
     match task {
         Task::LinReg => {
-            let n = s.x.rows;
-            let mut r = vec![0.0; n];
             let mut loss = 0.0;
-            for i in 0..n {
-                let res = z[i] - s.y[i];
-                r[i] = s.w[i] * res;
-                loss += r[i] * res;
+            for i in 0..s.x.rows {
+                let row = s.x.row(i);
+                let res = linalg::dot(row, theta) - s.y[i];
+                let r = s.w[i] * res;
+                loss += r * res;
+                if r != 0.0 {
+                    linalg::axpy(r, row, g);
+                }
             }
-            let mut g = s.x.t_matvec(&r);
-            for v in &mut g {
+            for v in g.iter_mut() {
                 *v *= 2.0;
             }
-            (g, loss)
+            loss
         }
         Task::LogReg { lam } => {
-            let n = s.x.rows;
-            let mut r = vec![0.0; n];
             let mut loss = 0.5 * lam * linalg::norm2(theta);
-            for i in 0..n {
-                let u = -s.y[i] * z[i];
-                r[i] = s.w[i] * (-s.y[i]) * sigmoid(u);
+            for i in 0..s.x.rows {
+                let row = s.x.row(i);
+                let u = -s.y[i] * linalg::dot(row, theta);
+                let r = s.w[i] * (-s.y[i]) * sigmoid(u);
                 loss += s.w[i] * linalg::log1pexp(u);
+                if r != 0.0 {
+                    linalg::axpy(r, row, g);
+                }
             }
-            let mut g = s.x.t_matvec(&r);
-            linalg::axpy(lam, theta, &mut g);
-            (g, loss)
+            linalg::axpy(lam, theta, g);
+            loss
         }
     }
+}
+
+/// Allocating wrapper around [`worker_grad_into`] (tests, cold paths, and
+/// the threaded transports that ship the gradient over a channel anyway).
+pub fn worker_grad(task: Task, s: &WorkerShard, theta: &[f64]) -> (Vec<f64>, f64) {
+    let mut g = vec![0.0; s.d()];
+    let loss = worker_grad_into(task, s, theta, &mut g);
+    (g, loss)
 }
 
 #[cfg(test)]
@@ -133,6 +187,53 @@ mod tests {
         check_grad(Task::LogReg { lam: 1e-3 }, &shard(30, 10, 3, true), 4);
     }
 
+    /// The fused single-pass kernel must agree *bitwise* with the reference
+    /// three-pass formulation (matvec → residual → t_matvec) — the LAG
+    /// trigger compares gradients between iterations, so any fp deviation
+    /// would change traces.
+    #[test]
+    fn fused_kernel_bitwise_matches_three_pass_reference() {
+        for (task, pm) in [(Task::LinReg, false), (Task::LogReg { lam: 1e-3 }, true)] {
+            let s = shard(37, 11, 21, pm);
+            let mut rng = Rng::new(22);
+            let theta = rng.normal_vec(s.d());
+            let (g, loss) = worker_grad(task, &s, &theta);
+
+            // reference: three separate passes
+            let z = s.x.matvec(&theta);
+            let (g_ref, loss_ref) = match task {
+                Task::LinReg => {
+                    let mut r = vec![0.0; s.x.rows];
+                    let mut l = 0.0;
+                    for i in 0..s.x.rows {
+                        let res = z[i] - s.y[i];
+                        r[i] = s.w[i] * res;
+                        l += r[i] * res;
+                    }
+                    let mut gr = s.x.t_matvec(&r);
+                    for v in &mut gr {
+                        *v *= 2.0;
+                    }
+                    (gr, l)
+                }
+                Task::LogReg { lam } => {
+                    let mut r = vec![0.0; s.x.rows];
+                    let mut l = 0.5 * lam * linalg::norm2(&theta);
+                    for i in 0..s.x.rows {
+                        let u = -s.y[i] * z[i];
+                        r[i] = s.w[i] * (-s.y[i]) * sigmoid(u);
+                        l += s.w[i] * linalg::log1pexp(u);
+                    }
+                    let mut gr = s.x.t_matvec(&r);
+                    linalg::axpy(lam, &theta, &mut gr);
+                    (gr, l)
+                }
+            };
+            assert_eq!(g, g_ref, "{task:?} gradient must be bit-identical");
+            assert_eq!(loss.to_bits(), loss_ref.to_bits(), "{task:?} loss must be bit-identical");
+        }
+    }
+
     #[test]
     fn padding_rows_contribute_nothing() {
         let mut rng = Rng::new(5);
@@ -152,19 +253,37 @@ mod tests {
     #[test]
     fn native_engine_counts_calls() {
         let p = crate::data::synthetic::linreg_increasing_l(3, 10, 4, 6);
-        let mut e = NativeEngine::new(&p);
+        let e = NativeEngine::new(&p);
         let theta = vec![0.0; 4];
         for m in 0..3 {
             e.grad(m, &theta);
         }
         assert_eq!(e.calls(), 3);
         assert_eq!(e.name(), "native");
+        assert!(e.is_native_for(&p));
+        let other = crate::data::synthetic::linreg_increasing_l(3, 10, 4, 6);
+        assert!(!e.is_native_for(&other), "pairing check must be by identity");
+        e.note_pool_evals(5);
+        assert_eq!(e.calls(), 8);
+    }
+
+    #[test]
+    fn grad_into_matches_grad() {
+        let p = crate::data::synthetic::linreg_increasing_l(2, 12, 5, 9);
+        let e = NativeEngine::new(&p);
+        let mut rng = Rng::new(11);
+        let theta = rng.normal_vec(5);
+        let (g, l) = e.grad(1, &theta);
+        let mut out = vec![f64::NAN; 5];
+        let l2 = e.grad_into(1, &theta, &mut out);
+        assert_eq!(g, out);
+        assert_eq!(l.to_bits(), l2.to_bits());
     }
 
     #[test]
     fn engine_grad_sums_to_global_gradient() {
         let p = crate::data::synthetic::linreg_increasing_l(4, 12, 5, 7);
-        let mut e = NativeEngine::new(&p);
+        let e = NativeEngine::new(&p);
         let mut rng = Rng::new(8);
         let theta = rng.normal_vec(5);
         let mut g = vec![0.0; 5];

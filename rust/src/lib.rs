@@ -26,8 +26,8 @@
 //! // 9 workers with geometrically increasing smoothness (paper Fig. 3).
 //! let problem = lag::data::synthetic::linreg_increasing_l(9, 50, 50, 1234);
 //! let opts = RunOptions { max_iters: 2000, target_err: Some(1e-8), ..Default::default() };
-//! let mut engine = lag::grad::NativeEngine::new(&problem);
-//! let trace = lag::coordinator::run(&problem, Algorithm::LagWk, &opts, &mut engine);
+//! let engine = lag::grad::NativeEngine::new(&problem);
+//! let trace = lag::coordinator::run(&problem, Algorithm::LagWk, &opts, &engine);
 //! println!("LAG-WK uploads to 1e-8: {}", trace.total_uploads());
 //! ```
 
@@ -39,6 +39,7 @@ pub mod grad;
 pub mod linalg;
 pub mod metrics;
 pub mod runtime;
+#[cfg(feature = "pjrt")]
 pub mod transformer;
 pub mod util;
 

@@ -63,29 +63,41 @@ impl Matrix {
 
     /// `y = A x` (rows·cols flops).
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
-        assert_eq!(x.len(), self.cols);
         let mut y = vec![0.0; self.rows];
-        for i in 0..self.rows {
-            y[i] = dot(self.row(i), x);
-        }
+        self.matvec_into(x, &mut y);
         y
+    }
+
+    /// `y = A x` written into a caller-provided buffer (hot path; the
+    /// blocked `dot` kernel makes one 4-wide pass per row).
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for (i, yi) in y.iter_mut().enumerate() {
+            *yi = dot(self.row(i), x);
+        }
     }
 
     /// `y = Aᵀ x`.
     pub fn t_matvec(&self, x: &[f64]) -> Vec<f64> {
-        assert_eq!(x.len(), self.rows);
         let mut y = vec![0.0; self.cols];
-        for i in 0..self.rows {
-            let xi = x[i];
+        self.t_matvec_into(x, &mut y);
+        y
+    }
+
+    /// `y = Aᵀ x` written into a caller-provided buffer. Rows with a zero
+    /// coefficient (padding) are skipped; each contributing row is folded
+    /// in with the blocked `axpy` kernel.
+    pub fn t_matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        y.fill(0.0);
+        for (i, &xi) in x.iter().enumerate() {
             if xi == 0.0 {
                 continue;
             }
-            let row = self.row(i);
-            for (yj, aij) in y.iter_mut().zip(row) {
-                *yj += aij * xi;
-            }
+            axpy(xi, self.row(i), y);
         }
-        y
     }
 
     /// Gram matrix `AᵀA` (cols × cols). Only used at setup time for small d.
@@ -150,20 +162,21 @@ impl Matrix {
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    // 4-way unrolled: this is inside every trigger check and server update.
-    let n = a.len();
-    let chunks = n / 4;
+    // Blocked 4-wide with independent accumulators: this is inside every
+    // gradient row, trigger check and server update. `chunks_exact` lets
+    // the compiler drop the bounds checks in the block body.
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
     let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-    for i in 0..chunks {
-        let j = i * 4;
-        s0 += a[j] * b[j];
-        s1 += a[j + 1] * b[j + 1];
-        s2 += a[j + 2] * b[j + 2];
-        s3 += a[j + 3] * b[j + 3];
+    for (x, y) in (&mut ca).zip(&mut cb) {
+        s0 += x[0] * y[0];
+        s1 += x[1] * y[1];
+        s2 += x[2] * y[2];
+        s3 += x[3] * y[3];
     }
     let mut s = s0 + s1 + s2 + s3;
-    for j in chunks * 4..n {
-        s += a[j] * b[j];
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        s += x * y;
     }
     s
 }
@@ -190,11 +203,20 @@ pub fn dist2(a: &[f64], b: &[f64]) -> f64 {
     s
 }
 
-/// `y += alpha * x`.
+/// `y += alpha * x`, blocked 4-wide (bit-identical to the scalar loop —
+/// per-element operations and their order are unchanged).
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
+    let mut cy = y.chunks_exact_mut(4);
+    let mut cx = x.chunks_exact(4);
+    for (yb, xb) in (&mut cy).zip(&mut cx) {
+        yb[0] += alpha * xb[0];
+        yb[1] += alpha * xb[1];
+        yb[2] += alpha * xb[2];
+        yb[3] += alpha * xb[3];
+    }
+    for (yi, xi) in cy.into_remainder().iter_mut().zip(cx.remainder()) {
         *yi += alpha * xi;
     }
 }
@@ -240,6 +262,33 @@ mod tests {
         assert_eq!(g.get(0, 1), 44.0);
         assert_eq!(g.get(1, 0), 44.0);
         assert_eq!(g.get(1, 1), 56.0);
+    }
+
+    #[test]
+    fn into_variants_match_allocating() {
+        let a = Matrix::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![0.5, -1.0]]);
+        let x = vec![2.0, -1.0];
+        let mut y = vec![9.0; 3];
+        a.matvec_into(&x, &mut y);
+        assert_eq!(y, a.matvec(&x));
+        let r = vec![1.0, 0.0, 2.0];
+        let mut yt = vec![9.0; 2];
+        a.t_matvec_into(&r, &mut yt);
+        assert_eq!(yt, a.t_matvec(&r));
+    }
+
+    #[test]
+    fn axpy_blocked_matches_scalar_on_odd_lengths() {
+        for n in [1usize, 3, 4, 5, 7, 8, 13] {
+            let x: Vec<f64> = (0..n).map(|i| (i as f64).cos()).collect();
+            let mut y: Vec<f64> = (0..n).map(|i| i as f64 * 0.5).collect();
+            let mut y2 = y.clone();
+            axpy(1.7, &x, &mut y);
+            for (yi, xi) in y2.iter_mut().zip(&x) {
+                *yi += 1.7 * xi;
+            }
+            assert_eq!(y, y2);
+        }
     }
 
     #[test]

@@ -88,12 +88,12 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     );
     let trace = match cfg.engine {
         EngineKind::Native => {
-            let mut e = NativeEngine::new(&problem);
-            run(&problem, cfg.algorithm, &cfg.options, &mut e)
+            let e = NativeEngine::new(&problem);
+            run(&problem, cfg.algorithm, &cfg.options, &e)
         }
         EngineKind::Pjrt => {
-            let mut e = PjrtEngine::new(&problem, &cfg.artifacts_dir)?;
-            run(&problem, cfg.algorithm, &cfg.options, &mut e)
+            let e = PjrtEngine::new(&problem, &cfg.artifacts_dir)?;
+            run(&problem, cfg.algorithm, &cfg.options, &e)
         }
     };
     println!("{}", trace.summary());
@@ -139,13 +139,13 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     );
     let trace = match EngineKind::parse(&args.opt_or("engine", "native"))? {
         EngineKind::Native => {
-            let mut e = NativeEngine::new(&problem);
-            run(&problem, algo, &opts, &mut e)
+            let e = NativeEngine::new(&problem);
+            run(&problem, algo, &opts, &e)
         }
         EngineKind::Pjrt => {
-            let mut e = PjrtEngine::new(&problem, args.opt_or("artifacts", "artifacts"))?;
+            let e = PjrtEngine::new(&problem, args.opt_or("artifacts", "artifacts"))?;
             println!("engine: pjrt (artifact {})", e.artifact);
-            run(&problem, algo, &opts, &mut e)
+            run(&problem, algo, &opts, &e)
         }
     };
     println!("{}", trace.summary());
@@ -205,10 +205,9 @@ fn cmd_worker(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_plot(args: &Args) -> anyhow::Result<()> {
-    let path = args
-        .positional
-        .first()
-        .ok_or_else(|| anyhow::anyhow!("usage: lag plot <trace.csv> [--x cum_uploads] [--y obj_err]"))?;
+    let path = args.positional.first().ok_or_else(|| {
+        anyhow::anyhow!("usage: lag plot <trace.csv> [--x cum_uploads] [--y obj_err]")
+    })?;
     let x = args.opt_or("x", "cum_uploads");
     let y = args.opt_or("y", "obj_err");
     let table = lag::util::csv_read::CsvTable::read(path)?;

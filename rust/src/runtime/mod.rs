@@ -6,132 +6,196 @@
 //! * [`PjrtEngine`] — [`crate::grad::GradEngine`] backed by the regression
 //!   artifacts, with per-worker shard data pre-staged as device buffers so
 //!   the hot loop transfers only θ.
+//!
+//! The PJRT path needs the `xla` crate (the PJRT C-API bindings), which
+//! not every build environment carries. It is gated behind the `pjrt`
+//! cargo feature; without it [`PjrtEngine::new`] returns a descriptive
+//! error and everything else in the crate — the native engine, the
+//! coordinator, every experiment — works unchanged.
 
 pub mod manifest;
 
 pub use manifest::{Init, Manifest, ManifestEntry, ParamSpec, TransformerMeta};
 
-use crate::data::{Problem, Task};
+use crate::data::Problem;
 use crate::grad::GradEngine;
-use std::collections::HashMap;
 use std::path::Path;
 
 /// Default artifacts directory (relative to the repo root).
 pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
 
-/// CPU PJRT client plus a compile-once cache of loaded executables.
-pub struct PjrtRuntime {
-    pub client: xla::PjRtClient,
-    pub manifest: Manifest,
-    cache: HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt_backend {
+    use super::*;
+    use crate::data::Task;
+    use std::collections::HashMap;
+    use std::sync::atomic::{AtomicU64, Ordering};
 
-impl PjrtRuntime {
-    pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> anyhow::Result<Self> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(PjrtRuntime { client, manifest, cache: HashMap::new() })
+    /// CPU PJRT client plus a compile-once cache of loaded executables.
+    pub struct PjrtRuntime {
+        pub client: xla::PjRtClient,
+        pub manifest: Manifest,
+        cache: HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>,
     }
 
-    /// Load + compile an artifact by manifest name (cached).
-    pub fn compile(&mut self, name: &str) -> anyhow::Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.get(name) {
-            return Ok(exe.clone());
+    impl PjrtRuntime {
+        pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> anyhow::Result<Self> {
+            let manifest = Manifest::load(artifacts_dir)?;
+            let client = xla::PjRtClient::cpu()?;
+            Ok(PjrtRuntime { client, manifest, cache: HashMap::new() })
         }
-        let entry = self.manifest.find(name)?.clone();
-        let path = self.manifest.hlo_path(&entry);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = std::rc::Rc::new(self.client.compile(&comp)?);
-        self.cache.insert(name.to_string(), exe.clone());
-        Ok(exe)
+
+        /// Load + compile an artifact by manifest name (cached).
+        pub fn compile(
+            &mut self,
+            name: &str,
+        ) -> anyhow::Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+            if let Some(exe) = self.cache.get(name) {
+                return Ok(exe.clone());
+            }
+            let entry = self.manifest.find(name)?.clone();
+            let path = self.manifest.hlo_path(&entry);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = std::rc::Rc::new(self.client.compile(&comp)?);
+            self.cache.insert(name.to_string(), exe.clone());
+            Ok(exe)
+        }
+
+        /// Stage an f64 array on device.
+        pub fn stage_f64(&self, data: &[f64], dims: &[usize]) -> anyhow::Result<xla::PjRtBuffer> {
+            Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+        }
+
+        /// Stage an f32 array on device.
+        pub fn stage_f32(&self, data: &[f32], dims: &[usize]) -> anyhow::Result<xla::PjRtBuffer> {
+            Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+        }
+
+        /// Stage an i32 array on device.
+        pub fn stage_i32(&self, data: &[i32], dims: &[usize]) -> anyhow::Result<xla::PjRtBuffer> {
+            Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+        }
     }
 
-    /// Stage an f64 array on device.
-    pub fn stage_f64(&self, data: &[f64], dims: &[usize]) -> anyhow::Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    /// Production gradient engine: the per-worker `(grad, loss)` artifact
+    /// executed via PJRT. Shard data (X, y, w) is staged once; each call
+    /// stages only θ (d floats) and returns the f64 gradient.
+    pub struct PjrtEngine<'p> {
+        /// Kept for lifetime tying and future per-worker introspection.
+        #[allow(dead_code)]
+        problem: &'p Problem,
+        runtime: PjrtRuntime,
+        exe: std::rc::Rc<xla::PjRtLoadedExecutable>,
+        /// Per-worker staged [X, y, w].
+        staged: Vec<[xla::PjRtBuffer; 3]>,
+        calls: AtomicU64,
+        pub artifact: String,
     }
 
-    /// Stage an f32 array on device.
-    pub fn stage_f32(&self, data: &[f32], dims: &[usize]) -> anyhow::Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    impl<'p> PjrtEngine<'p> {
+        /// Build the engine for `problem`, resolving the artifact from the
+        /// manifest by (task kind, padded shard shape).
+        pub fn new<P: AsRef<Path>>(problem: &'p Problem, artifacts_dir: P) -> anyhow::Result<Self> {
+            let mut runtime = PjrtRuntime::new(artifacts_dir)?;
+            let kind = problem.task.name();
+            let n_pad = problem.workers[0].n_padded();
+            let d = problem.d;
+            let entry = runtime.manifest.find_regression(kind, n_pad, d)?.clone();
+            if let (Task::LogReg { lam }, Some(alam)) = (problem.task, entry.lam) {
+                anyhow::ensure!(
+                    (lam - alam).abs() < 1e-12,
+                    "artifact λ={alam} != problem λ={lam}"
+                );
+            }
+            let exe = runtime.compile(&entry.name)?;
+            let mut staged = Vec::with_capacity(problem.m());
+            for s in &problem.workers {
+                anyhow::ensure!(s.n_padded() == n_pad, "all shards must share the artifact shape");
+                staged.push([
+                    runtime.stage_f64(&s.x.data, &[n_pad, d])?,
+                    runtime.stage_f64(&s.y, &[n_pad])?,
+                    runtime.stage_f64(&s.w, &[n_pad])?,
+                ]);
+            }
+            Ok(PjrtEngine {
+                problem,
+                runtime,
+                exe,
+                staged,
+                calls: AtomicU64::new(0),
+                artifact: entry.name,
+            })
+        }
+
+        /// Fallible gradient (the trait wrapper panics on runtime errors,
+        /// which only occur on artifact/setup mismatch).
+        pub fn try_grad(&self, m: usize, theta: &[f64]) -> anyhow::Result<(Vec<f64>, f64)> {
+            self.calls.fetch_add(1, Ordering::Relaxed);
+            let theta_buf = self.runtime.stage_f64(theta, &[theta.len()])?;
+            let [x, y, w] = &self.staged[m];
+            let outs = self.exe.execute_b(&[x, y, w, &theta_buf])?;
+            let tuple = outs[0][0].to_literal_sync()?.to_tuple()?;
+            anyhow::ensure!(tuple.len() == 2, "expected (grad, loss), got {}-tuple", tuple.len());
+            let grad = tuple[0].to_vec::<f64>()?;
+            let loss = tuple[1].get_first_element::<f64>()?;
+            Ok((grad, loss))
+        }
     }
 
-    /// Stage an i32 array on device.
-    pub fn stage_i32(&self, data: &[i32], dims: &[usize]) -> anyhow::Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    impl GradEngine for PjrtEngine<'_> {
+        fn grad_into(&self, m: usize, theta: &[f64], out: &mut [f64]) -> f64 {
+            let (g, loss) = self.try_grad(m, theta).expect("PJRT gradient execution failed");
+            out.copy_from_slice(&g);
+            loss
+        }
+        fn name(&self) -> &'static str {
+            "pjrt"
+        }
+        fn calls(&self) -> u64 {
+            self.calls.load(Ordering::Relaxed)
+        }
     }
 }
 
-/// Production gradient engine: the per-worker `(grad, loss)` artifact
-/// executed via PJRT. Shard data (X, y, w) is staged once; each call stages
-/// only θ (d floats) and returns the f64 gradient.
+#[cfg(feature = "pjrt")]
+pub use pjrt_backend::{PjrtEngine, PjrtRuntime};
+
+/// Stub used when the crate is built without the `pjrt` feature: the type
+/// exists (so call sites need no feature gates) but construction fails
+/// with a clear message.
+#[cfg(not(feature = "pjrt"))]
 pub struct PjrtEngine<'p> {
-    /// Kept for lifetime tying and future per-worker introspection.
-    #[allow(dead_code)]
-    problem: &'p Problem,
-    runtime: PjrtRuntime,
-    exe: std::rc::Rc<xla::PjRtLoadedExecutable>,
-    /// Per-worker staged [X, y, w].
-    staged: Vec<[xla::PjRtBuffer; 3]>,
-    calls: u64,
+    _problem: std::marker::PhantomData<&'p Problem>,
     pub artifact: String,
 }
 
+#[cfg(not(feature = "pjrt"))]
 impl<'p> PjrtEngine<'p> {
-    /// Build the engine for `problem`, resolving the artifact from the
-    /// manifest by (task kind, padded shard shape).
-    pub fn new<P: AsRef<Path>>(problem: &'p Problem, artifacts_dir: P) -> anyhow::Result<Self> {
-        let mut runtime = PjrtRuntime::new(artifacts_dir)?;
-        let kind = problem.task.name();
-        let n_pad = problem.workers[0].n_padded();
-        let d = problem.d;
-        let entry = runtime.manifest.find_regression(kind, n_pad, d)?.clone();
-        if let (Task::LogReg { lam }, Some(alam)) = (problem.task, entry.lam) {
-            anyhow::ensure!(
-                (lam - alam).abs() < 1e-12,
-                "artifact λ={alam} != problem λ={lam}"
-            );
-        }
-        let exe = runtime.compile(&entry.name)?;
-        let mut staged = Vec::with_capacity(problem.m());
-        for s in &problem.workers {
-            anyhow::ensure!(s.n_padded() == n_pad, "all shards must share the artifact shape");
-            staged.push([
-                runtime.stage_f64(&s.x.data, &[n_pad, d])?,
-                runtime.stage_f64(&s.y, &[n_pad])?,
-                runtime.stage_f64(&s.w, &[n_pad])?,
-            ]);
-        }
-        Ok(PjrtEngine { problem, runtime, exe, staged, calls: 0, artifact: entry.name })
+    pub fn new<P: AsRef<Path>>(_problem: &'p Problem, _artifacts_dir: P) -> anyhow::Result<Self> {
+        anyhow::bail!(
+            "this build has no PJRT support — rebuild with `cargo build --features pjrt` \
+             (requires the `xla` PJRT bindings) or use `--engine native`"
+        )
     }
 
-    /// Fallible gradient (the trait wrapper panics on runtime errors, which
-    /// only occur on artifact/setup mismatch).
-    pub fn try_grad(&mut self, m: usize, theta: &[f64]) -> anyhow::Result<(Vec<f64>, f64)> {
-        self.calls += 1;
-        let theta_buf = self.runtime.stage_f64(theta, &[theta.len()])?;
-        let [x, y, w] = &self.staged[m];
-        let outs = self.exe.execute_b(&[x, y, w, &theta_buf])?;
-        let tuple = outs[0][0].to_literal_sync()?.to_tuple()?;
-        anyhow::ensure!(tuple.len() == 2, "expected (grad, loss), got {}-tuple", tuple.len());
-        let grad = tuple[0].to_vec::<f64>()?;
-        let loss = tuple[1].get_first_element::<f64>()?;
-        Ok((grad, loss))
+    pub fn try_grad(&self, _m: usize, _theta: &[f64]) -> anyhow::Result<(Vec<f64>, f64)> {
+        anyhow::bail!("PJRT engine unavailable: built without the `pjrt` feature")
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
 impl GradEngine for PjrtEngine<'_> {
-    fn grad(&mut self, m: usize, theta: &[f64]) -> (Vec<f64>, f64) {
-        self.try_grad(m, theta).expect("PJRT gradient execution failed")
+    fn grad_into(&self, _m: usize, _theta: &[f64], _out: &mut [f64]) -> f64 {
+        unreachable!("stub PjrtEngine cannot be constructed")
     }
     fn name(&self) -> &'static str {
         "pjrt"
     }
     fn calls(&self) -> u64 {
-        self.calls
+        0
     }
 }
 

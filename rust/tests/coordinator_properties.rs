@@ -50,8 +50,8 @@ fn prop_aggregate_equals_sum_of_cached_gradients() {
                 seed: rng.next_u64(),
                 ..Default::default()
             };
-            let mut e = NativeEngine::new(&p);
-            let t = run(&p, algo, &opts, &mut e);
+            let e = NativeEngine::new(&p);
+            let t = run(&p, algo, &opts, &e);
             // reconstruct Σ cached gradients from the upload events
             let mut agg = vec![0.0; p.d];
             let mut contributed = 0;
@@ -90,8 +90,8 @@ fn prop_zero_xi_reduces_to_gd() {
     for _ in 0..6 {
         let p = random_problem(&mut rng);
         let opts = RunOptions { max_iters: 40, wk_xi: 0.0, ..Default::default() };
-        let gd = run(&p, Algorithm::Gd, &opts, &mut NativeEngine::new(&p));
-        let wk = run(&p, Algorithm::LagWk, &opts, &mut NativeEngine::new(&p));
+        let gd = run(&p, Algorithm::Gd, &opts, &NativeEngine::new(&p));
+        let wk = run(&p, Algorithm::LagWk, &opts, &NativeEngine::new(&p));
         assert_eq!(gd.total_uploads(), wk.total_uploads());
         for (a, b) in gd.records.iter().zip(&wk.records) {
             assert_eq!(a.obj_err.to_bits(), b.obj_err.to_bits(), "k={}", a.k);
@@ -109,7 +109,7 @@ fn prop_lag_upload_budget_bounded_by_gd() {
         let iters = 30 + rng.below(100);
         let opts = RunOptions { max_iters: iters, ..Default::default() };
         for algo in [Algorithm::LagWk, Algorithm::LagPs] {
-            let t = run(&p, algo, &opts, &mut NativeEngine::new(&p));
+            let t = run(&p, algo, &opts, &NativeEngine::new(&p));
             assert!(t.total_uploads() <= (iters * p.m()) as u64);
             // per-worker: at most one upload per iteration
             for evs in &t.upload_events {
@@ -141,7 +141,7 @@ fn prop_lyapunov_nonincreasing() {
                 record_thetas: true,
                 ..Default::default()
             };
-            let t = run(&p, algo, &opts, &mut NativeEngine::new(&p));
+            let t = run(&p, algo, &opts, &NativeEngine::new(&p));
             let vs = lyapunov_values(&p, &t.thetas, d_hist, xi, alpha);
             let floor = 1e-12 * vs[0].max(1e-300);
             for (i, w) in vs.windows(2).enumerate() {
@@ -179,7 +179,7 @@ fn prop_lemma4_upload_frequency_bound() {
             stop_at_target: false,
             ..Default::default()
         };
-        let t = run(&p, Algorithm::LagWk, &opts, &mut NativeEngine::new(&p));
+        let t = run(&p, Algorithm::LagWk, &opts, &NativeEngine::new(&p));
         let alpha = t.alpha;
         let l = p.l_total;
         let m = p.m() as f64;
@@ -220,14 +220,14 @@ fn prop_xi_zero_is_upload_upper_bound() {
             &p,
             Algorithm::LagWk,
             &RunOptions { wk_xi: 0.0, ..base.clone() },
-            &mut NativeEngine::new(&p),
+            &NativeEngine::new(&p),
         );
         for xi in [0.05, 0.1, 0.5] {
             let t = run(
                 &p,
                 Algorithm::LagWk,
                 &RunOptions { wk_xi: xi, ..base.clone() },
-                &mut NativeEngine::new(&p),
+                &NativeEngine::new(&p),
             );
             assert!(
                 t.total_uploads() <= zero.total_uploads(),
@@ -253,7 +253,7 @@ fn prop_all_algorithms_converge() {
                 seed: 42,
                 ..Default::default()
             };
-            let t = run(&p, algo, &opts, &mut NativeEngine::new(&p));
+            let t = run(&p, algo, &opts, &NativeEngine::new(&p));
             assert!(
                 t.converged_iter.is_some(),
                 "{} did not reach 1e-7 on {} (err={:.3e})",

@@ -1,0 +1,114 @@
+//! Bit-determinism suite: the parallel gradient pool must reproduce the
+//! sequential driver *exactly* — same `records` (to the bit), same
+//! `upload_events`, same iterate sequence — for every algorithm, thread
+//! count, and task (DESIGN.md §6).
+//!
+//! This is what licenses the driver to pick a thread count freely (auto
+//! mode): the trace is a pure function of (problem, algorithm, options,
+//! seed), never of the host's core count or scheduler.
+
+use lag::coordinator::{run, Algorithm, RunOptions, RunTrace};
+use lag::data::{synthetic, Problem};
+use lag::grad::NativeEngine;
+
+fn assert_bit_identical(a: &RunTrace, b: &RunTrace, label: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{label}: record count");
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(x.k, y.k, "{label}: record k");
+        assert_eq!(
+            x.obj_err.to_bits(),
+            y.obj_err.to_bits(),
+            "{label}: obj_err at k={} ({} vs {})",
+            x.k,
+            x.obj_err,
+            y.obj_err
+        );
+        assert_eq!(x.cum_uploads, y.cum_uploads, "{label}: uploads at k={}", x.k);
+        assert_eq!(x.cum_downloads, y.cum_downloads, "{label}: downloads at k={}", x.k);
+        assert_eq!(x.cum_grad_evals, y.cum_grad_evals, "{label}: grad_evals at k={}", x.k);
+    }
+    assert_eq!(a.upload_events, b.upload_events, "{label}: upload events");
+    assert_eq!(a.converged_iter, b.converged_iter, "{label}: converged_iter");
+    assert_eq!(a.uploads_at_target, b.uploads_at_target, "{label}: uploads_at_target");
+    assert_eq!(a.thetas.len(), b.thetas.len(), "{label}: theta count");
+    for (k, (ta, tb)) in a.thetas.iter().zip(&b.thetas).enumerate() {
+        for (j, (va, vb)) in ta.iter().zip(tb).enumerate() {
+            assert_eq!(
+                va.to_bits(),
+                vb.to_bits(),
+                "{label}: theta[{k}][{j}] {va} vs {vb}"
+            );
+        }
+    }
+}
+
+fn opts(threads: usize) -> RunOptions {
+    RunOptions {
+        max_iters: 120,
+        record_thetas: true,
+        threads,
+        ..Default::default()
+    }
+}
+
+fn problems() -> Vec<Problem> {
+    vec![
+        synthetic::linreg_increasing_l(9, 25, 12, 41),
+        synthetic::logreg_uniform_l(6, 20, 10, 42),
+    ]
+}
+
+#[test]
+fn all_five_algorithms_bit_identical_across_thread_counts() {
+    for p in problems() {
+        for algo in Algorithm::ALL {
+            let seq = run(&p, algo, &opts(1), &NativeEngine::new(&p));
+            for threads in [2, 3, 8] {
+                let par = run(&p, algo, &opts(threads), &NativeEngine::new(&p));
+                assert_bit_identical(
+                    &seq,
+                    &par,
+                    &format!("{} on {} with {} threads", algo.name(), p.name, threads),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn auto_thread_mode_bit_identical_to_sequential() {
+    // a problem large enough that auto mode actually engages the pool
+    let p = synthetic::linreg_increasing_l(9, 50, 50, 43);
+    for algo in [Algorithm::Gd, Algorithm::LagWk, Algorithm::LagPs] {
+        let seq = run(&p, algo, &opts(1), &NativeEngine::new(&p));
+        let auto = run(&p, algo, &opts(0), &NativeEngine::new(&p));
+        assert_bit_identical(&seq, &auto, &format!("{} auto-threads", algo.name()));
+    }
+}
+
+#[test]
+fn target_stopping_identical_under_pool() {
+    let p = synthetic::linreg_increasing_l(9, 30, 16, 44);
+    let mk = |threads| RunOptions {
+        max_iters: 5000,
+        target_err: Some(1e-9),
+        threads,
+        ..Default::default()
+    };
+    for algo in [Algorithm::Gd, Algorithm::LagWk, Algorithm::LagPs] {
+        let seq = run(&p, algo, &mk(1), &NativeEngine::new(&p));
+        let par = run(&p, algo, &mk(4), &NativeEngine::new(&p));
+        assert_eq!(seq.converged_iter, par.converged_iter, "{}", algo.name());
+        assert_eq!(seq.uploads_at_target, par.uploads_at_target, "{}", algo.name());
+        assert_bit_identical(&seq, &par, &format!("{} with target", algo.name()));
+    }
+}
+
+#[test]
+fn repeated_parallel_runs_are_self_identical() {
+    // scheduler nondeterminism must not leak into traces even run-to-run
+    let p = synthetic::logreg_uniform_l(7, 22, 9, 45);
+    let a = run(&p, Algorithm::LagWk, &opts(4), &NativeEngine::new(&p));
+    let b = run(&p, Algorithm::LagWk, &opts(4), &NativeEngine::new(&p));
+    assert_bit_identical(&a, &b, "repeat lag-wk 4 threads");
+}

@@ -1,7 +1,11 @@
 //! Integration tests over the full three-layer stack: the Rust coordinator
 //! driving gradients through the AOT'd JAX+Pallas artifacts via PJRT.
 //!
-//! Requires `make artifacts` (skipped with a clear message otherwise).
+//! Requires `make artifacts` (skipped with a clear message otherwise) and
+//! the `pjrt` cargo feature (the whole suite is compiled out without it —
+//! the stub engine cannot execute artifacts).
+
+#![cfg(feature = "pjrt")]
 
 use lag::coordinator::{run, Algorithm, RunOptions};
 use lag::data::synthetic;
@@ -25,8 +29,8 @@ macro_rules! require_artifacts {
 fn pjrt_matches_native_linreg_gradients() {
     require_artifacts!();
     let p = synthetic::linreg_increasing_l(9, 50, 50, 99);
-    let mut pjrt = PjrtEngine::new(&p, "artifacts").unwrap();
-    let mut native = NativeEngine::new(&p);
+    let pjrt = PjrtEngine::new(&p, "artifacts").unwrap();
+    let native = NativeEngine::new(&p);
     let mut rng = lag::util::Rng::new(5);
     for trial in 0..5 {
         let theta = rng.normal_vec(50);
@@ -49,8 +53,8 @@ fn pjrt_matches_native_linreg_gradients() {
 fn pjrt_matches_native_logreg_gradients() {
     require_artifacts!();
     let p = synthetic::logreg_uniform_l(9, 50, 50, 77);
-    let mut pjrt = PjrtEngine::new(&p, "artifacts").unwrap();
-    let mut native = NativeEngine::new(&p);
+    let pjrt = PjrtEngine::new(&p, "artifacts").unwrap();
+    let native = NativeEngine::new(&p);
     let mut rng = lag::util::Rng::new(6);
     for _ in 0..5 {
         let theta = rng.normal_vec(50);
@@ -70,10 +74,10 @@ fn pjrt_full_lag_wk_run_matches_native_trace() {
     require_artifacts!();
     let p = synthetic::linreg_increasing_l(9, 50, 50, 1234);
     let opts = RunOptions { max_iters: 150, target_err: Some(1e-8), ..Default::default() };
-    let mut en = NativeEngine::new(&p);
-    let tn = run(&p, Algorithm::LagWk, &opts, &mut en);
-    let mut ep = PjrtEngine::new(&p, "artifacts").unwrap();
-    let tp = run(&p, Algorithm::LagWk, &opts, &mut ep);
+    let en = NativeEngine::new(&p);
+    let tn = run(&p, Algorithm::LagWk, &opts, &en);
+    let ep = PjrtEngine::new(&p, "artifacts").unwrap();
+    let tp = run(&p, Algorithm::LagWk, &opts, &ep);
     // the engines agree to ~1e-12 per gradient; upload patterns may only
     // differ at exact trigger ties, which don't occur generically
     assert_eq!(tn.total_uploads(), tp.total_uploads());
@@ -88,8 +92,8 @@ fn pjrt_lag_ps_converges_on_real_shapes() {
     let p = lag::experiments::fig5::problem(3).unwrap();
     assert_eq!(p.workers[0].n_padded(), 176);
     let opts = RunOptions { max_iters: 4000, target_err: Some(1e-6), ..Default::default() };
-    let mut e = PjrtEngine::new(&p, "artifacts").unwrap();
-    let t = run(&p, Algorithm::LagPs, &opts, &mut e);
+    let e = PjrtEngine::new(&p, "artifacts").unwrap();
+    let t = run(&p, Algorithm::LagPs, &opts, &e);
     assert!(
         t.final_err() < 1e-4,
         "LAG-PS should make clear progress on fig5 shapes, err={}",
@@ -101,7 +105,7 @@ fn pjrt_lag_ps_converges_on_real_shapes() {
 fn pjrt_engine_reports_artifact_and_calls() {
     require_artifacts!();
     let p = synthetic::linreg_increasing_l(3, 50, 50, 4);
-    let mut e = PjrtEngine::new(&p, "artifacts").unwrap();
+    let e = PjrtEngine::new(&p, "artifacts").unwrap();
     assert_eq!(e.artifact, "linreg_grad_50x50");
     assert_eq!(e.name(), "pjrt");
     let theta = vec![0.0; 50];
