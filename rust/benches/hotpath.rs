@@ -3,22 +3,28 @@
 //! * trigger check (DiffHistory + RHS + comparison)
 //! * server update step (axpy + dist2 + history push)
 //! * native worker gradient via `grad_into` (linreg 50x50, logreg 544x34)
+//! * sparse (CSR) vs dense fused gradient kernels across shard densities
 //! * PJRT worker gradient incl. theta staging (if artifacts present)
-//! * full LAG-WK iteration (9 workers, native), sequential vs pool
+//! * full LAG-WK iteration (9 workers, native), sequential vs pool, and
+//!   the same on a sparse problem, CSR vs densified storage
 //!
 //! `cargo bench --bench hotpath`
 //!
 //! Besides the human-readable report, writes `BENCH_hotpath.json` into the
 //! working directory so the perf trajectory is tracked across PRs
-//! (per-op nanoseconds, per-iteration times, uploads, speedup).
+//! (per-op nanoseconds, per-iteration times, uploads, speedups, and the
+//! density → CSR-speedup table behind the format-selection threshold).
+//! CI uploads the file as an artifact and gates on the dense fused-kernel
+//! op against `benches/BENCH_baseline.json` (scripts/check_bench_regression.py).
 
 use lag::coordinator::trigger::{DiffHistory, TriggerConfig};
 use lag::coordinator::{run, Algorithm, ParameterServer, RunOptions};
-use lag::data::synthetic;
-use lag::grad::{GradEngine, NativeEngine};
+use lag::data::{synthetic, ShardStorage, Task, WorkerShard};
+use lag::grad::{worker_grad_into, GradEngine, NativeEngine};
 use lag::metrics::RunTrace;
 use lag::util::json::Json;
 use lag::util::timer::{bench, fmt_dur, BenchStats};
+use lag::util::Rng;
 use std::time::Duration;
 
 fn op_json(s: &BenchStats) -> Json {
@@ -29,6 +35,23 @@ fn op_json(s: &BenchStats) -> Json {
         ("p95_ns", Json::Num(s.p95 * 1e9)),
         ("min_ns", Json::Num(s.min * 1e9)),
     ])
+}
+
+/// One shard at the requested density, in both storage formats (same
+/// values bit-for-bit; `n_real == n`, no padding).
+fn density_shard_pair(n: usize, d: usize, density: f64, seed: u64) -> (WorkerShard, WorkerShard) {
+    let mut rng = Rng::new(seed);
+    let csr = synthetic::gen_sparse_x(&mut rng, n, d, density);
+    let y = rng.normal_vec(n);
+    let w = vec![1.0; n];
+    let dense = WorkerShard {
+        storage: ShardStorage::Dense(csr.to_dense()),
+        y: y.clone(),
+        w: w.clone(),
+        n_real: n,
+    };
+    let sparse = WorkerShard { storage: ShardStorage::Csr(csr), y, w, n_real: n };
+    (dense, sparse)
 }
 
 /// Run 2000 fixed LAG-WK iterations and return (ns/iter, trace).
@@ -98,20 +121,146 @@ fn main() {
         ops.push(("native_grad_linreg_50x50", op_json(&st)));
     }
     {
+        // worker 3 is an Adult shard (~12% density) that auto-selects CSR;
+        // pin a densified copy so this op keeps tracking the *dense* fused
+        // logreg kernel across PRs, and time the as-stored CSR form as its
+        // own op
         let p = lag::experiments::fig6::problem(3).expect("fig6");
-        let e = NativeEngine::new(&p);
         let theta = vec![0.1; 34];
         let mut out = vec![0.0; 34];
+        let task = p.task;
+        let mut dense_shard = p.workers[3].clone();
+        dense_shard.storage = ShardStorage::Dense(dense_shard.storage.to_dense());
         let st = bench(
             || {
-                std::hint::black_box(e.grad_into(3, &theta, &mut out));
+                std::hint::black_box(worker_grad_into(task, &dense_shard, &theta, &mut out));
             },
             20,
             budget,
         );
         println!("{}", st.report("native_grad logreg 544x34"));
         ops.push(("native_grad_logreg_544x34", op_json(&st)));
+        if p.workers[3].storage.is_csr() {
+            let csr_shard = &p.workers[3];
+            let st = bench(
+                || {
+                    std::hint::black_box(worker_grad_into(task, csr_shard, &theta, &mut out));
+                },
+                20,
+                budget,
+            );
+            println!("{}", st.report("csr_grad    logreg 544x34"));
+            ops.push(("csr_grad_logreg_544x34", op_json(&st)));
+        }
     }
+
+    // sparse (CSR) vs dense fused gradient kernel across shard densities:
+    // the measurements behind data::CSR_DENSITY_THRESHOLD. Both kernels
+    // are asserted bit-identical before timing.
+    let mut sparse_kernels: Vec<Json> = Vec::new();
+    {
+        let (n, d) = (256, 1024);
+        let theta = vec![0.1; d];
+        for &density in &[0.01, 0.05, 0.2, 0.5] {
+            let (dense_s, csr_s) = density_shard_pair(n, d, density, 7);
+            let nnz = csr_s.storage.nnz();
+            let measured = nnz as f64 / (n * d) as f64;
+            let mut out_d = vec![0.0; d];
+            let mut out_c = vec![0.0; d];
+            let ld = worker_grad_into(Task::LinReg, &dense_s, &theta, &mut out_d);
+            let lc = worker_grad_into(Task::LinReg, &csr_s, &theta, &mut out_c);
+            assert_eq!(out_d, out_c, "CSR kernel must be bit-identical to dense");
+            assert_eq!(ld.to_bits(), lc.to_bits());
+            let sd = bench(
+                || {
+                    std::hint::black_box(worker_grad_into(
+                        Task::LinReg,
+                        &dense_s,
+                        &theta,
+                        &mut out_d,
+                    ));
+                },
+                10,
+                budget,
+            );
+            let sc = bench(
+                || {
+                    std::hint::black_box(worker_grad_into(
+                        Task::LinReg,
+                        &csr_s,
+                        &theta,
+                        &mut out_c,
+                    ));
+                },
+                10,
+                budget,
+            );
+            let speedup = sd.mean / sc.mean;
+            println!(
+                "sparse_grad {n}x{d} density={measured:.3}: dense {} csr {} ({speedup:.2}x)",
+                fmt_dur(sd.mean),
+                fmt_dur(sc.mean),
+            );
+            sparse_kernels.push(Json::obj(vec![
+                ("rows", Json::Num(n as f64)),
+                ("cols", Json::Num(d as f64)),
+                ("density", Json::Num(measured)),
+                ("nnz", Json::Num(nnz as f64)),
+                ("dense", op_json(&sd)),
+                ("csr", op_json(&sc)),
+                ("speedup", Json::Num(speedup)),
+            ]));
+        }
+    }
+
+    // end-to-end: LAG-WK on a sparse problem, CSR shards vs the same
+    // problem densified — traces must match event-for-event
+    let sparse_e2e = {
+        let p = synthetic::sparse_linreg(9, 128, 512, 0.05, 5);
+        assert!(p.workers.iter().all(|s| s.storage.is_csr()));
+        let mut pd = p.clone();
+        for s in &mut pd.workers {
+            s.storage = ShardStorage::Dense(s.storage.to_dense());
+        }
+        let iters = 500;
+        let opts = RunOptions {
+            max_iters: iters,
+            stop_at_target: false,
+            threads: 1,
+            eval_every: iters, // objective pass excluded from the timing focus
+            record_every: iters,
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let tr_csr = run(&p, Algorithm::LagWk, &opts, &NativeEngine::new(&p));
+        let csr_ns = t0.elapsed().as_secs_f64() * 1e9 / iters as f64;
+        let t0 = std::time::Instant::now();
+        let tr_dense = run(&pd, Algorithm::LagWk, &opts, &NativeEngine::new(&pd));
+        let dense_ns = t0.elapsed().as_secs_f64() * 1e9 / iters as f64;
+        assert_eq!(
+            tr_csr.upload_events, tr_dense.upload_events,
+            "storage format must not change the LAG trace"
+        );
+        let speedup = dense_ns / csr_ns;
+        println!(
+            "lag_wk_sparse(M=9,n=128,d=512,p=0.05): {} per iteration CSR, {} dense \
+             ({speedup:.2}x, identical traces, {} uploads)",
+            fmt_dur(csr_ns / 1e9),
+            fmt_dur(dense_ns / 1e9),
+            tr_csr.total_uploads()
+        );
+        Json::obj(vec![
+            ("m", Json::Num(9.0)),
+            ("n", Json::Num(128.0)),
+            ("d", Json::Num(512.0)),
+            ("density", Json::Num(0.05)),
+            ("iters", Json::Num(iters as f64)),
+            ("csr_ns_per_iter", Json::Num(csr_ns)),
+            ("dense_ns_per_iter", Json::Num(dense_ns)),
+            ("speedup", Json::Num(speedup)),
+            ("uploads", Json::Num(tr_csr.total_uploads() as f64)),
+        ])
+    };
 
     // PJRT gradient (skipped without artifacts)
     if lag::runtime::Manifest::load("artifacts").is_ok() {
@@ -159,6 +308,8 @@ fn main() {
         ("bench", Json::Str("hotpath".into())),
         ("host_threads", Json::Num(threads as f64)),
         ("ops", Json::Obj(ops.into_iter().map(|(k, v)| (k.to_string(), v)).collect())),
+        ("sparse_kernels", Json::Arr(sparse_kernels)),
+        ("lag_wk_sparse_iteration", sparse_e2e),
         (
             "lag_wk_iteration",
             Json::obj(vec![

@@ -1,0 +1,54 @@
+#!/usr/bin/env python3
+"""Gate the dense fused-kernel benchmark against the committed baseline.
+
+Usage: check_bench_regression.py CURRENT.json BASELINE.json [MAX_REGRESSION]
+
+Compares the `native_grad_linreg_50x50` op (the dense fused gradient
+kernel — the one hot-path op every workload shares) between the freshly
+measured BENCH_hotpath.json and the committed baseline, and fails if mean
+latency regressed by more than MAX_REGRESSION (default 0.25, i.e. 25%).
+
+A baseline whose value is null is "unarmed": the gate prints the current
+measurement and passes, so the first CI run on a new runner class can
+record a real number. Re-arm with:
+
+    cargo bench --bench hotpath
+    cp BENCH_hotpath.json benches/BENCH_baseline.json
+"""
+import json
+import sys
+
+OP = "native_grad_linreg_50x50"
+
+
+def main() -> int:
+    if len(sys.argv) < 3:
+        print(__doc__)
+        return 2
+    cur_path, base_path = sys.argv[1], sys.argv[2]
+    max_reg = float(sys.argv[3]) if len(sys.argv) > 3 else 0.25
+
+    with open(cur_path) as f:
+        cur = json.load(f)["ops"][OP]["mean_ns"]
+    with open(base_path) as f:
+        base = json.load(f)["ops"][OP]["mean_ns"]
+
+    if base is None:
+        print(f"{OP}: baseline unarmed; current mean {cur:.1f} ns (recording run)")
+        print("arm the gate by committing BENCH_hotpath.json as benches/BENCH_baseline.json")
+        return 0
+
+    ratio = cur / base
+    print(f"{OP}: {cur:.1f} ns vs baseline {base:.1f} ns ({ratio:.2f}x)")
+    if ratio > 1.0 + max_reg:
+        print(
+            f"FAIL: dense fused kernel regressed {100 * (ratio - 1):.0f}% "
+            f"(allowed {100 * max_reg:.0f}%)"
+        )
+        return 1
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,11 +9,12 @@
 //!
 //! Determinism contract (tested by `tests/determinism.rs`): every worker's
 //! gradient is computed by [`worker_grad_into`] exactly as the sequential
-//! driver would, into a dedicated per-worker slot; the *driver* then reads
-//! the slots and applies uploads in ascending worker order. Thread
-//! scheduling can change only *when* a slot is filled, never its contents
-//! or the order they are consumed in — traces stay bit-identical to the
-//! sequential driver for any thread count.
+//! driver would — including its per-shard storage-format dispatch (dense
+//! or CSR kernels, bitwise identical) — into a dedicated per-worker slot;
+//! the *driver* then reads the slots and applies uploads in ascending
+//! worker order. Thread scheduling can change only *when* a slot is
+//! filled, never its contents or the order they are consumed in — traces
+//! stay bit-identical to the sequential driver for any thread count.
 //!
 //! Allocation discipline: all slots and the shared θ buffer are allocated
 //! once in [`with_pool`]; a round performs only channel sends and lock

@@ -240,7 +240,7 @@ mod tests {
             .enumerate()
             .filter(|(i, _)| !byz.contains(i))
             .map(|(_, s)| {
-                (s.x.slice_rows(0, s.n_real), s.y[..s.n_real].to_vec())
+                (s.storage.to_dense().slice_rows(0, s.n_real), s.y[..s.n_real].to_vec())
             })
             .collect();
         Problem::build("honest", p.task, shards, None).unwrap()

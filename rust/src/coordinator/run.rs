@@ -26,9 +26,10 @@ use crate::metrics::{IterRecord, RunTrace};
 use crate::util::Rng;
 use std::time::Instant;
 
-/// Below this much per-round work (Σ_m n_m·d multiply-adds) the pool's
-/// round-trip overhead outweighs the parallel gain; `threads == 0` (auto)
-/// then stays sequential. Explicit `threads > 1` always uses the pool.
+/// Below this much per-round work (Σ_m multiply-adds of one gradient pass:
+/// n_m·d for dense shards, nnz_m for CSR shards) the pool's round-trip
+/// overhead outweighs the parallel gain; `threads == 0` (auto) then stays
+/// sequential. Explicit `threads > 1` always uses the pool.
 const AUTO_PARALLEL_MIN_WORK: usize = 16_000;
 
 /// Options for a run. Defaults follow the paper's §4 settings.
@@ -170,7 +171,9 @@ fn effective_threads(
         return 1;
     }
     let requested = if opts.threads == 0 {
-        let work: usize = problem.workers.iter().map(|s| s.n_padded() * s.d()).sum();
+        // actual kernel work, not the padded dense extent: a 2%-density CSR
+        // problem that would idle 50 threads should stay sequential
+        let work: usize = problem.workers.iter().map(|s| s.storage.work_per_pass()).sum();
         if work < AUTO_PARALLEL_MIN_WORK {
             return 1;
         }

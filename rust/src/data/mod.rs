@@ -3,13 +3,17 @@
 //! optimal values — everything the paper's experiments need).
 
 pub mod gisette;
+pub mod libsvm;
 pub mod partition;
 pub mod synthetic;
 pub mod uci;
 
 use crate::linalg::{
-    self, cholesky_solve, log1pexp, logreg_newton, power_iteration_gram, Matrix,
+    self, cholesky_solve, log1pexp, logreg_newton, power_iteration_gram, sparse, CsrMatrix,
+    MatOps, Matrix,
 };
+
+pub use libsvm::SparseDataset;
 
 /// Learning task. Losses follow the paper exactly:
 /// * LinReg — eq. (85): `L_m(θ) = Σ_i (y_i − x_iᵀθ)²` (no ½ factor),
@@ -46,18 +50,160 @@ impl Dataset {
         self.x.cols
     }
     /// Trim to the first `k` features (paper: every real dataset group is
-    /// trimmed to its minimum feature count).
-    pub fn with_features(&self, k: usize) -> Dataset {
-        Dataset { name: self.name.clone(), x: self.x.take_cols(k), y: self.y.clone() }
+    /// trimmed to its minimum feature count). Consumes `self`, so the
+    /// common no-trim path (`k == d`) moves the dataset through untouched
+    /// instead of cloning the full feature matrix.
+    pub fn with_features(self, k: usize) -> Dataset {
+        if k == self.d() {
+            return self;
+        }
+        Dataset { name: self.name, x: self.x.take_cols(k), y: self.y }
+    }
+}
+
+/// Shard density at or below which the sharding path stores a shard as CSR
+/// (measured over real rows; padding rows are zero by construction).
+///
+/// Chosen from the measured kernel crossover in `benches/hotpath.rs`
+/// (`sparse_kernels` in `BENCH_hotpath.json`): the CSR fused gradient
+/// kernel does ~2·nnz multiply-adds plus an index gather per entry against
+/// the dense kernel's 2·n·d, which puts break-even around 40–50% density
+/// on current hosts; 0.25 leaves a 2× margin so a shard is only converted
+/// when the sparse kernels clearly win. Selection never changes results:
+/// the CSR kernels are bitwise identical to the dense ones (DESIGN.md §8).
+pub const CSR_DENSITY_THRESHOLD: f64 = 0.25;
+
+/// Storage format of one worker shard's feature matrix. The gradient/loss
+/// kernels dispatch on this **once per call**, outside the row loop, so
+/// the inner loops carry zero per-row branching either way.
+#[derive(Debug, Clone)]
+pub enum ShardStorage {
+    Dense(Matrix),
+    Csr(CsrMatrix),
+}
+
+impl ShardStorage {
+    pub fn rows(&self) -> usize {
+        match self {
+            ShardStorage::Dense(m) => m.rows,
+            ShardStorage::Csr(c) => c.rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            ShardStorage::Dense(m) => m.cols,
+            ShardStorage::Csr(c) => c.cols,
+        }
+    }
+
+    /// Stored nonzeros (dense counts exact nonzero entries).
+    pub fn nnz(&self) -> usize {
+        match self {
+            ShardStorage::Dense(m) => m.data.iter().filter(|&&v| v != 0.0).count(),
+            ShardStorage::Csr(c) => c.nnz(),
+        }
+    }
+
+    /// Fill fraction over the given leading rows (1.0 for an empty shape).
+    pub fn density_over(&self, rows: usize) -> f64 {
+        let cells = rows * self.cols();
+        if cells == 0 {
+            return 1.0;
+        }
+        let nnz = match self {
+            ShardStorage::Dense(m) => {
+                m.data[..rows * m.cols].iter().filter(|&&v| v != 0.0).count()
+            }
+            ShardStorage::Csr(c) => c.row_ptr[rows],
+        };
+        nnz as f64 / cells as f64
+    }
+
+    pub fn is_csr(&self) -> bool {
+        matches!(self, ShardStorage::Csr(_))
+    }
+
+    pub fn format(&self) -> &'static str {
+        match self {
+            ShardStorage::Dense(_) => "dense",
+            ShardStorage::Csr(_) => "csr",
+        }
+    }
+
+    /// Multiply-adds of one full gradient/loss pass — the unit the driver
+    /// uses to size its thread-pool decision (`coordinator::run`).
+    pub fn work_per_pass(&self) -> usize {
+        match self {
+            ShardStorage::Dense(m) => m.rows * m.cols,
+            ShardStorage::Csr(c) => c.nnz(),
+        }
+    }
+
+    /// Automatic format selection against [`CSR_DENSITY_THRESHOLD`],
+    /// measuring density over the leading `real_rows` rows (padding is
+    /// all-zero and would dilute the measurement). Dense shards upgrade to
+    /// CSR below the threshold; CSR input is **never** densified — the
+    /// caller chose sparse storage deliberately, and materializing a dense
+    /// copy of a large corpus trades a bounded kernel slowdown for an
+    /// unbounded memory blowup. Bit-neutral either way: the dense and CSR
+    /// kernels agree bitwise, so this only changes speed.
+    pub fn auto_select(self, real_rows: usize) -> ShardStorage {
+        let sparse_wins = self.density_over(real_rows) <= CSR_DENSITY_THRESHOLD;
+        match self {
+            ShardStorage::Dense(m) if sparse_wins => {
+                ShardStorage::Csr(CsrMatrix::from_dense(&m))
+            }
+            other => other,
+        }
+    }
+
+    /// Materialize a dense copy (setup, staging, and test paths only).
+    pub fn to_dense(&self) -> Matrix {
+        match self {
+            ShardStorage::Dense(m) => m.clone(),
+            ShardStorage::Csr(c) => c.to_dense(),
+        }
+    }
+
+    /// Gram matrix `XᵀX` (setup-time; dense result either way).
+    pub fn gram(&self) -> Matrix {
+        match self {
+            ShardStorage::Dense(m) => m.gram(),
+            ShardStorage::Csr(c) => c.gram(),
+        }
+    }
+}
+
+impl MatOps for ShardStorage {
+    fn rows(&self) -> usize {
+        ShardStorage::rows(self)
+    }
+    fn cols(&self) -> usize {
+        ShardStorage::cols(self)
+    }
+    fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        match self {
+            ShardStorage::Dense(m) => m.matvec_into(x, y),
+            ShardStorage::Csr(c) => c.matvec_into(x, y),
+        }
+    }
+    fn t_matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        match self {
+            ShardStorage::Dense(m) => m.t_matvec_into(x, y),
+            ShardStorage::Csr(c) => c.t_matvec_into(x, y),
+        }
     }
 }
 
 /// One worker's (padded) shard. Padding rows are all-zero with weight 0, so
 /// they contribute exactly nothing to gradient or loss — this is what lets
-/// one AOT executable serve every worker of an experiment.
+/// one AOT executable serve every worker of an experiment. The feature
+/// matrix lives in whichever [`ShardStorage`] format the sharding path
+/// selected; all kernels produce bitwise identical results either way.
 #[derive(Debug, Clone)]
 pub struct WorkerShard {
-    pub x: Matrix,
+    pub storage: ShardStorage,
     pub y: Vec<f64>,
     pub w: Vec<f64>,
     pub n_real: usize,
@@ -65,10 +211,14 @@ pub struct WorkerShard {
 
 impl WorkerShard {
     pub fn n_padded(&self) -> usize {
-        self.x.rows
+        self.storage.rows()
     }
     pub fn d(&self) -> usize {
-        self.x.cols
+        self.storage.cols()
+    }
+    /// Shard density measured over the real (non-padding) rows.
+    pub fn density(&self) -> f64 {
+        self.storage.density_over(self.n_real)
     }
 }
 
@@ -119,26 +269,47 @@ impl Problem {
         self.global_loss(theta) - self.loss_star
     }
 
-    /// Build a problem from raw shards: computes smoothness constants, the
-    /// exact minimizer and optimal value. `pad_to` of `None` pads to the
-    /// largest shard.
+    /// Build a problem from raw dense shards: computes smoothness
+    /// constants, the exact minimizer and optimal value. `pad_to` of
+    /// `None` pads to the largest shard. Shard storage formats are
+    /// auto-selected at padding time (see [`CSR_DENSITY_THRESHOLD`]).
     pub fn build(
         name: &str,
         task: Task,
         shards: Vec<(Matrix, Vec<f64>)>,
         pad_to: Option<usize>,
     ) -> anyhow::Result<Problem> {
+        Problem::build_storage(
+            name,
+            task,
+            shards.into_iter().map(|(x, y)| (ShardStorage::Dense(x), y)).collect(),
+            pad_to,
+        )
+    }
+
+    /// Storage-generic build: shards may arrive dense or CSR (libsvm
+    /// datasets never materialize a dense form on this path — the
+    /// setup-time solvers are generic over [`MatOps`], which is bitwise
+    /// format-neutral). The only dense object a fully-CSR linear-regression
+    /// build creates is the d×d Gram matrix for the normal equations.
+    pub fn build_storage(
+        name: &str,
+        task: Task,
+        shards: Vec<(ShardStorage, Vec<f64>)>,
+        pad_to: Option<usize>,
+    ) -> anyhow::Result<Problem> {
         anyhow::ensure!(!shards.is_empty(), "no shards");
-        let d = shards[0].0.cols;
+        let d = shards[0].0.cols();
         let m = shards.len();
-        let max_n = shards.iter().map(|(x, _)| x.rows).max().unwrap();
+        let max_n = shards.iter().map(|(x, _)| x.rows()).max().unwrap();
         let pad = pad_to.unwrap_or(max_n);
         anyhow::ensure!(pad >= max_n, "pad_to {pad} < largest shard {max_n}");
 
         // per-worker smoothness
         let mut l_m = Vec::with_capacity(m);
-        for (x, _) in &shards {
-            anyhow::ensure!(x.cols == d, "shard feature dims differ");
+        for (x, y) in &shards {
+            anyhow::ensure!(x.cols() == d, "shard feature dims differ");
+            anyhow::ensure!(x.rows() == y.len(), "shard row/label count differs");
             let lam_max = power_iteration_gram(x, 1e-12, 50_000);
             l_m.push(match task {
                 Task::LinReg => 2.0 * lam_max,
@@ -146,18 +317,47 @@ impl Problem {
             });
         }
 
-        // global data (stacked) for L and θ*
-        let n_total: usize = shards.iter().map(|(x, _)| x.rows).sum();
-        let mut x_all = Matrix::zeros(n_total, d);
+        // global data (stacked) for L and θ*: stays CSR when every shard
+        // is CSR, densifies otherwise (mixed stacks are rare and small)
+        let n_total: usize = shards.iter().map(|(x, _)| x.rows()).sum();
         let mut y_all = Vec::with_capacity(n_total);
-        let mut row = 0;
-        for (x, y) in &shards {
-            for i in 0..x.rows {
-                x_all.row_mut(row).copy_from_slice(x.row(i));
-                row += 1;
-            }
+        for (_, y) in &shards {
             y_all.extend_from_slice(y);
         }
+        let x_all: ShardStorage = if shards.iter().all(|(x, _)| x.is_csr()) {
+            let parts: Vec<&CsrMatrix> = shards
+                .iter()
+                .map(|(x, _)| match x {
+                    ShardStorage::Csr(c) => c,
+                    ShardStorage::Dense(_) => unreachable!("all_csr checked"),
+                })
+                .collect();
+            ShardStorage::Csr(CsrMatrix::vstack(&parts))
+        } else {
+            let mut stacked = Matrix::zeros(n_total, d);
+            let mut row = 0;
+            for (x, _) in &shards {
+                match x {
+                    ShardStorage::Dense(mx) => {
+                        for i in 0..mx.rows {
+                            stacked.row_mut(row).copy_from_slice(mx.row(i));
+                            row += 1;
+                        }
+                    }
+                    ShardStorage::Csr(c) => {
+                        for i in 0..c.rows {
+                            let (cs, vs) = c.row(i);
+                            let dst = stacked.row_mut(row);
+                            for (ci, v) in cs.iter().zip(vs) {
+                                dst[*ci as usize] = *v;
+                            }
+                            row += 1;
+                        }
+                    }
+                }
+            }
+            ShardStorage::Dense(stacked)
+        };
         let lam_max_all = power_iteration_gram(&x_all, 1e-12, 50_000);
 
         let (l_total, theta_star, loss_star) = match task {
@@ -195,7 +395,10 @@ impl Problem {
 
         let workers = shards
             .into_iter()
-            .map(|(x, y)| partition::pad_shard(x, y, pad))
+            .map(|(x, y)| {
+                let real = x.rows();
+                partition::pad_shard_storage(x.auto_select(real), y, pad)
+            })
             .collect();
 
         Ok(Problem {
@@ -214,21 +417,40 @@ impl Problem {
 /// Native per-worker loss (mirrors the L1 kernels exactly). Fused into a
 /// single allocation-free pass over the shard rows — the monitoring
 /// objective runs every iteration, so it shares the hot-path discipline of
-/// `grad::worker_grad_into`.
+/// `grad::worker_grad_into`. Specialized per storage format: the
+/// `(format, task)` dispatch happens once, outside the row loop, and the
+/// CSR arms are bitwise identical to the dense ones (DESIGN.md §8).
 pub fn worker_loss(task: Task, s: &WorkerShard, theta: &[f64]) -> f64 {
-    match task {
-        Task::LinReg => {
+    match (&s.storage, task) {
+        (ShardStorage::Dense(x), Task::LinReg) => {
             let mut loss = 0.0;
-            for i in 0..s.x.rows {
-                let r = linalg::dot(s.x.row(i), theta) - s.y[i];
+            for i in 0..x.rows {
+                let r = linalg::dot(x.row(i), theta) - s.y[i];
                 loss += s.w[i] * r * r;
             }
             loss
         }
-        Task::LogReg { lam } => {
+        (ShardStorage::Dense(x), Task::LogReg { lam }) => {
             let mut loss = 0.5 * lam * linalg::norm2(theta);
-            for i in 0..s.x.rows {
-                loss += s.w[i] * log1pexp(-s.y[i] * linalg::dot(s.x.row(i), theta));
+            for i in 0..x.rows {
+                loss += s.w[i] * log1pexp(-s.y[i] * linalg::dot(x.row(i), theta));
+            }
+            loss
+        }
+        (ShardStorage::Csr(a), Task::LinReg) => {
+            let mut loss = 0.0;
+            for i in 0..a.rows {
+                let (cs, vs) = a.row(i);
+                let r = sparse::spdot(cs, vs, theta) - s.y[i];
+                loss += s.w[i] * r * r;
+            }
+            loss
+        }
+        (ShardStorage::Csr(a), Task::LogReg { lam }) => {
+            let mut loss = 0.5 * lam * linalg::norm2(theta);
+            for i in 0..a.rows {
+                let (cs, vs) = a.row(i);
+                loss += s.w[i] * log1pexp(-s.y[i] * sparse::spdot(cs, vs, theta));
             }
             loss
         }
@@ -260,9 +482,10 @@ mod tests {
         // ∇L(θ*) = 2 Σ Xᵀ(Xθ*−y) ≈ 0
         let mut g = vec![0.0; 5];
         for s in &p.workers {
-            let z = s.x.matvec(&p.theta_star);
-            let r: Vec<f64> = (0..s.x.rows).map(|i| s.w[i] * (z[i] - s.y[i])).collect();
-            let gm = s.x.t_matvec(&r);
+            let z = s.storage.matvec(&p.theta_star);
+            let r: Vec<f64> =
+                (0..s.n_padded()).map(|i| s.w[i] * (z[i] - s.y[i])).collect();
+            let gm = s.storage.t_matvec(&r);
             for (a, b) in g.iter_mut().zip(&gm) {
                 *a += 2.0 * b;
             }
@@ -321,6 +544,45 @@ mod tests {
         assert!((p1.global_loss(&theta) - p2.global_loss(&theta)).abs() < 1e-10);
         assert!((p1.loss_star - p2.loss_star).abs() < 1e-10);
         assert_eq!(p2.workers[0].n_padded(), 64);
+    }
+
+    #[test]
+    fn low_density_shards_select_csr_and_preserve_losses() {
+        let mut rng = Rng::new(20);
+        let theta0 = rng.normal_vec(6);
+        let mut shards = Vec::new();
+        for _ in 0..3 {
+            let mut x = Matrix::zeros(30, 6);
+            for i in 0..30 {
+                for j in 0..6 {
+                    if rng.uniform() < 0.15 {
+                        x.set(i, j, rng.normal());
+                    }
+                }
+            }
+            let y: Vec<f64> = (0..30)
+                .map(|i| linalg::dot(x.row(i), &theta0) + 0.1 * rng.normal())
+                .collect();
+            shards.push((x, y));
+        }
+        let p = Problem::build("sp", Task::LinReg, shards, None).unwrap();
+        assert!(
+            p.workers.iter().all(|s| s.storage.is_csr()),
+            "15%-density shards must auto-select CSR"
+        );
+        // forcing dense storage must not change a single bit of the losses
+        let mut pd = p.clone();
+        for s in &mut pd.workers {
+            s.storage = ShardStorage::Dense(s.storage.to_dense());
+        }
+        let theta = rng.normal_vec(6);
+        assert_eq!(p.global_loss(&theta).to_bits(), pd.global_loss(&theta).to_bits());
+    }
+
+    #[test]
+    fn dense_shards_stay_dense() {
+        let p = Problem::build("t", Task::LinReg, toy_shards(2, 15, 4, 21), None).unwrap();
+        assert!(p.workers.iter().all(|s| !s.storage.is_csr()));
     }
 
     #[test]

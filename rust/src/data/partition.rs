@@ -1,7 +1,8 @@
-//! Sharding across workers + zero-weight padding.
+//! Sharding across workers + zero-weight padding + storage-format
+//! selection (dense vs CSR) at shard-construction time.
 
-use super::WorkerShard;
-use crate::linalg::Matrix;
+use super::{ShardStorage, WorkerShard};
+use crate::linalg::{CsrMatrix, Matrix};
 
 /// Split `(x, y)` into `k` near-even contiguous shards (first `n % k`
 /// shards get one extra row), mirroring the paper's "evenly split into
@@ -26,18 +27,55 @@ pub fn split_even(x: &Matrix, y: &[f64], k: usize) -> Vec<(Matrix, Vec<f64>)> {
 
 /// Pad a shard to `pad_to` rows with all-zero features and weight 0. The
 /// padded rows contribute exactly nothing to gradients or losses; they exist
-/// so one AOT artifact shape serves every worker.
+/// so one AOT artifact shape serves every worker. Storage format is
+/// auto-selected from the shard's measured density (dense random data
+/// stays dense; sparse real data lands in CSR, where padding rows are
+/// free) — bit-neutral either way, see DESIGN.md §8.
 pub fn pad_shard(x: Matrix, y: Vec<f64>, pad_to: usize) -> WorkerShard {
-    let n_real = x.rows;
+    let real = x.rows;
+    pad_shard_storage(ShardStorage::Dense(x).auto_select(real), y, pad_to)
+}
+
+/// Storage-generic padding: dense shards grow zero rows in place, CSR
+/// shards just extend `row_ptr` (padding costs no storage).
+pub fn pad_shard_storage(x: ShardStorage, y: Vec<f64>, pad_to: usize) -> WorkerShard {
+    let n_real = x.rows();
     assert!(pad_to >= n_real, "pad_to {pad_to} < shard rows {n_real}");
-    let d = x.cols;
-    let mut data = x.data;
-    data.resize(pad_to * d, 0.0);
+    assert_eq!(n_real, y.len(), "labels per row");
+    let storage = match x {
+        ShardStorage::Dense(m) => {
+            let d = m.cols;
+            let mut data = m.data;
+            data.resize(pad_to * d, 0.0);
+            ShardStorage::Dense(Matrix::from_vec(pad_to, d, data))
+        }
+        ShardStorage::Csr(c) => ShardStorage::Csr(c.pad_rows(pad_to)),
+    };
     let mut y_pad = y;
     y_pad.resize(pad_to, 0.0);
     let mut w = vec![1.0; n_real];
     w.resize(pad_to, 0.0);
-    WorkerShard { x: Matrix::from_vec(pad_to, d, data), y: y_pad, w, n_real }
+    WorkerShard { storage, y: y_pad, w, n_real }
+}
+
+/// CSR analog of [`split_even`]: near-even contiguous row shards without
+/// ever leaving the sparse form.
+pub fn split_even_csr(x: &CsrMatrix, y: &[f64], k: usize) -> Vec<(CsrMatrix, Vec<f64>)> {
+    assert!(k > 0 && x.rows >= k, "need at least one row per shard");
+    assert_eq!(x.rows, y.len());
+    let n = x.rows;
+    let base = n / k;
+    let extra = n % k;
+    let mut out = Vec::with_capacity(k);
+    let mut lo = 0;
+    for i in 0..k {
+        let size = base + usize::from(i < extra);
+        let hi = lo + size;
+        out.push((x.slice_rows(lo, hi), y[lo..hi].to_vec()));
+        lo = hi;
+    }
+    debug_assert_eq!(lo, n);
+    out
 }
 
 /// Interleave several datasets' shards into a single worker list, keeping
@@ -92,14 +130,51 @@ mod tests {
         let s = pad_shard(x.clone(), y.clone(), 8);
         assert_eq!(s.n_real, 5);
         assert_eq!(s.n_padded(), 8);
+        assert!(!s.storage.is_csr(), "dense random data must stay dense");
+        let sx = s.storage.to_dense();
         for i in 0..5 {
-            assert_eq!(s.x.row(i), x.row(i));
+            assert_eq!(sx.row(i), x.row(i));
             assert_eq!(s.w[i], 1.0);
         }
         for i in 5..8 {
-            assert!(s.x.row(i).iter().all(|&v| v == 0.0));
+            assert!(sx.row(i).iter().all(|&v| v == 0.0));
             assert_eq!(s.w[i], 0.0);
             assert_eq!(s.y[i], 0.0);
+        }
+    }
+
+    #[test]
+    fn pad_selects_csr_for_sparse_data_and_preserves_values() {
+        let mut rng = Rng::new(9);
+        let mut x = Matrix::zeros(10, 8);
+        for i in 0..10 {
+            // ~1 nonzero per row → density ~12%
+            x.set(i, rng.below(8), rng.normal());
+        }
+        let y = rng.normal_vec(10);
+        let s = pad_shard(x.clone(), y, 16);
+        assert!(s.storage.is_csr(), "12%-density shard must select CSR");
+        assert_eq!(s.n_padded(), 16);
+        let sx = s.storage.to_dense();
+        for i in 0..10 {
+            assert_eq!(sx.row(i), x.row(i));
+        }
+        for i in 10..16 {
+            assert!(sx.row(i).iter().all(|&v| v == 0.0));
+            assert_eq!(s.w[i], 0.0);
+        }
+    }
+
+    #[test]
+    fn split_even_csr_matches_dense_split() {
+        let (x, y) = toy(11, 5, 8);
+        let csr = CsrMatrix::from_dense(&x);
+        let dense_shards = split_even(&x, &y, 4);
+        let csr_shards = split_even_csr(&csr, &y, 4);
+        assert_eq!(csr_shards.len(), dense_shards.len());
+        for ((cx, cy), (dx, dy)) in csr_shards.iter().zip(&dense_shards) {
+            assert_eq!(&cx.to_dense(), dx);
+            assert_eq!(cy, dy);
         }
     }
 

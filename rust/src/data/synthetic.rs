@@ -6,7 +6,8 @@
 //! * increasing: `L_m = (1.3^{m-1} + 1)²` (Fig. 2-3),
 //! * uniform:    `L_m = 4` for all m (Fig. 4).
 
-use super::{Problem, Task};
+use super::{Problem, ShardStorage, Task};
+use crate::linalg::sparse::{self, CsrMatrix};
 use crate::linalg::{dot, power_iteration_gram, Matrix};
 use crate::util::Rng;
 
@@ -53,7 +54,7 @@ fn gen_x(rng: &mut Rng, n: usize, d: usize) -> Matrix {
 
 /// Scale a shard's features so its task-level smoothness equals `target`.
 fn rescale_to_l(x: &mut Matrix, task: Task, target: f64) {
-    let lam_max = power_iteration_gram(x, 1e-13, 50_000);
+    let lam_max = power_iteration_gram(&*x, 1e-13, 50_000);
     let factor = match task {
         // L_m = 2 λmax(XᵀX): λ scales quadratically with the feature scale
         Task::LinReg => (target / (2.0 * lam_max)).sqrt(),
@@ -161,6 +162,74 @@ pub fn logreg_increasing_l(m: usize, n: usize, d: usize, seed: u64) -> Problem {
     synthetic_problem(Task::LogReg { lam: 1e-3 }, LProfile::Increasing, m, n, d, seed)
 }
 
+/// Generate a sparse design directly in CSR: each entry is nonzero with
+/// probability `density`, drawn standard normal. Public so the benches
+/// and property tests draw from the same generator the sparse workloads
+/// use.
+pub fn gen_sparse_x(rng: &mut Rng, n: usize, d: usize, density: f64) -> CsrMatrix {
+    let mut entries = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut row = Vec::new();
+        for j in 0..d {
+            if rng.uniform() < density {
+                row.push((j as u32, rng.normal()));
+            }
+        }
+        entries.push(row);
+    }
+    CsrMatrix::from_row_entries(n, d, entries)
+}
+
+/// Sparse synthetic problem: every shard is generated *and shipped* as
+/// CSR (below the density threshold it stays CSR through sharding), with
+/// labels from a planted model — the workload the sparse kernel tier and
+/// the determinism suite exercise end-to-end.
+pub fn sparse_problem(
+    task: Task,
+    m: usize,
+    n_per_worker: usize,
+    d: usize,
+    density: f64,
+    seed: u64,
+) -> Problem {
+    let mut rng = Rng::new(seed);
+    let theta0 = rng.normal_vec(d);
+    let mut shards = Vec::with_capacity(m);
+    for mi in 0..m {
+        let mut wrng = rng.fork(mi as u64);
+        let x = gen_sparse_x(&mut wrng, n_per_worker, d, density);
+        let y: Vec<f64> = (0..n_per_worker)
+            .map(|i| {
+                let (cs, vs) = x.row(i);
+                let z = sparse::spdot(cs, vs, &theta0);
+                match task {
+                    Task::LinReg => z + 0.01 * wrng.normal(),
+                    Task::LogReg { .. } => {
+                        if z + 0.3 * wrng.normal() > 0.0 {
+                            1.0
+                        } else {
+                            -1.0
+                        }
+                    }
+                }
+            })
+            .collect();
+        shards.push((ShardStorage::Csr(x), y));
+    }
+    let name = format!("sparse_{}_m{m}_p{density}", task.name());
+    Problem::build_storage(&name, task, shards, None).expect("sparse synthetic build")
+}
+
+/// Sparse linear-regression workload (CSR shards end-to-end).
+pub fn sparse_linreg(m: usize, n: usize, d: usize, density: f64, seed: u64) -> Problem {
+    sparse_problem(Task::LinReg, m, n, d, density, seed)
+}
+
+/// Sparse logistic-regression workload (CSR shards end-to-end).
+pub fn sparse_logreg(m: usize, n: usize, d: usize, density: f64, seed: u64) -> Problem {
+    sparse_problem(Task::LogReg { lam: 1e-3 }, m, n, d, density, seed)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -203,10 +272,42 @@ mod tests {
     fn deterministic_given_seed() {
         let a = linreg_increasing_l(3, 10, 4, 7);
         let b = linreg_increasing_l(3, 10, 4, 7);
-        assert_eq!(a.workers[0].x.data, b.workers[0].x.data);
+        assert_eq!(a.workers[0].storage.to_dense().data, b.workers[0].storage.to_dense().data);
         assert_eq!(a.theta_star, b.theta_star);
         let c = linreg_increasing_l(3, 10, 4, 8);
-        assert_ne!(a.workers[0].x.data, c.workers[0].x.data);
+        assert_ne!(a.workers[0].storage.to_dense().data, c.workers[0].storage.to_dense().data);
+    }
+
+    #[test]
+    fn sparse_problems_build_csr_shards_that_converge() {
+        use crate::coordinator::{run, Algorithm, RunOptions};
+        use crate::grad::NativeEngine;
+        let p = sparse_linreg(4, 30, 16, 0.1, 91);
+        assert!(p.workers.iter().all(|s| s.storage.is_csr()), "shards must stay CSR");
+        for s in &p.workers {
+            let dens = s.density();
+            assert!(dens < 0.25, "measured density {dens} too high");
+        }
+        let opts = RunOptions { max_iters: 3000, ..Default::default() };
+        let t = run(&p, Algorithm::LagWk, &opts, &NativeEngine::new(&p));
+        let start = t.records[0].obj_err;
+        assert!(
+            t.final_err() < 1e-3 * start,
+            "LAG-WK made no progress on a sparse problem: {} -> {}",
+            start,
+            t.final_err()
+        );
+    }
+
+    #[test]
+    fn sparse_logreg_labels_and_density() {
+        let p = sparse_logreg(3, 25, 10, 0.15, 92);
+        assert!(p.workers.iter().all(|s| s.storage.is_csr()));
+        for s in &p.workers {
+            for i in 0..s.n_real {
+                assert!(s.y[i] == 1.0 || s.y[i] == -1.0);
+            }
+        }
     }
 
     #[test]

@@ -206,6 +206,34 @@ mod tests {
     }
 
     #[test]
+    fn adult_shards_auto_select_csr_dense_trios_stay_dense() {
+        // the one-hot Adult analog sits under the density threshold, so the
+        // sharding path stores it CSR; the continuous datasets stay dense
+        use crate::data::{partition, Problem, Task};
+        let trio = logreg_trio();
+        let dmin = min_features(&trio);
+        let raw: Vec<_> = trio
+            .into_iter()
+            .map(|ds| {
+                let t = ds.with_features(dmin);
+                (t.x, t.y)
+            })
+            .collect();
+        let shards = partition::shards_per_dataset(&raw, 3);
+        let p = Problem::build("trio", Task::LogReg { lam: 1e-3 }, shards, None).unwrap();
+        for (mi, s) in p.workers.iter().enumerate() {
+            let expect_csr = (3..6).contains(&mi); // workers 4-6 hold Adult
+            assert_eq!(
+                s.storage.is_csr(),
+                expect_csr,
+                "worker {mi}: density {} stored {}",
+                s.density(),
+                s.storage.format()
+            );
+        }
+    }
+
+    #[test]
     fn groups_have_heterogeneous_smoothness() {
         // the property the experiments rely on: the three datasets of a task
         // split into three distinct L_m scales
@@ -213,7 +241,7 @@ mod tests {
         let trio = linreg_trio();
         let dmin = min_features(&trio);
         let raw: Vec<_> = trio
-            .iter()
+            .into_iter()
             .map(|ds| {
                 let t = ds.with_features(dmin);
                 (t.x, t.y)

@@ -12,7 +12,7 @@ pub fn problem(shards_each: usize) -> anyhow::Result<Problem> {
     let trio = uci::linreg_trio();
     let dmin = uci::min_features(&trio);
     let raw: Vec<_> = trio
-        .iter()
+        .into_iter()
         .map(|ds| {
             let t = ds.with_features(dmin);
             (t.x, t.y)

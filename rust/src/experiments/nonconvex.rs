@@ -14,7 +14,7 @@ use crate::coordinator::server::ParameterServer;
 use crate::coordinator::trigger::TriggerConfig;
 use crate::data::synthetic::{self, LProfile};
 use crate::data::{Problem, Task};
-use crate::linalg::{self, dist2, sub};
+use crate::linalg::{self, dist2, sub, MatOps};
 use crate::util::csv::CsvWriter;
 
 use super::ExpContext;
@@ -25,8 +25,8 @@ pub const SIGMOID_L2: f64 = 0.09622504486493764;
 /// Per-worker sigmoid-loss gradient + loss (native; the nonconvex analog
 /// of `grad::worker_grad`).
 pub fn sigmoid_worker_grad(s: &crate::data::WorkerShard, theta: &[f64]) -> (Vec<f64>, f64) {
-    let z = s.x.matvec(theta);
-    let n = s.x.rows;
+    let z = s.storage.matvec(theta);
+    let n = s.n_padded();
     let mut r = vec![0.0; n];
     let mut loss = 0.0;
     for i in 0..n {
@@ -36,7 +36,7 @@ pub fn sigmoid_worker_grad(s: &crate::data::WorkerShard, theta: &[f64]) -> (Vec<
         // d/dθ σ(−y z) = −y σ(u)(1−σ(u)) x
         r[i] = s.w[i] * (-s.y[i]) * sig * (1.0 - sig);
     }
-    (s.x.t_matvec(&r), loss)
+    (s.storage.t_matvec(&r), loss)
 }
 
 /// Build the nonconvex problem: reuse the synthetic generator's shards and
@@ -47,7 +47,7 @@ pub fn problem(m: usize, n: usize, d: usize, seed: u64) -> (Problem, Vec<f64>, f
     let l_m: Vec<f64> = p
         .workers
         .iter()
-        .map(|s| SIGMOID_L2 * linalg::power_iteration_gram(&s.x, 1e-12, 20_000))
+        .map(|s| SIGMOID_L2 * linalg::power_iteration_gram(&s.storage, 1e-12, 20_000))
         .collect();
     // L of the sum ≤ L₂·λmax over stacked data; bound by the sum (safe)
     let l_total: f64 = l_m.iter().sum();

@@ -16,8 +16,8 @@
 //! several workers across threads (see `coordinator::pool`). Engines use
 //! interior mutability (an atomic counter) for call accounting.
 
-use crate::data::{Problem, Task, WorkerShard};
-use crate::linalg::{self, sigmoid};
+use crate::data::{Problem, ShardStorage, Task, WorkerShard};
+use crate::linalg::{self, sigmoid, sparse};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Anything that can produce `(∇L_m(θ), L_m(θ))` for worker `m`.
@@ -91,14 +91,22 @@ impl GradEngine for NativeEngine<'_> {
 /// use (`linreg_grad.py` / `logreg_grad.py`): per row the residual
 /// coefficient depends only on `x_iᵀθ`, so the `Xᵀr` accumulation can fold
 /// into the same row traversal.
+///
+/// Specialized per storage format: the `(format, task)` dispatch happens
+/// **once per call**, so each inner row loop is monomorphic — the dense
+/// arms run the blocked `dot`/`axpy` kernels over full rows, the CSR arms
+/// run the fused `spdot` → residual → `scatter_axpy` row kernel over
+/// stored entries only (O(nnz) per pass). The CSR kernels preserve the
+/// dense kernels' summation order, so the two arms agree **bitwise** and
+/// format selection can never change a LAG trace (DESIGN.md §8).
 pub fn worker_grad_into(task: Task, s: &WorkerShard, theta: &[f64], g: &mut [f64]) -> f64 {
     debug_assert_eq!(g.len(), s.d());
     g.fill(0.0);
-    match task {
-        Task::LinReg => {
+    match (&s.storage, task) {
+        (ShardStorage::Dense(x), Task::LinReg) => {
             let mut loss = 0.0;
-            for i in 0..s.x.rows {
-                let row = s.x.row(i);
+            for i in 0..x.rows {
+                let row = x.row(i);
                 let res = linalg::dot(row, theta) - s.y[i];
                 let r = s.w[i] * res;
                 loss += r * res;
@@ -111,15 +119,45 @@ pub fn worker_grad_into(task: Task, s: &WorkerShard, theta: &[f64], g: &mut [f64
             }
             loss
         }
-        Task::LogReg { lam } => {
+        (ShardStorage::Dense(x), Task::LogReg { lam }) => {
             let mut loss = 0.5 * lam * linalg::norm2(theta);
-            for i in 0..s.x.rows {
-                let row = s.x.row(i);
+            for i in 0..x.rows {
+                let row = x.row(i);
                 let u = -s.y[i] * linalg::dot(row, theta);
                 let r = s.w[i] * (-s.y[i]) * sigmoid(u);
                 loss += s.w[i] * linalg::log1pexp(u);
                 if r != 0.0 {
                     linalg::axpy(r, row, g);
+                }
+            }
+            linalg::axpy(lam, theta, g);
+            loss
+        }
+        (ShardStorage::Csr(a), Task::LinReg) => {
+            let mut loss = 0.0;
+            for i in 0..a.rows {
+                let (cs, vs) = a.row(i);
+                let res = sparse::spdot(cs, vs, theta) - s.y[i];
+                let r = s.w[i] * res;
+                loss += r * res;
+                if r != 0.0 {
+                    sparse::scatter_axpy(r, cs, vs, g);
+                }
+            }
+            for v in g.iter_mut() {
+                *v *= 2.0;
+            }
+            loss
+        }
+        (ShardStorage::Csr(a), Task::LogReg { lam }) => {
+            let mut loss = 0.5 * lam * linalg::norm2(theta);
+            for i in 0..a.rows {
+                let (cs, vs) = a.row(i);
+                let u = -s.y[i] * sparse::spdot(cs, vs, theta);
+                let r = s.w[i] * (-s.y[i]) * sigmoid(u);
+                loss += s.w[i] * linalg::log1pexp(u);
+                if r != 0.0 {
+                    sparse::scatter_axpy(r, cs, vs, g);
                 }
             }
             linalg::axpy(lam, theta, g);
@@ -139,7 +177,7 @@ pub fn worker_grad(task: Task, s: &WorkerShard, theta: &[f64]) -> (Vec<f64>, f64
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::partition::pad_shard;
+    use crate::data::partition::{pad_shard, pad_shard_storage};
     use crate::linalg::Matrix;
     use crate::util::Rng;
 
@@ -199,38 +237,78 @@ mod tests {
             let theta = rng.normal_vec(s.d());
             let (g, loss) = worker_grad(task, &s, &theta);
 
-            // reference: three separate passes
-            let z = s.x.matvec(&theta);
+            // reference: three separate passes over the dense view
+            let sx = s.storage.to_dense();
+            let n = s.n_padded();
+            let z = sx.matvec(&theta);
             let (g_ref, loss_ref) = match task {
                 Task::LinReg => {
-                    let mut r = vec![0.0; s.x.rows];
+                    let mut r = vec![0.0; n];
                     let mut l = 0.0;
-                    for i in 0..s.x.rows {
+                    for i in 0..n {
                         let res = z[i] - s.y[i];
                         r[i] = s.w[i] * res;
                         l += r[i] * res;
                     }
-                    let mut gr = s.x.t_matvec(&r);
+                    let mut gr = sx.t_matvec(&r);
                     for v in &mut gr {
                         *v *= 2.0;
                     }
                     (gr, l)
                 }
                 Task::LogReg { lam } => {
-                    let mut r = vec![0.0; s.x.rows];
+                    let mut r = vec![0.0; n];
                     let mut l = 0.5 * lam * linalg::norm2(&theta);
-                    for i in 0..s.x.rows {
+                    for i in 0..n {
                         let u = -s.y[i] * z[i];
                         r[i] = s.w[i] * (-s.y[i]) * sigmoid(u);
                         l += s.w[i] * linalg::log1pexp(u);
                     }
-                    let mut gr = s.x.t_matvec(&r);
+                    let mut gr = sx.t_matvec(&r);
                     linalg::axpy(lam, &theta, &mut gr);
                     (gr, l)
                 }
             };
             assert_eq!(g, g_ref, "{task:?} gradient must be bit-identical");
             assert_eq!(loss.to_bits(), loss_ref.to_bits(), "{task:?} loss must be bit-identical");
+        }
+    }
+
+    /// Re-storing a shard as CSR (or back) must not change a single bit of
+    /// gradient or loss — this is what licenses automatic format selection.
+    #[test]
+    fn csr_storage_bitwise_matches_dense_storage() {
+        use crate::linalg::CsrMatrix;
+        let mut rng = Rng::new(33);
+        for (task, pm) in [(Task::LinReg, false), (Task::LogReg { lam: 1e-3 }, true)] {
+            for density in [0.02, 0.1, 0.6] {
+                let n = 29;
+                let d = 17;
+                let mut x = Matrix::zeros(n, d);
+                for i in 0..n {
+                    for j in 0..d {
+                        if rng.uniform() < density {
+                            x.set(i, j, rng.normal());
+                        }
+                    }
+                }
+                let y: Vec<f64> = if pm {
+                    (0..n).map(|_| rng.sign()).collect()
+                } else {
+                    rng.normal_vec(n)
+                };
+                let dense = pad_shard_storage(ShardStorage::Dense(x.clone()), y.clone(), n + 5);
+                let csr = pad_shard_storage(
+                    ShardStorage::Csr(CsrMatrix::from_dense(&x)),
+                    y,
+                    n + 5,
+                );
+                let theta = rng.normal_vec(d);
+                let (gd, ld) = worker_grad(task, &dense, &theta);
+                let (gc, lc) = worker_grad(task, &csr, &theta);
+                assert_eq!(gd, gc, "{task:?} density {density}");
+                assert_eq!(ld.to_bits(), lc.to_bits(), "{task:?} density {density}");
+            }
         }
     }
 

@@ -48,9 +48,9 @@ pub mod prelude {
     pub use crate::coordinator::{
         run, Algorithm, CommStats, RunOptions, RunTrace,
     };
-    pub use crate::data::{Dataset, Problem, Task, WorkerShard};
+    pub use crate::data::{Dataset, Problem, ShardStorage, SparseDataset, Task, WorkerShard};
     pub use crate::grad::{GradEngine, NativeEngine};
-    pub use crate::linalg::Matrix;
+    pub use crate::linalg::{CsrMatrix, MatOps, Matrix};
 }
 
 /// Crate-level result alias.

@@ -7,10 +7,69 @@
 //! `L(θ*)` reference values of every experiment).
 
 pub mod solvers;
+pub mod sparse;
 
 pub use solvers::{
     cg_solve, cholesky_solve, log1pexp, logreg_newton, power_iteration_gram, sigmoid,
 };
+pub use sparse::CsrMatrix;
+
+/// Matvec-only access to a design matrix, in whatever storage format. The
+/// setup-time solvers (power iteration, Newton-CG) are generic over this,
+/// so CSR datasets never have to materialize a dense form to get their
+/// smoothness constants and reference minimizers.
+///
+/// Both implementations produce **bitwise identical** results on the same
+/// underlying values (see `sparse`'s module docs), so a problem's derived
+/// quantities do not depend on how its shards are stored.
+pub trait MatOps {
+    fn rows(&self) -> usize;
+    fn cols(&self) -> usize;
+    fn matvec_into(&self, x: &[f64], y: &mut [f64]);
+    fn t_matvec_into(&self, x: &[f64], y: &mut [f64]);
+
+    fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.rows()];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    fn t_matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.cols()];
+        self.t_matvec_into(x, &mut y);
+        y
+    }
+}
+
+impl MatOps for Matrix {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+    fn cols(&self) -> usize {
+        self.cols
+    }
+    fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        Matrix::matvec_into(self, x, y)
+    }
+    fn t_matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        Matrix::t_matvec_into(self, x, y)
+    }
+}
+
+impl MatOps for CsrMatrix {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+    fn cols(&self) -> usize {
+        self.cols
+    }
+    fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        CsrMatrix::matvec_into(self, x, y)
+    }
+    fn t_matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        CsrMatrix::t_matvec_into(self, x, y)
+    }
+}
 
 /// Row-major dense matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -121,9 +180,13 @@ impl Matrix {
     }
 
     /// Select the first `k` columns (the paper trims every real dataset to
-    /// the minimum feature count of its task group).
+    /// the minimum feature count of its task group). The common no-trim
+    /// case (`k == cols`) is one flat memcpy instead of a per-row loop.
     pub fn take_cols(&self, k: usize) -> Matrix {
         assert!(k <= self.cols);
+        if k == self.cols {
+            return self.clone();
+        }
         let mut out = Matrix::zeros(self.rows, k);
         for i in 0..self.rows {
             out.row_mut(i).copy_from_slice(&self.row(i)[..k]);
@@ -191,12 +254,24 @@ pub fn norm(a: &[f64]) -> f64 {
     norm2(a).sqrt()
 }
 
-/// Squared Euclidean distance ‖a − b‖² without allocating.
+/// Squared Euclidean distance ‖a − b‖² without allocating, blocked 4-wide
+/// with independent accumulators like `dot`/`axpy` — it sits inside every
+/// LAG trigger check (`‖∇L_m(θ̂) − ∇L_m(θᵏ)‖²` per worker per iteration).
 #[inline]
 pub fn dist2(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    let mut s = 0.0;
-    for (x, y) in a.iter().zip(b) {
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for (x, y) in (&mut ca).zip(&mut cb) {
+        let (d0, d1, d2, d3) = (x[0] - y[0], x[1] - y[1], x[2] - y[2], x[3] - y[3]);
+        s0 += d0 * d0;
+        s1 += d1 * d1;
+        s2 += d2 * d2;
+        s3 += d3 * d3;
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
         let d = x - y;
         s += d * d;
     }
@@ -297,6 +372,25 @@ mod tests {
         let b: Vec<f64> = (0..103).map(|i| (i as f64).sin()).collect();
         let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
         assert!((dot(&a, &b) - naive).abs() < 1e-9 * naive.abs().max(1.0));
+    }
+
+    #[test]
+    fn dist2_blocked_matches_scalar_on_odd_lengths() {
+        for n in [1usize, 3, 4, 5, 7, 8, 13, 101] {
+            let a: Vec<f64> = (0..n).map(|i| (i as f64).sin() * 3.0).collect();
+            let b: Vec<f64> = (0..n).map(|i| (i as f64).cos() - 0.5).collect();
+            let naive: f64 = a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+            assert!(
+                (dist2(&a, &b) - naive).abs() < 1e-12 * naive.max(1.0),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn take_cols_no_trim_is_identity() {
+        let a = Matrix::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(a.take_cols(2), a);
     }
 
     #[test]

@@ -7,13 +7,14 @@
 //! * `logreg_newton` — Newton-CG minimizer of the ℓ2-regularized logistic
 //!   loss; gives the `L(θ*)` reference value each figure/table needs.
 
-use super::{axpy, dot, norm, norm2, Matrix};
+use super::{axpy, dot, norm, norm2, MatOps, Matrix};
 
-/// Largest eigenvalue of `XᵀX` by power iteration with matvec-only access.
+/// Largest eigenvalue of `XᵀX` by power iteration with matvec-only access
+/// (generic over the storage format — dense or CSR shards alike).
 /// Deterministic start vector; converges to relative tolerance `tol`.
-pub fn power_iteration_gram(x: &Matrix, tol: f64, max_iters: usize) -> f64 {
-    let d = x.cols;
-    if d == 0 || x.rows == 0 {
+pub fn power_iteration_gram<A: MatOps>(x: &A, tol: f64, max_iters: usize) -> f64 {
+    let d = x.cols();
+    if d == 0 || x.rows() == 0 {
         return 0.0;
     }
     // deterministic, dense start vector (mixed signs to avoid orthogonal
@@ -146,17 +147,19 @@ pub fn log1pexp(u: f64) -> f64 {
 /// own λ/2-term, paper eq. (86)). Hessian-vector products avoid forming the
 /// d×d Hessian, so Gisette-sized problems (d=4837) are fine.
 ///
-/// Returns (θ*, f(θ*)); converges to gradient norm ≤ `tol`.
-pub fn logreg_newton(
-    x: &Matrix,
+/// Returns (θ*, f(θ*)); converges to gradient norm ≤ `tol`. Generic over
+/// the design-matrix storage (dense or CSR), so sparse datasets get their
+/// reference values without a dense materialization.
+pub fn logreg_newton<A: MatOps>(
+    x: &A,
     y: &[f64],
     w: &[f64],
     reg: f64,
     tol: f64,
     max_iters: usize,
 ) -> (Vec<f64>, f64) {
-    let d = x.cols;
-    let n = x.rows;
+    let d = x.cols();
+    let n = x.rows();
     assert_eq!(y.len(), n);
     assert_eq!(w.len(), n);
     let mut theta = vec![0.0; d];

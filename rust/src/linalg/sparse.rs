@@ -1,0 +1,385 @@
+//! Sparse (CSR) storage tier for shard feature matrices.
+//!
+//! The real-data workloads (Gisette, the one-hot Adult analog, libsvm
+//! inputs) are mostly zeros; storing them dense makes `worker_grad` /
+//! `worker_loss` pay O(n·d) per pass regardless of density. [`CsrMatrix`]
+//! stores only the nonzeros (`row_ptr` / `col_idx` / `vals`) so every
+//! kernel is O(nnz).
+//!
+//! **Trace-compatibility contract** (DESIGN.md §8): every kernel here
+//! reproduces its dense counterpart **bitwise**, so automatic format
+//! selection can never change a recorded LAG trace. The dense `dot` is
+//! blocked 4-wide with independent accumulators; [`spdot`] reproduces that
+//! exact summation order by accumulating stored entries into the
+//! accumulator class `col & 3` (entries are column-sorted, so each class
+//! sees its terms in the same order as the dense kernel) and folding the
+//! classes in the same `((s0+s1)+s2)+s3` order. Skipped zeros are exact
+//! no-ops: a stored-zero-free CSR only omits terms of the form `0.0·θ_j`
+//! or `g_j += c·0.0`, and adding `±0.0` to an accumulator that is never
+//! `-0.0` (all accumulators start at `+0.0` and IEEE-754 round-to-nearest
+//! cancellation yields `+0.0`) leaves every bit unchanged. (The argument
+//! assumes finite iterates: at `θ_j = ±inf` the dense kernel's `0.0·θ_j`
+//! is NaN while CSR skips it — a divergent run's trace is already
+//! meaningless; see DESIGN.md §8.)
+
+use super::Matrix;
+
+/// Row-major compressed-sparse-row matrix. Column indices are `u32`
+/// (feature counts beyond 4B are out of scope) and sorted ascending within
+/// each row; stored values are nonzero.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// `row_ptr[i]..row_ptr[i+1]` indexes row i's entries (`rows + 1` long).
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<u32>,
+    pub vals: Vec<f64>,
+}
+
+/// Sparse·dense dot product, bitwise identical to `linalg::dot` over the
+/// densified row (see the module docs for the order-preservation argument).
+#[inline]
+pub fn spdot(cols: &[u32], vals: &[f64], v: &[f64]) -> f64 {
+    // the dense kernel's blocked region covers j < 4·(d/4)
+    let limit = v.len() & !3;
+    let mut acc = [0.0f64; 4];
+    let mut i = 0;
+    while i < cols.len() {
+        let j = cols[i] as usize;
+        if j >= limit {
+            break;
+        }
+        acc[j & 3] += vals[i] * v[j];
+        i += 1;
+    }
+    let mut s = ((acc[0] + acc[1]) + acc[2]) + acc[3];
+    while i < cols.len() {
+        s += vals[i] * v[cols[i] as usize];
+        i += 1;
+    }
+    s
+}
+
+/// `out[col] += alpha * val` over a row's stored entries — the scatter form
+/// of `linalg::axpy`. Bitwise identical to the dense axpy over the
+/// densified row: per-element updates are independent, and the skipped
+/// zeros would only add `alpha·0.0`.
+#[inline]
+pub fn scatter_axpy(alpha: f64, cols: &[u32], vals: &[f64], out: &mut [f64]) {
+    for (c, v) in cols.iter().zip(vals) {
+        out[*c as usize] += alpha * v;
+    }
+}
+
+impl CsrMatrix {
+    /// Empty matrix with no stored entries.
+    pub fn zeros(rows: usize, cols: usize) -> CsrMatrix {
+        CsrMatrix {
+            rows,
+            cols,
+            row_ptr: vec![0; rows + 1],
+            col_idx: Vec::new(),
+            vals: Vec::new(),
+        }
+    }
+
+    /// Build from per-row `(col, val)` entry lists. Entries are sorted by
+    /// column; zero values are dropped; duplicate columns are rejected.
+    pub fn from_row_entries(
+        rows: usize,
+        cols: usize,
+        entries: Vec<Vec<(u32, f64)>>,
+    ) -> CsrMatrix {
+        assert_eq!(entries.len(), rows, "entry list per row");
+        assert!(cols <= u32::MAX as usize, "column count exceeds u32");
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut col_idx = Vec::new();
+        let mut vals = Vec::new();
+        row_ptr.push(0);
+        for mut row in entries {
+            row.sort_unstable_by_key(|(c, _)| *c);
+            for w in row.windows(2) {
+                assert_ne!(w[0].0, w[1].0, "duplicate column {} in CSR row", w[0].0);
+            }
+            for (c, v) in row {
+                assert!((c as usize) < cols, "column {c} out of range (d={cols})");
+                if v != 0.0 {
+                    col_idx.push(c);
+                    vals.push(v);
+                }
+            }
+            row_ptr.push(col_idx.len());
+        }
+        CsrMatrix { rows, cols, row_ptr, col_idx, vals }
+    }
+
+    /// Compress a dense matrix (drops exact zeros).
+    pub fn from_dense(m: &Matrix) -> CsrMatrix {
+        assert!(m.cols <= u32::MAX as usize, "column count exceeds u32");
+        let mut row_ptr = Vec::with_capacity(m.rows + 1);
+        let mut col_idx = Vec::new();
+        let mut vals = Vec::new();
+        row_ptr.push(0);
+        for i in 0..m.rows {
+            for (j, &v) in m.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    col_idx.push(j as u32);
+                    vals.push(v);
+                }
+            }
+            row_ptr.push(col_idx.len());
+        }
+        CsrMatrix { rows: m.rows, cols: m.cols, row_ptr, col_idx, vals }
+    }
+
+    /// Materialize the dense form (setup / staging paths only).
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (cs, vs) = self.row(i);
+            let row = m.row_mut(i);
+            for (c, v) in cs.iter().zip(vs) {
+                row[*c as usize] = *v;
+            }
+        }
+        m
+    }
+
+    /// Row i's stored `(cols, vals)` slices.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let (lo, hi) = (self.row_ptr[i], self.row_ptr[i + 1]);
+        (&self.col_idx[lo..hi], &self.vals[lo..hi])
+    }
+
+    /// Number of stored entries.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Fill fraction `nnz / (rows·cols)` (1.0 for an empty shape).
+    pub fn density(&self) -> f64 {
+        let cells = self.rows * self.cols;
+        if cells == 0 {
+            1.0
+        } else {
+            self.nnz() as f64 / cells as f64
+        }
+    }
+
+    /// `y = A x`; each row is one order-preserving [`spdot`].
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.rows];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// `y = A x` into a caller-provided buffer (hot path).
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for (i, yi) in y.iter_mut().enumerate() {
+            let (cs, vs) = self.row(i);
+            *yi = spdot(cs, vs, x);
+        }
+    }
+
+    /// `y = Aᵀ x`.
+    pub fn t_matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.cols];
+        self.t_matvec_into(x, &mut y);
+        y
+    }
+
+    /// `y = Aᵀ x` into a caller-provided buffer: one [`scatter_axpy`] per
+    /// row with a nonzero coefficient, mirroring the dense form.
+    pub fn t_matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        y.fill(0.0);
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let (cs, vs) = self.row(i);
+            scatter_axpy(xi, cs, vs, y);
+        }
+    }
+
+    /// Gram matrix `AᵀA` (dense, cols × cols) in O(nnz · row_nnz). Setup
+    /// paths only (exact least-squares minimizers). Bitwise identical to
+    /// the dense `gram`: the loop nest mirrors it (rows ascending, then
+    /// stored columns ascending — the dense version skips `ra == 0.0` rows
+    /// itself), every addition targets its own `g[a][b]` accumulator, and
+    /// the entries CSR omits would only contribute exact-zero terms.
+    pub fn gram(&self) -> Matrix {
+        let d = self.cols;
+        let mut g = Matrix::zeros(d, d);
+        for i in 0..self.rows {
+            let (cs, vs) = self.row(i);
+            for (a, &ca) in cs.iter().enumerate() {
+                let ra = vs[a];
+                let grow = g.row_mut(ca as usize);
+                for (cb, rb) in cs.iter().zip(vs) {
+                    grow[*cb as usize] += ra * rb;
+                }
+            }
+        }
+        g
+    }
+
+    /// Select a contiguous row range [lo, hi) (sharding).
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> CsrMatrix {
+        assert!(lo <= hi && hi <= self.rows);
+        let (plo, phi) = (self.row_ptr[lo], self.row_ptr[hi]);
+        CsrMatrix {
+            rows: hi - lo,
+            cols: self.cols,
+            row_ptr: self.row_ptr[lo..=hi].iter().map(|p| p - plo).collect(),
+            col_idx: self.col_idx[plo..phi].to_vec(),
+            vals: self.vals[plo..phi].to_vec(),
+        }
+    }
+
+    /// Append all-zero rows up to `pad_to` (free in CSR: `row_ptr` repeats).
+    pub fn pad_rows(mut self, pad_to: usize) -> CsrMatrix {
+        assert!(pad_to >= self.rows, "pad_to {pad_to} < rows {}", self.rows);
+        let end = *self.row_ptr.last().unwrap();
+        self.row_ptr.resize(pad_to + 1, end);
+        self.rows = pad_to;
+        self
+    }
+
+    /// Stack matrices vertically (global design matrix at setup time).
+    pub fn vstack(parts: &[&CsrMatrix]) -> CsrMatrix {
+        assert!(!parts.is_empty());
+        let cols = parts[0].cols;
+        let rows: usize = parts.iter().map(|p| p.rows).sum();
+        let nnz: usize = parts.iter().map(|p| p.nnz()).sum();
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut col_idx = Vec::with_capacity(nnz);
+        let mut vals = Vec::with_capacity(nnz);
+        row_ptr.push(0);
+        for p in parts {
+            assert_eq!(p.cols, cols, "vstack: column mismatch");
+            let base = vals.len();
+            for i in 0..p.rows {
+                row_ptr.push(base + p.row_ptr[i + 1]);
+            }
+            col_idx.extend_from_slice(&p.col_idx);
+            vals.extend_from_slice(&p.vals);
+        }
+        CsrMatrix { rows, cols, row_ptr, col_idx, vals }
+    }
+
+    /// In-place scalar multiply (smoothness rescaling at setup time).
+    pub fn scale(&mut self, s: f64) {
+        for v in &mut self.vals {
+            *v *= s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dot;
+    use crate::util::Rng;
+
+    fn random_sparse(n: usize, d: usize, density: f64, seed: u64) -> CsrMatrix {
+        let mut rng = Rng::new(seed);
+        crate::data::synthetic::gen_sparse_x(&mut rng, n, d, density)
+    }
+
+    #[test]
+    fn roundtrip_dense_csr_dense() {
+        for density in [0.0, 0.05, 0.5, 1.0] {
+            let a = random_sparse(13, 21, density, 7);
+            let d = a.to_dense();
+            let back = CsrMatrix::from_dense(&d);
+            assert_eq!(a, back, "density {density}");
+            assert_eq!(back.to_dense(), d);
+        }
+    }
+
+    #[test]
+    fn spdot_bitwise_matches_dense_dot() {
+        let mut rng = Rng::new(3);
+        for d in [1usize, 3, 4, 5, 7, 8, 30, 101] {
+            for density in [0.0, 0.1, 0.5, 1.0] {
+                let a = random_sparse(6, d, density, 11 + d as u64);
+                let theta = rng.normal_vec(d);
+                let dense = a.to_dense();
+                for i in 0..6 {
+                    let (cs, vs) = a.row(i);
+                    let sp = spdot(cs, vs, &theta);
+                    let dn = dot(dense.row(i), &theta);
+                    assert_eq!(sp.to_bits(), dn.to_bits(), "d={d} density={density} row {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_and_t_matvec_bitwise_match_dense() {
+        let mut rng = Rng::new(5);
+        let a = random_sparse(17, 29, 0.15, 23);
+        let dense = a.to_dense();
+        let x = rng.normal_vec(29);
+        let r = rng.normal_vec(17);
+        assert_eq!(a.matvec(&x), dense.matvec(&x));
+        assert_eq!(a.t_matvec(&r), dense.t_matvec(&r));
+    }
+
+    #[test]
+    fn gram_bitwise_matches_dense() {
+        for density in [0.05, 0.3, 1.0] {
+            let a = random_sparse(25, 9, density, 31);
+            let g_sp = a.gram();
+            let g_dn = a.to_dense().gram();
+            assert_eq!(g_sp, g_dn, "density {density}");
+        }
+    }
+
+    #[test]
+    fn slice_pad_vstack() {
+        let a = random_sparse(10, 6, 0.4, 41);
+        let top = a.slice_rows(0, 4);
+        let bot = a.slice_rows(4, 10);
+        assert_eq!(CsrMatrix::vstack(&[&top, &bot]), a);
+        let padded = top.clone().pad_rows(9);
+        assert_eq!(padded.rows, 9);
+        assert_eq!(padded.nnz(), top.nnz());
+        for i in 4..9 {
+            assert!(padded.row(i).0.is_empty(), "padding rows must be empty");
+        }
+        assert_eq!(padded.slice_rows(0, 4), top);
+    }
+
+    #[test]
+    fn from_row_entries_sorts_and_drops_zeros() {
+        let a = CsrMatrix::from_row_entries(
+            2,
+            5,
+            vec![vec![(3, 2.0), (0, 1.0), (4, 0.0)], vec![]],
+        );
+        assert_eq!(a.nnz(), 2);
+        assert_eq!(a.row(0).0, &[0, 3]);
+        assert_eq!(a.row(0).1, &[1.0, 2.0]);
+        assert!(a.row(1).0.is_empty());
+        assert!((a.density() - 0.2).abs() < 1e-15);
+    }
+
+    #[test]
+    fn scale_scales_values_only() {
+        let mut a = random_sparse(4, 4, 0.5, 51);
+        let before = a.to_dense();
+        a.scale(2.0);
+        let after = a.to_dense();
+        for (x, y) in before.data.iter().zip(&after.data) {
+            assert_eq!(2.0 * x, *y);
+        }
+    }
+}

@@ -27,7 +27,7 @@ pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
 #[cfg(feature = "pjrt")]
 mod pjrt_backend {
     use super::*;
-    use crate::data::Task;
+    use crate::data::{ShardStorage, Task};
     use std::collections::HashMap;
     use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -114,8 +114,19 @@ mod pjrt_backend {
             let mut staged = Vec::with_capacity(problem.m());
             for s in &problem.workers {
                 anyhow::ensure!(s.n_padded() == n_pad, "all shards must share the artifact shape");
+                // the regression artifacts take a dense X; dense shards
+                // stage their buffer directly, CSR shards materialize once
+                // here at staging time (setup path)
+                let csr_dense;
+                let x_data: &[f64] = match &s.storage {
+                    ShardStorage::Dense(m) => &m.data,
+                    ShardStorage::Csr(_) => {
+                        csr_dense = s.storage.to_dense();
+                        &csr_dense.data
+                    }
+                };
                 staged.push([
-                    runtime.stage_f64(&s.x.data, &[n_pad, d])?,
+                    runtime.stage_f64(x_data, &[n_pad, d])?,
                     runtime.stage_f64(&s.y, &[n_pad])?,
                     runtime.stage_f64(&s.w, &[n_pad])?,
                 ]);

@@ -112,3 +112,52 @@ fn repeated_parallel_runs_are_self_identical() {
     let b = run(&p, Algorithm::LagWk, &opts(4), &NativeEngine::new(&p));
     assert_bit_identical(&a, &b, "repeat lag-wk 4 threads");
 }
+
+#[test]
+fn csr_problems_bit_identical_across_thread_counts() {
+    // sparse shards go through the CSR kernels on every pool thread; the
+    // pooled traces must still match the sequential driver exactly
+    for p in [
+        synthetic::sparse_linreg(8, 30, 20, 0.08, 46),
+        synthetic::sparse_logreg(6, 24, 14, 0.12, 47),
+    ] {
+        assert!(
+            p.workers.iter().all(|s| s.storage.is_csr()),
+            "{}: shards must select CSR for this test to bite",
+            p.name
+        );
+        for algo in Algorithm::ALL {
+            let seq = run(&p, algo, &opts(1), &NativeEngine::new(&p));
+            for threads in [2, 4] {
+                let par = run(&p, algo, &opts(threads), &NativeEngine::new(&p));
+                assert_bit_identical(
+                    &seq,
+                    &par,
+                    &format!("{} on {} with {} threads", algo.name(), p.name, threads),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn storage_format_never_changes_traces() {
+    // the other half of the format-selection license (DESIGN.md §8): the
+    // *same* problem run with CSR shards and with densified shards must
+    // produce bit-identical traces, so the density threshold is purely a
+    // performance knob
+    use lag::data::ShardStorage;
+    let p_csr = synthetic::sparse_linreg(6, 25, 16, 0.1, 48);
+    let mut p_dense = p_csr.clone();
+    for s in &mut p_dense.workers {
+        s.storage = ShardStorage::Dense(s.storage.to_dense());
+    }
+    for algo in Algorithm::ALL {
+        let a = run(&p_csr, algo, &opts(1), &NativeEngine::new(&p_csr));
+        let b = run(&p_dense, algo, &opts(1), &NativeEngine::new(&p_dense));
+        assert_bit_identical(&a, &b, &format!("{} csr vs dense storage", algo.name()));
+        // and the pooled dense run against the sequential CSR run
+        let c = run(&p_dense, algo, &opts(3), &NativeEngine::new(&p_dense));
+        assert_bit_identical(&a, &c, &format!("{} csr seq vs dense pooled", algo.name()));
+    }
+}

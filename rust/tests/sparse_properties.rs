@@ -1,0 +1,218 @@
+//! Property suite for the sparse storage tier: dense and CSR kernels must
+//! agree on random shards across the whole density range — **bitwise**,
+//! because every CSR kernel preserves the dense summation order (`spdot`,
+//! `scatter_axpy`, the fused gradient/loss kernels, matvecs, and the
+//! setup-time Gram product, whose additions each target their own
+//! accumulator cell). This is the license behind automatic format
+//! selection (DESIGN.md §8).
+
+use lag::data::partition::{pad_shard, pad_shard_storage};
+use lag::data::{synthetic, worker_loss, ShardStorage, Task, WorkerShard};
+use lag::grad::worker_grad;
+use lag::linalg::{sparse, CsrMatrix, MatOps, Matrix};
+use lag::util::Rng;
+
+const DENSITIES: &[f64] = &[0.0, 0.02, 0.1, 0.3, 0.7, 1.0];
+const TASKS: &[Task] = &[Task::LinReg, Task::LogReg { lam: 1e-3 }];
+
+/// Dense view of the shared sparse generator — the property suite draws
+/// from the same distribution the workloads and benches use.
+fn random_dense(n: usize, d: usize, density: f64, rng: &mut Rng) -> Matrix {
+    synthetic::gen_sparse_x(rng, n, d, density).to_dense()
+}
+
+fn shard_pair(
+    n: usize,
+    d: usize,
+    density: f64,
+    pad_to: usize,
+    pm_labels: bool,
+    rng: &mut Rng,
+) -> (WorkerShard, WorkerShard) {
+    let x = random_dense(n, d, density, rng);
+    let y: Vec<f64> = if pm_labels {
+        (0..n).map(|_| rng.sign()).collect()
+    } else {
+        rng.normal_vec(n)
+    };
+    let dense = pad_shard_storage(ShardStorage::Dense(x.clone()), y.clone(), pad_to);
+    let csr = pad_shard_storage(ShardStorage::Csr(CsrMatrix::from_dense(&x)), y, pad_to);
+    (dense, csr)
+}
+
+#[test]
+fn gradients_and_losses_bitwise_agree_across_densities() {
+    let mut rng = Rng::new(101);
+    for &task in TASKS {
+        for &density in DENSITIES {
+            for (n, d, pad) in [(23, 9, 23), (17, 32, 24), (5, 101, 8)] {
+                let pm = matches!(task, Task::LogReg { .. });
+                let (dense, csr) = shard_pair(n, d, density, pad.max(n), pm, &mut rng);
+                let theta = rng.normal_vec(d);
+                let (gd, ld) = worker_grad(task, &dense, &theta);
+                let (gc, lc) = worker_grad(task, &csr, &theta);
+                assert_eq!(gd, gc, "{task:?} n={n} d={d} density={density}: gradient");
+                assert_eq!(
+                    ld.to_bits(),
+                    lc.to_bits(),
+                    "{task:?} n={n} d={d} density={density}: grad-pass loss"
+                );
+                let wd = worker_loss(task, &dense, &theta);
+                let wc = worker_loss(task, &csr, &theta);
+                assert_eq!(
+                    wd.to_bits(),
+                    wc.to_bits(),
+                    "{task:?} n={n} d={d} density={density}: worker_loss"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn spdot_and_matvecs_bitwise_agree() {
+    let mut rng = Rng::new(103);
+    for &density in DENSITIES {
+        // d values straddling the 4-wide block boundary
+        for d in [1usize, 3, 4, 5, 11, 64, 65] {
+            let n = 13;
+            let x = random_dense(n, d, density, &mut rng);
+            let a = CsrMatrix::from_dense(&x);
+            let v = rng.normal_vec(d);
+            let r = rng.normal_vec(n);
+            for i in 0..n {
+                let (cs, vs) = a.row(i);
+                assert_eq!(
+                    sparse::spdot(cs, vs, &v).to_bits(),
+                    lag::linalg::dot(x.row(i), &v).to_bits(),
+                    "d={d} density={density} row={i}"
+                );
+            }
+            assert_eq!(a.matvec(&v), x.matvec(&v), "matvec d={d} density={density}");
+            assert_eq!(a.t_matvec(&r), x.t_matvec(&r), "t_matvec d={d} density={density}");
+        }
+    }
+}
+
+#[test]
+fn scatter_axpy_bitwise_matches_dense_axpy() {
+    let mut rng = Rng::new(104);
+    for &density in DENSITIES {
+        let d = 37;
+        let x = random_dense(1, d, density, &mut rng);
+        let a = CsrMatrix::from_dense(&x);
+        let alpha = rng.normal();
+        let mut dense_out = rng.normal_vec(d);
+        let mut csr_out = dense_out.clone();
+        lag::linalg::axpy(alpha, x.row(0), &mut dense_out);
+        let (cs, vs) = a.row(0);
+        sparse::scatter_axpy(alpha, cs, vs, &mut csr_out);
+        for (j, (u, w)) in dense_out.iter().zip(&csr_out).enumerate() {
+            assert_eq!(u.to_bits(), w.to_bits(), "density={density} j={j}");
+        }
+    }
+}
+
+#[test]
+fn gram_bitwise_agrees() {
+    let mut rng = Rng::new(105);
+    for &density in &[0.05, 0.3, 1.0] {
+        let x = random_dense(40, 12, density, &mut rng);
+        let a = CsrMatrix::from_dense(&x);
+        assert_eq!(x.gram(), a.gram(), "density={density}");
+    }
+}
+
+#[test]
+fn problem_build_is_format_neutral() {
+    // the same data built from Dense shards and from CSR shards must agree
+    // on every derived quantity — L_m, L, θ*, L(θ*) — to the bit, for both
+    // tasks (the build path only uses order-preserving kernels)
+    use lag::data::Problem;
+    let mut rng = Rng::new(110);
+    for &task in TASKS {
+        let mut dense_shards = Vec::new();
+        let mut csr_shards = Vec::new();
+        for _ in 0..3 {
+            let x = random_dense(25, 8, 0.12, &mut rng);
+            let y: Vec<f64> = if matches!(task, Task::LogReg { .. }) {
+                (0..25).map(|_| rng.sign()).collect()
+            } else {
+                rng.normal_vec(25)
+            };
+            dense_shards.push((ShardStorage::Dense(x.clone()), y.clone()));
+            csr_shards.push((ShardStorage::Csr(CsrMatrix::from_dense(&x)), y));
+        }
+        let pd = Problem::build_storage("fmt", task, dense_shards, None).unwrap();
+        let pc = Problem::build_storage("fmt", task, csr_shards, None).unwrap();
+        assert_eq!(pd.l_m, pc.l_m, "{task:?}: L_m");
+        assert_eq!(pd.l_total.to_bits(), pc.l_total.to_bits(), "{task:?}: L");
+        assert_eq!(pd.theta_star, pc.theta_star, "{task:?}: theta_star");
+        assert_eq!(pd.loss_star.to_bits(), pc.loss_star.to_bits(), "{task:?}: loss_star");
+    }
+}
+
+#[test]
+fn power_iteration_is_format_neutral() {
+    let mut rng = Rng::new(106);
+    let x = random_dense(30, 10, 0.15, &mut rng);
+    let a = ShardStorage::Csr(CsrMatrix::from_dense(&x));
+    let ld = lag::linalg::power_iteration_gram(&x, 1e-12, 50_000);
+    let lc = lag::linalg::power_iteration_gram(&a, 1e-12, 50_000);
+    assert_eq!(
+        ld.to_bits(),
+        lc.to_bits(),
+        "matvec-only power iteration must not see the storage format"
+    );
+}
+
+#[test]
+fn auto_selection_thresholds_and_padding() {
+    let mut rng = Rng::new(107);
+    // sparse data → CSR, fully dense data → dense
+    let xs = random_dense(20, 10, 0.05, &mut rng);
+    let s = pad_shard(xs, rng.normal_vec(20), 32);
+    assert!(s.storage.is_csr());
+    assert_eq!(s.n_padded(), 32);
+    assert!(s.density() <= 0.25);
+    let xd = random_dense(20, 10, 1.0, &mut rng);
+    let s = pad_shard(xd, rng.normal_vec(20), 32);
+    assert!(!s.storage.is_csr());
+    // padding must not affect either format's gradient (pad rows are free
+    // in CSR and zero-weight in dense)
+    for &task in TASKS {
+        let mut r2 = Rng::new(108);
+        let (tight_d, tight_c) = shard_pair(15, 8, 0.1, 15, false, &mut r2);
+        let mut r2 = Rng::new(108);
+        let (padded_d, padded_c) = shard_pair(15, 8, 0.1, 40, false, &mut r2);
+        let theta = vec![0.3; 8];
+        let (g1, l1) = worker_grad(task, &tight_d, &theta);
+        let (g2, l2) = worker_grad(task, &padded_d, &theta);
+        let (g3, l3) = worker_grad(task, &tight_c, &theta);
+        let (g4, l4) = worker_grad(task, &padded_c, &theta);
+        assert_eq!(g1, g2);
+        assert_eq!(g1, g3);
+        assert_eq!(g1, g4);
+        assert_eq!(l1.to_bits(), l2.to_bits());
+        assert_eq!(l1.to_bits(), l3.to_bits());
+        assert_eq!(l1.to_bits(), l4.to_bits());
+    }
+}
+
+#[test]
+fn storage_views_are_consistent() {
+    let mut rng = Rng::new(109);
+    let x = random_dense(12, 7, 0.2, &mut rng);
+    let c = CsrMatrix::from_dense(&x);
+    let storage = ShardStorage::Csr(c.clone());
+    assert_eq!(storage.rows(), 12);
+    assert_eq!(storage.cols(), 7);
+    assert_eq!(storage.nnz(), c.nnz());
+    assert_eq!(storage.work_per_pass(), c.nnz());
+    assert_eq!(storage.to_dense(), x);
+    let dense = ShardStorage::Dense(x.clone());
+    assert_eq!(dense.nnz(), c.nnz());
+    assert_eq!(dense.work_per_pass(), 12 * 7);
+    let v = rng.normal_vec(7);
+    assert_eq!(storage.matvec(&v), dense.matvec(&v));
+}
