@@ -4,8 +4,7 @@
 //! Engine: native by default; set LAG_BENCH_ENGINE=pjrt to drive the AOT
 //! artifacts (requires `make artifacts`).
 
-use lag::data::synthetic;
-use lag::experiments::{paper_opts, report, EngineKind, ExpContext};
+use lag::experiments::{fig2, paper_opts, report, EngineKind, ExpContext};
 
 fn ctx() -> ExpContext {
     ExpContext {
@@ -20,10 +19,11 @@ fn ctx() -> ExpContext {
 
 fn main() -> anyhow::Result<()> {
     let ctx = ctx();
-    let p = synthetic::linreg_increasing_l(9, 50, 50, 1234);
+    let key = fig2::key();
+    let p = ctx.problem(&key)?;
     println!("bench fig3: synthetic linreg, increasing L_m, M = 9, eps = {:.0e}", ctx.target());
     let t0 = std::time::Instant::now();
-    let traces = ctx.compare(&p, |algo| paper_opts(&ctx, algo, p.m(), 60_000))?;
+    let traces = ctx.compare(&key, |algo| paper_opts(&ctx, algo, p.m(), 60_000))?;
     println!("{}", report::comparison_table(&traces, ctx.target()));
     print!("{}", report::savings_vs_gd(&traces));
     for t in &traces {

@@ -1,8 +1,7 @@
 //! Bench: regenerate Fig. 4 (synthetic logreg, uniform L_m = 4).
 //! `cargo bench --bench fig4_synthetic_uniform`.
 
-use lag::data::synthetic;
-use lag::experiments::{paper_opts, report, EngineKind, ExpContext};
+use lag::experiments::{fig4, paper_opts, report, EngineKind, ExpContext};
 
 fn main() -> anyhow::Result<()> {
     let ctx = ExpContext {
@@ -13,10 +12,11 @@ fn main() -> anyhow::Result<()> {
         quick: std::env::var("LAG_BENCH_QUICK").is_ok(),
         ..Default::default()
     };
-    let p = synthetic::logreg_uniform_l(9, 50, 50, 4321);
+    let key = fig4::key();
+    let p = ctx.problem(&key)?;
     println!("bench fig4: synthetic logreg, uniform L_m = 4, M = 9, eps = {:.0e}", ctx.target());
     let t0 = std::time::Instant::now();
-    let traces = ctx.compare(&p, |algo| paper_opts(&ctx, algo, p.m(), 60_000))?;
+    let traces = ctx.compare(&key, |algo| paper_opts(&ctx, algo, p.m(), 60_000))?;
     println!("{}", report::comparison_table(&traces, ctx.target()));
     print!("{}", report::savings_vs_gd(&traces));
     for t in &traces {

@@ -12,10 +12,11 @@ fn main() -> anyhow::Result<()> {
         quick: std::env::var("LAG_BENCH_QUICK").is_ok(),
         ..Default::default()
     };
-    let p = fig5::problem(3)?;
+    let key = fig5::key(3);
+    let p = ctx.problem(&key)?;
     println!("bench fig5: linreg real trio, M = 9, d = 8, eps = {:.0e}", ctx.target());
     let t0 = std::time::Instant::now();
-    let traces = ctx.compare(&p, |algo| paper_opts(&ctx, algo, p.m(), 100_000))?;
+    let traces = ctx.compare(&key, |algo| paper_opts(&ctx, algo, p.m(), 100_000))?;
     println!("{}", report::comparison_table(&traces, ctx.target()));
     print!("{}", report::savings_vs_gd(&traces));
     println!("total bench wall: {:.2}s", t0.elapsed().as_secs_f64());

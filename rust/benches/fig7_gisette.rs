@@ -17,10 +17,11 @@ fn main() -> anyhow::Result<()> {
     };
     println!("bench fig7: simulated Gisette, M = 9, eps = {:.0e} (full={full})", ctx.target());
     let t0 = std::time::Instant::now();
-    let p = fig7::problem()?;
+    let key = fig7::key();
+    let p = ctx.problem(&key)?;
     println!("problem built in {:.1}s (L = {:.4})", t0.elapsed().as_secs_f64(), p.l_total);
     let t1 = std::time::Instant::now();
-    let traces = ctx.compare(&p, |algo| {
+    let traces = ctx.compare(&key, |algo| {
         let mut o = paper_opts(&ctx, algo, p.m(), 40_000);
         if matches!(algo, Algorithm::CycIag | Algorithm::NumIag) {
             o.eval_every = 10;

@@ -8,14 +8,21 @@
 //! * full LAG-WK iteration (9 workers, native), sequential vs pool, and
 //!   the same on a sparse problem, CSR vs densified storage
 //!
+//! * run-level scheduler grid throughput: the quick-mode Table 5 grid,
+//!   sequential vs scheduled across cores (identical upload tables)
+//!
 //! `cargo bench --bench hotpath`
 //!
 //! Besides the human-readable report, writes `BENCH_hotpath.json` into the
 //! working directory so the perf trajectory is tracked across PRs
 //! (per-op nanoseconds, per-iteration times, uploads, speedups, and the
 //! density → CSR-speedup table behind the format-selection threshold).
-//! CI uploads the file as an artifact and gates on the dense fused-kernel
-//! op against `benches/BENCH_baseline.json` (scripts/check_bench_regression.py).
+//! CI uploads the file as an artifact and gates the dense fused gradient
+//! kernel against `benches/BENCH_baseline.json`
+//! (scripts/check_bench_regression.py): the gate compares the kernel to
+//! the [`frozen`] in-bench snapshot of the same code measured in the same
+//! process, so the gating `ratio` is machine-independent and the committed
+//! baseline (1.0) is armed without a runner-class calibration run.
 
 use lag::coordinator::trigger::{DiffHistory, TriggerConfig};
 use lag::coordinator::{run, Algorithm, ParameterServer, RunOptions};
@@ -26,6 +33,73 @@ use lag::util::json::Json;
 use lag::util::timer::{bench, fmt_dur, BenchStats};
 use lag::util::Rng;
 use std::time::Duration;
+
+/// Frozen (PR 4) copies of the dense fused linreg gradient kernel and the
+/// blocked `dot`/`axpy` primitives it stands on — the reference side of
+/// the machine-independent regression gate. DO NOT sync these with future
+/// crate changes: the gate exists to detect the *crate* kernel drifting
+/// slower than this snapshot, on whatever host runs the bench. Both sides
+/// are measured in the same process on the same data, so host speed
+/// cancels out of the ratio.
+mod frozen {
+    use lag::linalg::Matrix;
+
+    fn dot(a: &[f64], b: &[f64]) -> f64 {
+        let mut ca = a.chunks_exact(4);
+        let mut cb = b.chunks_exact(4);
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+        for (x, y) in (&mut ca).zip(&mut cb) {
+            s0 += x[0] * y[0];
+            s1 += x[1] * y[1];
+            s2 += x[2] * y[2];
+            s3 += x[3] * y[3];
+        }
+        let mut s = s0 + s1 + s2 + s3;
+        for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+            s += x * y;
+        }
+        s
+    }
+
+    fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+        let mut cy = y.chunks_exact_mut(4);
+        let mut cx = x.chunks_exact(4);
+        for (yb, xb) in (&mut cy).zip(&mut cx) {
+            yb[0] += alpha * xb[0];
+            yb[1] += alpha * xb[1];
+            yb[2] += alpha * xb[2];
+            yb[3] += alpha * xb[3];
+        }
+        for (yi, xi) in cy.into_remainder().iter_mut().zip(cx.remainder()) {
+            *yi += alpha * xi;
+        }
+    }
+
+    /// Snapshot of `grad::worker_grad_into`'s dense linreg arm.
+    pub fn linreg_grad_into(
+        x: &Matrix,
+        y: &[f64],
+        w: &[f64],
+        theta: &[f64],
+        g: &mut [f64],
+    ) -> f64 {
+        g.fill(0.0);
+        let mut loss = 0.0;
+        for i in 0..x.rows {
+            let row = x.row(i);
+            let res = dot(row, theta) - y[i];
+            let r = w[i] * res;
+            loss += r * res;
+            if r != 0.0 {
+                axpy(r, row, g);
+            }
+        }
+        for v in g.iter_mut() {
+            *v *= 2.0;
+        }
+        loss
+    }
+}
 
 fn op_json(s: &BenchStats) -> Json {
     Json::obj(vec![
@@ -104,8 +178,16 @@ fn main() {
         ops.push(("server_step_d50", op_json(&st)));
     }
 
-    // native gradients (allocation-free grad_into path)
-    {
+    // native gradients (allocation-free grad_into path), and on the same
+    // problem the regression gate: the crate's dense fused linreg kernel
+    // vs the frozen in-bench snapshot of the same code, same data, same
+    // process. host speed cancels out of the ratio, so the committed
+    // baseline (benches/BENCH_baseline.json, ratio 1.0) is armed on any
+    // runner; scripts/check_bench_regression.py fails CI when the crate
+    // kernel drifts >25% slower than the snapshot. both sides of the
+    // ratio are recorded as ops so a gate failure is diagnosable from the
+    // uploaded BENCH_hotpath.json alone.
+    let gate = {
         let p = synthetic::linreg_increasing_l(9, 50, 50, 1);
         let e = NativeEngine::new(&p);
         let theta = vec![0.1; 50];
@@ -119,7 +201,44 @@ fn main() {
         );
         println!("{}", st.report("native_grad linreg 50x50 "));
         ops.push(("native_grad_linreg_50x50", op_json(&st)));
-    }
+
+        let shard = &p.workers[0];
+        let x = shard.storage.to_dense();
+        let mut out_k = vec![0.0; 50];
+        let mut out_r = vec![0.0; 50];
+        let lk = worker_grad_into(Task::LinReg, shard, &theta, &mut out_k);
+        let lr = frozen::linreg_grad_into(&x, &shard.y, &shard.w, &theta, &mut out_r);
+        assert_eq!(out_k, out_r, "crate kernel must agree with the frozen snapshot bitwise");
+        assert_eq!(lk.to_bits(), lr.to_bits());
+        let sk = bench(
+            || {
+                std::hint::black_box(worker_grad_into(Task::LinReg, shard, &theta, &mut out_k));
+            },
+            50,
+            budget,
+        );
+        let sr = bench(
+            || {
+                std::hint::black_box(frozen::linreg_grad_into(
+                    &x, &shard.y, &shard.w, &theta, &mut out_r,
+                ));
+            },
+            50,
+            budget,
+        );
+        let ratio = sk.mean / sr.mean;
+        println!("{}", sk.report("gate_grad linreg 50x50   "));
+        println!("{}", sr.report("ref_grad  linreg 50x50   "));
+        println!("gate: crate kernel / frozen snapshot = {ratio:.3} (baseline 1.0, fail >1.25)");
+        ops.push(("gate_grad_linreg_50x50", op_json(&sk)));
+        ops.push(("ref_grad_linreg_50x50", op_json(&sr)));
+        Json::obj(vec![
+            ("op", Json::Str("gate_grad_linreg_50x50".into())),
+            ("reference", Json::Str("ref_grad_linreg_50x50".into())),
+            ("ratio", Json::Num(ratio)),
+        ])
+    };
+
     {
         // worker 3 is an Adult shard (~12% density) that auto-selects CSR;
         // pin a densified copy so this op keeps tracking the *dense* fused
@@ -304,9 +423,58 @@ fn main() {
         seq_tr.total_uploads()
     );
 
+    // run-level scheduler: the quick-mode Table 5 grid (2 tasks ×
+    // M ∈ {9, 18} × 5 algorithms = 20 runs over 4 problems), sequential
+    // harness vs scheduled across all cores. The upload tables must match
+    // exactly — the scheduler's whole claim — and each context must build
+    // each distinct problem exactly once.
+    let grid = {
+        use lag::experiments::{table5, ExpContext};
+        let ms: &[usize] = &[3, 6];
+        let runs = 2 * ms.len() * Algorithm::ALL.len();
+        let problems = 2 * ms.len();
+        let ctx_seq = ExpContext { quick: true, sched_threads: 1, ..Default::default() };
+        let t0 = std::time::Instant::now();
+        let seq = table5::measure(&ctx_seq, ms).expect("sequential table5 grid");
+        let seq_s = t0.elapsed().as_secs_f64();
+        let ctx_par = ExpContext { quick: true, sched_threads: 0, ..Default::default() };
+        let t0 = std::time::Instant::now();
+        let par = table5::measure(&ctx_par, ms).expect("scheduled table5 grid");
+        let par_s = t0.elapsed().as_secs_f64();
+        assert_eq!(
+            seq.uploads, par.uploads,
+            "scheduled grid must reproduce the sequential upload table exactly"
+        );
+        for ctx in [&ctx_seq, &ctx_par] {
+            assert_eq!(
+                ctx.cache.builds(),
+                problems,
+                "each distinct problem key must be built exactly once"
+            );
+        }
+        let speedup = seq_s / par_s;
+        println!(
+            "grid_table5_quick(2 tasks x M in [9,18] x 5 algos): {seq_s:.2}s sequential, \
+             {par_s:.2}s scheduled on {threads} threads ({speedup:.2}x, identical upload \
+             tables, {problems} problems built once each)"
+        );
+        Json::obj(vec![
+            ("grid", Json::Str("table5_quick".into())),
+            ("runs", Json::Num(runs as f64)),
+            ("distinct_problems", Json::Num(problems as f64)),
+            ("problem_builds", Json::Num(ctx_par.cache.builds() as f64)),
+            ("sequential_s", Json::Num(seq_s)),
+            ("scheduled_s", Json::Num(par_s)),
+            ("sched_threads", Json::Num(threads as f64)),
+            ("speedup", Json::Num(speedup)),
+        ])
+    };
+
     let doc = Json::obj(vec![
         ("bench", Json::Str("hotpath".into())),
         ("host_threads", Json::Num(threads as f64)),
+        ("gate", gate),
+        ("grid_throughput", grid),
         ("ops", Json::Obj(ops.into_iter().map(|(k, v)| (k.to_string(), v)).collect())),
         ("sparse_kernels", Json::Arr(sparse_kernels)),
         ("lag_wk_sparse_iteration", sparse_e2e),

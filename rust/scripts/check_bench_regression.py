@@ -3,22 +3,65 @@
 
 Usage: check_bench_regression.py CURRENT.json BASELINE.json [MAX_REGRESSION]
 
-Compares the `native_grad_linreg_50x50` op (the dense fused gradient
-kernel — the one hot-path op every workload shares) between the freshly
-measured BENCH_hotpath.json and the committed baseline, and fails if mean
-latency regressed by more than MAX_REGRESSION (default 0.25, i.e. 25%).
+Primary (armed) mode — ratio gate: `benches/hotpath.rs` measures the
+crate's dense fused linreg gradient kernel next to a frozen in-bench
+snapshot of the same code (`hotpath.rs::frozen`), in the same process on
+the same data, and records `gate.ratio = crate_ns / snapshot_ns`. Host
+speed cancels out of that ratio, so the committed baseline ratio (1.0)
+holds on any runner class without a calibration run. The gate fails when
 
-A baseline whose value is null is "unarmed": the gate prints the current
-measurement and passes, so the first CI run on a new runner class can
-record a real number. Re-arm with:
+    current.gate.ratio > baseline.gate.ratio * (1 + MAX_REGRESSION)
 
-    cargo bench --bench hotpath
-    cp BENCH_hotpath.json benches/BENCH_baseline.json
+i.e. when the crate kernel drifts more than MAX_REGRESSION (default 0.25,
+25%) slower than the snapshot relative to the committed state.
+
+Legacy mode — absolute nanoseconds: when the baseline has no `gate`
+object, the `native_grad_linreg_50x50` op's `mean_ns` is compared
+directly (a `null` baseline value is unarmed and passes). Kept so older
+baselines keep working.
 """
 import json
 import sys
 
 OP = "native_grad_linreg_50x50"
+
+
+def gate_ratio(cur: dict, base: dict, max_reg: float) -> int:
+    cur_ratio = cur["gate"]["ratio"]
+    base_ratio = base["gate"]["ratio"]
+    allowed = base_ratio * (1.0 + max_reg)
+    print(
+        f"gate ratio (crate kernel / frozen snapshot): {cur_ratio:.3f} "
+        f"vs baseline {base_ratio:.3f} (fail above {allowed:.3f})"
+    )
+    if cur_ratio > allowed:
+        print(
+            f"FAIL: dense fused kernel regressed "
+            f"{100 * (cur_ratio / base_ratio - 1):.0f}% vs the frozen snapshot "
+            f"(allowed {100 * max_reg:.0f}%)"
+        )
+        return 1
+    print("OK")
+    return 0
+
+
+def gate_absolute_ns(cur: dict, base: dict, max_reg: float) -> int:
+    cur_ns = cur["ops"][OP]["mean_ns"]
+    base_ns = base["ops"][OP]["mean_ns"]
+    if base_ns is None:
+        print(f"{OP}: baseline unarmed; current mean {cur_ns:.1f} ns (recording run)")
+        print("arm the gate by committing a baseline with a gate.ratio (see hotpath.rs)")
+        return 0
+    ratio = cur_ns / base_ns
+    print(f"{OP}: {cur_ns:.1f} ns vs baseline {base_ns:.1f} ns ({ratio:.2f}x)")
+    if ratio > 1.0 + max_reg:
+        print(
+            f"FAIL: dense fused kernel regressed {100 * (ratio - 1):.0f}% "
+            f"(allowed {100 * max_reg:.0f}%)"
+        )
+        return 1
+    print("OK")
+    return 0
 
 
 def main() -> int:
@@ -29,25 +72,16 @@ def main() -> int:
     max_reg = float(sys.argv[3]) if len(sys.argv) > 3 else 0.25
 
     with open(cur_path) as f:
-        cur = json.load(f)["ops"][OP]["mean_ns"]
+        cur = json.load(f)
     with open(base_path) as f:
-        base = json.load(f)["ops"][OP]["mean_ns"]
+        base = json.load(f)
 
-    if base is None:
-        print(f"{OP}: baseline unarmed; current mean {cur:.1f} ns (recording run)")
-        print("arm the gate by committing BENCH_hotpath.json as benches/BENCH_baseline.json")
-        return 0
-
-    ratio = cur / base
-    print(f"{OP}: {cur:.1f} ns vs baseline {base:.1f} ns ({ratio:.2f}x)")
-    if ratio > 1.0 + max_reg:
-        print(
-            f"FAIL: dense fused kernel regressed {100 * (ratio - 1):.0f}% "
-            f"(allowed {100 * max_reg:.0f}%)"
-        )
-        return 1
-    print("OK")
-    return 0
+    if "gate" in base:
+        if "gate" not in cur:
+            print("FAIL: baseline expects a gate ratio but the current bench has none")
+            return 1
+        return gate_ratio(cur, base, max_reg)
+    return gate_absolute_ns(cur, base, max_reg)
 
 
 if __name__ == "__main__":

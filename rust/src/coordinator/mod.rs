@@ -33,7 +33,7 @@ pub use pool::{with_pool, PoolHandle};
 pub use proximal::{prox_run, ProxOptions};
 pub use quantize::QuantizedVec;
 pub use robust::{robust_run, Attack, RobustOptions};
-pub use run::{run, RunOptions};
+pub use run::{run, run_with_workspace, RunOptions, RunWorkspace};
 pub use server::ParameterServer;
 pub use tcp::{run_leader, run_worker};
 pub use transport::{parallel_run, TransportOptions};

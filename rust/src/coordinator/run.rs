@@ -89,7 +89,17 @@ impl Default for RunOptions {
 /// Preallocated per-run scratch: the worker gradient caches and the shared
 /// gradient buffer. Everything the loop writes per iteration lives here or
 /// in the [`ParameterServer`]; nothing is allocated per iteration.
-struct Workspace {
+///
+/// A workspace is reusable across runs (and across *different* problems):
+/// [`run_with_workspace`] resets it to the run's `(m, d)` shape, growing
+/// buffers only when a larger problem arrives. The run-level scheduler
+/// (`experiments::sched`) keeps one workspace per executor thread, so a
+/// whole experiment grid performs O(threads) workspace allocations instead
+/// of O(runs). Reset invalidates every cache (`has_cached` cleared), so a
+/// reused workspace is observationally identical to a fresh one — traces
+/// stay bit-identical (asserted by `tests/determinism.rs`).
+#[derive(Default)]
+pub struct RunWorkspace {
     /// Scratch for the engine's gradient output (sequential path).
     grad: Vec<f64>,
     /// Per-worker cached gradients ∇L_m(θ̂_m) (dense, preallocated).
@@ -100,14 +110,27 @@ struct Workspace {
     contact_set: Vec<usize>,
 }
 
-impl Workspace {
-    fn new(m: usize, d: usize) -> Self {
-        Workspace {
-            grad: vec![0.0; d],
-            cached: vec![vec![0.0; d]; m],
-            has_cached: vec![false; m],
-            contact_set: Vec::with_capacity(m),
+impl RunWorkspace {
+    pub fn new() -> Self {
+        RunWorkspace::default()
+    }
+
+    /// Shape the workspace for an `(m, d)` run, reusing prior allocations.
+    /// All caches are invalidated; leftover buffer contents are never read
+    /// (a cache slot is only read after `has_cached[m]` is set, which
+    /// happens strictly after the slot is overwritten).
+    fn reset(&mut self, m: usize, d: usize) {
+        self.grad.resize(d, 0.0);
+        if self.cached.len() < m {
+            self.cached.resize_with(m, Vec::new);
         }
+        for c in &mut self.cached[..m] {
+            c.resize(d, 0.0);
+        }
+        self.has_cached.clear();
+        self.has_cached.resize(m, false);
+        self.contact_set.clear();
+        self.contact_set.reserve(m);
     }
 }
 
@@ -117,7 +140,7 @@ impl Workspace {
 /// upload adds `g` directly (no clone).
 fn apply_upload(
     server: &mut ParameterServer,
-    ws: &mut Workspace,
+    ws: &mut RunWorkspace,
     stats: &mut CommStats,
     events: &mut [Vec<usize>],
     mi: usize,
@@ -139,7 +162,7 @@ fn apply_upload(
 /// buffer, then upload.
 fn contact(
     server: &mut ParameterServer,
-    ws: &mut Workspace,
+    ws: &mut RunWorkspace,
     engine: &dyn GradEngine,
     stats: &mut CommStats,
     events: &mut [Vec<usize>],
@@ -192,13 +215,28 @@ pub fn run(
     opts: &RunOptions,
     engine: &dyn GradEngine,
 ) -> RunTrace {
+    let mut ws = RunWorkspace::new();
+    run_with_workspace(problem, algo, opts, engine, &mut ws)
+}
+
+/// Like [`run`], but reusing a caller-owned [`RunWorkspace`] — the entry
+/// point for schedulers that execute many runs back to back on one thread.
+/// Bit-identical to [`run`] for any prior workspace state.
+pub fn run_with_workspace(
+    problem: &Problem,
+    algo: Algorithm,
+    opts: &RunOptions,
+    engine: &dyn GradEngine,
+    ws: &mut RunWorkspace,
+) -> RunTrace {
+    ws.reset(problem.m(), problem.d);
     let threads = effective_threads(problem, algo, opts, engine);
     if threads > 1 {
         pool::with_pool(problem, threads, |pool| {
-            run_loop(problem, algo, opts, engine, Some(pool))
+            run_loop(problem, algo, opts, engine, Some(pool), ws)
         })
     } else {
-        run_loop(problem, algo, opts, engine, None)
+        run_loop(problem, algo, opts, engine, None, ws)
     }
 }
 
@@ -208,6 +246,7 @@ fn run_loop(
     opts: &RunOptions,
     engine: &dyn GradEngine,
     pool: Option<&PoolHandle<'_>>,
+    ws: &mut RunWorkspace,
 ) -> RunTrace {
     let m = problem.m();
     let d = problem.d;
@@ -220,7 +259,6 @@ fn run_loop(
     let trigger = TriggerConfig::uniform(opts.d_history, xi);
     let theta0 = opts.theta0.clone().unwrap_or_else(|| vec![0.0; d]);
     let mut server = ParameterServer::new(d, m, opts.d_history, theta0);
-    let mut ws = Workspace::new(m, d);
     let mut stats = CommStats::default();
     let mut events: Vec<Vec<usize>> = vec![Vec::new(); m];
     let mut rng = Rng::new(opts.seed);
@@ -253,11 +291,11 @@ fn run_loop(
                     for mi in 0..m {
                         let out = pool.result(mi);
                         let g: &[f64] = &out.grad;
-                        apply_upload(&mut server, &mut ws, &mut stats, &mut events, mi, k, g);
+                        apply_upload(&mut server, ws, &mut stats, &mut events, mi, k, g);
                     }
                 } else {
                     for mi in 0..m {
-                        contact(&mut server, &mut ws, engine, &mut stats, &mut events, mi, k);
+                        contact(&mut server, ws, engine, &mut stats, &mut events, mi, k);
                     }
                 }
             }
@@ -276,7 +314,7 @@ fn run_loop(
                             || trigger.wk_violated(dist2(&ws.cached[mi], &out.grad), rhs);
                         if violated {
                             let g: &[f64] = &out.grad;
-                            apply_upload(&mut server, &mut ws, &mut stats, &mut events, mi, k, g);
+                            apply_upload(&mut server, ws, &mut stats, &mut events, mi, k, g);
                         }
                     }
                 } else {
@@ -288,9 +326,7 @@ fn run_loop(
                         let violated = !ws.has_cached[mi]
                             || trigger.wk_violated(dist2(&ws.cached[mi], &grad), rhs);
                         if violated {
-                            apply_upload(
-                                &mut server, &mut ws, &mut stats, &mut events, mi, k, &grad,
-                            );
+                            apply_upload(&mut server, ws, &mut stats, &mut events, mi, k, &grad);
                         }
                         ws.grad = grad;
                     }
@@ -320,13 +356,13 @@ fn run_loop(
                     for &mi in &set {
                         let out = pool.result(mi);
                         let g: &[f64] = &out.grad;
-                        apply_upload(&mut server, &mut ws, &mut stats, &mut events, mi, k, g);
+                        apply_upload(&mut server, ws, &mut stats, &mut events, mi, k, g);
                     }
                     ws.contact_set = set;
                 } else {
                     let contact_set = std::mem::take(&mut ws.contact_set);
                     for &mi in &contact_set {
-                        contact(&mut server, &mut ws, engine, &mut stats, &mut events, mi, k);
+                        contact(&mut server, ws, engine, &mut stats, &mut events, mi, k);
                     }
                     ws.contact_set = contact_set;
                 }
@@ -334,12 +370,12 @@ fn run_loop(
             Algorithm::CycIag => {
                 let mi = (k - 1) % m;
                 stats.downloads += 1;
-                contact(&mut server, &mut ws, engine, &mut stats, &mut events, mi, k);
+                contact(&mut server, ws, engine, &mut stats, &mut events, mi, k);
             }
             Algorithm::NumIag => {
                 let mi = rng.weighted(&problem.l_m);
                 stats.downloads += 1;
-                contact(&mut server, &mut ws, engine, &mut stats, &mut events, mi, k);
+                contact(&mut server, ws, engine, &mut stats, &mut events, mi, k);
             }
         }
 

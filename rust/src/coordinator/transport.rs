@@ -11,12 +11,21 @@
 //! Worker gradients run natively in the worker threads (PJRT clients are
 //! not `Send`; the PJRT path is exercised through the synchronous driver,
 //! where XLA parallelizes internally).
+//!
+//! Allocation discipline (DESIGN.md §7 applied to message passing): every
+//! `Vec<f64>` that crosses a channel is recycled. Workers keep their
+//! gradient and cached-gradient buffers across rounds (`worker_grad_into`
+//! writes in place); delta vectors return to their worker through a
+//! per-worker return channel after the server absorbs them; spent iterate
+//! buffers ride back on the worker's reply and refill the server's
+//! broadcast pool. Steady state performs zero heap allocation per round —
+//! the warm-up rounds allocate each buffer once.
 
 use super::trigger::{DiffHistory, TriggerConfig};
 use super::{Algorithm, RunOptions};
 use crate::data::Problem;
-use crate::grad::worker_grad;
-use crate::linalg::{axpy, dist2, sub};
+use crate::grad::worker_grad_into;
+use crate::linalg::{axpy, dist2};
 use crate::metrics::{IterRecord, RunTrace};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -44,6 +53,8 @@ struct FromWorker {
     k: usize,
     /// `Some(δ∇)` if the worker uploaded, `None` if it skipped.
     delta: Option<Vec<f64>>,
+    /// The round's spent iterate buffer, returned for broadcast reuse.
+    theta_back: Vec<f64>,
 }
 
 /// Run GD or LAG-WK over real channels. Returns a trace identical in
@@ -78,36 +89,50 @@ pub fn parallel_run(
     std::thread::scope(|scope| {
         // spawn workers
         let mut worker_tx = Vec::with_capacity(m);
+        let mut delta_return_tx = Vec::with_capacity(m);
         for mi in 0..m {
             let (tx, rx) = mpsc::channel::<ToWorker>();
             worker_tx.push(tx);
+            // server → worker return path for spent delta buffers
+            let (ret_tx, ret_rx) = mpsc::channel::<Vec<f64>>();
+            delta_return_tx.push(ret_tx);
             let to_server = to_server_tx.clone();
             let shard = &problem.workers[mi];
             let task = problem.task;
             let use_trigger = algo == Algorithm::LagWk;
             scope.spawn(move || {
-                // worker-local state: cached gradient at the last upload
-                let mut cached: Option<Vec<f64>> = None;
+                // worker-local state, reused across every round: the fresh
+                // gradient scratch and the cached gradient at last upload
+                let mut grad = vec![0.0; d];
+                let mut cached = vec![0.0; d];
+                let mut has_cached = false;
                 while let Ok(msg) = rx.recv() {
                     match msg {
                         ToWorker::Round { k, theta, rhs } => {
-                            let (g, _loss) = worker_grad(task, shard, &theta);
-                            let violated = match (&cached, use_trigger) {
-                                (None, _) => true,
-                                (Some(_), false) => true, // GD always uploads
-                                (Some(c), true) => dist2(c, &g) > rhs,
-                            };
+                            worker_grad_into(task, shard, &theta, &mut grad);
+                            let violated = !has_cached
+                                || !use_trigger // GD always uploads
+                                || dist2(&cached, &grad) > rhs;
                             let delta = if violated {
-                                let dvec = match &cached {
-                                    Some(c) => sub(&g, c),
-                                    None => g.clone(),
-                                };
-                                cached = Some(g);
+                                // recycle a returned delta buffer when one
+                                // is waiting; warm-up allocates it once
+                                let mut dvec = ret_rx.try_recv().unwrap_or_default();
+                                dvec.resize(d, 0.0);
+                                if has_cached {
+                                    for ((dv, g), c) in dvec.iter_mut().zip(&grad).zip(&cached) {
+                                        *dv = g - c;
+                                    }
+                                } else {
+                                    dvec.copy_from_slice(&grad);
+                                    has_cached = true;
+                                }
+                                cached.copy_from_slice(&grad);
                                 Some(dvec)
                             } else {
                                 None
                             };
-                            let _ = to_server.send(FromWorker { m: mi, k, delta });
+                            let _ =
+                                to_server.send(FromWorker { m: mi, k, delta, theta_back: theta });
                         }
                         ToWorker::Shutdown => break,
                     }
@@ -118,6 +143,7 @@ pub fn parallel_run(
 
         // server loop
         let mut theta = opts.theta0.clone().unwrap_or_else(|| vec![0.0; d]);
+        let mut prev = vec![0.0; d];
         let mut agg = vec![0.0; d];
         let mut history = DiffHistory::new(opts.d_history);
         records.push(IterRecord {
@@ -128,13 +154,19 @@ pub fn parallel_run(
             cum_grad_evals: 0,
         });
 
+        // broadcast buffer pool, refilled by the workers' replies — after
+        // the first round no broadcast allocates
+        let mut theta_pool: Vec<Vec<f64>> = Vec::new();
         'outer: for k in 1..=opts.max_iters {
             let rhs = trigger.rhs(alpha, m, &history);
             if !topts.broadcast_latency.is_zero() {
                 std::thread::sleep(topts.broadcast_latency);
             }
             for tx in &worker_tx {
-                let _ = tx.send(ToWorker::Round { k, theta: theta.clone(), rhs });
+                let mut t = theta_pool.pop().unwrap_or_default();
+                t.resize(d, 0.0);
+                t.copy_from_slice(&theta);
+                let _ = tx.send(ToWorker::Round { k, theta: t, rhs });
             }
             downloads += m as u64;
             grad_evals += m as u64;
@@ -143,6 +175,7 @@ pub fn parallel_run(
             for _ in 0..m {
                 let msg = to_server_rx.recv().expect("worker died");
                 debug_assert_eq!(msg.k, k);
+                theta_pool.push(msg.theta_back);
                 if let Some(delta) = msg.delta {
                     // serial uplink: each upload pays the latency
                     if !topts.upload_latency.is_zero() {
@@ -151,11 +184,13 @@ pub fn parallel_run(
                     axpy(1.0, &delta, &mut agg);
                     uploads += 1;
                     events[msg.m].push(k);
+                    // hand the spent buffer back to its worker for reuse
+                    let _ = delta_return_tx[msg.m].send(delta);
                 }
             }
 
             // θ^{k+1} = θᵏ − α ∇ᵏ
-            let prev = theta.clone();
+            prev.copy_from_slice(&theta);
             axpy(-alpha, &agg, &mut theta);
             history.push(dist2(&theta, &prev));
 

@@ -2,20 +2,27 @@
 //! iterations of LAG-WK on the increasing-L_m synthetic linreg workload.
 //! Workers with small smoothness constants should upload rarely (Lemma 4).
 
-use super::ExpContext;
+use super::{ExpContext, ProblemKey, RunSpec};
 use crate::coordinator::{Algorithm, RunOptions};
-use crate::data::synthetic;
 use crate::metrics::ascii_event_plot;
 
+/// The fig. 2/3 problem — one build serves both figures via the cache.
+pub fn key() -> ProblemKey {
+    ProblemKey::SynLinregIncreasing { m: 9, n: 50, d: 50, seed: 1234 }
+}
+
 pub fn run(ctx: &ExpContext) -> anyhow::Result<()> {
-    let p = synthetic::linreg_increasing_l(9, 50, 50, 1234);
+    let p = ctx.problem(&key())?;
     let opts = RunOptions {
         max_iters: ctx.cap(1000),
         target_err: None,
         stop_at_target: false,
         ..Default::default()
     };
-    let trace = ctx.run_algo(&p, Algorithm::LagWk, &opts)?;
+    let trace = ctx
+        .run_specs(vec![RunSpec { key: key(), algo: Algorithm::LagWk, opts: opts.clone() }])?
+        .pop()
+        .expect("one spec, one trace");
 
     println!("Fig. 2 — LAG-WK upload events (|= upload), L_1 < ... < L_9:");
     print!("{}", ascii_event_plot(&trace, &[0, 2, 4, 6, 8], 72));
@@ -42,6 +49,7 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::synthetic;
 
     #[test]
     fn fig2_runs_and_low_l_workers_upload_less() {

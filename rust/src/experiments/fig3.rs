@@ -1,16 +1,17 @@
 //! Fig. 3 — iteration & communication complexity on synthetic linear
 //! regression with increasing smoothness constants L_m = (1.3^{m-1} + 1)².
 
-use super::{paper_opts, report, ExpContext};
-use crate::data::synthetic;
+use super::{fig2, paper_opts, report, ExpContext};
 
 pub fn run(ctx: &ExpContext) -> anyhow::Result<()> {
-    let p = synthetic::linreg_increasing_l(9, 50, 50, 1234);
+    // same key as fig. 2 — the cache shares one build across both figures
+    let key = fig2::key();
+    let p = ctx.problem(&key)?;
     println!(
         "Fig. 3 — synthetic linreg, increasing L_m (L = {:.2}, κ-regime), M = 9",
         p.l_total
     );
-    let traces = ctx.compare(&p, |algo| paper_opts(ctx, algo, p.m(), 60_000))?;
+    let traces = ctx.compare(&key, |algo| paper_opts(ctx, algo, p.m(), 60_000))?;
     print!("{}", report::comparison_table(&traces, ctx.target()));
     print!("{}", report::savings_vs_gd(&traces));
     for t in &traces {
@@ -29,6 +30,7 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<()> {
 mod tests {
     use super::*;
     use crate::coordinator::Algorithm;
+    use crate::data::synthetic;
 
     #[test]
     fn fig3_lag_wk_beats_gd_in_uploads() {

@@ -3,13 +3,17 @@
 //! Even without L_m spread, LAG-WK exploits the hidden smoothness (local
 //! curvature flatter than L_m) and still wins on communication.
 
-use super::{paper_opts, report, ExpContext};
-use crate::data::synthetic;
+use super::{paper_opts, report, ExpContext, ProblemKey};
+
+pub fn key() -> ProblemKey {
+    ProblemKey::SynLogregUniform { m: 9, n: 50, d: 50, seed: 4321 }
+}
 
 pub fn run(ctx: &ExpContext) -> anyhow::Result<()> {
-    let p = synthetic::logreg_uniform_l(9, 50, 50, 4321);
+    let key = key();
+    let p = ctx.problem(&key)?;
     println!("Fig. 4 — synthetic logreg, uniform L_m = 4, M = 9 (λ = 1e-3)");
-    let traces = ctx.compare(&p, |algo| paper_opts(ctx, algo, p.m(), 60_000))?;
+    let traces = ctx.compare(&key, |algo| paper_opts(ctx, algo, p.m(), 60_000))?;
     print!("{}", report::comparison_table(&traces, ctx.target()));
     print!("{}", report::savings_vs_gd(&traces));
     ctx.write_traces("fig4", &traces)?;
@@ -21,6 +25,7 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<()> {
 mod tests {
     use super::*;
     use crate::coordinator::Algorithm;
+    use crate::data::synthetic;
 
     #[test]
     fn fig4_uniform_lm_lag_wk_still_saves() {

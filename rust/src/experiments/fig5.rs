@@ -3,11 +3,17 @@
 //! features trimmed to the group minimum d = 8, shards padded to the
 //! registered artifact shape 176×8.
 
-use super::{paper_opts, report, ExpContext};
+use super::{paper_opts, report, ExpContext, ProblemKey};
 use crate::data::{partition, uci, Problem, Task};
 
+/// Cache key for the Fig. 5 / Table 5 linreg problems.
+pub fn key(shards_each: usize) -> ProblemKey {
+    ProblemKey::LinregReal { shards_each }
+}
+
 /// Build the Fig. 5 problem with `shards_each` workers per dataset
-/// (3 → M = 9; Table 5 reuses this with 6 and 9).
+/// (3 → M = 9; Table 5 reuses this with 6 and 9). Experiments resolve it
+/// through [`key`] and the context's problem cache instead.
 pub fn problem(shards_each: usize) -> anyhow::Result<Problem> {
     let trio = uci::linreg_trio();
     let dmin = uci::min_features(&trio);
@@ -29,13 +35,14 @@ pub fn problem(shards_each: usize) -> anyhow::Result<Problem> {
 }
 
 pub fn run(ctx: &ExpContext) -> anyhow::Result<()> {
-    let p = problem(3)?;
+    let key = key(3);
+    let p = ctx.problem(&key)?;
     println!(
         "Fig. 5 — linreg on simulated Housing/Bodyfat/Abalone, M = 9, d = {} (L = {:.3})",
         p.d, p.l_total
     );
     println!("per-worker L_m: {:?}", p.l_m.iter().map(|l| (l * 100.0).round() / 100.0).collect::<Vec<_>>());
-    let traces = ctx.compare(&p, |algo| paper_opts(ctx, algo, p.m(), 100_000))?;
+    let traces = ctx.compare(&key, |algo| paper_opts(ctx, algo, p.m(), 100_000))?;
     print!("{}", report::comparison_table(&traces, ctx.target()));
     print!("{}", report::savings_vs_gd(&traces));
     ctx.write_traces("fig5", &traces)?;

@@ -2,8 +2,13 @@
 //! Derm trio: 3 workers per dataset, d = 34, λ = 1e-3, shards padded to the
 //! registered artifact shape 544×34.
 
-use super::{paper_opts, report, ExpContext};
+use super::{paper_opts, report, ExpContext, ProblemKey};
 use crate::data::{partition, uci, Problem, Task};
+
+/// Cache key for the Fig. 6 / Table 5 logreg problems.
+pub fn key(shards_each: usize) -> ProblemKey {
+    ProblemKey::LogregReal { shards_each }
+}
 
 pub fn problem(shards_each: usize) -> anyhow::Result<Problem> {
     let trio = uci::logreg_trio();
@@ -25,12 +30,13 @@ pub fn problem(shards_each: usize) -> anyhow::Result<Problem> {
 }
 
 pub fn run(ctx: &ExpContext) -> anyhow::Result<()> {
-    let p = problem(3)?;
+    let key = key(3);
+    let p = ctx.problem(&key)?;
     println!(
         "Fig. 6 — logreg on simulated Ionosphere/Adult/Derm, M = 9, d = {} (L = {:.3})",
         p.d, p.l_total
     );
-    let traces = ctx.compare(&p, |algo| paper_opts(ctx, algo, p.m(), 150_000))?;
+    let traces = ctx.compare(&key, |algo| paper_opts(ctx, algo, p.m(), 150_000))?;
     print!("{}", report::comparison_table(&traces, ctx.target()));
     print!("{}", report::savings_vs_gd(&traces));
     ctx.write_traces("fig6", &traces)?;

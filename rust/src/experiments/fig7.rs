@@ -1,8 +1,12 @@
 //! Fig. 7 — logistic regression on the (simulated) Gisette dataset
 //! (2000 × 4837), randomly split into 9 workers, padded to 224×4837.
 
-use super::{paper_opts, report, ExpContext};
+use super::{paper_opts, report, ExpContext, ProblemKey};
 use crate::data::{gisette, partition, Problem, Task};
+
+pub fn key() -> ProblemKey {
+    ProblemKey::Gisette
+}
 
 pub fn problem() -> anyhow::Result<Problem> {
     let ds = gisette::load(0);
@@ -12,12 +16,13 @@ pub fn problem() -> anyhow::Result<Problem> {
 
 pub fn run(ctx: &ExpContext) -> anyhow::Result<()> {
     println!("Fig. 7 — logreg on simulated Gisette (2000×4837), M = 9");
-    let p = problem()?;
+    let key = key();
+    let p = ctx.problem(&key)?;
     println!("built problem: L = {:.4}, L_m in [{:.4}, {:.4}]",
         p.l_total,
         p.l_m.iter().cloned().fold(f64::MAX, f64::min),
         p.l_m.iter().cloned().fold(0.0, f64::max));
-    let traces = ctx.compare(&p, |algo| {
+    let traces = ctx.compare(&key, |algo| {
         let mut o = paper_opts(ctx, algo, p.m(), 40_000);
         // the objective pass over 2000×4837 dominates the IAG baselines'
         // per-iteration cost; evaluate every 10th iteration there

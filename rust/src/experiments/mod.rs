@@ -19,12 +19,16 @@ pub mod fig6;
 pub mod fig7;
 pub mod nonconvex;
 pub mod report;
+pub mod sched;
 pub mod table5;
 
-use crate::coordinator::{run, Algorithm, RunOptions, RunTrace};
+pub use sched::{ProblemCache, ProblemKey, RunSpec, Scheduler};
+
+use crate::coordinator::{run, run_with_workspace, Algorithm, RunOptions, RunTrace};
 use crate::data::Problem;
 use crate::grad::NativeEngine;
 use crate::runtime::PjrtEngine;
+use std::sync::Arc;
 
 /// Which gradient engine the experiments use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -54,6 +58,12 @@ pub struct ExpContext {
     pub out_dir: String,
     /// Quick mode: relaxed target + iteration caps (CI-sized runs).
     pub quick: bool,
+    /// Run-level scheduler threads: 0 = auto (host cores), 1 = sequential.
+    /// Results are bit-identical for every value (DESIGN.md §9).
+    pub sched_threads: usize,
+    /// Memoized problem builds, shared across every experiment driven
+    /// through this context (`Clone` shares the cache).
+    pub cache: ProblemCache,
 }
 
 impl Default for ExpContext {
@@ -63,6 +73,8 @@ impl Default for ExpContext {
             artifacts_dir: "artifacts".into(),
             out_dir: "results".into(),
             quick: false,
+            sched_threads: 0,
+            cache: ProblemCache::default(),
         }
     }
 }
@@ -104,16 +116,70 @@ impl ExpContext {
         }
     }
 
-    /// Run all five paper algorithms, returning their traces.
+    /// Resolve `key` through the shared memoized cache.
+    pub fn problem(&self, key: &ProblemKey) -> anyhow::Result<Arc<Problem>> {
+        self.cache.get(key)
+    }
+
+    /// The run-level scheduler this context is configured for.
+    pub fn scheduler(&self) -> Scheduler {
+        Scheduler::new(self.sched_threads)
+    }
+
+    /// Submit a batch of runs to the run-level scheduler. Problems resolve
+    /// through the shared [`ProblemCache`] *inside* the jobs, so distinct
+    /// setups build concurrently but each exactly once. Results come back
+    /// in submission order, bit-identical for any `sched_threads`.
+    ///
+    /// Nested-parallelism policy (DESIGN.md §9): when the scheduler fans a
+    /// multi-run batch across threads, every run is forced onto the
+    /// sequential driver inner loop (`threads = 1`) — run-level
+    /// parallelism owns the cores. A single-run batch, or a sequential
+    /// scheduler (`sched_threads == 1`), keeps each spec's own `threads`
+    /// option, so the round-level pool still serves single large runs and
+    /// the one-thread scheduler behaves exactly like the pre-scheduler
+    /// harness. Either way traces are bit-identical.
+    pub fn run_specs(&self, specs: Vec<RunSpec>) -> anyhow::Result<Vec<RunTrace>> {
+        let run_level_parallel = self.scheduler().threads() > 1 && specs.len() > 1;
+        let jobs: Vec<_> = specs
+            .into_iter()
+            .map(|spec| {
+                let ctx = self.clone();
+                move |ws: &mut crate::coordinator::RunWorkspace| -> anyhow::Result<RunTrace> {
+                    let problem = ctx.cache.get(&spec.key)?;
+                    let mut opts = spec.opts;
+                    if run_level_parallel {
+                        opts.threads = 1;
+                    }
+                    match ctx.engine {
+                        EngineKind::Native => {
+                            let e = NativeEngine::new(&problem);
+                            Ok(run_with_workspace(&problem, spec.algo, &opts, &e, ws))
+                        }
+                        EngineKind::Pjrt => {
+                            let e = PjrtEngine::new(&problem, &ctx.artifacts_dir)?;
+                            Ok(run_with_workspace(&problem, spec.algo, &opts, &e, ws))
+                        }
+                    }
+                }
+            })
+            .collect();
+        self.scheduler().scatter(jobs).into_iter().collect()
+    }
+
+    /// Run all five paper algorithms on the problem behind `key` through
+    /// the run-level scheduler, returning their traces in
+    /// [`Algorithm::ALL`] order.
     pub fn compare(
         &self,
-        problem: &Problem,
+        key: &ProblemKey,
         opts_for: impl Fn(Algorithm) -> RunOptions,
     ) -> anyhow::Result<Vec<RunTrace>> {
-        Algorithm::ALL
+        let specs = Algorithm::ALL
             .iter()
-            .map(|&algo| self.run_algo(problem, algo, &opts_for(algo)))
-            .collect()
+            .map(|&algo| RunSpec { key: key.clone(), algo, opts: opts_for(algo) })
+            .collect();
+        self.run_specs(specs)
     }
 
     /// Write per-algorithm CSV traces under `out_dir/<exp_id>/`.
@@ -166,6 +232,14 @@ pub fn run_experiment(id: &str, ctx: &ExpContext) -> anyhow::Result<()> {
                 println!("\n================ {id} ================");
                 run_experiment(id, ctx)?;
             }
+            // the shared cache makes the cross-experiment memoization
+            // visible: fig2/fig3 share one problem, fig5/fig6 share
+            // Table 5's M = 9 problems
+            println!(
+                "\nproblem cache: {} distinct problems, {} builds",
+                ctx.cache.len(),
+                ctx.cache.builds()
+            );
             Ok(())
         }
         other => anyhow::bail!("unknown experiment '{other}' (fig2..fig7, table5, all)"),

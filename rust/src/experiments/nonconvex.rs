@@ -113,8 +113,20 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<()> {
     let cap = ctx.cap(60_000);
     let target = if ctx.quick { 1e-10 } else { 1e-12 };
     println!("Theorem 3 — nonconvex sigmoid loss, M = 9 (L = {l_total:.3}), target ‖∇L‖² ≤ {target:.0e}");
-    let (gi, gu, gt) = run_nonconvex(&p, l_total, false, cap, target);
-    let (li, lu, lt) = run_nonconvex(&p, l_total, true, cap, target);
+    // the GD and LAG-WK studies are independent runs — fan them across the
+    // run-level scheduler (submission-order results keep GD first)
+    let p_ref = &p;
+    let jobs: Vec<_> = [false, true]
+        .iter()
+        .map(|&lag| {
+            move |_ws: &mut crate::coordinator::RunWorkspace| {
+                run_nonconvex(p_ref, l_total, lag, cap, target)
+            }
+        })
+        .collect();
+    let mut results = ctx.scheduler().scatter(jobs);
+    let (li, lu, lt) = results.pop().expect("lag result");
+    let (gi, gu, gt) = results.pop().expect("gd result");
     println!("{:<10} {:>8} {:>10}", "algorithm", "iters", "uploads");
     println!("{:<10} {:>8} {:>10}", "batch-gd", gi, gu);
     println!("{:<10} {:>8} {:>10}", "lag-wk", li, lu);

@@ -1,7 +1,10 @@
 //! Report rendering: comparison tables (measured vs. paper) printed by the
-//! experiment harness and the benches.
+//! experiment harness and the benches, plus the machine-readable JSON
+//! report emitted next to the CSVs.
 
+use super::table5::Table5Result;
 use crate::metrics::RunTrace;
+use crate::util::json::Json;
 
 /// Render the per-algorithm convergence comparison the figures are built
 /// from: iterations and uploads to target, plus the final error.
@@ -78,6 +81,26 @@ pub fn ascii_curve(points: &[(f64, f64)], width: usize, height: usize, title: &s
     }
     out.push_str(&format!("   x: {xmin:.0} .. {xmax:.0}\n"));
     out
+}
+
+/// Machine-readable Table 5 report. Deterministic by construction — rows
+/// follow the `BTreeMap` key order and uploads are integers — so the
+/// serialized string is bitwise-stable across scheduler thread counts
+/// (asserted by `tests/determinism.rs`).
+pub fn table5_json(res: &Table5Result, ms: &[usize]) -> Json {
+    let rows: Vec<Json> = res
+        .uploads
+        .iter()
+        .map(|((task, mi, algo), u)| {
+            Json::obj(vec![
+                ("task", Json::Str(task.clone())),
+                ("m", Json::Num((ms[*mi] * 3) as f64)),
+                ("algorithm", Json::Str(algo.clone())),
+                ("uploads", u.map(|v| Json::Num(v as f64)).unwrap_or(Json::Null)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![("table", Json::Str("table5".into())), ("rows", Json::Arr(rows))])
 }
 
 /// Table 5 of the paper — the reference numbers we compare shape against.
@@ -165,6 +188,21 @@ mod tests {
             };
             paper_ordering(get).unwrap();
         }
+    }
+
+    #[test]
+    fn table5_json_is_deterministic_and_complete() {
+        use std::collections::BTreeMap;
+        let mut uploads = BTreeMap::new();
+        uploads.insert(("linreg".to_string(), 0usize, "lag-wk".to_string()), Some(412u64));
+        uploads.insert(("linreg".to_string(), 0usize, "batch-gd".to_string()), None);
+        let res = Table5Result { uploads };
+        let s = table5_json(&res, &[3]).to_string();
+        assert_eq!(s, table5_json(&res, &[3]).to_string());
+        assert!(s.contains("\"algorithm\":\"lag-wk\""));
+        assert!(s.contains("\"uploads\":412"));
+        assert!(s.contains("\"uploads\":null"));
+        assert!(s.contains("\"m\":9"));
     }
 
     #[test]

@@ -1,0 +1,337 @@
+//! Run-level experiment scheduler: memoized problem builds, a
+//! work-stealing executor that fans *whole runs* across cores, and
+//! submission-order result collection (DESIGN.md §9).
+//!
+//! The paper's reproduction is a grid of independent runs (figs 2–7,
+//! Table 5's 2 tasks × M ∈ {9, 18, 27} × 5 algorithms, the nonconvex
+//! study). The round-level pool in `coordinator::pool` speeds up a single
+//! run; this module is the layer above it — it schedules the grid:
+//!
+//! * [`ProblemKey`] names every problem the experiments use; a key fully
+//!   determines `(dataset, M, task, regularizer, padding, seed)`.
+//! * [`ProblemCache`] memoizes `ProblemKey → Arc<Problem>`: each expensive
+//!   setup (Newton-CG θ*, power-iteration L_m, loss*) is built **exactly
+//!   once** — even under concurrent first access — and shared by every
+//!   figure/table that uses it.
+//! * [`Scheduler::scatter`] runs submitted jobs on a small work-stealing
+//!   executor. Each executor thread owns one [`RunWorkspace`], reused
+//!   across the runs it executes, so a grid performs O(threads) workspace
+//!   allocations instead of O(runs).
+//!
+//! Determinism contract: results are returned **in submission order**, and
+//! a run fanned out with others executes the sequential driver inner loop
+//! (`RunOptions::threads` forced to 1 when a multi-thread scheduler runs a
+//! multi-run batch — the round-level pool is reserved for single large
+//! runs and for the one-thread scheduler). A run's trace is a pure
+//! function of `(problem, algorithm, options, seed)`, so the grid's
+//! traces and report output are bit-identical to the sequential harness
+//! for any scheduler thread count (`tests/determinism.rs`).
+
+use crate::coordinator::pool;
+use crate::coordinator::RunWorkspace;
+use crate::coordinator::{Algorithm, RunOptions};
+use crate::data::{synthetic, Problem};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Identity of a fully-specified experiment problem. Two equal keys build
+/// bitwise-identical problems (every generator is deterministic in its
+/// parameters), which is what licenses sharing one `Arc<Problem>` across
+/// figures and tables.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum ProblemKey {
+    /// Synthetic linreg, increasing L_m (figs. 2–3).
+    SynLinregIncreasing { m: usize, n: usize, d: usize, seed: u64 },
+    /// Synthetic logreg, uniform L_m (fig. 4).
+    SynLogregUniform { m: usize, n: usize, d: usize, seed: u64 },
+    /// Linreg on the simulated Housing/Bodyfat/Abalone trio with
+    /// `shards_each` workers per dataset (fig. 5, Table 5).
+    LinregReal { shards_each: usize },
+    /// Logreg (λ = 1e-3) on the simulated Ionosphere/Adult/Derm trio
+    /// (fig. 6, Table 5).
+    LogregReal { shards_each: usize },
+    /// Logreg (λ = 1e-3) on simulated Gisette, M = 9 (fig. 7).
+    Gisette,
+}
+
+impl ProblemKey {
+    /// Build the problem this key names (expensive: runs the setup
+    /// solvers). Callers normally go through [`ProblemCache::get`].
+    pub fn build(&self) -> anyhow::Result<Problem> {
+        match *self {
+            ProblemKey::SynLinregIncreasing { m, n, d, seed } => {
+                Ok(synthetic::linreg_increasing_l(m, n, d, seed))
+            }
+            ProblemKey::SynLogregUniform { m, n, d, seed } => {
+                Ok(synthetic::logreg_uniform_l(m, n, d, seed))
+            }
+            ProblemKey::LinregReal { shards_each } => super::fig5::problem(shards_each),
+            ProblemKey::LogregReal { shards_each } => super::fig6::problem(shards_each),
+            ProblemKey::Gisette => super::fig7::problem(),
+        }
+    }
+}
+
+/// One unit of scheduled work: run `algo` on the problem behind `key`
+/// with `opts`.
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    pub key: ProblemKey,
+    pub algo: Algorithm,
+    pub opts: RunOptions,
+}
+
+/// A memoized build slot: init-once, cloneable result (errors as strings
+/// so they stay cloneable too).
+type BuildCell = Arc<OnceLock<Result<Arc<Problem>, String>>>;
+
+#[derive(Debug, Default)]
+struct CacheInner {
+    /// Key → init-once build slot. The per-key `OnceLock` (not the map
+    /// lock) serializes concurrent first builds of the *same* key while
+    /// builds of different keys proceed in parallel.
+    map: Mutex<HashMap<ProblemKey, BuildCell>>,
+    builds: AtomicUsize,
+}
+
+/// Concurrency-safe memoized problem builds. `Clone` shares the cache
+/// (`Arc` inside), so one cache can serve every experiment of a report.
+#[derive(Debug, Clone, Default)]
+pub struct ProblemCache(Arc<CacheInner>);
+
+impl ProblemCache {
+    /// Get (or build exactly once) the problem behind `key`. Concurrent
+    /// callers with the same key block on the single build; callers with
+    /// different keys build in parallel. Errors are memoized too, so a
+    /// failing build reports the same error to every run that needs it.
+    pub fn get(&self, key: &ProblemKey) -> anyhow::Result<Arc<Problem>> {
+        let cell = {
+            let mut map = self.0.map.lock().expect("problem cache lock poisoned");
+            map.entry(key.clone()).or_insert_with(|| Arc::new(OnceLock::new())).clone()
+        };
+        cell.get_or_init(|| {
+            self.0.builds.fetch_add(1, Ordering::Relaxed);
+            key.build().map(Arc::new).map_err(|e| format!("{e:#}"))
+        })
+        .clone()
+        .map_err(|e| anyhow::anyhow!("building {key:?}: {e}"))
+    }
+
+    /// Number of distinct keys resident in the cache.
+    pub fn len(&self) -> usize {
+        self.0.map.lock().expect("problem cache lock poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total problem builds performed — equals [`ProblemCache::len`] when
+    /// memoization worked (each distinct key built exactly once).
+    pub fn builds(&self) -> usize {
+        self.0.builds.load(Ordering::Relaxed)
+    }
+}
+
+/// Work-stealing run-level executor. Whole runs (or arbitrary jobs) fan
+/// across `threads` scoped OS threads; results come back in submission
+/// order regardless of completion order.
+#[derive(Debug, Clone, Copy)]
+pub struct Scheduler {
+    threads: usize,
+}
+
+impl Scheduler {
+    /// `threads == 0` resolves to the host core count (like
+    /// `RunOptions::threads` auto mode); `1` executes jobs sequentially on
+    /// the calling thread.
+    pub fn new(threads: usize) -> Scheduler {
+        let threads = if threads == 0 { pool::default_threads() } else { threads };
+        Scheduler { threads: threads.max(1) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute `jobs` and return their results **in submission order**.
+    /// Each executor thread owns one [`RunWorkspace`] handed to every job
+    /// it runs (sequential mode reuses a single workspace). Jobs must be
+    /// pure given a reset workspace; under that contract the output is
+    /// independent of the thread count and of which thread ran which job.
+    ///
+    /// Scheduling: jobs are dealt round-robin into per-thread deques in
+    /// submission order; a thread pops its own queue front-first and, when
+    /// empty, steals from the *back* of a sibling's queue — long-tailed
+    /// grids (Table 5's IAG runs next to cheap LAG runs) stay balanced
+    /// without a global lock on every pop.
+    pub fn scatter<T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send,
+        F: FnOnce(&mut RunWorkspace) -> T + Send,
+    {
+        let n = jobs.len();
+        let threads = self.threads.min(n.max(1));
+        if threads <= 1 {
+            let mut ws = RunWorkspace::new();
+            return jobs.into_iter().map(|job| job(&mut ws)).collect();
+        }
+
+        // submission-order result slots; each written exactly once
+        type Slot<T> = Mutex<Option<T>>;
+        type JobQueue<F> = Mutex<VecDeque<(usize, F)>>;
+        let slots: Vec<Slot<T>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let queues: Vec<JobQueue<F>> = (0..threads).map(|_| Mutex::new(VecDeque::new())).collect();
+        for (i, job) in jobs.into_iter().enumerate() {
+            queues[i % threads].lock().expect("sched queue poisoned").push_back((i, job));
+        }
+
+        std::thread::scope(|scope| {
+            for t in 0..threads {
+                let queues = &queues;
+                let slots = &slots;
+                scope.spawn(move || {
+                    let mut ws = RunWorkspace::new();
+                    loop {
+                        // own queue first (front: submission order) …
+                        let mut job = queues[t].lock().expect("sched queue poisoned").pop_front();
+                        if job.is_none() {
+                            // … then steal from the back of the others
+                            for off in 1..threads {
+                                let victim = (t + off) % threads;
+                                job = queues[victim]
+                                    .lock()
+                                    .expect("sched queue poisoned")
+                                    .pop_back();
+                                if job.is_some() {
+                                    break;
+                                }
+                            }
+                        }
+                        match job {
+                            Some((i, f)) => {
+                                let out = f(&mut ws);
+                                *slots[i].lock().expect("sched slot poisoned") = Some(out);
+                            }
+                            // all queues empty: no job ever spawns new
+                            // jobs, so the batch is drained
+                            None => break,
+                        }
+                    }
+                });
+            }
+        });
+
+        slots
+            .into_iter()
+            .map(|s| {
+                s.into_inner()
+                    .expect("sched slot poisoned")
+                    .expect("scheduler job result missing")
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{run, run_with_workspace};
+    use crate::grad::NativeEngine;
+
+    fn toy_key() -> ProblemKey {
+        ProblemKey::SynLinregIncreasing { m: 4, n: 15, d: 6, seed: 7 }
+    }
+
+    #[test]
+    fn cache_returns_same_arc_and_builds_once() {
+        let cache = ProblemCache::default();
+        let a = cache.get(&toy_key()).unwrap();
+        let b = cache.get(&toy_key()).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "same key must share one Arc<Problem>");
+        assert_eq!(cache.builds(), 1);
+        assert_eq!(cache.len(), 1);
+        cache.get(&ProblemKey::SynLogregUniform { m: 3, n: 12, d: 5, seed: 8 }).unwrap();
+        assert_eq!(cache.builds(), 2);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn cached_build_bitwise_matches_direct_build() {
+        let cache = ProblemCache::default();
+        let cached = cache.get(&toy_key()).unwrap();
+        let direct = toy_key().build().unwrap();
+        assert_eq!(cached.name, direct.name);
+        for (a, b) in cached.theta_star.iter().zip(&direct.theta_star) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in cached.l_m.iter().zip(&direct.l_m) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(cached.loss_star.to_bits(), direct.loss_star.to_bits());
+    }
+
+    #[test]
+    fn concurrent_first_access_builds_exactly_once() {
+        let cache = ProblemCache::default();
+        let key = toy_key();
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                let cache = cache.clone();
+                let key = key.clone();
+                scope.spawn(move || {
+                    cache.get(&key).unwrap();
+                });
+            }
+        });
+        assert_eq!(cache.builds(), 1, "8 concurrent getters, one build");
+    }
+
+    #[test]
+    fn scatter_returns_submission_order_for_any_thread_count() {
+        for threads in [1, 2, 3, 8] {
+            let sched = Scheduler::new(threads);
+            let jobs: Vec<_> = (0..17).map(|i| move |_ws: &mut RunWorkspace| i * i).collect();
+            let out = sched.scatter(jobs);
+            assert_eq!(out, (0..17).map(|i| i * i).collect::<Vec<_>>(), "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn scatter_handles_empty_and_single_batches() {
+        let sched = Scheduler::new(4);
+        let empty: Vec<fn(&mut RunWorkspace) -> usize> = Vec::new();
+        assert!(sched.scatter(empty).is_empty());
+        let one = vec![|_ws: &mut RunWorkspace| 42usize];
+        assert_eq!(sched.scatter(one), vec![42]);
+    }
+
+    #[test]
+    fn auto_threads_resolve_to_host_cores() {
+        assert_eq!(Scheduler::new(0).threads(), pool::default_threads());
+        assert_eq!(Scheduler::new(3).threads(), 3);
+    }
+
+    #[test]
+    fn workspace_reuse_across_different_problems_is_bit_identical() {
+        // one thread runs problems of different (m, d) shapes back to back
+        // through a single reused workspace; every trace must match a
+        // fresh-workspace run exactly
+        let p_small = synthetic::linreg_increasing_l(3, 12, 5, 21);
+        let p_large = synthetic::logreg_uniform_l(6, 18, 9, 22);
+        let opts = RunOptions { max_iters: 80, ..Default::default() };
+        let mut ws = RunWorkspace::new();
+        for p in [&p_large, &p_small, &p_large] {
+            for algo in Algorithm::ALL {
+                let e = NativeEngine::new(p);
+                let reused = run_with_workspace(p, algo, &opts, &e, &mut ws);
+                let fresh = run(p, algo, &opts, &NativeEngine::new(p));
+                assert_eq!(reused.upload_events, fresh.upload_events, "{algo:?} {}", p.name);
+                for (a, b) in reused.records.iter().zip(&fresh.records) {
+                    assert_eq!(a.obj_err.to_bits(), b.obj_err.to_bits(), "{algo:?} k={}", a.k);
+                }
+            }
+        }
+    }
+}

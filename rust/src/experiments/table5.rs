@@ -2,7 +2,7 @@
 //! for M ∈ {9, 18, 27} workers, on both real-data tasks, all five
 //! algorithms. Prints measured values side-by-side with the paper's.
 
-use super::{fig5, fig6, paper_opts, report, ExpContext};
+use super::{fig5, fig6, paper_opts, report, ExpContext, RunSpec};
 use crate::coordinator::Algorithm;
 use crate::util::csv::CsvWriter;
 use std::collections::BTreeMap;
@@ -12,26 +12,51 @@ pub struct Table5Result {
     pub uploads: BTreeMap<(String, usize, String), Option<u64>>,
 }
 
-pub fn measure(ctx: &ExpContext, ms: &[usize]) -> anyhow::Result<Table5Result> {
-    let mut uploads = BTreeMap::new();
+/// The full Table 5 grid as scheduler specs: 2 tasks × |ms| worker counts
+/// × 5 algorithms, in deterministic submission order. Returned next to the
+/// `(task, m_index, algo)` coordinates of each spec.
+pub fn grid(ctx: &ExpContext, ms: &[usize]) -> (Vec<RunSpec>, Vec<(String, usize, String)>) {
+    let mut specs = Vec::new();
+    let mut coords = Vec::new();
     for (task_name, gd_cap) in [("linreg", 100_000usize), ("logreg", 150_000usize)] {
         for (mi, &shards_each) in ms.iter().enumerate() {
-            let p = if task_name == "linreg" {
-                fig5::problem(shards_each)?
+            let key = if task_name == "linreg" {
+                fig5::key(shards_each)
             } else {
-                fig6::problem(shards_each)?
+                fig6::key(shards_each)
             };
-            let m = p.m();
-            println!("  table5: {task_name} M={m} ...");
+            let m = shards_each * 3; // 3 datasets per task group
             for algo in Algorithm::ALL {
-                let t = ctx.run_algo(&p, algo, &paper_opts(ctx, algo, m, gd_cap))?;
-                uploads.insert(
-                    (task_name.to_string(), mi, algo.name().to_string()),
-                    t.uploads_at_target,
-                );
+                specs.push(RunSpec {
+                    key: key.clone(),
+                    algo,
+                    opts: paper_opts(ctx, algo, m, gd_cap),
+                });
+                coords.push((task_name.to_string(), mi, algo.name().to_string()));
             }
         }
     }
+    (specs, coords)
+}
+
+/// Run the whole grid through the run-level scheduler: whole runs fan
+/// across cores, each distinct problem is built exactly once (shared
+/// `Arc<Problem>`), and the result map is identical to the sequential
+/// harness for any `ctx.sched_threads`.
+pub fn measure(ctx: &ExpContext, ms: &[usize]) -> anyhow::Result<Table5Result> {
+    let (specs, coords) = grid(ctx, ms);
+    println!(
+        "  table5: scheduling {} runs over {} problems on {} threads ...",
+        specs.len(),
+        2 * ms.len(),
+        ctx.scheduler().threads()
+    );
+    let traces = ctx.run_specs(specs)?;
+    let uploads = coords
+        .into_iter()
+        .zip(&traces)
+        .map(|(coord, t)| (coord, t.uploads_at_target))
+        .collect();
     Ok(Table5Result { uploads })
 }
 
@@ -99,6 +124,11 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<()> {
         ])?;
     }
     w.finish()?;
+    // machine-readable report (deterministic: BTreeMap order + integer
+    // uploads), compared bitwise across scheduler thread counts by
+    // tests/determinism.rs
+    let json = report::table5_json(&res, ms).to_string() + "\n";
+    std::fs::write(dir.join("table5.json"), json)?;
     println!("wrote {}/table5", ctx.out_dir);
     Ok(())
 }

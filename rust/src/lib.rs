@@ -46,9 +46,10 @@ pub mod util;
 /// Common imports for downstream users and the examples.
 pub mod prelude {
     pub use crate::coordinator::{
-        run, Algorithm, CommStats, RunOptions, RunTrace,
+        run, run_with_workspace, Algorithm, CommStats, RunOptions, RunTrace, RunWorkspace,
     };
     pub use crate::data::{Dataset, Problem, ShardStorage, SparseDataset, Task, WorkerShard};
+    pub use crate::experiments::{ProblemCache, ProblemKey, RunSpec, Scheduler};
     pub use crate::grad::{GradEngine, NativeEngine};
     pub use crate::linalg::{CsrMatrix, MatOps, Matrix};
 }

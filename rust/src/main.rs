@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! lag exp <fig2|fig3|fig4|fig5|fig6|fig7|table5|all> [--engine pjrt|native]
-//!         [--artifacts DIR] [--out DIR] [--quick]
+//!         [--artifacts DIR] [--out DIR] [--quick] [--sched-threads N]
 //! lag train --task linreg|logreg --algo lag-wk|lag-ps|gd|cyc-iag|num-iag
 //!         [--m 9] [--n 50] [--d 50] [--iters 1000] [--target 1e-8]
 //!         [--engine pjrt|native] [--seed 1234] [--profile increasing|uniform]
@@ -49,7 +49,9 @@ fn print_help() {
          worker       TCP worker: --addr host:7070 --index 0 (same problem flags)\n  \
          plot         render a results CSV as an ASCII curve: lag plot results/fig3/lag-wk.csv\n  \
          info         list AOT artifacts\n\n\
-         common flags: --engine pjrt|native  --artifacts DIR  --out DIR  --quick"
+         common flags: --engine pjrt|native  --artifacts DIR  --out DIR  --quick\n  \
+         --sched-threads N   run-level scheduler width for exp grids (0 = auto,\n                      \
+         1 = sequential; results are bit-identical either way)"
     );
 }
 
@@ -59,6 +61,10 @@ fn ctx_from(args: &Args) -> anyhow::Result<ExpContext> {
         artifacts_dir: args.opt_or("artifacts", "artifacts"),
         out_dir: args.opt_or("out", "results"),
         quick: args.has_flag("quick"),
+        // run-level scheduler width: 0 = auto (host cores), 1 = sequential;
+        // outputs are bit-identical for every value
+        sched_threads: args.opt_usize("sched-threads", 0)?,
+        ..Default::default()
     })
 }
 

@@ -9,7 +9,10 @@
 
 use lag::coordinator::{run, Algorithm, RunOptions, RunTrace};
 use lag::data::{synthetic, Problem};
+use lag::experiments::{report, table5::Table5Result, ExpContext, ProblemKey, RunSpec};
 use lag::grad::NativeEngine;
+use std::collections::BTreeMap;
+use std::sync::Arc;
 
 fn assert_bit_identical(a: &RunTrace, b: &RunTrace, label: &str) {
     assert_eq!(a.records.len(), b.records.len(), "{label}: record count");
@@ -137,6 +140,141 @@ fn csr_problems_bit_identical_across_thread_counts() {
                 );
             }
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Run-level scheduler (experiments::sched): the scheduled grid must be a
+// pure function of the specs — bit-identical traces and report JSON for
+// every scheduler thread count, with each problem built exactly once.
+// ---------------------------------------------------------------------------
+
+/// A Table 5-shaped grid (2 tasks × 2 problems × all 5 algorithms) over
+/// CI-sized synthetic problems, in deterministic submission order.
+fn grid_specs() -> Vec<RunSpec> {
+    let keys = [
+        ProblemKey::SynLinregIncreasing { m: 5, n: 20, d: 10, seed: 51 },
+        ProblemKey::SynLinregIncreasing { m: 7, n: 18, d: 8, seed: 52 },
+        ProblemKey::SynLogregUniform { m: 4, n: 16, d: 9, seed: 53 },
+        ProblemKey::SynLogregUniform { m: 6, n: 14, d: 7, seed: 54 },
+    ];
+    let mut specs = Vec::new();
+    for key in keys {
+        for algo in Algorithm::ALL {
+            specs.push(RunSpec {
+                key: key.clone(),
+                algo,
+                opts: RunOptions {
+                    max_iters: 150,
+                    target_err: Some(1e-9),
+                    record_thetas: true,
+                    ..Default::default()
+                },
+            });
+        }
+    }
+    specs
+}
+
+/// Render a grid's traces the way table5 renders its report JSON: task
+/// from the key order, uploads-at-target per cell.
+fn grid_report_json(traces: &[RunTrace]) -> String {
+    let mut uploads = BTreeMap::new();
+    for (i, t) in traces.iter().enumerate() {
+        let task = if i < 10 { "linreg" } else { "logreg" };
+        let mi = (i / 5) % 2;
+        uploads.insert((task.to_string(), mi, t.algo.clone()), t.uploads_at_target);
+    }
+    report::table5_json(&Table5Result { uploads }, &[1, 2]).to_string()
+}
+
+#[test]
+fn scheduled_grid_bit_identical_across_thread_counts() {
+    let seq_ctx = ExpContext { sched_threads: 1, ..Default::default() };
+    let seq = seq_ctx.run_specs(grid_specs()).expect("sequential grid");
+    assert_eq!(seq.len(), 20);
+    let seq_json = grid_report_json(&seq);
+    for sched_threads in [2, 0] {
+        let ctx = ExpContext { sched_threads, ..Default::default() };
+        let par = ctx.run_specs(grid_specs()).expect("scheduled grid");
+        for (a, b) in seq.iter().zip(&par) {
+            assert_bit_identical(
+                a,
+                b,
+                &format!("{} on {} with sched_threads={sched_threads}", a.algo, a.problem),
+            );
+        }
+        // the rendered report is bitwise identical too
+        assert_eq!(seq_json, grid_report_json(&par), "sched_threads={sched_threads}");
+        // 4 distinct problem keys → exactly 4 builds, even under
+        // concurrent first access from 20 runs
+        assert_eq!(ctx.cache.builds(), 4, "sched_threads={sched_threads}");
+        assert_eq!(ctx.cache.len(), 4);
+    }
+}
+
+#[test]
+fn scheduled_trace_csv_bytes_match_sequential() {
+    // the exact artifact the figures are built from — CSV bytes on disk —
+    // must be identical whichever thread count produced the traces
+    // (per-process dir: concurrent test invocations must not interleave)
+    let dir = std::env::temp_dir().join(format!("lag_sched_csv_test_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let seq_ctx = ExpContext { sched_threads: 1, ..Default::default() };
+    let par_ctx = ExpContext { sched_threads: 0, ..Default::default() };
+    let seq = seq_ctx.run_specs(grid_specs()).unwrap();
+    let par = par_ctx.run_specs(grid_specs()).unwrap();
+    for (i, (a, b)) in seq.iter().zip(&par).enumerate() {
+        let pa = dir.join(format!("seq_{i}.csv"));
+        let pb = dir.join(format!("par_{i}.csv"));
+        a.write_csv(&pa).unwrap();
+        b.write_csv(&pb).unwrap();
+        assert_eq!(
+            std::fs::read(&pa).unwrap(),
+            std::fs::read(&pb).unwrap(),
+            "trace CSV {i} ({} on {})",
+            a.algo,
+            a.problem
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn problem_cache_shares_one_arc_per_key() {
+    let ctx = ExpContext::default();
+    let key = ProblemKey::SynLinregIncreasing { m: 5, n: 20, d: 10, seed: 51 };
+    let a = ctx.problem(&key).unwrap();
+    let b = ctx.problem(&key).unwrap();
+    assert!(Arc::ptr_eq(&a, &b), "same key must return the same Arc<Problem>");
+    assert_eq!(ctx.cache.builds(), 1);
+    // and the cached build is bitwise the direct build
+    let direct = key.build().unwrap();
+    assert_eq!(a.loss_star.to_bits(), direct.loss_star.to_bits());
+    for (x, y) in a.theta_star.iter().zip(&direct.theta_star) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+    for (x, y) in a.l_m.iter().zip(&direct.l_m) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+}
+
+#[test]
+fn scheduled_single_run_matches_direct_run() {
+    // a 1-spec batch keeps its round-level threads option; either way the
+    // trace must equal a direct run() of the same spec
+    let key = ProblemKey::SynLinregIncreasing { m: 5, n: 20, d: 10, seed: 51 };
+    let opts = RunOptions { max_iters: 120, record_thetas: true, ..Default::default() };
+    let ctx = ExpContext::default();
+    for algo in [Algorithm::Gd, Algorithm::LagWk, Algorithm::NumIag] {
+        let sched = ctx
+            .run_specs(vec![RunSpec { key: key.clone(), algo, opts: opts.clone() }])
+            .unwrap()
+            .pop()
+            .unwrap();
+        let p = key.build().unwrap();
+        let direct = run(&p, algo, &opts, &NativeEngine::new(&p));
+        assert_bit_identical(&sched, &direct, &format!("{algo:?} scheduled vs direct"));
     }
 }
 

@@ -15,6 +15,7 @@ fn quick_ctx(tag: &str) -> ExpContext {
             .to_string_lossy()
             .into_owned(),
         quick: true,
+        ..Default::default()
     }
 }
 
@@ -108,6 +109,28 @@ fn fig2_event_frequencies_track_importance() {
         inversions * 4 <= pairs,
         "upload counts should mostly increase with L_m: {counts:?} ({inversions}/{pairs} inversions)"
     );
+}
+
+#[test]
+fn scheduled_compare_matches_run_algo_and_builds_once() {
+    // the scheduler path (ctx.compare over a ProblemKey) must reproduce
+    // the direct run_algo path exactly, with a single problem build
+    // serving all five algorithm runs
+    let ctx = quick_ctx("sched");
+    let key = lag::experiments::ProblemKey::SynLinregIncreasing { m: 9, n: 50, d: 50, seed: 77 };
+    let traces = ctx.compare(&key, |algo| paper_opts(&ctx, algo, 9, 800)).unwrap();
+    assert_eq!(traces.len(), 5);
+    assert_eq!(ctx.cache.builds(), 1, "five runs, one problem build");
+    let p = ctx.problem(&key).unwrap();
+    for t in &traces {
+        let algo = Algorithm::parse(&t.algo).unwrap();
+        let direct = ctx.run_algo(&p, algo, &paper_opts(&ctx, algo, 9, 800)).unwrap();
+        assert_eq!(t.upload_events, direct.upload_events, "{}", t.algo);
+        assert_eq!(t.records.len(), direct.records.len(), "{}", t.algo);
+        for (a, b) in t.records.iter().zip(&direct.records) {
+            assert_eq!(a.obj_err.to_bits(), b.obj_err.to_bits(), "{} k={}", t.algo, a.k);
+        }
+    }
 }
 
 #[test]
