@@ -2,6 +2,12 @@
 //! options, engine) — the front door for scripted sweeps and deployments
 //! (`lag run --config cfg.json`).
 //!
+//! Unknown option keys are rejected (a typo'd sweep fails loudly instead
+//! of silently running defaults). The `options` object accepts every
+//! [`RunOptions`] field, including the stochastic family's `batch`
+//! (`"full"`, an integer, or a fraction in (0, 1)) and `lasg_rule`
+//! (`"wk1" | "wk2" | "ps1" | "ps2"`).
+//!
 //! ```json
 //! {
 //!   "problem": {"kind": "synthetic", "task": "linreg", "profile": "increasing",
@@ -21,22 +27,39 @@ use crate::util::json::{parse, Json};
 /// What data the run uses.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ProblemSpec {
+    /// Synthetic data with a controlled smoothness profile.
     Synthetic {
+        /// The learning task.
         task: Task,
+        /// Smoothness profile across workers.
         profile: synthetic::LProfile,
+        /// Worker count.
         m: usize,
+        /// Rows per worker.
         n: usize,
+        /// Feature dimension.
         d: usize,
+        /// Generator seed.
         seed: u64,
     },
-    /// The paper's real-data trios (simulated): `shards_each` workers per
-    /// dataset (3 → M = 9).
-    UciLinreg { shards_each: usize },
-    UciLogreg { shards_each: usize },
+    /// The paper's real-data linreg trio (simulated): `shards_each`
+    /// workers per dataset (3 → M = 9).
+    UciLinreg {
+        /// Workers per dataset.
+        shards_each: usize,
+    },
+    /// The paper's real-data logreg trio (simulated).
+    UciLogreg {
+        /// Workers per dataset.
+        shards_each: usize,
+    },
+    /// The simulated Gisette logreg problem (fig. 7).
     Gisette,
 }
 
 impl ProblemSpec {
+    /// Materialize the problem this spec describes (runs the setup
+    /// solvers — expensive for the real-data specs).
     pub fn build(&self) -> anyhow::Result<Problem> {
         Ok(match self {
             ProblemSpec::Synthetic { task, profile, m, n, d, seed } => {
@@ -56,21 +79,29 @@ impl ProblemSpec {
 /// A fully described run.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
+    /// The data/problem to run on.
     pub problem: ProblemSpec,
+    /// Which algorithm to execute (default `lag-wk`).
     pub algorithm: Algorithm,
+    /// Which gradient engine serves the workers (default `native`).
     pub engine: EngineKind,
+    /// Driver options (defaults follow the paper's §4 settings).
     pub options: RunOptions,
+    /// Where the PJRT engine looks for AOT artifacts.
     pub artifacts_dir: String,
+    /// Optional CSV path for the resulting trace.
     pub trace_out: Option<String>,
 }
 
 impl RunConfig {
+    /// Load and parse a JSON config file.
     pub fn from_file(path: &str) -> anyhow::Result<RunConfig> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow::anyhow!("cannot read config {path}: {e}"))?;
         RunConfig::from_json_str(&text)
     }
 
+    /// Parse a config from JSON text (see the module docs for the schema).
     pub fn from_json_str(text: &str) -> anyhow::Result<RunConfig> {
         let root = parse(text)?;
         let problem = parse_problem(root.get("problem")?)?;
@@ -159,6 +190,17 @@ fn apply_options(j: &Json, o: &mut RunOptions) -> anyhow::Result<()> {
             "record_every" => o.record_every = v.as_usize().unwrap_or(1),
             "eval_every" => o.eval_every = v.as_usize().unwrap_or(1),
             "threads" => o.threads = v.as_usize().unwrap_or(0),
+            "batch" => {
+                o.batch = match (v.as_str(), v.as_f64()) {
+                    (Some(s), _) => crate::grad::BatchSpec::parse(s)?,
+                    (None, Some(x)) => crate::grad::BatchSpec::from_number(x)?,
+                    _ => anyhow::bail!("batch must be a string or number"),
+                }
+            }
+            "lasg_rule" => {
+                let s = v.as_str().ok_or_else(|| anyhow::anyhow!("lasg_rule must be a string"))?;
+                o.lasg_rule = Some(crate::coordinator::LasgRule::parse(s)?);
+            }
             other => anyhow::bail!("unknown option '{other}'"),
         }
     }
@@ -217,6 +259,31 @@ mod tests {
         assert_eq!(c.algorithm, Algorithm::LagWk);
         assert_eq!(c.engine, EngineKind::Native);
         assert!(matches!(c.problem, ProblemSpec::UciLinreg { shards_each: 3 }));
+    }
+
+    #[test]
+    fn parses_stochastic_options() {
+        let c = RunConfig::from_json_str(
+            r#"{"problem": {"kind": "synthetic", "task": "linreg", "m": 4},
+                 "algorithm": "lasg-wk",
+                 "options": {"batch": 16, "lasg_rule": "wk1"}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.algorithm, Algorithm::LasgWk);
+        assert_eq!(c.options.batch, crate::grad::BatchSpec::Fixed(16));
+        assert_eq!(c.options.lasg_rule, Some(crate::coordinator::LasgRule::Wk1));
+        let c = RunConfig::from_json_str(
+            r#"{"problem": {"kind": "synthetic", "task": "linreg", "m": 4},
+                 "algorithm": "sgd",
+                 "options": {"batch": "0.25"}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.options.batch, crate::grad::BatchSpec::Fraction(0.25));
+        assert!(RunConfig::from_json_str(
+            r#"{"problem": {"kind": "synthetic", "task": "linreg", "m": 4},
+                 "options": {"batch": -2}}"#
+        )
+        .is_err());
     }
 
     #[test]

@@ -11,18 +11,34 @@ use std::path::Path;
 const MAGIC: &[u8; 8] = b"LAGCKPT1";
 
 /// Complete snapshot of a run at iteration `k`.
+///
+/// The LASG-PS2 upload-iteration stamps (`ParameterServer::hat_iter`) are
+/// deliberately *not* part of the format: a restored server starts with
+/// empty stamps, so a resumed PS2 run force-contacts every worker once
+/// (fresh gradients — conservative and correct, at the cost of up to M
+/// extra uploads) rather than growing the wire format. Full-batch runs
+/// are unaffected.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TrainState {
+    /// Iteration the snapshot was taken at.
     pub k: u64,
+    /// The iterate θᵏ.
     pub theta: Vec<f64>,
+    /// The lazily aggregated gradient ∇ᵏ.
     pub agg_grad: Vec<f64>,
+    /// Server-side worker copies θ̂_m (`None` before first contact).
     pub hat_theta: Vec<Option<Vec<f64>>>,
+    /// Per-worker cached gradients at last upload.
     pub cached_grads: Vec<Option<Vec<f64>>>,
     /// History newest-first (h_1, h_2, …).
     pub history: Vec<f64>,
+    /// The history ring's capacity D.
     pub history_capacity: u32,
+    /// Cumulative uploads at the snapshot.
     pub uploads: u64,
+    /// Cumulative downloads at the snapshot.
     pub downloads: u64,
+    /// Cumulative gradient evaluations at the snapshot.
     pub grad_evals: u64,
 }
 
@@ -70,6 +86,7 @@ impl TrainState {
 
     // -- binary codec --------------------------------------------------
 
+    /// Serialize to the versioned little-endian checkpoint format.
     pub fn encode(&self) -> Vec<u8> {
         let mut b = Vec::new();
         b.extend_from_slice(MAGIC);
@@ -89,6 +106,8 @@ impl TrainState {
         b
     }
 
+    /// Parse a checkpoint produced by [`TrainState::encode`] (validates
+    /// magic, lengths, and trailing bytes).
     pub fn decode(buf: &[u8]) -> anyhow::Result<TrainState> {
         anyhow::ensure!(buf.len() >= 8 && &buf[..8] == MAGIC, "bad checkpoint magic");
         let mut c = Dec { b: buf, pos: 8 };
@@ -123,6 +142,7 @@ impl TrainState {
         })
     }
 
+    /// Write the encoded snapshot to disk (creating parent directories).
     pub fn save<P: AsRef<Path>>(&self, path: P) -> anyhow::Result<()> {
         if let Some(parent) = path.as_ref().parent() {
             std::fs::create_dir_all(parent)?;
@@ -132,6 +152,7 @@ impl TrainState {
         Ok(())
     }
 
+    /// Read and decode a snapshot from disk.
     pub fn load<P: AsRef<Path>>(path: P) -> anyhow::Result<TrainState> {
         let mut buf = Vec::new();
         std::fs::File::open(path)?.read_to_end(&mut buf)?;

@@ -37,12 +37,15 @@ pub use run::{run, run_with_workspace, RunOptions, RunWorkspace};
 pub use server::ParameterServer;
 pub use tcp::{run_leader, run_worker};
 pub use transport::{parallel_run, TransportOptions};
-pub use trigger::{DiffHistory, TriggerConfig};
+pub use trigger::{DiffHistory, LasgRule, TriggerConfig};
 pub use wire::WireMsg;
 
+pub use crate::grad::BatchSpec;
 pub use crate::metrics::{IterRecord, RunTrace};
 
-/// The five algorithms of the paper's evaluation (§4).
+/// The algorithms the driver implements: the five of the source paper's
+/// evaluation (§4) plus the stochastic (minibatch) family of the LASG
+/// follow-up (Chen, Sun, Yin 2020).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Algorithm {
     /// Batch gradient descent, iteration (2): every worker uploads fresh
@@ -58,12 +61,42 @@ pub enum Algorithm {
     /// IAG with importance sampling: one random worker per round,
     /// P(m) ∝ L_m. α = 1/(M·L).
     NumIag,
+    /// Distributed minibatch SGD: every worker uploads a fresh stochastic
+    /// gradient (batch per `RunOptions::batch`) every round — the
+    /// communication-hungry baseline the LASG rules are measured against.
+    /// α = 1/(2L).
+    Sgd,
+    /// Lazily aggregated SGD with a worker-side stale-iterate rule
+    /// ([`LasgRule::Wk1`]/[`LasgRule::Wk2`], default WK2). α = 1/(2L).
+    LasgWk,
+    /// Lazily aggregated SGD with a server-side stale-iterate rule
+    /// ([`LasgRule::Ps1`]/[`LasgRule::Ps2`], default PS1). α = 1/(2L).
+    LasgPs,
 }
 
 impl Algorithm {
+    /// The five algorithms of the source paper's evaluation, in the
+    /// figure-legend order every full-batch experiment iterates.
     pub const ALL: [Algorithm; 5] =
         [Algorithm::CycIag, Algorithm::NumIag, Algorithm::LagPs, Algorithm::LagWk, Algorithm::Gd];
 
+    /// The stochastic (minibatch) algorithms of the LASG follow-up.
+    pub const STOCHASTIC: [Algorithm; 3] = [Algorithm::Sgd, Algorithm::LasgPs, Algorithm::LasgWk];
+
+    /// Every implemented algorithm (the paper's five, then the stochastic
+    /// three).
+    pub const EVERY: [Algorithm; 8] = [
+        Algorithm::CycIag,
+        Algorithm::NumIag,
+        Algorithm::LagPs,
+        Algorithm::LagWk,
+        Algorithm::Gd,
+        Algorithm::Sgd,
+        Algorithm::LasgPs,
+        Algorithm::LasgWk,
+    ];
+
+    /// Stable identifier used in trace files, reports and the CLI.
     pub fn name(&self) -> &'static str {
         match self {
             Algorithm::Gd => "batch-gd",
@@ -71,9 +104,13 @@ impl Algorithm {
             Algorithm::LagPs => "lag-ps",
             Algorithm::CycIag => "cyc-iag",
             Algorithm::NumIag => "num-iag",
+            Algorithm::Sgd => "sgd",
+            Algorithm::LasgWk => "lasg-wk",
+            Algorithm::LasgPs => "lasg-ps",
         }
     }
 
+    /// Parse an algorithm name (CLI `--algo`, config `algorithm`).
     pub fn parse(s: &str) -> anyhow::Result<Algorithm> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "gd" | "batch-gd" | "batchgd" => Algorithm::Gd,
@@ -81,16 +118,29 @@ impl Algorithm {
             "lag-ps" | "lagps" | "ps" => Algorithm::LagPs,
             "cyc-iag" | "cyciag" | "cyc" | "cyclic-iag" => Algorithm::CycIag,
             "num-iag" | "numiag" | "num" => Algorithm::NumIag,
+            "sgd" => Algorithm::Sgd,
+            "lasg-wk" | "lasgwk" => Algorithm::LasgWk,
+            "lasg-ps" | "lasgps" => Algorithm::LasgPs,
             other => anyhow::bail!("unknown algorithm '{other}'"),
         })
     }
 
-    /// Paper stepsize: 1/L for GD and LAG, 1/(M·L) for the IAG baselines
-    /// ("to optimize performance and guarantee stability", §4).
+    /// True for the minibatch (LASG-family) algorithms, which draw their
+    /// gradients through `RunOptions::batch` and always run the sequential
+    /// round loop (a minibatch round is too small to amortize the pool).
+    pub fn is_stochastic(&self) -> bool {
+        matches!(self, Algorithm::Sgd | Algorithm::LasgWk | Algorithm::LasgPs)
+    }
+
+    /// Default stepsize: 1/L for GD and LAG, 1/(M·L) for the IAG baselines
+    /// ("to optimize performance and guarantee stability", §4), and the
+    /// halved 1/(2L) for the stochastic family — constant-stepsize SGD
+    /// needs the extra margin against minibatch noise (DESIGN.md §10).
     pub fn default_alpha(&self, l_total: f64, m: usize) -> f64 {
         match self {
             Algorithm::Gd | Algorithm::LagWk | Algorithm::LagPs => 1.0 / l_total,
             Algorithm::CycIag | Algorithm::NumIag => 1.0 / (m as f64 * l_total),
+            Algorithm::Sgd | Algorithm::LasgWk | Algorithm::LasgPs => 1.0 / (2.0 * l_total),
         }
     }
 }
@@ -108,6 +158,7 @@ pub struct CommStats {
 }
 
 impl CommStats {
+    /// Uploads + downloads: every message that crossed the (virtual) wire.
     pub fn total_messages(&self) -> u64 {
         self.uploads + self.downloads
     }
@@ -119,10 +170,10 @@ mod tests {
 
     #[test]
     fn parse_roundtrip() {
-        for a in Algorithm::ALL {
+        for a in Algorithm::EVERY {
             assert_eq!(Algorithm::parse(a.name()).unwrap(), a);
         }
-        assert!(Algorithm::parse("sgd").is_err());
+        assert!(Algorithm::parse("adam").is_err());
     }
 
     #[test]
@@ -132,5 +183,20 @@ mod tests {
         assert_eq!(Algorithm::LagWk.default_alpha(l, 9), 0.25);
         assert_eq!(Algorithm::CycIag.default_alpha(l, 9), 0.25 / 9.0);
         assert_eq!(Algorithm::NumIag.default_alpha(l, 9), 0.25 / 9.0);
+        assert_eq!(Algorithm::Sgd.default_alpha(l, 9), 0.125);
+        assert_eq!(Algorithm::LasgWk.default_alpha(l, 9), 0.125);
+    }
+
+    #[test]
+    fn algorithm_families_are_consistent() {
+        for a in Algorithm::ALL {
+            assert!(!a.is_stochastic(), "{a:?}");
+            assert!(Algorithm::EVERY.contains(&a));
+        }
+        for a in Algorithm::STOCHASTIC {
+            assert!(a.is_stochastic(), "{a:?}");
+            assert!(Algorithm::EVERY.contains(&a));
+        }
+        assert_eq!(Algorithm::EVERY.len(), Algorithm::ALL.len() + Algorithm::STOCHASTIC.len());
     }
 }

@@ -29,7 +29,9 @@ use std::sync::{Mutex, MutexGuard, RwLock};
 /// One worker's result slot: gradient buffer + loss, written by the pool
 /// thread that owns the worker this round, read by the driver afterwards.
 pub struct WorkerOut {
+    /// The worker's gradient at the round's iterate.
     pub grad: Vec<f64>,
+    /// The worker's loss at the round's iterate.
     pub loss: f64,
 }
 

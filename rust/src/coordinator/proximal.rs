@@ -45,10 +45,15 @@ pub fn composite_loss(problem: &Problem, theta: &[f64], lam1: f64) -> f64 {
 /// Options for the proximal driver.
 #[derive(Debug, Clone)]
 pub struct ProxOptions {
+    /// Iteration budget.
     pub max_iters: usize,
+    /// ℓ1 weight λ₁ of the composite objective.
     pub lam1: f64,
+    /// Trigger history depth D.
     pub d_history: usize,
+    /// Trigger weight ξ.
     pub xi: f64,
+    /// Stepsize override (default 1/L).
     pub alpha: Option<f64>,
     /// Stop when the composite objective change over a window falls below.
     pub rel_tol: f64,

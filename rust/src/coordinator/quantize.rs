@@ -11,11 +11,30 @@
 use crate::util::Rng;
 
 /// A quantized vector: per-vector scale + unsigned codes in [0, 2^bits).
+///
+/// ```
+/// use lag::coordinator::QuantizedVec;
+/// use lag::util::Rng;
+///
+/// let v = [0.0, 0.5, 1.0, -1.0];
+/// let q = QuantizedVec::encode(&v, 8, &mut Rng::new(7));
+/// let back = q.decode();
+/// // 8-bit codes over the [-1, 1] range: within one quantization step
+/// for (a, b) in v.iter().zip(&back) {
+///     assert!((a - b).abs() <= 2.0 / 255.0, "{a} vs {b}");
+/// }
+/// // and far cheaper on the wire than raw f64s
+/// assert!(q.wire_bytes() < lag::coordinator::quantize::f64_wire_bytes(v.len()));
+/// ```
 #[derive(Debug, Clone, PartialEq)]
 pub struct QuantizedVec {
+    /// Code width in bits (1..=24).
     pub bits: u8,
+    /// Smallest value of the encoded vector (code 0).
     pub lo: f64,
+    /// Largest value of the encoded vector (code `2^bits − 1`).
     pub hi: f64,
+    /// One unsigned code per element.
     pub codes: Vec<u32>,
 }
 
@@ -40,6 +59,7 @@ impl QuantizedVec {
         QuantizedVec { bits, lo, hi, codes }
     }
 
+    /// Dequantize back to f64s (the values the server accumulates).
     pub fn decode(&self) -> Vec<f64> {
         let levels = ((1u32 << self.bits) - 1) as f64;
         let span = self.hi - self.lo;
@@ -71,8 +91,11 @@ use crate::metrics::{IterRecord, RunTrace};
 /// Result of a quantized run: the trace plus exact uplink byte counts.
 #[derive(Debug, Clone)]
 pub struct QuantizedRunResult {
+    /// The algorithm trace (communication pattern, convergence).
     pub trace: RunTrace,
+    /// Actual uplink bytes with quantized uploads.
     pub bytes_quantized: u64,
+    /// What the same uploads would have cost as raw f64 vectors.
     pub bytes_f64_equiv: u64,
 }
 

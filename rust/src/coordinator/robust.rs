@@ -35,19 +35,30 @@ use std::time::Instant;
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Attack {
     /// Upload −c·δ∇ (gradient reversal).
-    SignFlip { scale: f64 },
+    SignFlip {
+        /// Reversal magnitude c.
+        scale: f64,
+    },
     /// Upload c·δ∇ with c ≫ 1 (blow-up).
-    Blowup { scale: f64 },
+    Blowup {
+        /// Blow-up factor c.
+        scale: f64,
+    },
     /// Upload N(0, σ²) noise instead of the delta.
-    Noise { sigma: f64 },
+    Noise {
+        /// Noise standard deviation σ.
+        sigma: f64,
+    },
 }
 
 /// Robust-run configuration.
 #[derive(Debug, Clone)]
 pub struct RobustOptions {
+    /// Underlying driver options (iterations, trigger, seed).
     pub base: RunOptions,
     /// Indices of workers that turn Byzantine after the bootstrap round.
     pub byzantine: Vec<usize>,
+    /// Which corruption the Byzantine workers apply.
     pub attack: Attack,
     /// Enable the smoothness-bound screen + eviction.
     pub defend: bool,
@@ -58,6 +69,7 @@ pub struct RobustOptions {
 }
 
 impl RobustOptions {
+    /// Options with the default tolerance (1e-6) and eviction patience (3).
     pub fn new(base: RunOptions, byzantine: Vec<usize>, attack: Attack, defend: bool) -> Self {
         RobustOptions { base, byzantine, attack, defend, tolerance: 1e-6, evict_after: 3 }
     }
@@ -66,9 +78,13 @@ impl RobustOptions {
 /// Outcome counters for the defense.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct DefenseStats {
+    /// Uploads rejected by the smoothness screen.
     pub rejected: u64,
+    /// Uploads accepted into the aggregate.
     pub accepted: u64,
+    /// Rejections that hit an honest worker (false positives).
     pub honest_rejected: u64,
+    /// Workers permanently evicted.
     pub evicted: u32,
 }
 

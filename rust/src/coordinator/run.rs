@@ -1,7 +1,14 @@
-//! Synchronous deterministic driver for all five algorithms with exact
-//! communication accounting. Every experiment and bench goes through here;
-//! the threaded deployment in [`super::transport`] reproduces the same
-//! traces over real message passing.
+//! Synchronous deterministic driver for every implemented algorithm — the
+//! paper's five full-batch methods plus the stochastic LASG family — with
+//! exact communication accounting. Every experiment and bench goes through
+//! here; the threaded deployment in [`super::transport`] reproduces the
+//! same traces over real message passing.
+//!
+//! Stochastic (minibatch) runs are deterministic too: batches are a pure
+//! function of `(RunOptions::seed, worker, iteration)` and the LASG family
+//! executes the sequential round loop, so a stochastic trace is
+//! bit-identical across thread counts, scheduler widths, and re-runs
+//! (DESIGN.md §10).
 //!
 //! Two perf properties of the hot loop (see DESIGN.md §6):
 //!
@@ -17,10 +24,10 @@
 
 use super::pool::{self, PoolHandle};
 use super::server::ParameterServer;
-use super::trigger::TriggerConfig;
+use super::trigger::{LasgRule, TriggerConfig};
 use super::{Algorithm, CommStats};
 use crate::data::Problem;
-use crate::grad::GradEngine;
+use crate::grad::{batch, BatchSpec, GradEngine};
 use crate::linalg::dist2;
 use crate::metrics::{IterRecord, RunTrace};
 use crate::util::Rng;
@@ -35,6 +42,7 @@ const AUTO_PARALLEL_MIN_WORK: usize = 16_000;
 /// Options for a run. Defaults follow the paper's §4 settings.
 #[derive(Debug, Clone)]
 pub struct RunOptions {
+    /// Iteration budget (the run may stop earlier at `target_err`).
     pub max_iters: usize,
     /// Stop (and record `uploads_at_target`) once `L(θ) − L(θ*) ≤ ε`.
     pub target_err: Option<f64>,
@@ -64,6 +72,14 @@ pub struct RunOptions {
     /// work is large enough), 1 = sequential, n = exactly n pool threads.
     /// Results are bit-identical for every value.
     pub threads: usize,
+    /// Minibatch size for the stochastic algorithms (`Sgd`, `LasgWk`,
+    /// `LasgPs`); ignored by the full-batch five. Batches are resampled
+    /// every `(worker, iteration)` from `seed` alone, so stochastic traces
+    /// are as reproducible as deterministic ones (DESIGN.md §10).
+    pub batch: BatchSpec,
+    /// LASG trigger variant; `None` picks the per-algorithm default
+    /// ([`LasgRule::Wk2`] for `LasgWk`, [`LasgRule::Ps1`] for `LasgPs`).
+    pub lasg_rule: Option<LasgRule>,
 }
 
 impl Default for RunOptions {
@@ -82,6 +98,8 @@ impl Default for RunOptions {
             eval_every: 1,
             record_thetas: false,
             threads: 0,
+            batch: BatchSpec::Full,
+            lasg_rule: None,
         }
     }
 }
@@ -108,9 +126,15 @@ pub struct RunWorkspace {
     has_cached: Vec<bool>,
     /// LAG-PS contact set, reused across rounds.
     contact_set: Vec<usize>,
+    /// Sampled minibatch row indices (stochastic algorithms), reused
+    /// across rounds.
+    batch_rows: Vec<u32>,
+    /// Second gradient scratch for the same-sample LASG-WK2 comparison.
+    grad_old: Vec<f64>,
 }
 
 impl RunWorkspace {
+    /// Empty workspace; buffers grow on first use.
     pub fn new() -> Self {
         RunWorkspace::default()
     }
@@ -131,6 +155,55 @@ impl RunWorkspace {
         self.has_cached.resize(m, false);
         self.contact_set.clear();
         self.contact_set.reserve(m);
+        self.batch_rows.clear();
+        self.grad_old.resize(d, 0.0);
+    }
+}
+
+/// The stochastic evaluation context: resolves a worker's per-round
+/// gradient under the run's [`BatchSpec`]. A batch that covers every real
+/// row short-circuits to the engine's full gradient (no RNG state is
+/// consumed); otherwise the rows are resampled from `(seed, worker, k)`
+/// alone — identical whichever thread, pool or scheduler evaluates them.
+struct StochCtx<'a> {
+    problem: &'a Problem,
+    engine: &'a dyn GradEngine,
+    spec: BatchSpec,
+    seed: u64,
+}
+
+impl StochCtx<'_> {
+    fn grad_into(
+        &self,
+        mi: usize,
+        k: usize,
+        theta: &[f64],
+        rows: &mut Vec<u32>,
+        out: &mut [f64],
+    ) -> f64 {
+        let n_real = self.problem.workers[mi].n_real;
+        match batch::plan(self.spec, n_real) {
+            None => self.engine.grad_into(mi, theta, out),
+            Some((_, scale)) => {
+                batch::sample_rows_into(self.spec, n_real, self.seed, mi, k as u64, rows);
+                self.engine.grad_batch_into(mi, theta, rows, scale, out)
+            }
+        }
+    }
+
+    /// Evaluate at `theta` on the batch already sitting in `rows` from
+    /// this round's [`StochCtx::grad_into`] call — the LASG-WK2
+    /// stale-iterate evaluation reuses the sampled rows instead of
+    /// rescanning the shard to regenerate the identical batch.
+    fn grad_same_batch(&self, mi: usize, theta: &[f64], rows: &[u32], out: &mut [f64]) -> f64 {
+        let n_real = self.problem.workers[mi].n_real;
+        match batch::plan(self.spec, n_real) {
+            None => self.engine.grad_into(mi, theta, out),
+            Some((b, scale)) => {
+                debug_assert_eq!(rows.len(), b, "rows must come from this round's sample");
+                self.engine.grad_batch_into(mi, theta, rows, scale, out)
+            }
+        }
     }
 }
 
@@ -153,6 +226,7 @@ fn apply_upload(
         server.absorb(mi, g, None);
         ws.has_cached[mi] = true;
     }
+    server.stamp_upload(mi, k);
     ws.cached[mi].copy_from_slice(g);
     stats.uploads += 1;
     events[mi].push(k);
@@ -177,10 +251,13 @@ fn contact(
 }
 
 /// Resolve the thread count for this (problem, algorithm, engine, options)
-/// combination. Only the broadcast-style algorithms fan out (the IAG
-/// baselines contact a single worker per round), and only the native
-/// engine is shared-read across threads (PJRT clients are not `Send`; XLA
-/// parallelizes internally on that path).
+/// combination. Only the full-batch broadcast-style algorithms fan out
+/// (the IAG baselines contact a single worker per round; a stochastic
+/// round is O(b·d) per worker — far below the pool's profitability
+/// threshold — so the LASG family always runs the sequential loop, which
+/// also keeps its traces trivially thread-count-independent). Only the
+/// native engine is shared-read across threads (PJRT clients are not
+/// `Send`; XLA parallelizes internally on that path).
 fn effective_threads(
     problem: &Problem,
     algo: Algorithm,
@@ -209,6 +286,18 @@ fn effective_threads(
 
 /// Run `algo` on `problem` with gradients from `engine`. Deterministic for
 /// a fixed seed — and bit-identical for every `opts.threads` value.
+///
+/// ```
+/// use lag::coordinator::{run, Algorithm, RunOptions};
+/// use lag::grad::NativeEngine;
+///
+/// let problem = lag::data::synthetic::linreg_increasing_l(3, 15, 6, 42);
+/// let opts = RunOptions { max_iters: 200, target_err: Some(1e-6), ..Default::default() };
+/// let trace = run(&problem, Algorithm::LagWk, &opts, &NativeEngine::new(&problem));
+/// assert!(trace.converged_iter.is_some());
+/// // the lazy trigger uploads less than GD's M-per-iteration
+/// assert!(trace.total_uploads() < trace.records.last().unwrap().k as u64 * 3);
+/// ```
 pub fn run(
     problem: &Problem,
     algo: Algorithm,
@@ -252,11 +341,27 @@ fn run_loop(
     let d = problem.d;
     let alpha = opts.alpha.unwrap_or_else(|| algo.default_alpha(problem.l_total, m));
     let xi = match algo {
-        Algorithm::LagWk => opts.wk_xi,
-        Algorithm::LagPs => opts.ps_xi,
+        Algorithm::LagWk | Algorithm::LasgWk => opts.wk_xi,
+        Algorithm::LagPs | Algorithm::LasgPs => opts.ps_xi,
         _ => 0.0,
     };
     let trigger = TriggerConfig::uniform(opts.d_history, xi);
+    // LASG rule resolution: per-algorithm default, side-checked so a
+    // mismatched override fails loudly instead of silently degrading
+    let lasg_rule = match algo {
+        Algorithm::LasgWk => {
+            let r = opts.lasg_rule.unwrap_or(LasgRule::Wk2);
+            assert!(r.is_worker_side(), "lasg-wk needs a worker-side rule, got {}", r.name());
+            Some(r)
+        }
+        Algorithm::LasgPs => {
+            let r = opts.lasg_rule.unwrap_or(LasgRule::Ps1);
+            assert!(!r.is_worker_side(), "lasg-ps needs a server-side rule, got {}", r.name());
+            Some(r)
+        }
+        _ => None,
+    };
+    let stoch = StochCtx { problem, engine, spec: opts.batch, seed: opts.seed };
     let theta0 = opts.theta0.clone().unwrap_or_else(|| vec![0.0; d]);
     let mut server = ParameterServer::new(d, m, opts.d_history, theta0);
     let mut stats = CommStats::default();
@@ -376,6 +481,88 @@ fn run_loop(
                 let mi = rng.weighted(&problem.l_m);
                 stats.downloads += 1;
                 contact(&mut server, ws, engine, &mut stats, &mut events, mi, k);
+            }
+            Algorithm::Sgd => {
+                stats.downloads += m as u64; // broadcast θᵏ
+                let mut grad = std::mem::take(&mut ws.grad);
+                let mut rows = std::mem::take(&mut ws.batch_rows);
+                for mi in 0..m {
+                    stoch.grad_into(mi, k, &server.theta, &mut rows, &mut grad);
+                    stats.grad_evals += 1;
+                    apply_upload(&mut server, ws, &mut stats, &mut events, mi, k, &grad);
+                }
+                ws.grad = grad;
+                ws.batch_rows = rows;
+            }
+            Algorithm::LasgWk => {
+                stats.downloads += m as u64; // broadcast θᵏ
+                let rhs = trigger.rhs(alpha, m, &server.history);
+                let rule = lasg_rule.expect("resolved above");
+                let mut grad = std::mem::take(&mut ws.grad);
+                let mut grad_old = std::mem::take(&mut ws.grad_old);
+                let mut rows = std::mem::take(&mut ws.batch_rows);
+                for mi in 0..m {
+                    // every worker evaluates its fresh minibatch gradient;
+                    // only rule violators upload (LASG Alg. 1)
+                    stoch.grad_into(mi, k, &server.theta, &mut rows, &mut grad);
+                    stats.grad_evals += 1;
+                    let violated = if !ws.has_cached[mi] {
+                        true
+                    } else if rule == LasgRule::Wk1 {
+                        trigger.wk_violated(dist2(&ws.cached[mi], &grad), rhs)
+                    } else {
+                        // WK2: same batch, stale iterate
+                        let hat = server.hat_theta[mi].as_ref().expect("cached ⇒ contacted");
+                        stoch.grad_same_batch(mi, hat, &rows, &mut grad_old);
+                        stats.grad_evals += 1;
+                        trigger.wk_violated(dist2(&grad_old, &grad), rhs)
+                    };
+                    if violated {
+                        apply_upload(&mut server, ws, &mut stats, &mut events, mi, k, &grad);
+                    }
+                }
+                ws.grad = grad;
+                ws.grad_old = grad_old;
+                ws.batch_rows = rows;
+            }
+            Algorithm::LasgPs => {
+                let rhs = trigger.rhs(alpha, m, &server.history);
+                let rule = lasg_rule.expect("resolved above");
+                // the server decides the contact set from stale iterates
+                // alone (LASG Alg. 2) — no worker computes before the
+                // decision, exactly like LAG-PS
+                ws.contact_set.clear();
+                for mi in 0..m {
+                    let violated = match server.hat_dist_sq(mi) {
+                        None => true,
+                        Some(d2) => {
+                            let drift = trigger.ps_violated(problem.l_m[mi], d2, rhs);
+                            if rule == LasgRule::Ps2 {
+                                // staleness cap: a stochastic gradient may
+                                // serve at most D rounds
+                                let age = server.upload_age(mi, k).unwrap_or(usize::MAX);
+                                drift || age >= trigger.d()
+                            } else {
+                                drift
+                            }
+                        }
+                    };
+                    if violated {
+                        ws.contact_set.push(mi);
+                    }
+                }
+                stats.downloads += ws.contact_set.len() as u64; // θᵏ to contacted workers only
+                let contact_set = std::mem::take(&mut ws.contact_set);
+                let mut grad = std::mem::take(&mut ws.grad);
+                let mut rows = std::mem::take(&mut ws.batch_rows);
+                for &mi in &contact_set {
+                    stoch.grad_into(mi, k, &server.theta, &mut rows, &mut grad);
+                    stats.grad_evals += 1;
+                    apply_upload(&mut server, ws, &mut stats, &mut events, mi, k, &grad);
+                }
+                ws.grad = grad;
+                ws.batch_rows = rows;
+                ws.contact_set = contact_set;
             }
         }
 
@@ -578,6 +765,166 @@ mod tests {
         let ps = run(&p, Algorithm::LagPs, &opts, &NativeEngine::new(&p));
         // PS only sends θ to contacted workers: downloads == uploads
         assert_eq!(ps.total_downloads(), ps.total_uploads());
+    }
+
+    #[test]
+    fn sgd_with_full_batch_equals_gd_exactly() {
+        let p = toy();
+        let alpha = Some(1.0 / p.l_total);
+        let opts = RunOptions { max_iters: 80, alpha, ..Default::default() };
+        let gd = run(&p, Algorithm::Gd, &opts, &NativeEngine::new(&p));
+        let sgd = run(&p, Algorithm::Sgd, &opts, &NativeEngine::new(&p));
+        assert_eq!(gd.records.len(), sgd.records.len());
+        for (a, b) in gd.records.iter().zip(&sgd.records) {
+            assert_eq!(a.obj_err.to_bits(), b.obj_err.to_bits(), "k={}", a.k);
+            assert_eq!(a.cum_uploads, b.cum_uploads);
+            assert_eq!(a.cum_grad_evals, b.cum_grad_evals);
+        }
+        assert_eq!(gd.upload_events, sgd.upload_events);
+    }
+
+    #[test]
+    fn lasg_full_batch_rules_reduce_to_lag() {
+        use crate::coordinator::trigger::LasgRule;
+        let p = toy();
+        let alpha = Some(1.0 / p.l_total);
+        // WK1 at full batch compares the fresh gradient to the cached
+        // upload — exactly LAG-WK's rule, one evaluation per round
+        let opts_wk = RunOptions {
+            max_iters: 120,
+            alpha,
+            lasg_rule: Some(LasgRule::Wk1),
+            ..Default::default()
+        };
+        let lag = run(&p, Algorithm::LagWk, &opts_wk, &NativeEngine::new(&p));
+        let lasg = run(&p, Algorithm::LasgWk, &opts_wk, &NativeEngine::new(&p));
+        assert_eq!(lag.upload_events, lasg.upload_events);
+        for (a, b) in lag.records.iter().zip(&lasg.records) {
+            assert_eq!(a.obj_err.to_bits(), b.obj_err.to_bits(), "k={}", a.k);
+            assert_eq!(a.cum_grad_evals, b.cum_grad_evals);
+        }
+        // PS1 at full batch is exactly LAG-PS
+        let opts_ps = RunOptions {
+            max_iters: 120,
+            alpha,
+            lasg_rule: Some(LasgRule::Ps1),
+            ..Default::default()
+        };
+        let lag = run(&p, Algorithm::LagPs, &opts_ps, &NativeEngine::new(&p));
+        let lasg = run(&p, Algorithm::LasgPs, &opts_ps, &NativeEngine::new(&p));
+        assert_eq!(lag.upload_events, lasg.upload_events);
+        for (a, b) in lag.records.iter().zip(&lasg.records) {
+            assert_eq!(a.obj_err.to_bits(), b.obj_err.to_bits(), "k={}", a.k);
+            assert_eq!(a.cum_downloads, b.cum_downloads);
+        }
+    }
+
+    #[test]
+    fn minibatch_sgd_descends_and_uploads_every_round() {
+        let p = toy();
+        let opts = RunOptions {
+            max_iters: 1500,
+            record_every: 50,
+            eval_every: 50,
+            batch: crate::grad::BatchSpec::Fixed(5),
+            ..Default::default()
+        };
+        let t = run(&p, Algorithm::Sgd, &opts, &NativeEngine::new(&p));
+        assert_eq!(t.total_uploads(), 1500 * 5);
+        assert_eq!(t.total_downloads(), 1500 * 5);
+        let start = t.records[0].obj_err;
+        assert!(t.final_err() < 1e-2 * start, "{start} -> {}", t.final_err());
+    }
+
+    #[test]
+    fn lasg_wk_minibatch_saves_uploads_vs_sgd() {
+        let p = toy();
+        let mk = |algo| {
+            let opts = RunOptions {
+                max_iters: 600,
+                batch: crate::grad::BatchSpec::Fixed(5),
+                ..Default::default()
+            };
+            run(&p, algo, &opts, &NativeEngine::new(&p))
+        };
+        let sgd = mk(Algorithm::Sgd);
+        let wk = mk(Algorithm::LasgWk);
+        let ps = mk(Algorithm::LasgPs);
+        // all three settle near the same noise floor…
+        let floor = sgd.final_err().max(1e-12);
+        assert!(wk.final_err() < 50.0 * floor, "wk {} vs sgd {floor}", wk.final_err());
+        assert!(ps.final_err() < 50.0 * floor, "ps {} vs sgd {floor}", ps.final_err());
+        // …but the lazy variants upload substantially less
+        assert!(
+            wk.total_uploads() * 2 < sgd.total_uploads(),
+            "lasg-wk {} vs sgd {}",
+            wk.total_uploads(),
+            sgd.total_uploads()
+        );
+        assert!(
+            ps.total_uploads() < sgd.total_uploads(),
+            "lasg-ps {} vs sgd {}",
+            ps.total_uploads(),
+            sgd.total_uploads()
+        );
+    }
+
+    #[test]
+    fn lasg_ps2_staleness_cap_bounds_upload_gaps() {
+        use crate::coordinator::trigger::LasgRule;
+        let p = toy();
+        let d_history = 10;
+        let opts = RunOptions {
+            max_iters: 300,
+            d_history,
+            batch: crate::grad::BatchSpec::Fixed(5),
+            lasg_rule: Some(LasgRule::Ps2),
+            ..Default::default()
+        };
+        let t = run(&p, Algorithm::LasgPs, &opts, &NativeEngine::new(&p));
+        for (mi, evs) in t.upload_events.iter().enumerate() {
+            assert!(!evs.is_empty(), "worker {mi} never contacted");
+            for w in evs.windows(2) {
+                assert!(w[1] - w[0] <= d_history, "worker {mi}: gap {} > D", w[1] - w[0]);
+            }
+            let last = *evs.last().unwrap();
+            assert!(300 - last <= d_history, "worker {mi}: stale tail {}", 300 - last);
+        }
+    }
+
+    #[test]
+    fn stochastic_traces_are_reproducible_and_seed_sensitive() {
+        let p = toy();
+        let mk = |seed| {
+            let opts = RunOptions {
+                max_iters: 100,
+                seed,
+                batch: crate::grad::BatchSpec::Fraction(0.3),
+                ..Default::default()
+            };
+            run(&p, Algorithm::LasgWk, &opts, &NativeEngine::new(&p))
+        };
+        let a = mk(3);
+        let b = mk(3);
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(x.obj_err.to_bits(), y.obj_err.to_bits());
+        }
+        assert_eq!(a.upload_events, b.upload_events);
+        let c = mk(4);
+        assert_ne!(
+            a.records.last().unwrap().obj_err.to_bits(),
+            c.records.last().unwrap().obj_err.to_bits(),
+            "different seeds must sample different batches"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "worker-side rule")]
+    fn mismatched_lasg_rule_panics() {
+        use crate::coordinator::trigger::LasgRule;
+        let p = toy();
+        let opts = RunOptions { lasg_rule: Some(LasgRule::Ps1), ..Default::default() };
+        let _ = run(&p, Algorithm::LasgWk, &opts, &NativeEngine::new(&p));
     }
 
     #[test]

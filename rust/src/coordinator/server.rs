@@ -10,6 +10,9 @@
 use super::trigger::DiffHistory;
 use crate::linalg::{axpy, dist2};
 
+/// The parameter-server state shared by every driver (synchronous,
+/// pooled, transport, TCP): iterate, lazily aggregated gradient, stored
+/// worker copies, and the trigger history.
 #[derive(Debug, Clone)]
 pub struct ParameterServer {
     /// Current iterate θᵏ.
@@ -19,6 +22,12 @@ pub struct ParameterServer {
     /// Server-side copies θ̂_m (`None` until worker m first communicates —
     /// forces a first contact under LAG-PS).
     pub hat_theta: Vec<Option<Vec<f64>>>,
+    /// Iteration of each worker's last upload (`None` before first
+    /// contact). Maintained by the driver via
+    /// [`ParameterServer::stamp_upload`]; read by the LASG-PS2 staleness
+    /// cap (a stochastic gradient may only stay in the aggregate for D
+    /// rounds, DESIGN.md §10).
+    pub hat_iter: Vec<Option<usize>>,
     /// Ring of ‖θ^{j+1} − θ^j‖².
     pub history: DiffHistory,
     /// Scratch: previous iterate (avoids allocating in `step`).
@@ -26,6 +35,8 @@ pub struct ParameterServer {
 }
 
 impl ParameterServer {
+    /// Fresh server for a d-dimensional problem with m workers and a
+    /// D-deep trigger history, starting at `theta0`.
     pub fn new(d: usize, m: usize, d_history: usize, theta0: Vec<f64>) -> Self {
         assert_eq!(theta0.len(), d);
         ParameterServer {
@@ -33,14 +44,17 @@ impl ParameterServer {
             theta: theta0,
             agg_grad: vec![0.0; d],
             hat_theta: vec![None; m],
+            hat_iter: vec![None; m],
             history: DiffHistory::new(d_history),
         }
     }
 
+    /// Model dimension.
     pub fn d(&self) -> usize {
         self.theta.len()
     }
 
+    /// Worker count.
     pub fn m(&self) -> usize {
         self.hat_theta.len()
     }
@@ -82,6 +96,19 @@ impl ParameterServer {
     /// communicated (treated as an unconditional violation).
     pub fn hat_dist_sq(&self, m: usize) -> Option<f64> {
         self.hat_theta[m].as_ref().map(|t| dist2(t, &self.theta))
+    }
+
+    /// Record that worker m uploaded at iteration `k` (drives
+    /// [`ParameterServer::upload_age`]).
+    pub fn stamp_upload(&mut self, m: usize, k: usize) {
+        self.hat_iter[m] = Some(k);
+    }
+
+    /// Rounds since worker m's last upload as of iteration `k`; `None` if
+    /// it has never uploaded (the PS rules treat that as an unconditional
+    /// contact).
+    pub fn upload_age(&self, m: usize, k: usize) -> Option<usize> {
+        self.hat_iter[m].map(|last| k.saturating_sub(last))
     }
 
     /// Gradient step θ^{k+1} = θᵏ − α ∇ᵏ; pushes ‖θ^{k+1} − θᵏ‖² into the
@@ -149,6 +176,16 @@ mod tests {
         // after a step, the stored copy lags the iterate
         s.step(1.0);
         assert!(s.hat_dist_sq(0).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn upload_age_tracks_stamps() {
+        let mut s = ParameterServer::new(2, 2, 2, vec![0.0, 0.0]);
+        assert_eq!(s.upload_age(0, 5), None);
+        s.stamp_upload(0, 3);
+        assert_eq!(s.upload_age(0, 3), Some(0));
+        assert_eq!(s.upload_age(0, 7), Some(4));
+        assert_eq!(s.upload_age(1, 7), None);
     }
 
     #[test]

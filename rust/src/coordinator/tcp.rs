@@ -23,7 +23,9 @@ use std::time::Instant;
 /// Leader statistics including exact wire bytes.
 #[derive(Debug, Clone, Default)]
 pub struct TcpStats {
+    /// Bytes sent leader → workers.
     pub bytes_down: u64,
+    /// Bytes received from workers.
     pub bytes_up: u64,
 }
 

@@ -12,6 +12,13 @@
 //! not `Send`; the PJRT path is exercised through the synchronous driver,
 //! where XLA parallelizes internally).
 //!
+//! The stochastic algorithms (SGD, LASG-WK) run over the same channels:
+//! each worker derives its minibatch locally from `(RunOptions::seed,
+//! worker, k)` — the sampler key is pure (`grad::batch`), so no row
+//! indices cross the wire and the upload pattern matches the synchronous
+//! driver exactly. The LASG-WK2 rule needs no extra messages either: the
+//! worker keeps its own copy of the iterate at its last upload.
+//!
 //! Allocation discipline (DESIGN.md §7 applied to message passing): every
 //! `Vec<f64>` that crosses a channel is recycled. Workers keep their
 //! gradient and cached-gradient buffers across rounds (`worker_grad_into`
@@ -21,10 +28,10 @@
 //! broadcast pool. Steady state performs zero heap allocation per round —
 //! the warm-up rounds allocate each buffer once.
 
-use super::trigger::{DiffHistory, TriggerConfig};
+use super::trigger::{DiffHistory, LasgRule, TriggerConfig};
 use super::{Algorithm, RunOptions};
-use crate::data::Problem;
-use crate::grad::worker_grad_into;
+use crate::data::{Problem, Task, WorkerShard};
+use crate::grad::{batch, sample_rows_into, worker_grad_batch_into, worker_grad_into, BatchSpec};
 use crate::linalg::{axpy, dist2};
 use crate::metrics::{IterRecord, RunTrace};
 use std::sync::mpsc;
@@ -55,10 +62,54 @@ struct FromWorker {
     delta: Option<Vec<f64>>,
     /// The round's spent iterate buffer, returned for broadcast reuse.
     theta_back: Vec<f64>,
+    /// Gradient evaluations this round (2 under the LASG-WK2 rule).
+    evals: u64,
 }
 
-/// Run GD or LAG-WK over real channels. Returns a trace identical in
-/// communication pattern to the synchronous driver (asserted by tests).
+/// One worker thread's per-round gradient policy: full-batch or the
+/// deterministic `(seed, worker, k)`-keyed minibatch (no indices cross
+/// the wire — the worker derives its own batch).
+struct WorkerEval<'a> {
+    task: Task,
+    shard: &'a WorkerShard,
+    spec: BatchSpec,
+    seed: u64,
+    rows: Vec<u32>,
+}
+
+impl WorkerEval<'_> {
+    /// Evaluate the round-k gradient at `theta` into `out`; returns 1
+    /// (counting the evaluation). Dispatches through [`batch::plan`] — the
+    /// same policy the synchronous driver uses.
+    fn grad_into(&mut self, mi: usize, k: usize, theta: &[f64], out: &mut [f64]) -> u64 {
+        let n_real = self.shard.n_real;
+        match batch::plan(self.spec, n_real) {
+            None => worker_grad_into(self.task, self.shard, theta, out),
+            Some((_, scale)) => {
+                sample_rows_into(self.spec, n_real, self.seed, mi, k as u64, &mut self.rows);
+                worker_grad_batch_into(self.task, self.shard, theta, &self.rows, scale, out)
+            }
+        };
+        1
+    }
+
+    /// Re-evaluate on the batch already sampled by this round's
+    /// [`WorkerEval::grad_into`] (the LASG-WK2 stale-iterate comparison);
+    /// returns 1.
+    fn grad_same_batch(&self, theta: &[f64], out: &mut [f64]) -> u64 {
+        match batch::plan(self.spec, self.shard.n_real) {
+            None => worker_grad_into(self.task, self.shard, theta, out),
+            Some((_, scale)) => {
+                worker_grad_batch_into(self.task, self.shard, theta, &self.rows, scale, out)
+            }
+        };
+        1
+    }
+}
+
+/// Run GD, LAG-WK, SGD or LASG-WK over real channels. Returns a trace
+/// identical in communication pattern to the synchronous driver (asserted
+/// by tests).
 pub fn parallel_run(
     problem: &Problem,
     algo: Algorithm,
@@ -66,14 +117,28 @@ pub fn parallel_run(
     topts: &TransportOptions,
 ) -> RunTrace {
     assert!(
-        matches!(algo, Algorithm::Gd | Algorithm::LagWk),
-        "threaded transport implements the broadcast-style algorithms (GD, LAG-WK)"
+        matches!(algo, Algorithm::Gd | Algorithm::LagWk | Algorithm::Sgd | Algorithm::LasgWk),
+        "threaded transport implements the broadcast-style algorithms"
     );
     let m = problem.m();
     let d = problem.d;
     let alpha = opts.alpha.unwrap_or_else(|| algo.default_alpha(problem.l_total, m));
-    let xi = if algo == Algorithm::LagWk { opts.wk_xi } else { 0.0 };
+    let xi = match algo {
+        Algorithm::LagWk | Algorithm::LasgWk => opts.wk_xi,
+        _ => 0.0,
+    };
     let trigger = TriggerConfig::uniform(opts.d_history, xi);
+    let wk_rule = match algo {
+        Algorithm::LasgWk => {
+            let r = opts.lasg_rule.unwrap_or(LasgRule::Wk2);
+            assert!(r.is_worker_side(), "lasg-wk needs a worker-side rule, got {}", r.name());
+            Some(r)
+        }
+        _ => None,
+    };
+    // the full-batch algorithms ignore the batch spec entirely, so their
+    // traces stay byte-identical to the pre-stochastic transport
+    let spec = if algo.is_stochastic() { opts.batch } else { BatchSpec::Full };
 
     let t_start = Instant::now();
     let (to_server_tx, to_server_rx) = mpsc::channel::<FromWorker>();
@@ -99,20 +164,33 @@ pub fn parallel_run(
             let to_server = to_server_tx.clone();
             let shard = &problem.workers[mi];
             let task = problem.task;
-            let use_trigger = algo == Algorithm::LagWk;
+            let use_trigger = matches!(algo, Algorithm::LagWk | Algorithm::LasgWk);
+            let seed = opts.seed;
             scope.spawn(move || {
                 // worker-local state, reused across every round: the fresh
-                // gradient scratch and the cached gradient at last upload
+                // gradient scratch, the cached gradient at last upload and
+                // (LASG-WK2) the iterate of the last upload plus a second
+                // gradient scratch for the same-sample comparison
+                let mut eval = WorkerEval { task, shard, spec, seed, rows: Vec::new() };
                 let mut grad = vec![0.0; d];
+                let mut grad_old = vec![0.0; d];
                 let mut cached = vec![0.0; d];
+                let mut hat = vec![0.0; d];
                 let mut has_cached = false;
                 while let Ok(msg) = rx.recv() {
                     match msg {
                         ToWorker::Round { k, theta, rhs } => {
-                            worker_grad_into(task, shard, &theta, &mut grad);
-                            let violated = !has_cached
-                                || !use_trigger // GD always uploads
-                                || dist2(&cached, &grad) > rhs;
+                            let mut evals = eval.grad_into(mi, k, &theta, &mut grad);
+                            let violated = if !has_cached || !use_trigger {
+                                true // GD/SGD always upload; first round too
+                            } else if wk_rule == Some(LasgRule::Wk2) {
+                                // same batch, stale iterate (LASG-WK2)
+                                evals += eval.grad_same_batch(&hat, &mut grad_old);
+                                dist2(&grad_old, &grad) > rhs
+                            } else {
+                                // LAG-WK (15a) / LASG-WK1: fresh vs cached
+                                dist2(&cached, &grad) > rhs
+                            };
                             let delta = if violated {
                                 // recycle a returned delta buffer when one
                                 // is waiting; warm-up allocates it once
@@ -127,12 +205,18 @@ pub fn parallel_run(
                                     has_cached = true;
                                 }
                                 cached.copy_from_slice(&grad);
+                                hat.copy_from_slice(&theta);
                                 Some(dvec)
                             } else {
                                 None
                             };
-                            let _ =
-                                to_server.send(FromWorker { m: mi, k, delta, theta_back: theta });
+                            let _ = to_server.send(FromWorker {
+                                m: mi,
+                                k,
+                                delta,
+                                theta_back: theta,
+                                evals,
+                            });
                         }
                         ToWorker::Shutdown => break,
                     }
@@ -169,12 +253,12 @@ pub fn parallel_run(
                 let _ = tx.send(ToWorker::Round { k, theta: t, rhs });
             }
             downloads += m as u64;
-            grad_evals += m as u64;
 
             // collect all M responses for this round (synchronous rounds)
             for _ in 0..m {
                 let msg = to_server_rx.recv().expect("worker died");
                 debug_assert_eq!(msg.k, k);
+                grad_evals += msg.evals;
                 theta_pool.push(msg.theta_back);
                 if let Some(delta) = msg.delta {
                     // serial uplink: each upload pays the latency
@@ -295,6 +379,35 @@ mod tests {
             wk.wall_secs,
             gd.wall_secs
         );
+    }
+
+    #[test]
+    fn threaded_sgd_matches_sync_driver() {
+        let p = synthetic::linreg_increasing_l(4, 20, 6, 35);
+        let opts = RunOptions { max_iters: 60, batch: BatchSpec::Fixed(5), ..Default::default() };
+        let sync = run(&p, Algorithm::Sgd, &opts, &NativeEngine::new(&p));
+        let par = parallel_run(&p, Algorithm::Sgd, &opts, &TransportOptions::default());
+        assert_eq!(sync.total_uploads(), par.total_uploads());
+        assert_eq!(sync.upload_events, par.upload_events);
+        assert_eq!(sync.total_grad_evals(), par.total_grad_evals());
+        let err0 = sync.records[0].obj_err;
+        for (a, b) in sync.records.iter().zip(&par.records) {
+            let tol = 1e-8 * a.obj_err.abs() + 1e-14 * err0;
+            assert!((a.obj_err - b.obj_err).abs() <= tol, "k={}", a.k);
+        }
+    }
+
+    #[test]
+    fn threaded_lasg_wk_matches_sync_driver() {
+        let p = synthetic::linreg_increasing_l(5, 20, 6, 36);
+        let opts = RunOptions { max_iters: 120, batch: BatchSpec::Fixed(5), ..Default::default() };
+        let sync = run(&p, Algorithm::LasgWk, &opts, &NativeEngine::new(&p));
+        let par = parallel_run(&p, Algorithm::LasgWk, &opts, &TransportOptions::default());
+        assert_eq!(sync.upload_events, par.upload_events);
+        assert_eq!(sync.total_uploads(), par.total_uploads());
+        assert_eq!(sync.total_grad_evals(), par.total_grad_evals());
+        // the lazy trigger actually bites over the wire too
+        assert!(par.total_uploads() < 120 * 5);
     }
 
     #[test]

@@ -12,9 +12,88 @@
 //!   gradient:  skip the upload iff `‖∇L_m(θ̂) − ∇L_m(θᵏ)‖² ≤ RHS`.
 //! * **LAG-PS (15b)**, checked at the server before contacting a worker:
 //!   skip iff `L_m² ‖θ̂_m − θᵏ‖² ≤ RHS` (needs the smoothness constants).
+//!
+//! The stochastic variants (LASG, Chen–Sun–Yin 2020) reuse the same RHS
+//! against **stale-iterate comparisons** instead of raw gradient changes —
+//! raw minibatch gradient differences are dominated by sampling noise and
+//! would trigger every round. [`LasgRule`] names the four variants the
+//! stochastic driver implements (DESIGN.md §10).
+
+/// Which LASG trigger variant a stochastic run uses.
+///
+/// The worker-side rules gate `Algorithm::LasgWk`, the server-side rules
+/// gate `Algorithm::LasgPs`; all four compare against the same
+/// D-deep-history RHS as the deterministic LAG rules.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LasgRule {
+    /// Worker-side, cached-gradient comparison: upload iff
+    /// `‖ĝ_m(θᵏ; ξᵏ_m) − ĝ_m^{last}‖² > RHS`, where `ĝ_m^{last}` is the
+    /// worker's last *uploaded* stochastic gradient (old sample, old
+    /// iterate). One minibatch evaluation per round; the sample noise of
+    /// two independent batches stays inside the comparison, so WK1 skips
+    /// less aggressively than WK2.
+    Wk1,
+    /// Worker-side, same-sample stale-iterate comparison (the LASG paper's
+    /// key device): draw one batch `ξᵏ_m`, evaluate it at **both** the
+    /// fresh iterate θᵏ and the stale iterate θ̂_m of the last upload, and
+    /// upload iff `‖ĝ_m(θᵏ; ξᵏ_m) − ĝ_m(θ̂_m; ξᵏ_m)‖² > RHS`. The common
+    /// sample cancels the variance, leaving only the iterate drift — at
+    /// the price of a second minibatch evaluation per round.
+    Wk2,
+    /// Server-side stale-iterate rule: contact worker m iff
+    /// `L_m² ‖θ̂_m − θᵏ‖² > RHS` — the smoothness-based bound on how much
+    /// any gradient (stochastic or not) can have drifted. No worker
+    /// computation happens before the decision.
+    Ps1,
+    /// [`LasgRule::Ps1`] plus a hard staleness cap: a worker that has not
+    /// uploaded for D rounds (the history depth) is contacted
+    /// unconditionally, bounding the variance of arbitrarily stale
+    /// stochastic gradients in the aggregate.
+    Ps2,
+}
+
+impl LasgRule {
+    /// Short name (`wk1`, `wk2`, `ps1`, `ps2`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            LasgRule::Wk1 => "wk1",
+            LasgRule::Wk2 => "wk2",
+            LasgRule::Ps1 => "ps1",
+            LasgRule::Ps2 => "ps2",
+        }
+    }
+
+    /// Parse a rule name (CLI `--lasg-rule`, config `lasg_rule`).
+    pub fn parse(s: &str) -> anyhow::Result<LasgRule> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "wk1" => LasgRule::Wk1,
+            "wk2" => LasgRule::Wk2,
+            "ps1" => LasgRule::Ps1,
+            "ps2" => LasgRule::Ps2,
+            other => anyhow::bail!("unknown LASG rule '{other}' (wk1|wk2|ps1|ps2)"),
+        })
+    }
+
+    /// True for the worker-side rules (valid with `Algorithm::LasgWk`).
+    pub fn is_worker_side(&self) -> bool {
+        matches!(self, LasgRule::Wk1 | LasgRule::Wk2)
+    }
+}
 
 /// Fixed-capacity ring of the last D squared iterate differences,
 /// `h_1` = most recent. Allocation-free on the hot path.
+///
+/// ```
+/// use lag::coordinator::DiffHistory;
+///
+/// let mut h = DiffHistory::new(3);
+/// h.push(1.0); // ‖θ² − θ¹‖²
+/// h.push(4.0); // ‖θ³ − θ²‖²
+/// assert_eq!(h.get(1), 4.0); // newest first
+/// assert_eq!(h.get(2), 1.0);
+/// assert_eq!(h.get(3), 0.0); // beyond recorded length: zero
+/// assert_eq!(h.weighted_sum(&[0.5, 0.5, 0.5]), 2.5);
+/// ```
 #[derive(Debug, Clone)]
 pub struct DiffHistory {
     buf: Vec<f64>,
@@ -23,19 +102,23 @@ pub struct DiffHistory {
 }
 
 impl DiffHistory {
+    /// Ring with room for the last `capacity` squared differences (D).
     pub fn new(capacity: usize) -> Self {
         assert!(capacity > 0);
         DiffHistory { buf: vec![0.0; capacity], head: 0, len: 0 }
     }
 
+    /// The ring capacity D.
     pub fn capacity(&self) -> usize {
         self.buf.len()
     }
 
+    /// Number of differences recorded so far (saturates at D).
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// True before the first difference is recorded.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
@@ -76,6 +159,8 @@ impl DiffHistory {
 /// nonincreasing sequence; the paper uses the constant ξ_d = ξ).
 #[derive(Debug, Clone)]
 pub struct TriggerConfig {
+    /// History weights ξ_1..ξ_D (nonincreasing; the paper uses a
+    /// constant).
     pub xi: Vec<f64>,
 }
 
@@ -88,6 +173,7 @@ impl TriggerConfig {
         TriggerConfig { xi: vec![xi; d_history] }
     }
 
+    /// History depth D.
     pub fn d(&self) -> usize {
         self.xi.len()
     }
@@ -190,6 +276,18 @@ mod tests {
         let rhs = t.rhs(1.0, 1, &h); // = 4
         assert!(!t.ps_violated(1.0, 3.9, rhs)); // 1·3.9 ≤ 4 → skip
         assert!(t.ps_violated(2.0, 1.1, rhs)); // 4·1.1 > 4 → contact
+    }
+
+    #[test]
+    fn lasg_rule_parse_roundtrip() {
+        for rule in [LasgRule::Wk1, LasgRule::Wk2, LasgRule::Ps1, LasgRule::Ps2] {
+            assert_eq!(LasgRule::parse(rule.name()).unwrap(), rule);
+        }
+        assert!(LasgRule::parse("wk3").is_err());
+        assert!(LasgRule::Wk1.is_worker_side());
+        assert!(LasgRule::Wk2.is_worker_side());
+        assert!(!LasgRule::Ps1.is_worker_side());
+        assert!(!LasgRule::Ps2.is_worker_side());
     }
 
     #[test]

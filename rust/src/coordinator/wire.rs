@@ -8,11 +8,28 @@ use std::io::{Read, Write};
 #[derive(Debug, Clone, PartialEq)]
 pub enum WireMsg {
     /// Worker → leader on connect: worker index.
-    Hello { worker: u32 },
+    Hello {
+        /// The connecting worker's index.
+        worker: u32,
+    },
     /// Leader → worker: new round with the current iterate and trigger RHS.
-    Round { k: u64, rhs: f64, theta: Vec<f64> },
+    Round {
+        /// Iteration number.
+        k: u64,
+        /// Trigger RHS for this round.
+        rhs: f64,
+        /// The iterate θᵏ.
+        theta: Vec<f64>,
+    },
     /// Worker → leader: gradient delta (empty → skipped upload).
-    Delta { k: u64, worker: u32, delta: Option<Vec<f64>> },
+    Delta {
+        /// Iteration number the delta answers.
+        k: u64,
+        /// Sending worker's index.
+        worker: u32,
+        /// `Some(δ∇)` on upload, `None` on skip.
+        delta: Option<Vec<f64>>,
+    },
     /// Leader → workers: training is over.
     Shutdown,
 }
@@ -108,6 +125,7 @@ impl WireMsg {
         }
     }
 
+    /// Serialize to a length-prefixed frame (tag byte + payload).
     pub fn encode(&self) -> Vec<u8> {
         // one exactly-sized allocation, body written straight after the
         // length prefix — no intermediate body buffer to copy
@@ -143,6 +161,7 @@ impl WireMsg {
         out
     }
 
+    /// Decode a frame body (everything after the length prefix).
     pub fn decode(body: &[u8]) -> anyhow::Result<WireMsg> {
         anyhow::ensure!(!body.is_empty(), "empty frame");
         let mut c = Cursor { b: body, pos: 1 };

@@ -11,10 +11,13 @@ use super::{Dataset, SparseDataset};
 use crate::linalg::{CsrMatrix, Matrix};
 use crate::util::Rng;
 
+/// Sample count of the simulated Gisette.
 pub const N: usize = 2000;
+/// Feature count of the simulated Gisette.
 pub const D: usize = 4837;
 const INFORMATIVE: usize = 60;
 
+/// Generate the dense simulated Gisette dataset (deterministic in `seed`).
 pub fn load(seed: u64) -> Dataset {
     let mut rng = Rng::new(seed ^ 0x6153_3775);
     // column scales: log-uniform over 3 decades → many ~zero columns

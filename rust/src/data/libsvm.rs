@@ -15,18 +15,24 @@ use std::path::Path;
 /// A dataset whose features live in CSR form end-to-end.
 #[derive(Debug, Clone)]
 pub struct SparseDataset {
+    /// Dataset name (from the file stem or caller).
     pub name: String,
+    /// CSR feature matrix.
     pub x: CsrMatrix,
+    /// Labels, one per row.
     pub y: Vec<f64>,
 }
 
 impl SparseDataset {
+    /// Number of examples.
     pub fn n(&self) -> usize {
         self.x.rows
     }
+    /// Number of features.
     pub fn d(&self) -> usize {
         self.x.cols
     }
+    /// Nonzero fill fraction.
     pub fn density(&self) -> f64 {
         self.x.density()
     }

@@ -21,11 +21,18 @@ pub use libsvm::SparseDataset;
 ///   per worker (so the *global* regularizer is `M·λ/2 ‖θ‖²`).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Task {
+    /// Least-squares linear regression, eq. (85).
     LinReg,
-    LogReg { lam: f64 },
+    /// ℓ2-regularized logistic regression, eq. (86), with per-worker
+    /// regularization weight `lam`.
+    LogReg {
+        /// Regularization weight λ (per worker).
+        lam: f64,
+    },
 }
 
 impl Task {
+    /// Stable identifier (`linreg` / `logreg`) used in names and reports.
     pub fn name(&self) -> &'static str {
         match self {
             Task::LinReg => "linreg",
@@ -37,15 +44,20 @@ impl Task {
 /// A raw dataset before sharding (simulated UCI analog or synthetic).
 #[derive(Debug, Clone)]
 pub struct Dataset {
+    /// Dataset name (used in problem names and reports).
     pub name: String,
+    /// Feature matrix, one example per row.
     pub x: Matrix,
+    /// Labels/targets, one per row.
     pub y: Vec<f64>,
 }
 
 impl Dataset {
+    /// Number of examples.
     pub fn n(&self) -> usize {
         self.x.rows
     }
+    /// Number of features.
     pub fn d(&self) -> usize {
         self.x.cols
     }
@@ -78,11 +90,15 @@ pub const CSR_DENSITY_THRESHOLD: f64 = 0.25;
 /// the inner loops carry zero per-row branching either way.
 #[derive(Debug, Clone)]
 pub enum ShardStorage {
+    /// Row-major dense storage (the default for dense random data).
     Dense(Matrix),
+    /// Compressed sparse rows (selected at or below
+    /// [`CSR_DENSITY_THRESHOLD`]).
     Csr(CsrMatrix),
 }
 
 impl ShardStorage {
+    /// Number of (padded) rows.
     pub fn rows(&self) -> usize {
         match self {
             ShardStorage::Dense(m) => m.rows,
@@ -90,6 +106,7 @@ impl ShardStorage {
         }
     }
 
+    /// Number of feature columns.
     pub fn cols(&self) -> usize {
         match self {
             ShardStorage::Dense(m) => m.cols,
@@ -120,10 +137,12 @@ impl ShardStorage {
         nnz as f64 / cells as f64
     }
 
+    /// True iff the shard is stored as CSR.
     pub fn is_csr(&self) -> bool {
         matches!(self, ShardStorage::Csr(_))
     }
 
+    /// Format name (`dense` / `csr`) for reports and benches.
     pub fn format(&self) -> &'static str {
         match self {
             ShardStorage::Dense(_) => "dense",
@@ -203,16 +222,22 @@ impl MatOps for ShardStorage {
 /// selected; all kernels produce bitwise identical results either way.
 #[derive(Debug, Clone)]
 pub struct WorkerShard {
+    /// Feature rows in the selected storage format (padded).
     pub storage: ShardStorage,
+    /// Labels, zero-padded to the storage row count.
     pub y: Vec<f64>,
+    /// Row weights: 1 for real rows, 0 for padding.
     pub w: Vec<f64>,
+    /// Number of real (non-padding) rows.
     pub n_real: usize,
 }
 
 impl WorkerShard {
+    /// Total rows including padding.
     pub fn n_padded(&self) -> usize {
         self.storage.rows()
     }
+    /// Feature dimension.
     pub fn d(&self) -> usize {
         self.storage.cols()
     }
@@ -226,9 +251,13 @@ impl WorkerShard {
 /// quantity the algorithms and the evaluation need.
 #[derive(Debug, Clone)]
 pub struct Problem {
+    /// Problem name (dataset + sharding).
     pub name: String,
+    /// The learning task (and its loss).
     pub task: Task,
+    /// Feature dimension.
     pub d: usize,
+    /// One padded shard per worker.
     pub workers: Vec<WorkerShard>,
     /// Per-worker smoothness constants `L_m` (power iteration, exact).
     pub l_m: Vec<f64>,
@@ -241,6 +270,7 @@ pub struct Problem {
 }
 
 impl Problem {
+    /// Number of workers M.
     pub fn m(&self) -> usize {
         self.workers.len()
     }

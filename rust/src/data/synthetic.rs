@@ -21,6 +21,7 @@ pub enum LProfile {
 }
 
 impl LProfile {
+    /// The target smoothness constant for worker `m_index` (0-based).
     pub fn target(&self, m_index: usize) -> f64 {
         match self {
             LProfile::Increasing => {
@@ -153,11 +154,12 @@ pub fn logreg_uniform_l(m: usize, n: usize, d: usize, seed: u64) -> Problem {
     synthetic_problem(Task::LogReg { lam: 1e-3 }, LProfile::Uniform(4.0), m, n, d, seed)
 }
 
-/// Ablation variants (used by the ablation benches).
+/// Ablation variant: linear regression with uniform `L_m = 4`.
 pub fn linreg_uniform_l(m: usize, n: usize, d: usize, seed: u64) -> Problem {
     synthetic_problem(Task::LinReg, LProfile::Uniform(4.0), m, n, d, seed)
 }
 
+/// Ablation variant: logistic regression with increasing `L_m`.
 pub fn logreg_increasing_l(m: usize, n: usize, d: usize, seed: u64) -> Problem {
     synthetic_problem(Task::LogReg { lam: 1e-3 }, LProfile::Increasing, m, n, d, seed)
 }

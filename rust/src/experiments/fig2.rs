@@ -11,6 +11,7 @@ pub fn key() -> ProblemKey {
     ProblemKey::SynLinregIncreasing { m: 9, n: 50, d: 50, seed: 1234 }
 }
 
+/// Regenerate fig. 2 (upload-event stick plot) under `ctx`.
 pub fn run(ctx: &ExpContext) -> anyhow::Result<()> {
     let p = ctx.problem(&key())?;
     let opts = RunOptions {

@@ -3,6 +3,7 @@
 
 use super::{fig2, paper_opts, report, ExpContext};
 
+/// Regenerate fig. 3 (synthetic linreg convergence/communication curves).
 pub fn run(ctx: &ExpContext) -> anyhow::Result<()> {
     // same key as fig. 2 — the cache shares one build across both figures
     let key = fig2::key();

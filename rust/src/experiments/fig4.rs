@@ -5,10 +5,12 @@
 
 use super::{paper_opts, report, ExpContext, ProblemKey};
 
+/// The fig. 4 problem key (uniform-L_m synthetic logreg).
 pub fn key() -> ProblemKey {
     ProblemKey::SynLogregUniform { m: 9, n: 50, d: 50, seed: 4321 }
 }
 
+/// Regenerate fig. 4 (uniform-L_m logreg curves).
 pub fn run(ctx: &ExpContext) -> anyhow::Result<()> {
     let key = key();
     let p = ctx.problem(&key)?;

@@ -34,6 +34,7 @@ pub fn problem(shards_each: usize) -> anyhow::Result<Problem> {
     )
 }
 
+/// Regenerate fig. 5 (real-data linreg trio curves).
 pub fn run(ctx: &ExpContext) -> anyhow::Result<()> {
     let key = key(3);
     let p = ctx.problem(&key)?;

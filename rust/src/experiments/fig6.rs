@@ -10,6 +10,7 @@ pub fn key(shards_each: usize) -> ProblemKey {
     ProblemKey::LogregReal { shards_each }
 }
 
+/// Build the logreg trio problem with `shards_each` workers per dataset.
 pub fn problem(shards_each: usize) -> anyhow::Result<Problem> {
     let trio = uci::logreg_trio();
     let dmin = uci::min_features(&trio);
@@ -29,6 +30,7 @@ pub fn problem(shards_each: usize) -> anyhow::Result<Problem> {
     )
 }
 
+/// Regenerate fig. 6 (real-data logreg trio curves).
 pub fn run(ctx: &ExpContext) -> anyhow::Result<()> {
     let key = key(3);
     let p = ctx.problem(&key)?;

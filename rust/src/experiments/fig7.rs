@@ -4,16 +4,19 @@
 use super::{paper_opts, report, ExpContext, ProblemKey};
 use crate::data::{gisette, partition, Problem, Task};
 
+/// The fig. 7 problem key (simulated Gisette).
 pub fn key() -> ProblemKey {
     ProblemKey::Gisette
 }
 
+/// Build the 9-worker simulated Gisette logreg problem.
 pub fn problem() -> anyhow::Result<Problem> {
     let ds = gisette::load(0);
     let shards = partition::split_even(&ds.x, &ds.y, 9);
     Problem::build("gisette_m9", Task::LogReg { lam: 1e-3 }, shards, Some(224))
 }
 
+/// Regenerate fig. 7 (Gisette logreg curves).
 pub fn run(ctx: &ExpContext) -> anyhow::Result<()> {
     println!("Fig. 7 — logreg on simulated Gisette (2000×4837), M = 9");
     let key = key();

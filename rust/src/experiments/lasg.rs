@@ -1,0 +1,216 @@
+//! LASG study — stochastic uploads-to-accuracy.
+//!
+//! The source paper stops at full-batch gradients; the LASG follow-up
+//! (Chen, Sun, Yin 2020, PAPERS.md) shows the lazy-trigger idea carries
+//! over to minibatch SGD. This experiment reproduces that comparison on
+//! three workloads:
+//!
+//! * `synthetic` — the heterogeneous increasing-L_m linreg problem of
+//!   figs. 2–3 (shared through the problem cache), minibatch 10/50;
+//! * `sparse` — a CSR-sharded synthetic logreg problem, fractional
+//!   batches, exercising minibatch row selection over sparse storage;
+//! * `gisette` — the simulated Gisette logreg problem of fig. 7 (full
+//!   report only; skipped in `--quick`).
+//!
+//! Constant-stepsize SGD converges to a noise floor, not to ε, so the
+//! accuracy target is derived **post hoc**: the worst (largest) noise
+//! floor among the stochastic runs, doubled. Every stochastic trace
+//! reaches it by construction, and "uploads to target" is then read off
+//! the recorded curves ([`crate::metrics::RunTrace::uploads_to`]). The
+//! whole study is deterministic — batches are `(seed, worker, iter)`-keyed
+//! — so the emitted CSV/JSON artifacts are byte-identical for every
+//! `--sched-threads` value (CI byte-compares them).
+
+use super::{fig2, fig7, report, ExpContext, ProblemKey, RunSpec};
+use crate::coordinator::{Algorithm, RunOptions};
+use crate::grad::BatchSpec;
+use crate::metrics::RunTrace;
+use crate::util::json::Json;
+
+/// The algorithms of the study, in submission (and report) order: the
+/// full-batch GD reference, the upload-every-round SGD baseline, and the
+/// two lazy stochastic variants.
+pub const ALGOS: [Algorithm; 4] =
+    [Algorithm::Gd, Algorithm::Sgd, Algorithm::LasgPs, Algorithm::LasgWk];
+
+/// The CSR workload's key: sparse synthetic logreg, density 10%.
+pub fn key_sparse() -> ProblemKey {
+    ProblemKey::SynSparseLogreg { m: 6, n: 40, d: 30, density_ppm: 100_000, seed: 77 }
+}
+
+/// One workload's outcome: the post-hoc target and the four traces in
+/// [`ALGOS`] order.
+pub struct GroupResult {
+    /// Workload id (`synthetic`, `sparse`, `gisette`).
+    pub id: String,
+    /// Post-hoc accuracy target (2× the worst stochastic noise floor).
+    pub target: f64,
+    /// Traces in [`ALGOS`] order.
+    pub traces: Vec<RunTrace>,
+}
+
+impl GroupResult {
+    /// Uploads to the post-hoc target for the named algorithm.
+    pub fn uploads_to_target(&self, algo: &str) -> Option<u64> {
+        self.traces.iter().find(|t| t.algo == algo).and_then(|t| t.uploads_to(self.target))
+    }
+}
+
+/// Run one workload through the run-level scheduler and derive the
+/// post-hoc target from the stochastic noise floors.
+pub fn run_group(
+    ctx: &ExpContext,
+    id: &str,
+    key: &ProblemKey,
+    batch: BatchSpec,
+    iters: usize,
+) -> anyhow::Result<GroupResult> {
+    let specs: Vec<RunSpec> = ALGOS
+        .iter()
+        .map(|&algo| RunSpec {
+            key: key.clone(),
+            algo,
+            opts: RunOptions {
+                max_iters: ctx.cap(iters),
+                target_err: None,
+                stop_at_target: false,
+                seed: 1,
+                batch,
+                ..Default::default()
+            },
+        })
+        .collect();
+    let traces = ctx.run_specs(specs)?;
+    let floor = traces
+        .iter()
+        .filter(|t| t.algo != Algorithm::Gd.name())
+        .map(|t| t.min_err())
+        .fold(0.0f64, f64::max);
+    Ok(GroupResult { id: id.to_string(), target: 2.0 * floor, traces })
+}
+
+/// Render one group as deterministic report JSON.
+pub fn group_json(res: &GroupResult, batch: BatchSpec) -> Json {
+    let rows: Vec<Json> = res
+        .traces
+        .iter()
+        .map(|t| {
+            Json::obj(vec![
+                ("algorithm", Json::Str(t.algo.clone())),
+                ("total_uploads", Json::Num(t.total_uploads() as f64)),
+                (
+                    "uploads_to_target",
+                    t.uploads_to(res.target).map(|u| Json::Num(u as f64)).unwrap_or(Json::Null),
+                ),
+                ("min_err", Json::Num(t.min_err())),
+                ("final_err", Json::Num(t.final_err())),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("study", Json::Str("lasg".into())),
+        ("group", Json::Str(res.id.clone())),
+        ("batch", Json::Str(batch.label())),
+        ("target", Json::Num(res.target)),
+        ("rows", Json::Arr(rows)),
+    ])
+}
+
+fn print_group(res: &GroupResult) {
+    println!(
+        "{:<10} {:>14} {:>12} {:>12} {:>12}",
+        "algorithm", "uploads@target", "uploads", "min_err", "final_err"
+    );
+    println!("{}", "-".repeat(66));
+    for t in &res.traces {
+        let at = match t.uploads_to(res.target) {
+            Some(u) => u.to_string(),
+            None => "—".into(),
+        };
+        println!(
+            "{:<10} {at:>14} {:>12} {:>12.3e} {:>12.3e}",
+            t.algo,
+            t.total_uploads(),
+            t.min_err(),
+            t.final_err()
+        );
+    }
+    let sgd = res.uploads_to_target("sgd");
+    let wk = res.uploads_to_target("lasg-wk");
+    if let (Some(sgd), Some(wk)) = (sgd, wk) {
+        println!("lasg-wk: {:.1}x fewer uploads than sgd", sgd as f64 / wk.max(1) as f64);
+    }
+}
+
+/// Run the full LASG study: all workloads, CSV traces + JSON reports
+/// under `out_dir/lasg/`.
+///
+/// Always runs on the native engine: the AOT PJRT artifacts are compiled
+/// for full shards and cannot subsample, so a PJRT context is downgraded
+/// (with a note) instead of panicking halfway through `exp all`.
+pub fn run(ctx: &ExpContext) -> anyhow::Result<()> {
+    let native_ctx;
+    let ctx = if ctx.engine == super::EngineKind::Native {
+        ctx
+    } else {
+        println!("lasg: stochastic gradients use the native kernels (PJRT is full-batch)");
+        native_ctx = ExpContext { engine: super::EngineKind::Native, ..ctx.clone() };
+        &native_ctx
+    };
+    let mut groups: Vec<(&str, ProblemKey, BatchSpec, usize)> = vec![
+        ("synthetic", fig2::key(), BatchSpec::Fixed(10), 1500),
+        ("sparse", key_sparse(), BatchSpec::Fraction(0.25), 800),
+    ];
+    if !ctx.quick {
+        groups.push(("gisette", fig7::key(), BatchSpec::Fixed(64), 600));
+    }
+    for (id, key, batch, iters) in groups {
+        let p = ctx.problem(&key)?;
+        println!("\nLASG study — {id}: {} (M = {}, batch {})", p.name, p.m(), batch.label());
+        let res = run_group(ctx, id, &key, batch, iters)?;
+        println!("post-hoc target: {:.3e} (2x worst stochastic noise floor)", res.target);
+        print_group(&res);
+        if let Some(wk) = res.traces.iter().find(|t| t.algo == "lasg-wk") {
+            let pts: Vec<(f64, f64)> =
+                wk.records.iter().map(|r| (r.cum_uploads as f64, r.obj_err)).collect();
+            print!("{}", report::ascii_curve(&pts, 64, 10, "lasg-wk err vs uploads"));
+        }
+        ctx.write_traces(&format!("lasg/{id}"), &res.traces)?;
+        let dir = std::path::Path::new(&ctx.out_dir).join("lasg");
+        std::fs::write(dir.join(format!("{id}.json")), group_json(&res, batch).to_string())?;
+    }
+    println!("wrote {}/lasg", ctx.out_dir);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lasg_wk_beats_sgd_on_heterogeneous_synthetic() {
+        let ctx = ExpContext { quick: true, ..Default::default() };
+        let key = ProblemKey::SynLinregIncreasing { m: 5, n: 30, d: 10, seed: 9 };
+        let res = run_group(&ctx, "test", &key, BatchSpec::Fixed(6), 700).unwrap();
+        let sgd = res.uploads_to_target("sgd").expect("sgd reaches its own floor target");
+        let wk = res.uploads_to_target("lasg-wk").expect("lasg-wk reaches the target");
+        assert!(wk * 2 < sgd, "lasg-wk {wk} vs sgd {sgd}");
+        let ps = res.uploads_to_target("lasg-ps").expect("lasg-ps reaches the target");
+        assert!(ps < sgd, "lasg-ps {ps} vs sgd {sgd}");
+    }
+
+    #[test]
+    fn group_json_is_deterministic_and_complete() {
+        let ctx = ExpContext { quick: true, ..Default::default() };
+        let key = key_sparse();
+        let a = run_group(&ctx, "sparse", &key, BatchSpec::Fraction(0.25), 200).unwrap();
+        let b = run_group(&ctx, "sparse", &key, BatchSpec::Fraction(0.25), 200).unwrap();
+        let ja = group_json(&a, BatchSpec::Fraction(0.25)).to_string();
+        let jb = group_json(&b, BatchSpec::Fraction(0.25)).to_string();
+        assert_eq!(ja, jb, "repeated study must serialize to identical bytes");
+        for algo in ALGOS {
+            assert!(ja.contains(algo.name()), "{} missing from {ja}", algo.name());
+        }
+        assert!(ja.contains("\"batch\":\"p0.25\""));
+    }
+}

@@ -10,6 +10,7 @@
 //! | fig6   | logreg on (simulated) Ionosphere/Adult/Derm | [`fig6`] |
 //! | fig7   | logreg on (simulated) Gisette | [`fig7`] |
 //! | table5 | uploads to ε = 1e-8 for M ∈ {9, 18, 27} | [`table5`] |
+//! | lasg   | stochastic follow-up: SGD vs LASG-WK/PS uploads-to-accuracy | [`lasg`] |
 
 pub mod fig2;
 pub mod fig3;
@@ -17,6 +18,7 @@ pub mod fig4;
 pub mod fig5;
 pub mod fig6;
 pub mod fig7;
+pub mod lasg;
 pub mod nonconvex;
 pub mod report;
 pub mod sched;
@@ -41,6 +43,7 @@ pub enum EngineKind {
 }
 
 impl EngineKind {
+    /// Parse the CLI `--engine` value.
     pub fn parse(s: &str) -> anyhow::Result<EngineKind> {
         Ok(match s {
             "pjrt" => EngineKind::Pjrt,
@@ -53,8 +56,11 @@ impl EngineKind {
 /// Shared experiment context.
 #[derive(Debug, Clone)]
 pub struct ExpContext {
+    /// Which gradient engine serves the runs.
     pub engine: EngineKind,
+    /// Where the PJRT engine looks for AOT artifacts.
     pub artifacts_dir: String,
+    /// Where CSV/JSON results are written.
     pub out_dir: String,
     /// Quick mode: relaxed target + iteration caps (CI-sized runs).
     pub quick: bool,
@@ -89,6 +95,7 @@ impl ExpContext {
         }
     }
 
+    /// Iteration budget: `full` normally, capped at 3000 in quick mode.
     pub fn cap(&self, full: usize) -> usize {
         if self.quick {
             full.min(3000)
@@ -227,8 +234,11 @@ pub fn run_experiment(id: &str, ctx: &ExpContext) -> anyhow::Result<()> {
         "fig7" => fig7::run(ctx),
         "table5" => table5::run(ctx),
         "nonconvex" | "theorem3" => nonconvex::run(ctx),
+        "lasg" => lasg::run(ctx),
         "all" => {
-            for id in ["fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "table5", "nonconvex"] {
+            let ids =
+                ["fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "table5", "nonconvex", "lasg"];
+            for id in ids {
                 println!("\n================ {id} ================");
                 run_experiment(id, ctx)?;
             }
@@ -242,7 +252,9 @@ pub fn run_experiment(id: &str, ctx: &ExpContext) -> anyhow::Result<()> {
             );
             Ok(())
         }
-        other => anyhow::bail!("unknown experiment '{other}' (fig2..fig7, table5, all)"),
+        other => {
+            anyhow::bail!("unknown experiment '{other}' (fig2..fig7, table5, nonconvex, lasg, all)")
+        }
     }
 }
 

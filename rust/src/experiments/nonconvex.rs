@@ -108,6 +108,7 @@ pub fn run_nonconvex(
     (iters, uploads, trace)
 }
 
+/// Regenerate the nonconvex (Theorem 3) study.
 pub fn run(ctx: &ExpContext) -> anyhow::Result<()> {
     let (p, _lm, l_total) = problem(9, 50, 50, 31337);
     let cap = ctx.cap(60_000);

@@ -1,6 +1,17 @@
-//! Report rendering: comparison tables (measured vs. paper) printed by the
-//! experiment harness and the benches, plus the machine-readable JSON
-//! report emitted next to the CSVs.
+//! Report rendering for the experiment harness and the benches.
+//!
+//! Three kinds of output, all deterministic:
+//!
+//! * **Console tables** — [`comparison_table`] (per-algorithm iterations /
+//!   uploads / final error), [`savings_vs_gd`], and the reference numbers
+//!   in [`PAPER_TABLE5`] with the [`paper_ordering`] sanity check.
+//! * **ASCII curves** — [`ascii_curve`], a log-scale terminal rendering of
+//!   err-vs-x series (the quick look at every figure without plotting
+//!   tooling).
+//! * **Machine-readable JSON** — [`table5_json`] and the LASG study's
+//!   report (`experiments::lasg::group_json`); objects serialize through
+//!   `BTreeMap`s, so equal results produce byte-identical files (CI
+//!   byte-compares them across scheduler widths).
 
 use super::table5::Table5Result;
 use crate::metrics::RunTrace;

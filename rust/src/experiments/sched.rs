@@ -42,17 +42,56 @@ use std::sync::{Arc, Mutex, OnceLock};
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub enum ProblemKey {
     /// Synthetic linreg, increasing L_m (figs. 2–3).
-    SynLinregIncreasing { m: usize, n: usize, d: usize, seed: u64 },
+    SynLinregIncreasing {
+        /// Worker count.
+        m: usize,
+        /// Rows per worker.
+        n: usize,
+        /// Feature dimension.
+        d: usize,
+        /// Generator seed.
+        seed: u64,
+    },
     /// Synthetic logreg, uniform L_m (fig. 4).
-    SynLogregUniform { m: usize, n: usize, d: usize, seed: u64 },
+    SynLogregUniform {
+        /// Worker count.
+        m: usize,
+        /// Rows per worker.
+        n: usize,
+        /// Feature dimension.
+        d: usize,
+        /// Generator seed.
+        seed: u64,
+    },
     /// Linreg on the simulated Housing/Bodyfat/Abalone trio with
     /// `shards_each` workers per dataset (fig. 5, Table 5).
-    LinregReal { shards_each: usize },
+    LinregReal {
+        /// Workers per dataset.
+        shards_each: usize,
+    },
     /// Logreg (λ = 1e-3) on the simulated Ionosphere/Adult/Derm trio
     /// (fig. 6, Table 5).
-    LogregReal { shards_each: usize },
+    LogregReal {
+        /// Workers per dataset.
+        shards_each: usize,
+    },
     /// Logreg (λ = 1e-3) on simulated Gisette, M = 9 (fig. 7).
     Gisette,
+    /// Sparse synthetic logreg, CSR shards end-to-end (the LASG
+    /// experiment's minibatch-over-CSR workload).
+    SynSparseLogreg {
+        /// Worker count.
+        m: usize,
+        /// Rows per worker.
+        n: usize,
+        /// Feature dimension.
+        d: usize,
+        /// Nonzero fill in parts-per-million — an integer so the key
+        /// stays `Eq + Hash` (100_000 ⇔ density 0.1).
+        density_ppm: u32,
+        /// Generator seed.
+        seed: u64,
+    },
 }
 
 impl ProblemKey {
@@ -69,6 +108,9 @@ impl ProblemKey {
             ProblemKey::LinregReal { shards_each } => super::fig5::problem(shards_each),
             ProblemKey::LogregReal { shards_each } => super::fig6::problem(shards_each),
             ProblemKey::Gisette => super::fig7::problem(),
+            ProblemKey::SynSparseLogreg { m, n, d, density_ppm, seed } => {
+                Ok(synthetic::sparse_logreg(m, n, d, density_ppm as f64 / 1e6, seed))
+            }
         }
     }
 }
@@ -77,8 +119,11 @@ impl ProblemKey {
 /// with `opts`.
 #[derive(Debug, Clone)]
 pub struct RunSpec {
+    /// Which problem to run on (resolved through the cache).
     pub key: ProblemKey,
+    /// Which algorithm to run.
     pub algo: Algorithm,
+    /// Driver options for this run.
     pub opts: RunOptions,
 }
 
@@ -123,6 +168,7 @@ impl ProblemCache {
         self.0.map.lock().expect("problem cache lock poisoned").len()
     }
 
+    /// True before any problem has been requested.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -151,6 +197,7 @@ impl Scheduler {
         Scheduler { threads: threads.max(1) }
     }
 
+    /// Resolved executor width.
     pub fn threads(&self) -> usize {
         self.threads
     }

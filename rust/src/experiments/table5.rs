@@ -7,6 +7,7 @@ use crate::coordinator::Algorithm;
 use crate::util::csv::CsvWriter;
 use std::collections::BTreeMap;
 
+/// Measured Table 5: uploads-to-ε per (task, worker count, algorithm).
 pub struct Table5Result {
     /// uploads[task][m_index][algo] (m_index: 0 → M=9, 1 → 18, 2 → 27).
     pub uploads: BTreeMap<(String, usize, String), Option<u64>>,
@@ -60,6 +61,7 @@ pub fn measure(ctx: &ExpContext, ms: &[usize]) -> anyhow::Result<Table5Result> {
     Ok(Table5Result { uploads })
 }
 
+/// Render the measured table next to the paper's reference numbers.
 pub fn render(res: &Table5Result, ms: &[usize]) -> String {
     let mut out = String::new();
     out.push_str(&format!(
@@ -105,6 +107,7 @@ pub fn render(res: &Table5Result, ms: &[usize]) -> String {
     out
 }
 
+/// Regenerate Table 5 (text, CSV, and JSON reports).
 pub fn run(ctx: &ExpContext) -> anyhow::Result<()> {
     println!("Table 5 — uploads to ε = {:.0e}, M ∈ {{9, 18, 27}}", ctx.target());
     let ms: &[usize] = if ctx.quick { &[3] } else { &[3, 6, 9] };

@@ -1,0 +1,293 @@
+//! Minibatch specification and deterministic row sampling for the
+//! stochastic (LASG) algorithms.
+//!
+//! Every batch is a pure function of `(run seed, worker, iteration)` —
+//! never of the thread pool size, the scheduler width, or which OS thread
+//! happens to evaluate the worker. Two consequences the stochastic
+//! subsystem is built on (DESIGN.md §10):
+//!
+//! * **Reproducibility** — a stochastic trace is bit-identical across
+//!   `RunOptions::threads`, `--sched-threads`, and re-runs, exactly like
+//!   the full-batch traces.
+//! * **Coordination-free distribution** — a remote worker (the threaded
+//!   transport, the TCP deployment) derives its own batch from `(seed,
+//!   worker, k)` locally; no row indices ever cross the wire.
+//!
+//! Rows are drawn uniformly **without replacement** from the shard's real
+//! (non-padding) rows by selection sampling (Knuth's Algorithm S), which
+//! emits indices in ascending order with O(n) work and zero allocation
+//! beyond the caller's reused buffer. Ascending order matters: the dense
+//! and CSR minibatch kernels traverse the selected rows in the same
+//! order, so their floating-point accumulation schedules agree and the
+//! two storage formats produce bit-identical stochastic gradients (same
+//! argument as the full-batch kernels, DESIGN.md §8).
+
+use crate::util::Rng;
+
+/// How large a minibatch each worker draws per iteration.
+///
+/// `Full` reproduces the full-batch algorithms byte-for-byte (the driver
+/// never touches the sampler on that path); `Fixed`/`Fraction` select a
+/// per-worker row subset, reseeded every `(worker, iteration)`.
+///
+/// ```
+/// use lag::grad::BatchSpec;
+///
+/// // parse CLI / config syntax
+/// assert_eq!(BatchSpec::parse("full").unwrap(), BatchSpec::Full);
+/// assert_eq!(BatchSpec::parse("64").unwrap(), BatchSpec::Fixed(64));
+/// assert_eq!(BatchSpec::parse("0.25").unwrap(), BatchSpec::Fraction(0.25));
+///
+/// // resolve against a shard with 50 real rows
+/// assert_eq!(BatchSpec::Full.size_for(50), 50);
+/// assert_eq!(BatchSpec::Fixed(10).size_for(50), 10);
+/// assert_eq!(BatchSpec::Fixed(500).size_for(50), 50); // clamped
+/// assert_eq!(BatchSpec::Fraction(0.25).size_for(50), 13); // ceil
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BatchSpec {
+    /// Every real row, every iteration — the deterministic full-batch
+    /// gradient the source paper uses.
+    Full,
+    /// Exactly `b` rows per worker per iteration (clamped to the shard's
+    /// real row count).
+    Fixed(usize),
+    /// A fraction `p ∈ (0, 1]` of each worker's real rows, rounded up.
+    Fraction(f64),
+}
+
+impl BatchSpec {
+    /// True iff this spec never subsamples.
+    pub fn is_full(&self) -> bool {
+        matches!(self, BatchSpec::Full)
+    }
+
+    /// Batch size for a shard with `n_real` real rows (always in
+    /// `1..=n_real` for a non-empty shard).
+    pub fn size_for(&self, n_real: usize) -> usize {
+        match *self {
+            BatchSpec::Full => n_real,
+            BatchSpec::Fixed(b) => b.clamp(1, n_real.max(1)),
+            BatchSpec::Fraction(p) => {
+                let b = (p * n_real as f64).ceil() as usize;
+                b.clamp(1, n_real.max(1))
+            }
+        }
+    }
+
+    /// Parse the CLI/config syntax: `full`, an integer batch size, or a
+    /// fractional batch (`0.25`).
+    pub fn parse(s: &str) -> anyhow::Result<BatchSpec> {
+        let s = s.trim();
+        if s.is_empty() || s.eq_ignore_ascii_case("full") {
+            return Ok(BatchSpec::Full);
+        }
+        if s.contains('.') {
+            let p: f64 = s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--batch: expected float, got '{s}'"))?;
+            anyhow::ensure!(p > 0.0 && p <= 1.0, "--batch fraction must be in (0, 1], got {p}");
+            return Ok(BatchSpec::Fraction(p));
+        }
+        let b: usize = s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--batch: expected full|<int>|<fraction>, got '{s}'"))?;
+        anyhow::ensure!(b >= 1, "--batch size must be >= 1");
+        Ok(BatchSpec::Fixed(b))
+    }
+
+    /// Interpret a bare JSON number: integers >= 2 are `Fixed`, values in
+    /// (0, 1) are `Fraction`. The number 1 is rejected as ambiguous — JSON
+    /// cannot distinguish `1` (batch size one) from `1.0` (the full
+    /// fraction); spell it `"full"` or the string `"1"` instead.
+    pub fn from_number(x: f64) -> anyhow::Result<BatchSpec> {
+        if x == 1.0 {
+            anyhow::bail!("batch 1 is ambiguous (size one vs full); use \"full\" or \"1\"")
+        } else if x > 1.0 && x.fract() == 0.0 {
+            Ok(BatchSpec::Fixed(x as usize))
+        } else if x > 0.0 && x < 1.0 {
+            Ok(BatchSpec::Fraction(x))
+        } else {
+            anyhow::bail!("batch must be an integer >= 1 or a fraction in (0, 1), got {x}")
+        }
+    }
+
+    /// Compact label for reports and file names (`full`, `b10`, `p0.25`).
+    pub fn label(&self) -> String {
+        match *self {
+            BatchSpec::Full => "full".to_string(),
+            BatchSpec::Fixed(b) => format!("b{b}"),
+            BatchSpec::Fraction(p) => format!("p{p}"),
+        }
+    }
+}
+
+/// Resolve `spec` against a shard: `None` means run the full-batch
+/// gradient (no sampling, no RNG state consumed); `Some((b, scale))`
+/// means subsample `b` rows and scale the estimate by `n_real / b`. The
+/// single source of truth for the full-batch short-circuit — the
+/// synchronous driver and the threaded transport both dispatch through
+/// it, so their batch policies can never drift apart.
+pub fn plan(spec: BatchSpec, n_real: usize) -> Option<(usize, f64)> {
+    let b = spec.size_for(n_real);
+    if b >= n_real {
+        None
+    } else {
+        Some((b, n_real as f64 / b as f64))
+    }
+}
+
+/// The RNG stream for worker `worker`'s batch at iteration `iter`. Derived
+/// from the run seed alone via two [`Rng::fork`] hops, so it is independent
+/// of the Num-IAG sampling stream (which consumes `Rng::new(seed)`
+/// directly) and of every other `(worker, iter)` pair.
+pub fn batch_rng(seed: u64, worker: usize, iter: u64) -> Rng {
+    // domain-separation constant: the batch stream must not collide with
+    // other consumers of the run seed
+    let mut root = Rng::new(seed ^ 0xB47C_5A9E_21D3_66F1);
+    let mut per_worker = root.fork(worker as u64);
+    per_worker.fork(iter)
+}
+
+/// Sample `spec`'s batch for `(seed, worker, iter)` from `0..n_real` into
+/// `out` (cleared first): uniform without replacement, ascending order.
+///
+/// Selection sampling (Knuth Algorithm S): row `i` is selected with
+/// probability `need / remaining`, which yields exactly `b` indices, each
+/// subset equally likely, already sorted. A full-size batch short-circuits
+/// to `0..n_real` without consuming RNG state.
+pub fn sample_rows_into(
+    spec: BatchSpec,
+    n_real: usize,
+    seed: u64,
+    worker: usize,
+    iter: u64,
+    out: &mut Vec<u32>,
+) {
+    let b = spec.size_for(n_real);
+    out.clear();
+    out.reserve(b);
+    if b >= n_real {
+        out.extend(0..n_real as u32);
+        return;
+    }
+    let mut rng = batch_rng(seed, worker, iter);
+    let mut need = b;
+    for i in 0..n_real {
+        if rng.below(n_real - i) < need {
+            out.push(i as u32);
+            need -= 1;
+            if need == 0 {
+                break;
+            }
+        }
+    }
+    debug_assert_eq!(out.len(), b);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_all_forms() {
+        assert_eq!(BatchSpec::parse("full").unwrap(), BatchSpec::Full);
+        assert_eq!(BatchSpec::parse("FULL").unwrap(), BatchSpec::Full);
+        assert_eq!(BatchSpec::parse("32").unwrap(), BatchSpec::Fixed(32));
+        assert_eq!(BatchSpec::parse("0.5").unwrap(), BatchSpec::Fraction(0.5));
+        assert!(BatchSpec::parse("0").is_err());
+        assert!(BatchSpec::parse("1.5").is_err());
+        assert!(BatchSpec::parse("-0.2").is_err());
+        assert!(BatchSpec::parse("abc").is_err());
+    }
+
+    #[test]
+    fn from_number_classifies() {
+        assert_eq!(BatchSpec::from_number(16.0).unwrap(), BatchSpec::Fixed(16));
+        assert_eq!(BatchSpec::from_number(0.1).unwrap(), BatchSpec::Fraction(0.1));
+        assert!(BatchSpec::from_number(1.0).is_err(), "1 is ambiguous in JSON");
+        assert!(BatchSpec::from_number(0.0).is_err());
+        assert!(BatchSpec::from_number(-3.0).is_err());
+    }
+
+    #[test]
+    fn plan_short_circuits_full_batches() {
+        assert_eq!(plan(BatchSpec::Full, 30), None);
+        assert_eq!(plan(BatchSpec::Fixed(40), 30), None);
+        assert_eq!(plan(BatchSpec::Fraction(1.0), 30), None);
+        assert_eq!(plan(BatchSpec::Fixed(10), 30), Some((10, 3.0)));
+        assert_eq!(plan(BatchSpec::Fraction(0.5), 30), Some((15, 2.0)));
+    }
+
+    #[test]
+    fn size_for_clamps_and_rounds() {
+        assert_eq!(BatchSpec::Full.size_for(7), 7);
+        assert_eq!(BatchSpec::Fixed(3).size_for(7), 3);
+        assert_eq!(BatchSpec::Fixed(0).size_for(7), 1);
+        assert_eq!(BatchSpec::Fraction(0.01).size_for(7), 1);
+        assert_eq!(BatchSpec::Fraction(1.0).size_for(7), 7);
+    }
+
+    #[test]
+    fn sampler_is_deterministic_and_sorted_unique() {
+        let spec = BatchSpec::Fixed(8);
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        sample_rows_into(spec, 30, 42, 3, 17, &mut a);
+        sample_rows_into(spec, 30, 42, 3, 17, &mut b);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 8);
+        assert!(a.windows(2).all(|w| w[0] < w[1]), "ascending unique: {a:?}");
+        assert!(a.iter().all(|&i| (i as usize) < 30));
+    }
+
+    #[test]
+    fn sampler_varies_with_worker_iter_and_seed() {
+        let spec = BatchSpec::Fixed(8);
+        let mut base = Vec::new();
+        sample_rows_into(spec, 64, 1, 0, 1, &mut base);
+        for (seed, worker, iter) in [(1, 0, 2), (1, 1, 1), (2, 0, 1)] {
+            let mut other = Vec::new();
+            sample_rows_into(spec, 64, seed, worker, iter, &mut other);
+            assert_ne!(base, other, "seed={seed} worker={worker} iter={iter}");
+        }
+    }
+
+    #[test]
+    fn full_size_batches_are_identity() {
+        for spec in [BatchSpec::Full, BatchSpec::Fixed(99), BatchSpec::Fraction(1.0)] {
+            let mut rows = Vec::new();
+            sample_rows_into(spec, 5, 7, 0, 0, &mut rows);
+            assert_eq!(rows, vec![0, 1, 2, 3, 4]);
+        }
+    }
+
+    #[test]
+    fn sampler_is_roughly_uniform() {
+        // every row should be hit a similar number of times across iters
+        let spec = BatchSpec::Fixed(4);
+        let n = 16;
+        let mut counts = vec![0u32; n];
+        let mut rows = Vec::new();
+        for iter in 0..4000 {
+            sample_rows_into(spec, n, 9, 0, iter, &mut rows);
+            for &r in &rows {
+                counts[r as usize] += 1;
+            }
+        }
+        let expect = 4000.0 * 4.0 / n as f64;
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64 - expect).abs() < 0.15 * expect,
+                "row {i}: {c} vs expected {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(BatchSpec::Full.label(), "full");
+        assert_eq!(BatchSpec::Fixed(10).label(), "b10");
+        assert_eq!(BatchSpec::Fraction(0.25).label(), "p0.25");
+    }
+}

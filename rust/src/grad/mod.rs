@@ -16,6 +16,10 @@
 //! several workers across threads (see `coordinator::pool`). Engines use
 //! interior mutability (an atomic counter) for call accounting.
 
+pub mod batch;
+
+pub use batch::{sample_rows_into, BatchSpec};
+
 use crate::data::{Problem, ShardStorage, Task, WorkerShard};
 use crate::linalg::{self, sigmoid, sparse};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -25,6 +29,28 @@ pub trait GradEngine {
     /// Write `∇L_m(θ)` into `out` (length `d`) and return `L_m(θ)`.
     fn grad_into(&self, m: usize, theta: &[f64], out: &mut [f64]) -> f64;
 
+    /// Minibatch analog of [`GradEngine::grad_into`]: write the scaled
+    /// stochastic estimate `scale · Σ_{i ∈ rows} ∇ℓ_i(θ)` (plus the full
+    /// regularizer for logistic tasks) into `out` and return the matching
+    /// loss estimate. `rows` index the shard's *real* rows, ascending.
+    ///
+    /// Only engines with direct shard access can subsample; the default
+    /// panics so a misconfigured stochastic run fails loudly instead of
+    /// silently training full-batch. [`NativeEngine`] overrides it with
+    /// [`worker_grad_batch_into`]; the AOT PJRT artifacts are compiled for
+    /// full shards and keep the default.
+    fn grad_batch_into(
+        &self,
+        m: usize,
+        theta: &[f64],
+        rows: &[u32],
+        scale: f64,
+        out: &mut [f64],
+    ) -> f64 {
+        let _ = (m, theta, rows, scale, out);
+        panic!("engine '{}' does not support minibatch gradients", self.name());
+    }
+
     /// Allocating convenience wrapper (cold paths and tests).
     fn grad(&self, m: usize, theta: &[f64]) -> (Vec<f64>, f64) {
         let mut out = vec![0.0; theta.len()];
@@ -32,6 +58,7 @@ pub trait GradEngine {
         (out, loss)
     }
 
+    /// Engine identifier recorded in traces (`native`, `pjrt`).
     fn name(&self) -> &'static str;
 
     /// Total gradient evaluations so far (computation accounting).
@@ -61,6 +88,7 @@ pub struct NativeEngine<'a> {
 }
 
 impl<'a> NativeEngine<'a> {
+    /// Engine serving `problem`'s shards through the native kernels.
     pub fn new(problem: &'a Problem) -> Self {
         NativeEngine { problem, calls: AtomicU64::new(0) }
     }
@@ -70,6 +98,18 @@ impl GradEngine for NativeEngine<'_> {
     fn grad_into(&self, m: usize, theta: &[f64], out: &mut [f64]) -> f64 {
         self.calls.fetch_add(1, Ordering::Relaxed);
         worker_grad_into(self.problem.task, &self.problem.workers[m], theta, out)
+    }
+    fn grad_batch_into(
+        &self,
+        m: usize,
+        theta: &[f64],
+        rows: &[u32],
+        scale: f64,
+        out: &mut [f64],
+    ) -> f64 {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        let shard = &self.problem.workers[m];
+        worker_grad_batch_into(self.problem.task, shard, theta, rows, scale, out)
     }
     fn name(&self) -> &'static str {
         "native"
@@ -171,6 +211,121 @@ pub fn worker_grad_into(task: Task, s: &WorkerShard, theta: &[f64], g: &mut [f64
 pub fn worker_grad(task: Task, s: &WorkerShard, theta: &[f64]) -> (Vec<f64>, f64) {
     let mut g = vec![0.0; s.d()];
     let loss = worker_grad_into(task, s, theta, &mut g);
+    (g, loss)
+}
+
+/// Minibatch `(grad, loss)` for one shard over the selected `rows` (indices
+/// into the shard's real rows, ascending — see [`batch::sample_rows_into`]).
+///
+/// Computes the importance-scaled stochastic estimate of the full shard
+/// gradient: `scale · Σ_{i ∈ rows} ∇ℓ_i(θ)` with `scale = n_real / |rows|`,
+/// so `E[ĝ] = ∇L_m(θ)` exactly. For logistic tasks the per-worker
+/// regularizer `λθ` enters once, unscaled (it does not depend on the
+/// sample); the returned loss mirrors the same decomposition.
+///
+/// The row loops reuse the fused single-pass structure of
+/// [`worker_grad_into`], with the same per-call `(format, task)` dispatch;
+/// dense and CSR storage visit the selected rows in the same ascending
+/// order, so the two formats agree **bitwise** for any batch (asserted by
+/// `tests/stochastic_properties.rs`).
+pub fn worker_grad_batch_into(
+    task: Task,
+    s: &WorkerShard,
+    theta: &[f64],
+    rows: &[u32],
+    scale: f64,
+    g: &mut [f64],
+) -> f64 {
+    debug_assert_eq!(g.len(), s.d());
+    debug_assert!(rows.iter().all(|&i| (i as usize) < s.n_real));
+    g.fill(0.0);
+    match (&s.storage, task) {
+        (ShardStorage::Dense(x), Task::LinReg) => {
+            let mut loss = 0.0;
+            for &i in rows {
+                let i = i as usize;
+                let row = x.row(i);
+                let res = linalg::dot(row, theta) - s.y[i];
+                let r = s.w[i] * res;
+                loss += r * res;
+                if r != 0.0 {
+                    linalg::axpy(r, row, g);
+                }
+            }
+            let f = 2.0 * scale;
+            for v in g.iter_mut() {
+                *v *= f;
+            }
+            scale * loss
+        }
+        (ShardStorage::Dense(x), Task::LogReg { lam }) => {
+            let mut loss = 0.0;
+            for &i in rows {
+                let i = i as usize;
+                let row = x.row(i);
+                let u = -s.y[i] * linalg::dot(row, theta);
+                let r = s.w[i] * (-s.y[i]) * sigmoid(u);
+                loss += s.w[i] * linalg::log1pexp(u);
+                if r != 0.0 {
+                    linalg::axpy(r, row, g);
+                }
+            }
+            for v in g.iter_mut() {
+                *v *= scale;
+            }
+            linalg::axpy(lam, theta, g);
+            0.5 * lam * linalg::norm2(theta) + scale * loss
+        }
+        (ShardStorage::Csr(a), Task::LinReg) => {
+            let mut loss = 0.0;
+            for &i in rows {
+                let i = i as usize;
+                let (cs, vs) = a.row(i);
+                let res = sparse::spdot(cs, vs, theta) - s.y[i];
+                let r = s.w[i] * res;
+                loss += r * res;
+                if r != 0.0 {
+                    sparse::scatter_axpy(r, cs, vs, g);
+                }
+            }
+            let f = 2.0 * scale;
+            for v in g.iter_mut() {
+                *v *= f;
+            }
+            scale * loss
+        }
+        (ShardStorage::Csr(a), Task::LogReg { lam }) => {
+            let mut loss = 0.0;
+            for &i in rows {
+                let i = i as usize;
+                let (cs, vs) = a.row(i);
+                let u = -s.y[i] * sparse::spdot(cs, vs, theta);
+                let r = s.w[i] * (-s.y[i]) * sigmoid(u);
+                loss += s.w[i] * linalg::log1pexp(u);
+                if r != 0.0 {
+                    sparse::scatter_axpy(r, cs, vs, g);
+                }
+            }
+            for v in g.iter_mut() {
+                *v *= scale;
+            }
+            linalg::axpy(lam, theta, g);
+            0.5 * lam * linalg::norm2(theta) + scale * loss
+        }
+    }
+}
+
+/// Allocating wrapper around [`worker_grad_batch_into`] (tests and cold
+/// paths).
+pub fn worker_grad_batch(
+    task: Task,
+    s: &WorkerShard,
+    theta: &[f64],
+    rows: &[u32],
+    scale: f64,
+) -> (Vec<f64>, f64) {
+    let mut g = vec![0.0; s.d()];
+    let loss = worker_grad_batch_into(task, s, theta, rows, scale, &mut g);
     (g, loss)
 }
 
@@ -356,6 +511,69 @@ mod tests {
         let l2 = e.grad_into(1, &theta, &mut out);
         assert_eq!(g, out);
         assert_eq!(l.to_bits(), l2.to_bits());
+    }
+
+    /// With every real row selected and scale 1, the minibatch kernel's
+    /// gradient is bit-identical to the full-batch kernel's (the loss only
+    /// agrees to fp tolerance: the regularizer enters in a different
+    /// summation order).
+    #[test]
+    fn full_size_batch_gradient_bitwise_matches_full_kernel() {
+        for (task, pm) in [(Task::LinReg, false), (Task::LogReg { lam: 1e-3 }, true)] {
+            let s = shard(23, 9, 51, pm);
+            let mut rng = Rng::new(52);
+            let theta = rng.normal_vec(s.d());
+            let rows: Vec<u32> = (0..s.n_real as u32).collect();
+            let (gb, lb) = worker_grad_batch(task, &s, &theta, &rows, 1.0);
+            let (gf, lf) = worker_grad(task, &s, &theta);
+            assert_eq!(gb, gf, "{task:?}");
+            assert!((lb - lf).abs() <= 1e-12 * (1.0 + lf.abs()), "{task:?}: {lb} vs {lf}");
+        }
+    }
+
+    /// The scaled minibatch gradient is an unbiased estimate of the full
+    /// shard gradient: averaging over many deterministic batches converges
+    /// to the full gradient.
+    #[test]
+    fn batch_gradient_mean_approximates_full_gradient() {
+        use super::batch::{sample_rows_into, BatchSpec};
+        let s = shard(40, 6, 53, false);
+        let mut rng = Rng::new(54);
+        let theta = rng.normal_vec(6);
+        let (gf, _) = worker_grad(Task::LinReg, &s, &theta);
+        let spec = BatchSpec::Fixed(8);
+        let scale = s.n_real as f64 / 8.0;
+        let mut mean = vec![0.0; 6];
+        let mut rows = Vec::new();
+        let trials = 4000;
+        for iter in 0..trials {
+            sample_rows_into(spec, s.n_real, 99, 0, iter, &mut rows);
+            let (g, _) = worker_grad_batch(Task::LinReg, &s, &theta, &rows, scale);
+            for (m, v) in mean.iter_mut().zip(&g) {
+                *m += v / trials as f64;
+            }
+        }
+        let err: f64 = mean.iter().zip(&gf).map(|(a, b)| (a - b).abs()).sum();
+        let norm: f64 = gf.iter().map(|v| v.abs()).sum();
+        assert!(err < 0.05 * norm, "bias {err} vs ‖g‖₁ {norm}");
+    }
+
+    #[test]
+    fn engine_batch_grad_matches_kernel_and_counts_calls() {
+        use super::batch::{sample_rows_into, BatchSpec};
+        let p = crate::data::synthetic::linreg_increasing_l(3, 20, 5, 55);
+        let e = NativeEngine::new(&p);
+        let mut rng = Rng::new(56);
+        let theta = rng.normal_vec(5);
+        let mut rows = Vec::new();
+        sample_rows_into(BatchSpec::Fixed(6), p.workers[1].n_real, 3, 1, 4, &mut rows);
+        let scale = p.workers[1].n_real as f64 / rows.len() as f64;
+        let mut out = vec![f64::NAN; 5];
+        let l = e.grad_batch_into(1, &theta, &rows, scale, &mut out);
+        let (g_ref, l_ref) = worker_grad_batch(p.task, &p.workers[1], &theta, &rows, scale);
+        assert_eq!(out, g_ref);
+        assert_eq!(l.to_bits(), l_ref.to_bits());
+        assert_eq!(e.calls(), 1, "batch evaluations count as engine calls");
     }
 
     #[test]

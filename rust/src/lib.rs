@@ -6,9 +6,11 @@
 //!
 //! * **L3 (this crate)** — the parameter server, worker fleet, the LAG-WK /
 //!   LAG-PS trigger rules (paper eqs. (15a)/(15b)), the lazy aggregation
-//!   recursion (4), all evaluation baselines (GD, Cyc-IAG, Num-IAG), exact
-//!   communication accounting, the experiment harness regenerating every
-//!   figure/table of the paper, and a threaded message-passing deployment.
+//!   recursion (4), all evaluation baselines (GD, Cyc-IAG, Num-IAG), the
+//!   stochastic LASG family (minibatch SGD + four lazy trigger variants,
+//!   following Chen–Sun–Yin 2020), exact communication accounting, the
+//!   experiment harness regenerating every figure/table of the paper, and
+//!   a threaded message-passing deployment.
 //! * **L2 (JAX, build time)** — per-worker gradient/loss computations and a
 //!   transformer LM, lowered once to HLO text in `artifacts/`.
 //! * **L1 (Pallas, build time)** — the gradient hot-spots as tiled kernels,
@@ -30,6 +32,12 @@
 //! let trace = lag::coordinator::run(&problem, Algorithm::LagWk, &opts, &engine);
 //! println!("LAG-WK uploads to 1e-8: {}", trace.total_uploads());
 //! ```
+//!
+//! See the repository `README.md` for the architecture map and the
+//! figure/table → command reproduction matrix, and `DESIGN.md` for the
+//! determinism, storage-format and stochastic-subsystem arguments.
+
+#![warn(missing_docs)]
 
 pub mod config;
 pub mod coordinator;
@@ -46,11 +54,12 @@ pub mod util;
 /// Common imports for downstream users and the examples.
 pub mod prelude {
     pub use crate::coordinator::{
-        run, run_with_workspace, Algorithm, CommStats, RunOptions, RunTrace, RunWorkspace,
+        run, run_with_workspace, Algorithm, CommStats, LasgRule, RunOptions, RunTrace,
+        RunWorkspace,
     };
     pub use crate::data::{Dataset, Problem, ShardStorage, SparseDataset, Task, WorkerShard};
     pub use crate::experiments::{ProblemCache, ProblemKey, RunSpec, Scheduler};
-    pub use crate::grad::{GradEngine, NativeEngine};
+    pub use crate::grad::{BatchSpec, GradEngine, NativeEngine};
     pub use crate::linalg::{CsrMatrix, MatOps, Matrix};
 }
 

@@ -23,17 +23,23 @@ pub use sparse::CsrMatrix;
 /// underlying values (see `sparse`'s module docs), so a problem's derived
 /// quantities do not depend on how its shards are stored.
 pub trait MatOps {
+    /// Number of rows.
     fn rows(&self) -> usize;
+    /// Number of columns.
     fn cols(&self) -> usize;
+    /// `y = A x` into a caller-provided buffer.
     fn matvec_into(&self, x: &[f64], y: &mut [f64]);
+    /// `y = Aᵀ x` into a caller-provided buffer.
     fn t_matvec_into(&self, x: &[f64], y: &mut [f64]);
 
+    /// Allocating `A x` (setup paths).
     fn matvec(&self, x: &[f64]) -> Vec<f64> {
         let mut y = vec![0.0; self.rows()];
         self.matvec_into(x, &mut y);
         y
     }
 
+    /// Allocating `Aᵀ x` (setup paths).
     fn t_matvec(&self, x: &[f64]) -> Vec<f64> {
         let mut y = vec![0.0; self.cols()];
         self.t_matvec_into(x, &mut y);
@@ -74,16 +80,21 @@ impl MatOps for CsrMatrix {
 /// Row-major dense matrix.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Matrix {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Row-major elements (`rows * cols` long).
     pub data: Vec<f64>,
 }
 
 impl Matrix {
+    /// All-zero matrix of the given shape.
     pub fn zeros(rows: usize, cols: usize) -> Matrix {
         Matrix { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// Build from per-row vectors (all rows must have equal length).
     pub fn from_rows(rows: Vec<Vec<f64>>) -> Matrix {
         let r = rows.len();
         let c = rows.first().map(|x| x.len()).unwrap_or(0);
@@ -95,26 +106,31 @@ impl Matrix {
         Matrix { rows: r, cols: c, data }
     }
 
+    /// Wrap a row-major element vector (length must be `rows * cols`).
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Matrix {
         assert_eq!(data.len(), rows * cols);
         Matrix { rows, cols, data }
     }
 
+    /// Row i as a slice.
     #[inline]
     pub fn row(&self, i: usize) -> &[f64] {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Row i as a mutable slice.
     #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Element `(i, j)`.
     #[inline]
     pub fn get(&self, i: usize, j: usize) -> f64 {
         self.data[i * self.cols + j]
     }
 
+    /// Set element `(i, j)`.
     #[inline]
     pub fn set(&mut self, i: usize, j: usize, v: f64) {
         self.data[i * self.cols + j] = v;
@@ -222,6 +238,8 @@ impl Matrix {
 // for the trigger checks).
 // ---------------------------------------------------------------------------
 
+/// Dot product `aᵀb` (blocked 4-wide; the summation schedule the CSR
+/// kernels reproduce bitwise).
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
@@ -244,11 +262,13 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     s
 }
 
+/// Squared Euclidean norm ‖a‖².
 #[inline]
 pub fn norm2(a: &[f64]) -> f64 {
     dot(a, a)
 }
 
+/// Euclidean norm ‖a‖.
 #[inline]
 pub fn norm(a: &[f64]) -> f64 {
     norm2(a).sqrt()

@@ -29,11 +29,15 @@ use super::Matrix;
 /// each row; stored values are nonzero.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CsrMatrix {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
     /// `row_ptr[i]..row_ptr[i+1]` indexes row i's entries (`rows + 1` long).
     pub row_ptr: Vec<usize>,
+    /// Column index of each stored entry (ascending within a row).
     pub col_idx: Vec<u32>,
+    /// Value of each stored entry (never exactly zero).
     pub vals: Vec<f64>,
 }
 

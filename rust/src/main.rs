@@ -1,15 +1,18 @@
 //! `lag` — the leader CLI.
 //!
 //! ```text
-//! lag exp <fig2|fig3|fig4|fig5|fig6|fig7|table5|all> [--engine pjrt|native]
-//!         [--artifacts DIR] [--out DIR] [--quick] [--sched-threads N]
-//! lag train --task linreg|logreg --algo lag-wk|lag-ps|gd|cyc-iag|num-iag
+//! lag exp <fig2|fig3|fig4|fig5|fig6|fig7|table5|nonconvex|lasg|all>
+//!         [--engine pjrt|native] [--artifacts DIR] [--out DIR] [--quick]
+//!         [--sched-threads N]
+//! lag train --task linreg|logreg
+//!         --algo gd|lag-wk|lag-ps|cyc-iag|num-iag|sgd|lasg-wk|lasg-ps
 //!         [--m 9] [--n 50] [--d 50] [--iters 1000] [--target 1e-8]
 //!         [--engine pjrt|native] [--seed 1234] [--profile increasing|uniform]
+//!         [--batch full|N|0.N] [--lasg-rule wk1|wk2|ps1|ps2]
 //! lag info [--artifacts DIR]
 //! ```
 
-use lag::coordinator::{run, Algorithm, RunOptions};
+use lag::coordinator::{run, Algorithm, BatchSpec, LasgRule, RunOptions};
 use lag::data::{synthetic, Task};
 use lag::experiments::{run_experiment, EngineKind, ExpContext};
 use lag::grad::NativeEngine;
@@ -42,9 +45,11 @@ fn print_help() {
     println!(
         "lag — Lazily Aggregated Gradient (NeurIPS 2018) reproduction\n\n\
          subcommands:\n  \
-         exp <id>     regenerate a paper figure/table (fig2..fig7, table5, nonconvex, all)\n  \
+         exp <id>     regenerate a paper figure/table (fig2..fig7, table5, nonconvex,\n               \
+         lasg, all); 'lasg' is the stochastic SGD-vs-LASG study\n  \
          run          execute a declarative JSON run config: lag run --config cfg.json\n  \
-         train        run one algorithm on a synthetic problem\n  \
+         train        run one algorithm on a synthetic problem (stochastic algorithms\n               \
+         sgd|lasg-wk|lasg-ps take --batch full|N|0.N and --lasg-rule wk1|wk2|ps1|ps2)\n  \
          leader       TCP parameter server: --addr 0.0.0.0:7070 --m 9 [--algo lag-wk]\n  \
          worker       TCP worker: --addr host:7070 --index 0 (same problem flags)\n  \
          plot         render a results CSV as an ASCII curve: lag plot results/fig3/lag-wk.csv\n  \
@@ -134,6 +139,8 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         ps_xi: args.opt_f64("ps-xi", 1.0)?,
         d_history: args.opt_usize("d-history", 10)?,
         seed,
+        batch: BatchSpec::parse(&args.opt_or("batch", "full"))?,
+        lasg_rule: args.opt("lasg-rule").map(LasgRule::parse).transpose()?,
         ..Default::default()
     };
     println!(

@@ -1,5 +1,15 @@
-//! Run traces and exporters: iteration/communication curves (the paper's
-//! figures), convergence detection, CSV/JSON output under `results/`.
+//! Run traces and exporters.
+//!
+//! Every algorithm run — synchronous driver, thread-pool driver, threaded
+//! transport, TCP deployment — produces one [`RunTrace`]: a sequence of
+//! [`IterRecord`]s (objective error + cumulative communication counters),
+//! the per-worker upload-event lists behind Fig. 2's stick plot, and the
+//! convergence markers the paper's Table 5 is built from
+//! (`uploads_at_target`). The exporters ([`RunTrace::write_csv`],
+//! [`RunTrace::write_events_csv`]) emit the deterministic CSV files under
+//! `results/` that the figures and the byte-comparison CI jobs consume —
+//! float formatting is fixed-width scientific (`{:.17e}`), so equal traces
+//! serialize to equal bytes.
 
 use crate::util::csv::CsvWriter;
 use std::path::Path;
@@ -7,6 +17,7 @@ use std::path::Path;
 /// One training iteration's record.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct IterRecord {
+    /// Iteration index (0 = the initial iterate, before any step).
     pub k: usize,
     /// `L(θᵏ) − L(θ*)`.
     pub obj_err: f64,
@@ -21,11 +32,17 @@ pub struct IterRecord {
 /// Full trace of one algorithm run.
 #[derive(Debug, Clone)]
 pub struct RunTrace {
+    /// Algorithm identifier (`Algorithm::name`, e.g. `lag-wk`).
     pub algo: String,
+    /// Problem name the run executed on.
     pub problem: String,
+    /// Gradient engine identifier (`native`, `pjrt`, …).
     pub engine: String,
+    /// Worker count M.
     pub m: usize,
+    /// Stepsize the run used (explicit or per-algorithm default).
     pub alpha: f64,
+    /// Per-iteration records, thinned by `RunOptions::record_every`.
     pub records: Vec<IterRecord>,
     /// Per-worker upload iteration indices (Fig. 2's stick plot).
     pub upload_events: Vec<Vec<usize>>,
@@ -34,6 +51,8 @@ pub struct RunTrace {
     /// Cumulative uploads at convergence (the paper's communication
     /// complexity metric, Table 5).
     pub uploads_at_target: Option<u64>,
+    /// Wall-clock duration of the run in seconds (not deterministic; never
+    /// part of byte-compared artifacts).
     pub wall_secs: f64,
     /// Iterate sequence θ¹, θ², … (only populated when
     /// `RunOptions::record_thetas` is set; used by the Lyapunov tests).
@@ -41,20 +60,40 @@ pub struct RunTrace {
 }
 
 impl RunTrace {
+    /// Total worker→server uploads over the whole run.
     pub fn total_uploads(&self) -> u64 {
         self.records.last().map(|r| r.cum_uploads).unwrap_or(0)
     }
+    /// Total server→worker parameter sends over the whole run.
     pub fn total_downloads(&self) -> u64 {
         self.records.last().map(|r| r.cum_downloads).unwrap_or(0)
     }
+    /// Total local gradient evaluations over the whole run.
     pub fn total_grad_evals(&self) -> u64 {
         self.records.last().map(|r| r.cum_grad_evals).unwrap_or(0)
     }
+    /// Number of recorded iterations (including the initial record).
     pub fn iters(&self) -> usize {
         self.records.len()
     }
+    /// Objective error at the last recorded iteration.
     pub fn final_err(&self) -> f64 {
         self.records.last().map(|r| r.obj_err).unwrap_or(f64::INFINITY)
+    }
+
+    /// Smallest objective error along the recorded trace — the noise floor
+    /// a constant-stepsize stochastic run settles into.
+    pub fn min_err(&self) -> f64 {
+        self.records.iter().map(|r| r.obj_err).fold(f64::INFINITY, f64::min)
+    }
+
+    /// Cumulative uploads at the first recorded iteration whose objective
+    /// error reaches `target`; `None` if the trace never does. Unlike
+    /// `uploads_at_target` (fixed at run time), this evaluates an
+    /// arbitrary post-hoc target — the LASG experiment derives its target
+    /// from the measured noise floors after the runs finish.
+    pub fn uploads_to(&self, target: f64) -> Option<u64> {
+        self.records.iter().find(|r| r.obj_err <= target).map(|r| r.cum_uploads)
     }
 
     /// Objective error as a function of cumulative uploads — the paper's
@@ -160,6 +199,15 @@ mod tests {
         assert_eq!(t.iters(), 2);
         assert_eq!(t.final_err(), 0.5);
         assert_eq!(t.err_vs_comm(), vec![(2, 1.0), (4, 0.5)]);
+    }
+
+    #[test]
+    fn uploads_to_finds_first_crossing() {
+        let t = toy_trace();
+        assert_eq!(t.uploads_to(1.0), Some(2));
+        assert_eq!(t.uploads_to(0.5), Some(4));
+        assert_eq!(t.uploads_to(0.1), None);
+        assert_eq!(t.min_err(), 0.5);
     }
 
     #[test]

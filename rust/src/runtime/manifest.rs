@@ -9,20 +9,30 @@ use std::path::{Path, PathBuf};
 /// Init scheme for a transformer parameter (mirrors `param_specs`).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Init {
-    Normal { std: f64 },
+    /// Gaussian with the given standard deviation.
+    Normal {
+        /// Standard deviation of the init distribution.
+        std: f64,
+    },
+    /// All zeros.
     Zeros,
+    /// All ones.
     Ones,
 }
 
 /// One transformer parameter's spec, in artifact argument order.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ParamSpec {
+    /// Parameter name (e.g. `blocks.0.mlp.w1`).
     pub name: String,
+    /// Tensor shape.
     pub shape: Vec<usize>,
+    /// Initialization scheme.
     pub init: Init,
 }
 
 impl ParamSpec {
+    /// Number of elements (product of the shape).
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
@@ -31,40 +41,60 @@ impl ParamSpec {
 /// Transformer artifact config.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TransformerMeta {
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Model width.
     pub d_model: usize,
+    /// Number of decoder blocks.
     pub n_layers: usize,
+    /// Attention heads per block.
     pub n_heads: usize,
+    /// MLP hidden width.
     pub d_ff: usize,
+    /// Sequence length the artifact was compiled for.
     pub seq_len: usize,
+    /// Batch size the artifact was compiled for.
     pub batch: usize,
+    /// Total parameter count.
     pub n_params: usize,
+    /// Ordered parameter specs (artifact argument order).
     pub params: Vec<ParamSpec>,
 }
 
 /// One manifest entry.
 #[derive(Debug, Clone)]
 pub struct ManifestEntry {
+    /// Artifact name (manifest key).
     pub name: String,
+    /// HLO text file name inside the artifacts directory.
     pub file: String,
+    /// Computation kind (`linreg_grad`, `logreg_grad`, `transformer`, …).
     pub kind: String,
     /// Regression shapes (0 for transformer entries).
     pub n: usize,
+    /// Feature dimension (0 for transformer entries).
     pub d: usize,
+    /// Element dtype the computation was lowered with.
     pub dtype: String,
+    /// Logistic regularization weight, when the kind carries one.
     pub lam: Option<f64>,
+    /// Transformer config for transformer entries.
     pub transformer: Option<TransformerMeta>,
 }
 
 /// The parsed manifest plus its directory (for resolving HLO files).
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Content digest written by the compile step.
     pub digest: String,
+    /// All artifact entries.
     pub entries: Vec<ManifestEntry>,
 }
 
 impl Manifest {
+    /// Load `<dir>/manifest.json`.
     pub fn load<P: AsRef<Path>>(dir: P) -> anyhow::Result<Manifest> {
         let dir = dir.as_ref().to_path_buf();
         let path = dir.join("manifest.json");
@@ -83,6 +113,7 @@ impl Manifest {
         Ok(Manifest { dir, digest, entries })
     }
 
+    /// Find an artifact entry by exact name.
     pub fn find(&self, name: &str) -> anyhow::Result<&ManifestEntry> {
         self.entries
             .iter()
@@ -119,6 +150,7 @@ impl Manifest {
             .ok_or_else(|| anyhow::anyhow!("no {kind} artifact fits n≥{n}, d={d}"))
     }
 
+    /// Absolute path of an entry's HLO text file.
     pub fn hlo_path(&self, entry: &ManifestEntry) -> PathBuf {
         self.dir.join(&entry.file)
     }

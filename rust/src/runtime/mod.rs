@@ -12,6 +12,11 @@
 //! cargo feature; without it [`PjrtEngine::new`] returns a descriptive
 //! error and everything else in the crate — the native engine, the
 //! coordinator, every experiment — works unchanged.
+//!
+//! The artifacts are compiled for *full* padded shard shapes, so the
+//! stochastic (minibatch) algorithms do not run on this engine —
+//! `GradEngine::grad_batch_into` keeps its panicking default here, and
+//! stochastic runs use the native kernels (see `grad::batch`).
 
 pub mod manifest;
 
@@ -33,12 +38,15 @@ mod pjrt_backend {
 
     /// CPU PJRT client plus a compile-once cache of loaded executables.
     pub struct PjrtRuntime {
+        /// The PJRT CPU client.
         pub client: xla::PjRtClient,
+        /// The parsed artifacts manifest.
         pub manifest: Manifest,
         cache: HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>,
     }
 
     impl PjrtRuntime {
+        /// Load the manifest and create the CPU client.
         pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> anyhow::Result<Self> {
             let manifest = Manifest::load(artifacts_dir)?;
             let client = xla::PjRtClient::cpu()?;
@@ -92,6 +100,7 @@ mod pjrt_backend {
         /// Per-worker staged [X, y, w].
         staged: Vec<[xla::PjRtBuffer; 3]>,
         calls: AtomicU64,
+        /// Resolved artifact name serving this problem.
         pub artifact: String,
     }
 
@@ -180,11 +189,13 @@ pub use pjrt_backend::{PjrtEngine, PjrtRuntime};
 #[cfg(not(feature = "pjrt"))]
 pub struct PjrtEngine<'p> {
     _problem: std::marker::PhantomData<&'p Problem>,
+    /// Artifact name (always empty in the stub).
     pub artifact: String,
 }
 
 #[cfg(not(feature = "pjrt"))]
 impl<'p> PjrtEngine<'p> {
+    /// Always fails: this build has no PJRT support.
     pub fn new<P: AsRef<Path>>(_problem: &'p Problem, _artifacts_dir: P) -> anyhow::Result<Self> {
         anyhow::bail!(
             "this build has no PJRT support — rebuild with `cargo build --features pjrt` \
@@ -192,6 +203,7 @@ impl<'p> PjrtEngine<'p> {
         )
     }
 
+    /// Always fails: this build has no PJRT support.
     pub fn try_grad(&self, _m: usize, _theta: &[f64]) -> anyhow::Result<(Vec<f64>, f64)> {
         anyhow::bail!("PJRT engine unavailable: built without the `pjrt` feature")
     }

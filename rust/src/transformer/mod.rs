@@ -5,6 +5,12 @@
 //! Pallas kernel) is executed via PJRT; this module provides parameter
 //! materialization from the manifest, a synthetic multi-worker corpus, and
 //! a LAG-WK/GD training driver over f32 parameter blocks.
+//!
+//! Compiled only with the `pjrt` cargo feature — the whole module depends
+//! on the `xla` bindings and the AOT'd transformer artifact (`make
+//! artifacts`). The trigger logic itself is shared with the f64
+//! coordinator ([`DiffHistory`]/[`TriggerConfig`]), demonstrating that the
+//! lazy-upload rule is dtype- and model-agnostic.
 
 use crate::coordinator::trigger::{DiffHistory, TriggerConfig};
 use crate::coordinator::Algorithm;
@@ -20,11 +26,14 @@ pub type Params = Vec<Vec<f32>>;
 pub struct TransformerTrainer {
     runtime: PjrtRuntime,
     exe: Rc<xla::PjRtLoadedExecutable>,
+    /// Transformer config from the manifest.
     pub meta: TransformerMeta,
+    /// Artifact name.
     pub name: String,
 }
 
 impl TransformerTrainer {
+    /// Load and compile the named transformer artifact.
     pub fn new<P: AsRef<Path>>(artifacts_dir: P, artifact: &str) -> anyhow::Result<Self> {
         let mut runtime = PjrtRuntime::new(artifacts_dir)?;
         let entry = runtime.manifest.find(artifact)?.clone();
@@ -142,20 +151,26 @@ pub fn synth_corpus(meta: &TransformerMeta, worker: usize, seed: u64) -> Vec<i32
 /// One record of the LM training trace.
 #[derive(Debug, Clone, Copy)]
 pub struct LmRecord {
+    /// Training step index.
     pub step: usize,
     /// Mean worker loss at the pre-update parameters.
     pub mean_loss: f64,
+    /// Cumulative worker→server uploads.
     pub cum_uploads: u64,
 }
 
 /// Options for the LM LAG driver.
 #[derive(Debug, Clone)]
 pub struct LmTrainOptions {
+    /// GD or LAG-WK.
     pub algo: Algorithm,
+    /// Training step budget.
     pub steps: usize,
     /// Stepsize on the *sum* objective Σ_m L_m (so lr_global / M for a mean).
     pub alpha: f64,
+    /// Trigger history depth D.
     pub d_history: usize,
+    /// Trigger weight ξ.
     pub xi: f64,
 }
 

@@ -4,11 +4,17 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command line: subcommand, positionals, `--key value` options
+/// and bare `--flag`s.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// First non-flag argument (`lag <subcommand> …`).
     pub subcommand: Option<String>,
+    /// Remaining non-flag arguments, in order.
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` pairs.
     pub options: BTreeMap<String, String>,
+    /// Bare `--flag`s.
     pub flags: Vec<String>,
 }
 
@@ -37,18 +43,23 @@ impl Args {
         out
     }
 
+    /// Parse the process arguments.
     pub fn from_env() -> Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// `--key`'s value, if present.
     pub fn opt(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(|s| s.as_str())
     }
 
+    /// `--key`'s value or a default.
     pub fn opt_or(&self, key: &str, default: &str) -> String {
         self.opt(key).unwrap_or(default).to_string()
     }
 
+    /// `--key` parsed as an integer (default when absent; error when
+    /// malformed).
     pub fn opt_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
         match self.opt(key) {
             None => Ok(default),
@@ -56,6 +67,8 @@ impl Args {
         }
     }
 
+    /// `--key` parsed as a float (default when absent; error when
+    /// malformed).
     pub fn opt_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
         match self.opt(key) {
             None => Ok(default),
@@ -63,6 +76,7 @@ impl Args {
         }
     }
 
+    /// True iff the bare `--key` flag was given.
     pub fn has_flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }

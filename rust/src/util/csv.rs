@@ -11,6 +11,7 @@ pub struct CsvWriter {
 }
 
 impl CsvWriter {
+    /// Create the file (and parent directories) and write the header row.
     pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> anyhow::Result<Self> {
         if let Some(parent) = path.as_ref().parent() {
             std::fs::create_dir_all(parent)?;
@@ -20,6 +21,7 @@ impl CsvWriter {
         Ok(CsvWriter { out, cols: header.len() })
     }
 
+    /// Write one row (must match the header's width).
     pub fn row(&mut self, fields: &[String]) -> anyhow::Result<()> {
         anyhow::ensure!(fields.len() == self.cols, "row width {} != header {}", fields.len(), self.cols);
         writeln!(self.out, "{}", fields.join(","))?;
@@ -32,6 +34,7 @@ impl CsvWriter {
         self.row(&v)
     }
 
+    /// Flush and close the file.
     pub fn finish(mut self) -> anyhow::Result<()> {
         self.out.flush()?;
         Ok(())

@@ -7,17 +7,21 @@ use std::path::Path;
 /// A parsed CSV table: header + rows of string fields.
 #[derive(Debug, Clone)]
 pub struct CsvTable {
+    /// Column names from the first line.
     pub header: Vec<String>,
+    /// Data rows, each as wide as the header.
     pub rows: Vec<Vec<String>>,
 }
 
 impl CsvTable {
+    /// Read and parse a CSV file.
     pub fn read<P: AsRef<Path>>(path: P) -> anyhow::Result<CsvTable> {
         let text = std::fs::read_to_string(&path)
             .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", path.as_ref().display()))?;
         CsvTable::parse(&text)
     }
 
+    /// Parse CSV text (validates uniform row width).
     pub fn parse(text: &str) -> anyhow::Result<CsvTable> {
         let mut lines = text.lines();
         let header: Vec<String> = lines
@@ -44,6 +48,7 @@ impl CsvTable {
         Ok(CsvTable { header, rows })
     }
 
+    /// Index of the named column (error listing the header when absent).
     pub fn col_index(&self, name: &str) -> anyhow::Result<usize> {
         self.header
             .iter()

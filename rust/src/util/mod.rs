@@ -1,6 +1,17 @@
-//! Substrate utilities: deterministic RNG, minimal JSON, CSV, CLI parsing,
-//! timing. The offline crate universe has no `rand`/`serde`/`clap`, so these
-//! are first-class modules with their own tests.
+//! Substrate utilities. The offline crate universe has no
+//! `rand`/`serde`/`clap`/`criterion`, so these are first-class modules
+//! with their own tests rather than dependencies:
+//!
+//! * [`rng`] — deterministic splitmix64 generator behind every random
+//!   quantity in the crate (dataset synthesis, Num-IAG sampling, minibatch
+//!   selection); determinism is a feature, not a shortcut.
+//! * [`json`] — minimal JSON parse/serialize with `BTreeMap` objects, so
+//!   every emitted report is byte-deterministic.
+//! * [`csv`] / [`csv_read`] — streaming trace writer and its inverse
+//!   (`lag plot`, round-trip tests).
+//! * [`cli`] — the `--key value` argument grammar of the `lag` binary.
+//! * [`timer`] — sample-based benchmark timing for the `benches/`
+//!   binaries.
 
 pub mod cli;
 pub mod csv;

@@ -12,6 +12,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Generator seeded deterministically from `seed`.
     pub fn new(seed: u64) -> Self {
         Rng { state: seed.wrapping_add(0x9E37_79B9_7F4A_7C15), cached_normal: None }
     }
@@ -23,6 +24,7 @@ impl Rng {
         Rng::new(s)
     }
 
+    /// Next raw 64-bit output of the splitmix64 stream.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
         let mut z = self.state;

@@ -21,17 +21,25 @@ pub fn bench<F: FnMut()>(mut f: F, warmup: u32, budget: Duration) -> BenchStats 
     BenchStats::from_samples(samples)
 }
 
+/// Summary statistics over one benchmark's timed samples (seconds).
 #[derive(Debug, Clone)]
 pub struct BenchStats {
+    /// Sample count.
     pub n: usize,
+    /// Mean duration.
     pub mean: f64,
+    /// Median duration.
     pub p50: f64,
+    /// 95th-percentile duration.
     pub p95: f64,
+    /// Fastest sample.
     pub min: f64,
+    /// Slowest sample.
     pub max: f64,
 }
 
 impl BenchStats {
+    /// Compute the summary from raw per-iteration samples.
     pub fn from_samples(mut s: Vec<f64>) -> BenchStats {
         assert!(!s.is_empty());
         s.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -41,6 +49,7 @@ impl BenchStats {
         BenchStats { n, mean, p50: q(0.5), p95: q(0.95), min: s[0], max: s[n - 1] }
     }
 
+    /// One-line human-readable report for bench output.
     pub fn report(&self, label: &str) -> String {
         format!(
             "{label}: n={} mean={} p50={} p95={} min={} max={}",

@@ -278,6 +278,53 @@ fn scheduled_single_run_matches_direct_run() {
     }
 }
 
+/// A stochastic grid (SGD + both LASG variants on two problems, minibatch
+/// and fractional specs) must be bit-identical for every scheduler width —
+/// batches are `(seed, worker, iter)`-keyed, so neither the scheduler nor
+/// the thread pool can perturb them.
+#[test]
+fn scheduled_stochastic_grid_bit_identical_across_thread_counts() {
+    use lag::grad::BatchSpec;
+    let keys = [
+        ProblemKey::SynLinregIncreasing { m: 5, n: 20, d: 10, seed: 51 },
+        ProblemKey::SynSparseLogreg { m: 4, n: 24, d: 12, density_ppm: 120_000, seed: 55 },
+    ];
+    let specs = || -> Vec<RunSpec> {
+        let mut out = Vec::new();
+        for key in &keys {
+            for algo in Algorithm::STOCHASTIC {
+                for batch in [BatchSpec::Fixed(6), BatchSpec::Fraction(0.4)] {
+                    out.push(RunSpec {
+                        key: key.clone(),
+                        algo,
+                        opts: RunOptions {
+                            max_iters: 120,
+                            record_thetas: true,
+                            batch,
+                            ..Default::default()
+                        },
+                    });
+                }
+            }
+        }
+        out
+    };
+    let seq_ctx = ExpContext { sched_threads: 1, ..Default::default() };
+    let seq = seq_ctx.run_specs(specs()).expect("sequential stochastic grid");
+    assert_eq!(seq.len(), 12);
+    for sched_threads in [2, 0] {
+        let ctx = ExpContext { sched_threads, ..Default::default() };
+        let par = ctx.run_specs(specs()).expect("scheduled stochastic grid");
+        for (a, b) in seq.iter().zip(&par) {
+            assert_bit_identical(
+                a,
+                b,
+                &format!("{} on {} with sched_threads={sched_threads}", a.algo, a.problem),
+            );
+        }
+    }
+}
+
 #[test]
 fn storage_format_never_changes_traces() {
     // the other half of the format-selection license (DESIGN.md §8): the

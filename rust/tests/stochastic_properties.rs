@@ -1,0 +1,195 @@
+//! Property suite for the stochastic (minibatch) subsystem.
+//!
+//! The contracts under test (DESIGN.md §10):
+//!
+//! * **Sampling is pure** in `(seed, worker, iter)` — the same batch comes
+//!   back whatever thread computes it, concurrently or not, so stochastic
+//!   traces can never depend on pool size or scheduler width.
+//! * **Batches are well-formed** — ascending, duplicate-free, inside the
+//!   shard's real rows, exactly the specified size.
+//! * **Dense and CSR storage agree bitwise** on every minibatch gradient,
+//!   exactly like the full-batch kernels — format selection can never
+//!   change a stochastic trace.
+//! * **Full-batch specs change nothing** — `BatchSpec::Full` runs are
+//!   byte-identical to the pre-stochastic driver.
+
+use lag::coordinator::{run, Algorithm, RunOptions};
+use lag::data::{synthetic, ShardStorage, Task};
+use lag::grad::{sample_rows_into, worker_grad_batch, BatchSpec, NativeEngine};
+use lag::linalg::CsrMatrix;
+use lag::util::Rng;
+
+#[test]
+fn sampling_is_identical_across_threads() {
+    // 8 threads race to sample the same (seed, worker, iter) grid; every
+    // result must equal the sequential reference
+    let spec = BatchSpec::Fixed(7);
+    let n = 41;
+    let reference: Vec<Vec<u32>> = (0..60)
+        .map(|i| {
+            let (worker, iter) = (i % 6, (i / 6) as u64);
+            let mut rows = Vec::new();
+            sample_rows_into(spec, n, 5, worker, iter, &mut rows);
+            rows
+        })
+        .collect();
+    std::thread::scope(|scope| {
+        for _ in 0..8 {
+            let reference = &reference;
+            scope.spawn(move || {
+                let mut rows = Vec::new();
+                for i in 0..60 {
+                    let (worker, iter) = (i % 6, (i / 6) as u64);
+                    sample_rows_into(spec, n, 5, worker, iter, &mut rows);
+                    assert_eq!(rows, reference[i], "worker {worker} iter {iter}");
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn batches_are_sorted_unique_and_sized() {
+    let mut checked = 0usize;
+    for n in [1, 2, 7, 64, 333] {
+        for spec in [
+            BatchSpec::Full,
+            BatchSpec::Fixed(1),
+            BatchSpec::Fixed(5),
+            BatchSpec::Fixed(1000),
+            BatchSpec::Fraction(0.1),
+            BatchSpec::Fraction(0.5),
+            BatchSpec::Fraction(1.0),
+        ] {
+            let expect = spec.size_for(n);
+            let mut rows = Vec::new();
+            for worker in 0..4 {
+                for iter in 0..25 {
+                    sample_rows_into(spec, n, 11, worker, iter, &mut rows);
+                    assert_eq!(rows.len(), expect, "n={n} {spec:?}");
+                    assert!(rows.windows(2).all(|w| w[0] < w[1]), "n={n} {spec:?}: {rows:?}");
+                    assert!(rows.iter().all(|&r| (r as usize) < n));
+                    checked += 1;
+                }
+            }
+        }
+    }
+    assert!(checked > 0);
+}
+
+/// Workers' batches are independent streams: two workers at the same
+/// iteration (and one worker at two iterations) almost never draw the
+/// same subset.
+#[test]
+fn worker_streams_are_distinct() {
+    let spec = BatchSpec::Fixed(10);
+    let n = 200;
+    let mut a = Vec::new();
+    let mut b = Vec::new();
+    let mut collisions = 0;
+    for iter in 0..200 {
+        sample_rows_into(spec, n, 21, 0, iter, &mut a);
+        sample_rows_into(spec, n, 21, 1, iter, &mut b);
+        if a == b {
+            collisions += 1;
+        }
+    }
+    assert_eq!(collisions, 0, "distinct workers drew identical batches");
+}
+
+/// The dense and CSR minibatch kernels must agree bitwise on any batch —
+/// same contract as the full-batch kernels (DESIGN.md §8), extended to
+/// row subsets.
+#[test]
+fn dense_and_csr_batch_gradients_agree_bitwise() {
+    use lag::data::partition::pad_shard_storage;
+    let mut rng = Rng::new(33);
+    for (task, pm) in [(Task::LinReg, false), (Task::LogReg { lam: 1e-3 }, true)] {
+        for density in [0.05, 0.2, 0.7] {
+            let n = 31;
+            let d = 18;
+            let mut x = lag::linalg::Matrix::zeros(n, d);
+            for i in 0..n {
+                for j in 0..d {
+                    if rng.uniform() < density {
+                        x.set(i, j, rng.normal());
+                    }
+                }
+            }
+            let y: Vec<f64> = if pm {
+                (0..n).map(|_| rng.sign()).collect()
+            } else {
+                rng.normal_vec(n)
+            };
+            let dense = pad_shard_storage(ShardStorage::Dense(x.clone()), y.clone(), n + 4);
+            let csr = pad_shard_storage(ShardStorage::Csr(CsrMatrix::from_dense(&x)), y, n + 4);
+            let theta = rng.normal_vec(d);
+            for (worker, iter) in [(0, 1), (2, 9), (5, 40)] {
+                let mut rows = Vec::new();
+                sample_rows_into(BatchSpec::Fixed(9), n, 3, worker, iter, &mut rows);
+                let scale = n as f64 / rows.len() as f64;
+                let (gd, ld) = worker_grad_batch(task, &dense, &theta, &rows, scale);
+                let (gc, lc) = worker_grad_batch(task, &csr, &theta, &rows, scale);
+                assert_eq!(gd, gc, "{task:?} density {density} batch {rows:?}");
+                assert_eq!(ld.to_bits(), lc.to_bits(), "{task:?} density {density}");
+            }
+        }
+    }
+}
+
+/// Stochastic runs over CSR problems are bit-identical to the same
+/// problem densified — the storage format is invisible to LASG too.
+#[test]
+fn stochastic_traces_are_storage_format_invariant() {
+    let p_csr = synthetic::sparse_logreg(5, 24, 14, 0.12, 61);
+    assert!(p_csr.workers.iter().all(|s| s.storage.is_csr()));
+    let mut p_dense = p_csr.clone();
+    for s in &mut p_dense.workers {
+        s.storage = ShardStorage::Dense(s.storage.to_dense());
+    }
+    let opts = RunOptions {
+        max_iters: 120,
+        batch: BatchSpec::Fraction(0.3),
+        record_thetas: true,
+        ..Default::default()
+    };
+    for algo in Algorithm::STOCHASTIC {
+        let a = run(&p_csr, algo, &opts, &NativeEngine::new(&p_csr));
+        let b = run(&p_dense, algo, &opts, &NativeEngine::new(&p_dense));
+        assert_eq!(a.upload_events, b.upload_events, "{algo:?}");
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(x.obj_err.to_bits(), y.obj_err.to_bits(), "{algo:?} k={}", x.k);
+        }
+        for (x, y) in a.thetas.iter().zip(&b.thetas) {
+            for (va, vb) in x.iter().zip(y) {
+                assert_eq!(va.to_bits(), vb.to_bits(), "{algo:?}");
+            }
+        }
+    }
+}
+
+/// `RunOptions::threads` must not affect stochastic traces (the LASG
+/// family runs the sequential loop for every requested width).
+#[test]
+fn stochastic_traces_ignore_thread_count() {
+    let p = synthetic::linreg_increasing_l(6, 25, 10, 62);
+    for algo in Algorithm::STOCHASTIC {
+        let mk = |threads| {
+            let opts = RunOptions {
+                max_iters: 100,
+                threads,
+                batch: BatchSpec::Fixed(8),
+                ..Default::default()
+            };
+            run(&p, algo, &opts, &NativeEngine::new(&p))
+        };
+        let seq = mk(1);
+        for threads in [0, 2, 8] {
+            let par = mk(threads);
+            assert_eq!(seq.upload_events, par.upload_events, "{algo:?} threads={threads}");
+            for (a, b) in seq.records.iter().zip(&par.records) {
+                assert_eq!(a.obj_err.to_bits(), b.obj_err.to_bits(), "{algo:?} k={}", a.k);
+            }
+        }
+    }
+}
