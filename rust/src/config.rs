@@ -76,6 +76,43 @@ impl ProblemSpec {
     }
 }
 
+/// Deployment knobs for the event-loop parameter-server service
+/// (`lag leader --runtime service`), the config-file counterpart of the
+/// CLI's `--min-workers`/`--*-timeout-ms` flags. Timeouts are given in
+/// milliseconds in the JSON and surface here as [`std::time::Duration`]s.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServiceSpec {
+    /// Listen address, e.g. `"0.0.0.0:7070"`.
+    pub addr: String,
+    /// Members required before the first round (0 ⇒ all M shards).
+    pub min_workers: usize,
+    /// Deadline for assembling the fleet at startup and for replacing a
+    /// lost fleet mid-run.
+    pub join_timeout: std::time::Duration,
+    /// Per-round reply deadline; laggards past it are evicted.
+    pub round_timeout: std::time::Duration,
+    /// Silence threshold after which an unreplied member is declared dead.
+    pub heartbeat_timeout: std::time::Duration,
+    /// Optional path the leader checkpoints training state to.
+    pub checkpoint: Option<String>,
+    /// Checkpoint cadence in rounds (0 ⇒ never).
+    pub checkpoint_every: usize,
+}
+
+impl Default for ServiceSpec {
+    fn default() -> Self {
+        ServiceSpec {
+            addr: "127.0.0.1:7070".to_string(),
+            min_workers: 0,
+            join_timeout: std::time::Duration::from_millis(30_000),
+            round_timeout: std::time::Duration::from_millis(60_000),
+            heartbeat_timeout: std::time::Duration::from_millis(30_000),
+            checkpoint: None,
+            checkpoint_every: 0,
+        }
+    }
+}
+
 /// A fully described run.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -91,6 +128,8 @@ pub struct RunConfig {
     pub artifacts_dir: String,
     /// Optional CSV path for the resulting trace.
     pub trace_out: Option<String>,
+    /// Optional socket-service deployment section (`"service"`).
+    pub service: Option<ServiceSpec>,
 }
 
 impl RunConfig {
@@ -115,6 +154,10 @@ impl RunConfig {
         if let Ok(o) = root.get("options") {
             apply_options(o, &mut options)?;
         }
+        let service = match root.get("service") {
+            Ok(s) => Some(parse_service(s)?),
+            Err(_) => None,
+        };
         Ok(RunConfig {
             problem,
             algorithm,
@@ -127,6 +170,7 @@ impl RunConfig {
                 .unwrap_or("artifacts")
                 .to_string(),
             trace_out: root.get("trace_out").ok().and_then(|v| v.as_str()).map(String::from),
+            service,
         })
     }
 }
@@ -207,6 +251,35 @@ fn apply_options(j: &Json, o: &mut RunOptions) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn parse_service(j: &Json) -> anyhow::Result<ServiceSpec> {
+    let obj = j.as_obj().ok_or_else(|| anyhow::anyhow!("service must be an object"))?;
+    let mut s = ServiceSpec::default();
+    let ms = |v: &Json, key: &str| -> anyhow::Result<std::time::Duration> {
+        v.as_f64()
+            .filter(|x| *x >= 0.0)
+            .map(|x| std::time::Duration::from_millis(x as u64))
+            .ok_or_else(|| anyhow::anyhow!("service.{key} must be milliseconds"))
+    };
+    for (k, v) in obj {
+        match k.as_str() {
+            "addr" => {
+                s.addr = v
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("service.addr must be a string"))?
+                    .to_string();
+            }
+            "min_workers" => s.min_workers = v.as_usize().unwrap_or(s.min_workers),
+            "join_timeout_ms" => s.join_timeout = ms(v, k)?,
+            "round_timeout_ms" => s.round_timeout = ms(v, k)?,
+            "heartbeat_timeout_ms" => s.heartbeat_timeout = ms(v, k)?,
+            "checkpoint" => s.checkpoint = v.as_str().map(String::from),
+            "checkpoint_every" => s.checkpoint_every = v.as_usize().unwrap_or(0),
+            other => anyhow::bail!("unknown service key '{other}'"),
+        }
+    }
+    Ok(s)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -282,6 +355,48 @@ mod tests {
         assert!(RunConfig::from_json_str(
             r#"{"problem": {"kind": "synthetic", "task": "linreg", "m": 4},
                  "options": {"batch": -2}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn parses_service_section() {
+        let c = RunConfig::from_json_str(
+            r#"{"problem": {"kind": "synthetic", "task": "linreg", "m": 4},
+                 "service": {"addr": "0.0.0.0:7070", "min_workers": 3,
+                              "join_timeout_ms": 5000, "round_timeout_ms": 8000,
+                              "heartbeat_timeout_ms": 2500,
+                              "checkpoint": "state.ckpt", "checkpoint_every": 50}}"#,
+        )
+        .unwrap();
+        let s = c.service.unwrap();
+        assert_eq!(s.addr, "0.0.0.0:7070");
+        assert_eq!(s.min_workers, 3);
+        assert_eq!(s.join_timeout, std::time::Duration::from_millis(5000));
+        assert_eq!(s.round_timeout, std::time::Duration::from_millis(8000));
+        assert_eq!(s.heartbeat_timeout, std::time::Duration::from_millis(2500));
+        assert_eq!(s.checkpoint.as_deref(), Some("state.ckpt"));
+        assert_eq!(s.checkpoint_every, 50);
+
+        // Absent section → None; empty section → all defaults.
+        let c = RunConfig::from_json_str(SAMPLE).unwrap();
+        assert!(c.service.is_none());
+        let c = RunConfig::from_json_str(
+            r#"{"problem": {"kind": "synthetic", "task": "linreg", "m": 4},
+                 "service": {}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.service.unwrap(), ServiceSpec::default());
+
+        // Typos fail loudly, like everywhere else in the config.
+        assert!(RunConfig::from_json_str(
+            r#"{"problem": {"kind": "synthetic", "task": "linreg", "m": 4},
+                 "service": {"min_wrokers": 3}}"#
+        )
+        .is_err());
+        assert!(RunConfig::from_json_str(
+            r#"{"problem": {"kind": "synthetic", "task": "linreg", "m": 4},
+                 "service": {"join_timeout_ms": "soon"}}"#
         )
         .is_err());
     }

@@ -2,6 +2,12 @@
 //! aggregated gradient, per-worker cached gradients and copies, history,
 //! counters) so long runs survive restarts. Own binary format — magic,
 //! version, little-endian payload — with exact round-trip tests.
+//!
+//! The event-loop service ([`super::service`]) reuses `cached_grads` twice
+//! over: on `--resume` they seed the leader's per-shard contribution
+//! mirror, and the same vectors are what an `Assign` frame hands a worker
+//! that joins (or rejoins) a shard — the worker's trigger cache and the
+//! leader's evictable aggregate contribution stay one and the same object.
 
 use super::server::ParameterServer;
 use super::trigger::DiffHistory;

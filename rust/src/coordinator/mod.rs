@@ -12,6 +12,10 @@
 //!   (DESIGN.md §6).
 //! * [`transport`] — a real message-passing deployment: worker threads,
 //!   channels, a serial-uplink latency model.
+//! * [`service`] — the nonblocking event-loop parameter-server service:
+//!   `poll(2)` readiness loop, heartbeat/deadline failure detection, and
+//!   elastic membership (late joins, mid-run drops with aggregate
+//!   eviction, checkpoint-handoff rejoins) over the [`wire`] codec.
 //! * [`lyapunov`] — the Lyapunov function (16) used by the convergence
 //!   property tests.
 
@@ -23,6 +27,7 @@ pub mod quantize;
 pub mod robust;
 pub mod run;
 pub mod server;
+pub mod service;
 pub mod tcp;
 pub mod transport;
 pub mod trigger;
@@ -35,10 +40,14 @@ pub use quantize::QuantizedVec;
 pub use robust::{robust_run, Attack, RobustOptions};
 pub use run::{run, run_with_workspace, RunOptions, RunWorkspace};
 pub use server::ParameterServer;
-pub use tcp::{run_leader, run_worker};
+pub use service::{
+    run_service, serve_worker, FaultPlan, ServiceOptions, ServiceStats, WorkerConfig,
+    WorkerExit, WorkerOutcome,
+};
+pub use tcp::{run_leader, run_leader_on, run_worker, TcpOptions};
 pub use transport::{parallel_run, TransportOptions};
 pub use trigger::{DiffHistory, LasgRule, TriggerConfig};
-pub use wire::WireMsg;
+pub use wire::{FrameDecoder, WireMsg, WriteQueue};
 
 pub use crate::grad::BatchSpec;
 pub use crate::metrics::{IterRecord, RunTrace};

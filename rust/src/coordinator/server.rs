@@ -98,6 +98,20 @@ impl ParameterServer {
         self.hat_theta[m].as_ref().map(|t| dist2(t, &self.theta))
     }
 
+    /// Elastic-membership eviction: worker m is gone (crash, timeout, or a
+    /// scheduled drop), so remove its standing contribution from the lazy
+    /// aggregate (`∇ ← ∇ − g_m`, where `g_m` is the leader-side copy of
+    /// its last uploaded gradient) and clear its server-side state. The
+    /// aggregate then again sums over exactly the live-or-cached fleet,
+    /// and a later rejoin is treated as first contact (its next round
+    /// forces a full upload — the same conservative semantics as the PS2
+    /// restore path in [`super::checkpoint::TrainState`]).
+    pub fn evict(&mut self, m: usize, contribution: &[f64]) {
+        axpy(-1.0, contribution, &mut self.agg_grad);
+        self.hat_theta[m] = None;
+        self.hat_iter[m] = None;
+    }
+
     /// Record that worker m uploaded at iteration `k` (drives
     /// [`ParameterServer::upload_age`]).
     pub fn stamp_upload(&mut self, m: usize, k: usize) {
@@ -176,6 +190,21 @@ mod tests {
         // after a step, the stored copy lags the iterate
         s.step(1.0);
         assert!(s.hat_dist_sq(0).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn evict_removes_contribution_and_state() {
+        let mut s = ParameterServer::new(2, 2, 3, vec![0.0, 0.0]);
+        s.apply_delta(0, &[1.0, 2.0]);
+        s.apply_delta(1, &[0.5, -1.0]);
+        s.stamp_upload(0, 1);
+        s.evict(0, &[1.0, 2.0]);
+        assert_eq!(s.agg_grad, vec![0.5, -1.0]); // survivor's gradient only
+        assert!(s.hat_theta[0].is_none());
+        assert!(s.hat_iter[0].is_none());
+        assert!(s.hat_theta[1].is_some());
+        // rejoin is first contact again
+        assert!(s.hat_dist_sq(0).is_none());
     }
 
     #[test]

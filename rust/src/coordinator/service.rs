@@ -1,0 +1,1144 @@
+//! Event-loop parameter-server service with elastic membership (ROADMAP
+//! item 3, DESIGN.md §11).
+//!
+//! Where [`super::tcp`] is a blocking, fixed-fleet runtime, this module is
+//! a single-threaded *readiness loop*: every socket is nonblocking, frames
+//! are reassembled by the per-connection [`FrameDecoder`] /
+//! [`WriteQueue`] state machines, and the loop multiplexes over a
+//! hand-rolled `poll(2)` shim ([`poller`] — no dependencies; portable
+//! sleep-poll fallback off Linux). On top of that sit:
+//!
+//! * **Heartbeats + deadlines** — workers ping while idle; the leader
+//!   declares a silent member dead and a round that misses its reply
+//!   deadline proceeds without the laggard instead of hanging.
+//! * **Elastic membership** — workers join late (`Hello` proposes a shard,
+//!   the leader answers with an `Assign`), drop mid-run (the leader
+//!   *evicts* their standing contribution from the lazy aggregate and
+//!   continues with the survivors), and rejoin (re-admission hands back
+//!   the cached gradient when the leader still holds it — the
+//!   checkpoint-style state handoff — or forces a first-contact upload,
+//!   mirroring the PS2 restore semantics of
+//!   [`super::checkpoint::TrainState`]).
+//! * **Determinism** — all membership changes take effect at round
+//!   boundaries, buffered deltas and evictions are applied in ascending
+//!   shard order, and the trigger RHS always divides by the *total* shard
+//!   count M, so a run under a scheduled [`FaultPlan`] is bit-reproducible
+//!   (the soak test byte-compares traces across repeated runs).
+
+use super::checkpoint::TrainState;
+use super::server::ParameterServer;
+use super::trigger::TriggerConfig;
+use super::wire::{FrameDecoder, WireMsg, WriteQueue, ANY_SHARD};
+use super::{Algorithm, RunOptions};
+use crate::data::Problem;
+use crate::grad::worker_grad;
+use crate::linalg::{axpy, dist2, sub};
+use crate::metrics::{RunTrace, TraceMeta, TraceRecorder};
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+/// Minimal readiness facade over `poll(2)`. Linux gets the real system
+/// call through a two-line FFI declaration (no crate dependency); other
+/// platforms get a bounded-sleep fallback that reports every descriptor
+/// ready — the nonblocking reads then simply return `WouldBlock`, trading
+/// a few spurious wakeups for portability.
+mod poller {
+    use std::time::Duration;
+
+    /// Readiness report for one registered descriptor.
+    #[derive(Debug, Clone, Copy, Default)]
+    pub struct Readiness {
+        /// Bytes (or an accept, or EOF) can be read without blocking.
+        pub readable: bool,
+        /// The socket's send buffer has room.
+        pub writable: bool,
+    }
+
+    /// A descriptor to query: read interest is implicit, write interest is
+    /// opt-in (only when a `WriteQueue` has pending bytes).
+    #[derive(Debug, Clone, Copy)]
+    pub struct Interest {
+        /// Raw descriptor (`-1` on platforms without one).
+        pub fd: i32,
+        /// Whether write-readiness matters this round.
+        pub want_write: bool,
+    }
+
+    #[cfg(target_os = "linux")]
+    pub fn fd_of<T: std::os::fd::AsRawFd>(t: &T) -> i32 {
+        t.as_raw_fd()
+    }
+
+    #[cfg(not(target_os = "linux"))]
+    pub fn fd_of<T>(_t: &T) -> i32 {
+        -1
+    }
+
+    #[cfg(target_os = "linux")]
+    pub fn wait(interests: &[Interest], timeout: Duration) -> std::io::Result<Vec<Readiness>> {
+        #[repr(C)]
+        struct PollFd {
+            fd: i32,
+            events: i16,
+            revents: i16,
+        }
+        const POLLIN: i16 = 0x001;
+        const POLLOUT: i16 = 0x004;
+        const POLLERR: i16 = 0x008;
+        const POLLHUP: i16 = 0x010;
+        const POLLNVAL: i16 = 0x020;
+        extern "C" {
+            fn poll(fds: *mut PollFd, nfds: u64, timeout: i32) -> i32;
+        }
+        let mut fds: Vec<PollFd> = interests
+            .iter()
+            .map(|i| PollFd {
+                fd: i.fd,
+                events: POLLIN | if i.want_write { POLLOUT } else { 0 },
+                revents: 0,
+            })
+            .collect();
+        let ms = timeout.as_millis().min(i32::MAX as u128) as i32;
+        loop {
+            let r = unsafe { poll(fds.as_mut_ptr(), fds.len() as u64, ms) };
+            if r >= 0 {
+                break;
+            }
+            let e = std::io::Error::last_os_error();
+            if e.kind() != std::io::ErrorKind::Interrupted {
+                return Err(e);
+            }
+        }
+        // error/hangup conditions are folded into readability: the next
+        // nonblocking read surfaces the actual EOF or errno
+        Ok(fds
+            .iter()
+            .map(|f| Readiness {
+                readable: f.revents & (POLLIN | POLLHUP | POLLERR | POLLNVAL) != 0,
+                writable: f.revents & (POLLOUT | POLLERR | POLLHUP) != 0,
+            })
+            .collect())
+    }
+
+    #[cfg(not(target_os = "linux"))]
+    pub fn wait(interests: &[Interest], timeout: Duration) -> std::io::Result<Vec<Readiness>> {
+        std::thread::sleep(timeout.min(Duration::from_millis(5)));
+        Ok(interests
+            .iter()
+            .map(|i| Readiness { readable: true, writable: i.want_write })
+            .collect())
+    }
+}
+
+/// Knobs of the event-loop leader. All deadlines are wall-clock; none of
+/// them influence the recorded trace (only *whether* the run errors or a
+/// member is declared dead).
+#[derive(Debug, Clone)]
+pub struct ServiceOptions {
+    /// Members required before round 1 starts (`0` ⇒ all M shards).
+    pub min_workers: usize,
+    /// Fleet-assembly deadline (and the wait budget for a scheduled
+    /// re-admission round).
+    pub join_timeout: Duration,
+    /// Per-round reply deadline: a member silent this long after a
+    /// broadcast is evicted, not waited for.
+    pub round_timeout: Duration,
+    /// A connection silent this long (no frames, no heartbeats) is dead.
+    pub heartbeat_timeout: Duration,
+    /// Poll granularity of the readiness loop.
+    pub tick: Duration,
+    /// Resume from a [`TrainState`] snapshot instead of θ⁰ (rounds
+    /// continue at `k+1`; re-admitted workers get their cached gradient
+    /// handed back via `Assign`).
+    pub resume: Option<TrainState>,
+    /// Write a checkpoint here every [`ServiceOptions::checkpoint_every`]
+    /// rounds.
+    pub checkpoint: Option<std::path::PathBuf>,
+    /// Checkpoint cadence in rounds (`0` ⇒ never).
+    pub checkpoint_every: usize,
+}
+
+impl Default for ServiceOptions {
+    fn default() -> Self {
+        ServiceOptions {
+            min_workers: 0,
+            join_timeout: Duration::from_secs(30),
+            round_timeout: Duration::from_secs(60),
+            heartbeat_timeout: Duration::from_secs(30),
+            tick: Duration::from_millis(5),
+            resume: None,
+            checkpoint: None,
+            checkpoint_every: 0,
+        }
+    }
+}
+
+/// Leader-side scheduled fault injection, keyed to round numbers so the
+/// resulting membership history — and therefore the whole trace — is
+/// deterministic (worker-side kills land on nondeterministic rounds; the
+/// soak's byte-compare needs boundary-aligned faults).
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// `(k, shard)`: after the step of round `k`, force-drop the member
+    /// owning `shard` (close its connection and evict its contribution).
+    pub drop_after: Vec<(usize, usize)>,
+    /// `(k, shard)`: pair for a scheduled drop — from the drop onward the
+    /// shard is *held*: a rejoiner proposing it is kept pending until the
+    /// start of round `k`, and round `k` waits (≤ `join_timeout`) for the
+    /// shard to be re-owned. Entries without a preceding drop are ignored;
+    /// a drop without an admit entry frees the shard immediately (the
+    /// rejoin round is then whatever the race produces — fine for chaos
+    /// tests, not for byte-compared runs).
+    pub admit_at: Vec<(usize, usize)>,
+}
+
+impl FaultPlan {
+    /// True when the plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.drop_after.is_empty() && self.admit_at.is_empty()
+    }
+}
+
+/// Byte/membership accounting of a service run (the trace carries the
+/// algorithmic counters; these are the wire-level ones).
+#[derive(Debug, Clone, Default)]
+pub struct ServiceStats {
+    /// Bytes staged leader → workers (frames pushed, incl. `Assign`s).
+    pub bytes_down: u64,
+    /// Bytes received from workers (incl. heartbeats).
+    pub bytes_up: u64,
+    /// Shard admissions granted (initial joins + re-admissions).
+    pub joins: u64,
+    /// Members evicted (deaths, deadline misses, scheduled drops).
+    pub evictions: u64,
+    /// Final iterate θ (bit-compared by the determinism tests).
+    pub final_theta: Vec<f64>,
+}
+
+/// One live connection: socket plus its partial-read/partial-write state
+/// machines and membership bookkeeping.
+struct Conn {
+    stream: TcpStream,
+    dec: FrameDecoder,
+    out: WriteQueue,
+    inbox: VecDeque<WireMsg>,
+    /// Proposed shard from `Hello` (`ANY_SHARD` = no preference); `None`
+    /// until the handshake frame arrives.
+    hello: Option<u32>,
+    /// Owned shard once admitted.
+    shard: Option<usize>,
+    last_seen: Instant,
+    /// Whether this member's `Delta` for the in-flight round has arrived.
+    replied: bool,
+    /// Set when the connection must be discarded (EOF, protocol error).
+    dead: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Self {
+        Conn {
+            stream,
+            dec: FrameDecoder::new(),
+            out: WriteQueue::new(),
+            inbox: VecDeque::new(),
+            hello: None,
+            shard: None,
+            last_seen: Instant::now(),
+            replied: false,
+            dead: false,
+        }
+    }
+}
+
+/// The leader's mutable world, threaded through the phase helpers.
+struct Service {
+    listener: TcpListener,
+    conns: Vec<Option<Conn>>,
+    /// Connection slab index owning each shard.
+    owner: Vec<Option<usize>>,
+    /// Shards held for a scheduled re-admission round.
+    admit_round: Vec<Option<usize>>,
+    /// Leader-side copy of each shard's last uploaded gradient — the
+    /// quantity [`ParameterServer::evict`] subtracts on loss and `Assign`
+    /// hands back on rejoin.
+    contrib: Vec<Option<Vec<f64>>>,
+    stats: ServiceStats,
+    tick: Duration,
+}
+
+impl Service {
+    /// One readiness cycle: poll (≤ `tick`), accept, drain readable
+    /// sockets through the frame decoders, flush writable ones.
+    fn pump(&mut self) -> anyhow::Result<()> {
+        let mut interests =
+            vec![poller::Interest { fd: poller::fd_of(&self.listener), want_write: false }];
+        let mut idxs = Vec::new();
+        for (i, c) in self.conns.iter().enumerate() {
+            if let Some(c) = c {
+                interests.push(poller::Interest {
+                    fd: poller::fd_of(&c.stream),
+                    want_write: !c.out.is_empty(),
+                });
+                idxs.push(i);
+            }
+        }
+        let ready = poller::wait(&interests, self.tick)?;
+        if ready[0].readable {
+            self.accept_all()?;
+        }
+        for (pos, &i) in idxs.iter().enumerate() {
+            if ready[pos + 1].readable {
+                self.read_conn(i);
+            }
+            if ready[pos + 1].writable {
+                self.write_conn(i);
+            }
+        }
+        Ok(())
+    }
+
+    fn accept_all(&mut self) -> anyhow::Result<()> {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(true)?;
+                    stream.set_nodelay(true)?;
+                    let conn = Conn::new(stream);
+                    match self.conns.iter_mut().find(|s| s.is_none()) {
+                        Some(slot) => *slot = Some(conn),
+                        None => self.conns.push(Some(conn)),
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(()),
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::ConnectionAborted
+                            | std::io::ErrorKind::ConnectionReset
+                            | std::io::ErrorKind::Interrupted
+                    ) => {}
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+
+    /// Drain one socket without blocking; frame-decode into its inbox.
+    fn read_conn(&mut self, i: usize) {
+        let conn = match &mut self.conns[i] {
+            Some(c) if !c.dead => c,
+            _ => return,
+        };
+        let mut buf = [0u8; 16384];
+        let mut msgs = Vec::new();
+        loop {
+            match conn.stream.read(&mut buf) {
+                Ok(0) => {
+                    conn.dead = true;
+                    break;
+                }
+                Ok(n) => {
+                    conn.last_seen = Instant::now();
+                    self.stats.bytes_up += n as u64;
+                    if conn.dec.feed(&buf[..n], &mut msgs).is_err() {
+                        conn.dead = true; // frame sync lost: hostile/corrupt
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    conn.dead = true;
+                    break;
+                }
+            }
+        }
+        conn.inbox.extend(msgs);
+    }
+
+    /// Flush as much of one write queue as the socket accepts.
+    fn write_conn(&mut self, i: usize) {
+        let conn = match &mut self.conns[i] {
+            Some(c) if !c.dead => c,
+            _ => return,
+        };
+        while !conn.out.is_empty() {
+            match conn.stream.write(conn.out.pending()) {
+                Ok(0) => {
+                    conn.dead = true;
+                    return;
+                }
+                Ok(n) => conn.out.advance(n),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    conn.dead = true;
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Stage a frame on connection `i` (accounted in `bytes_down`).
+    fn send(&mut self, i: usize, msg: &WireMsg) {
+        if let Some(c) = &mut self.conns[i] {
+            self.stats.bytes_down += c.out.push(msg);
+        }
+    }
+
+    /// Remove every connection flagged dead; returns the shards they
+    /// owned, with the replied flag, in ascending shard order.
+    fn reap_dead(&mut self) -> Vec<(usize, bool)> {
+        let mut lost = Vec::new();
+        for slot in self.conns.iter_mut() {
+            if matches!(slot, Some(c) if c.dead) {
+                let c = slot.take().unwrap();
+                if let Some(s) = c.shard {
+                    self.owner[s] = None;
+                    lost.push((s, c.replied));
+                }
+            }
+        }
+        lost.sort_unstable();
+        lost
+    }
+
+    /// Pop queued `Hello`s into `conn.hello` and drop protocol garbage;
+    /// `Delta`s are left queued for the round collector.
+    fn absorb_control(&mut self) {
+        for c in self.conns.iter_mut().flatten() {
+            while let Some(front) = c.inbox.front() {
+                match front {
+                    WireMsg::Hello { worker } => {
+                        c.hello = Some(*worker);
+                        c.inbox.pop_front();
+                    }
+                    WireMsg::Heartbeat => {
+                        c.inbox.pop_front();
+                    }
+                    WireMsg::Delta { .. } => break,
+                    _ => {
+                        c.dead = true; // leaders never receive Round/Assign
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Membership window: admit pending `Hello`s whose shard is free and
+    /// not held for a later scheduled re-admission. `effective_k` is the
+    /// round the new member first participates in (stamped on `Assign`).
+    fn admit_pending(&mut self, effective_k: usize) {
+        for i in 0..self.conns.len() {
+            let proposed = match &self.conns[i] {
+                Some(c) if !c.dead && c.shard.is_none() => match c.hello {
+                    Some(p) => p,
+                    None => continue,
+                },
+                _ => continue,
+            };
+            let m = self.owner.len();
+            // a shard is grantable when unowned and not held for a
+            // re-admission round later than this one
+            let free = |s: usize, svc: &Service| {
+                svc.owner[s].is_none() && !matches!(svc.admit_round[s], Some(r) if r > effective_k)
+            };
+            let shard = if (proposed as usize) < m && free(proposed as usize, self) {
+                Some(proposed as usize)
+            } else if proposed == ANY_SHARD {
+                (0..m).find(|&s| self.owner[s].is_none() && self.admit_round[s].is_none())
+            } else {
+                None // held or taken: stay pending
+            };
+            let Some(s) = shard else { continue };
+            self.owner[s] = Some(i);
+            self.admit_round[s] = None;
+            self.stats.joins += 1;
+            let assign = WireMsg::Assign {
+                worker: s as u32,
+                k: effective_k as u64,
+                cached: self.contrib[s].clone(),
+            };
+            self.send(i, &assign);
+            if let Some(c) = &mut self.conns[i] {
+                c.shard = Some(s);
+                c.replied = false;
+            }
+        }
+    }
+
+    /// Number of currently owned shards.
+    fn members(&self) -> usize {
+        self.owner.iter().filter(|o| o.is_some()).count()
+    }
+
+    /// Evict shard `s`: subtract its standing contribution from the lazy
+    /// aggregate and forget its caches (rejoin becomes first contact).
+    fn evict(&mut self, ps: &mut ParameterServer, s: usize) {
+        if let Some(g) = self.contrib[s].take() {
+            ps.evict(s, &g);
+        } else {
+            ps.hat_theta[s] = None;
+            ps.hat_iter[s] = None;
+        }
+        self.stats.evictions += 1;
+    }
+
+    /// Drop the member owning shard `s` on purpose (scheduled fault):
+    /// close the connection and free the shard.
+    fn force_drop(&mut self, s: usize) {
+        if let Some(i) = self.owner[s].take() {
+            self.conns[i] = None; // drop closes the socket
+        }
+    }
+}
+
+/// Run the event-loop leader on a pre-bound listener until
+/// `opts.max_iters` rounds (or the target) complete, tolerating the
+/// membership churn injected by `faults` and any real churn the fleet
+/// produces. Returns the run trace plus wire/membership stats.
+pub fn run_service(
+    listener: TcpListener,
+    problem: &Problem,
+    algo: Algorithm,
+    opts: &RunOptions,
+    sopts: &ServiceOptions,
+    faults: &FaultPlan,
+) -> anyhow::Result<(RunTrace, ServiceStats)> {
+    anyhow::ensure!(
+        matches!(algo, Algorithm::Gd | Algorithm::LagWk),
+        "service runtime implements the broadcast-style algorithms"
+    );
+    let m = problem.m();
+    let d = problem.d;
+    let min_workers = if sopts.min_workers == 0 { m } else { sopts.min_workers.min(m) };
+    listener.set_nonblocking(true)?;
+
+    // server state: fresh, or restored from a checkpoint snapshot
+    let (mut ps, contrib, k0, mut uploads, mut downloads) = match &sopts.resume {
+        Some(st) => {
+            anyhow::ensure!(st.theta.len() == d, "checkpoint dimension mismatch");
+            anyhow::ensure!(st.hat_theta.len() == m, "checkpoint shard-count mismatch");
+            let (ps, cached) = st.restore();
+            (ps, cached, st.k as usize, st.uploads, st.downloads)
+        }
+        None => {
+            let theta0 = opts.theta0.clone().unwrap_or_else(|| vec![0.0; d]);
+            (ParameterServer::new(d, m, opts.d_history, theta0), vec![None; m], 0, 0, 0)
+        }
+    };
+    let alpha = opts.alpha.unwrap_or_else(|| algo.default_alpha(problem.l_total, m));
+    let xi = if algo == Algorithm::LagWk { opts.wk_xi } else { 0.0 };
+    let trigger = TriggerConfig::uniform(opts.d_history, xi);
+
+    let mut svc = Service {
+        listener,
+        conns: Vec::new(),
+        owner: vec![None; m],
+        admit_round: vec![None; m],
+        contrib,
+        stats: ServiceStats::default(),
+        tick: sopts.tick,
+    };
+    for &(_, s) in faults.admit_at.iter().chain(&faults.drop_after) {
+        anyhow::ensure!(s < m, "fault-plan shard {s} out of range");
+    }
+
+    let mut events: Vec<Vec<usize>> = vec![Vec::new(); m];
+    let mut recorder = TraceRecorder::new(
+        opts.record_every,
+        opts.max_iters,
+        opts.target_err,
+        opts.stop_at_target,
+        k0,
+        problem.obj_err(&ps.theta),
+    );
+    let t0 = Instant::now();
+
+    for k in k0 + 1..=opts.max_iters {
+        // -- phase A: membership window -------------------------------
+        // scheduled re-admissions due at k must land; round 1 additionally
+        // waits for the initial fleet
+        let initial = k == k0 + 1;
+        let deadline = Instant::now() + sopts.join_timeout;
+        loop {
+            svc.absorb_control();
+            svc.admit_pending(k);
+            // a member that died between rounds is evicted here, before
+            // the broadcast — its contribution leaves the aggregate now
+            for (s, _) in svc.reap_dead() {
+                svc.evict(&mut ps, s);
+            }
+            let admits_pending = (0..m).any(|s| {
+                matches!(svc.admit_round[s], Some(r) if r <= k) && svc.owner[s].is_none()
+            });
+            let need = if initial { min_workers } else { 1 };
+            if !admits_pending && svc.members() >= need {
+                break;
+            }
+            if Instant::now() >= deadline {
+                let missing: Vec<usize> = (0..m).filter(|&s| svc.owner[s].is_none()).collect();
+                anyhow::bail!(
+                    "round {k}: only {}/{need} members after {:?} (unowned shards {missing:?})",
+                    svc.members(),
+                    sopts.join_timeout,
+                );
+            }
+            svc.pump()?;
+        }
+
+        // -- phase B: broadcast and collect ---------------------------
+        let members: Vec<usize> = (0..m).filter(|&s| svc.owner[s].is_some()).collect();
+        let round = WireMsg::Round {
+            k: k as u64,
+            rhs: trigger.rhs(alpha, m, &ps.history),
+            theta: ps.theta.clone(),
+        };
+        for &s in &members {
+            let i = svc.owner[s].unwrap();
+            if let Some(c) = &mut svc.conns[i] {
+                c.replied = false;
+            }
+            svc.send(i, &round);
+        }
+        downloads += members.len() as u64;
+
+        let mut deltas: Vec<Option<Option<Vec<f64>>>> = vec![None; m];
+        let mut lost_unreplied: Vec<usize> = Vec::new();
+        let mut lost_replied: Vec<usize> = Vec::new();
+        let reply_deadline = Instant::now() + sopts.round_timeout;
+        loop {
+            svc.absorb_control();
+            // collect queued Deltas from members
+            for s in &members {
+                let Some(i) = svc.owner[*s] else { continue };
+                let Some(c) = &mut svc.conns[i] else { continue };
+                while let Some(msg) = c.inbox.pop_front() {
+                    match msg {
+                        WireMsg::Delta { k: mk, worker, delta } if mk == k as u64 => {
+                            let ws = worker as usize;
+                            if ws == *s && deltas[ws].is_none() {
+                                deltas[ws] = Some(delta);
+                                c.replied = true;
+                            } else {
+                                c.dead = true;
+                                break;
+                            }
+                        }
+                        WireMsg::Heartbeat => {}
+                        _ => {
+                            c.dead = true;
+                            break;
+                        }
+                    }
+                }
+            }
+            // a member silent past the heartbeat window is dead
+            let now = Instant::now();
+            for s in &members {
+                if let Some(i) = svc.owner[*s] {
+                    if let Some(c) = &mut svc.conns[i] {
+                        if !c.replied && now.duration_since(c.last_seen) > sopts.heartbeat_timeout
+                        {
+                            c.dead = true;
+                        }
+                    }
+                }
+            }
+            for (s, replied) in svc.reap_dead() {
+                if replied {
+                    lost_replied.push(s);
+                } else {
+                    lost_unreplied.push(s);
+                    deltas[s] = None; // discard any partial state
+                }
+            }
+            let outstanding = members
+                .iter()
+                .any(|&s| svc.owner[s].is_some() && deltas[s].is_none());
+            if !outstanding {
+                break;
+            }
+            if Instant::now() >= reply_deadline {
+                // deadline miss ≡ death: evict the laggards and move on
+                for &s in &members {
+                    if svc.owner[s].is_some() && deltas[s].is_none() {
+                        svc.force_drop(s);
+                        lost_unreplied.push(s);
+                    }
+                }
+                break;
+            }
+            svc.pump()?;
+        }
+
+        // -- apply the round deterministically ------------------------
+        // members that vanished *without* replying leave the aggregate
+        // before the step (their old gradient no longer represents them);
+        lost_unreplied.sort_unstable();
+        for &s in &lost_unreplied {
+            svc.evict(&mut ps, s);
+        }
+        // surviving uploads land in ascending shard order
+        for s in 0..m {
+            if lost_unreplied.contains(&s) {
+                continue;
+            }
+            if let Some(Some(dv)) = &deltas[s] {
+                ps.apply_delta(s, dv);
+                ps.stamp_upload(s, k);
+                match &mut svc.contrib[s] {
+                    Some(c) => axpy(1.0, dv, c),
+                    slot @ None => *slot = Some(dv.clone()),
+                }
+                uploads += 1;
+                events[s].push(k);
+            }
+        }
+        ps.step(alpha);
+        // members that replied and then died contributed to this step;
+        // their eviction (like a scheduled drop) takes effect after it
+        lost_replied.sort_unstable();
+        for &s in &lost_replied {
+            svc.evict(&mut ps, s);
+        }
+        for &(fk, s) in &faults.drop_after {
+            if fk == k && svc.owner[s].is_some() {
+                svc.force_drop(s);
+                svc.evict(&mut ps, s);
+                // hold the shard for its scheduled re-admission round (if
+                // the plan has one) so an eager rejoiner cannot land on a
+                // nondeterministic round
+                svc.admit_round[s] = faults
+                    .admit_at
+                    .iter()
+                    .filter(|&&(r, fs)| fs == s && r > k)
+                    .map(|&(r, _)| r)
+                    .min();
+            }
+        }
+
+        if sopts.checkpoint_every > 0 && k % sopts.checkpoint_every == 0 {
+            if let Some(path) = &sopts.checkpoint {
+                TrainState::capture(&ps, &svc.contrib, k as u64, uploads, downloads, downloads)
+                    .save(path)?;
+            }
+        }
+        if recorder.on_iter(k, problem.obj_err(&ps.theta), uploads, downloads, downloads) {
+            break;
+        }
+    }
+
+    // graceful teardown: broadcast Shutdown and flush briefly
+    for i in 0..svc.conns.len() {
+        if svc.conns[i].is_some() {
+            svc.send(i, &WireMsg::Shutdown);
+        }
+    }
+    let flush_deadline = Instant::now() + Duration::from_secs(1);
+    while svc.conns.iter().flatten().any(|c| !c.out.is_empty() && !c.dead) {
+        if Instant::now() >= flush_deadline {
+            break;
+        }
+        svc.pump()?;
+        let _ = svc.reap_dead();
+    }
+
+    svc.stats.final_theta = ps.theta.clone();
+    let meta = TraceMeta {
+        algo: format!("{}+svc", algo.name()),
+        problem: problem.name.clone(),
+        engine: "native-service".into(),
+        m,
+        alpha,
+    };
+    Ok((recorder.into_trace(meta, events, t0.elapsed().as_secs_f64()), svc.stats))
+}
+
+/// How an elastic worker's session ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerExit {
+    /// The leader sent `Shutdown`: training is over.
+    Shutdown,
+    /// The leader closed the connection at a frame boundary — an eviction
+    /// or a leader restart. The caller may reconnect (rejoin).
+    LeaderClosed,
+}
+
+/// Result of one [`serve_worker`] session.
+#[derive(Debug, Clone)]
+pub struct WorkerOutcome {
+    /// Why the session ended.
+    pub exit: WorkerExit,
+    /// Rounds served (gradient evaluations) in this session.
+    pub rounds: u64,
+    /// The shard the leader assigned, if admission happened.
+    pub shard: Option<usize>,
+}
+
+/// Elastic-worker knobs.
+#[derive(Debug, Clone)]
+pub struct WorkerConfig {
+    /// Shard to propose in `Hello` (`None` ⇒ [`ANY_SHARD`]: take whatever
+    /// the leader assigns).
+    pub preferred: Option<usize>,
+    /// Idle heartbeat cadence (doubles as the socket read timeout).
+    pub heartbeat_interval: Duration,
+    /// Error out if the leader is silent this long.
+    pub leader_timeout: Duration,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> Self {
+        WorkerConfig {
+            preferred: None,
+            heartbeat_interval: Duration::from_millis(200),
+            leader_timeout: Duration::from_secs(60),
+        }
+    }
+}
+
+/// One elastic-worker session against the event-loop leader: connect,
+/// propose a shard, serve `Round`s with the LAG-WK trigger after the
+/// `Assign` lands (resuming the handed-back gradient cache when one
+/// comes), heartbeat while idle. Returns instead of erroring when the
+/// leader hangs up cleanly — the caller decides whether to rejoin.
+pub fn serve_worker(
+    addr: &str,
+    problem: &Problem,
+    cfg: &WorkerConfig,
+) -> anyhow::Result<WorkerOutcome> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(cfg.heartbeat_interval.max(Duration::from_millis(1))))?;
+    let proposed = match cfg.preferred {
+        Some(s) => {
+            anyhow::ensure!(s < problem.m(), "preferred shard {s} out of range");
+            s as u32
+        }
+        None => ANY_SHARD,
+    };
+    stream.write_all(&WireMsg::Hello { worker: proposed }.encode())?;
+
+    let mut dec = FrameDecoder::new();
+    let mut inbox: VecDeque<WireMsg> = VecDeque::new();
+    let mut shard: Option<usize> = None;
+    let mut cached: Option<Vec<f64>> = None;
+    let mut rounds = 0u64;
+    let mut last_leader = Instant::now();
+    let mut buf = [0u8; 16384];
+    loop {
+        while let Some(msg) = inbox.pop_front() {
+            match msg {
+                WireMsg::Assign { worker, k: _, cached: handoff } => {
+                    let s = worker as usize;
+                    anyhow::ensure!(s < problem.m(), "assigned shard {s} out of range");
+                    shard = Some(s);
+                    cached = handoff; // None ⇒ forced first-contact upload
+                }
+                WireMsg::Round { k, rhs, theta } => {
+                    let s = shard
+                        .ok_or_else(|| anyhow::anyhow!("Round before Assign (no shard)"))?;
+                    let (g, _loss) = worker_grad(problem.task, &problem.workers[s], &theta);
+                    let violated = match &cached {
+                        None => true,
+                        Some(c) => dist2(c, &g) > rhs,
+                    };
+                    let delta = if violated {
+                        let dv = match &cached {
+                            Some(c) => sub(&g, c),
+                            None => g.clone(),
+                        };
+                        cached = Some(g);
+                        Some(dv)
+                    } else {
+                        None
+                    };
+                    stream.write_all(&WireMsg::Delta { k, worker: s as u32, delta }.encode())?;
+                    rounds += 1;
+                }
+                WireMsg::Shutdown => {
+                    return Ok(WorkerOutcome { exit: WorkerExit::Shutdown, rounds, shard })
+                }
+                WireMsg::Heartbeat => {}
+                other => anyhow::bail!("unexpected message from leader: {other:?}"),
+            }
+        }
+        match stream.read(&mut buf) {
+            Ok(0) => {
+                anyhow::ensure!(!dec.mid_frame(), "leader closed mid-frame");
+                return Ok(WorkerOutcome { exit: WorkerExit::LeaderClosed, rounds, shard });
+            }
+            Ok(n) => {
+                last_leader = Instant::now();
+                let mut msgs = Vec::new();
+                dec.feed(&buf[..n], &mut msgs)?;
+                inbox.extend(msgs);
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                anyhow::ensure!(
+                    last_leader.elapsed() <= cfg.leader_timeout,
+                    "leader silent for more than {:?}",
+                    cfg.leader_timeout
+                );
+                stream.write_all(&WireMsg::Heartbeat.encode())?;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::run;
+    use crate::data::synthetic;
+    use crate::grad::NativeEngine;
+    use crate::metrics::IterRecord;
+
+    fn quick_sopts() -> ServiceOptions {
+        ServiceOptions {
+            join_timeout: Duration::from_secs(20),
+            round_timeout: Duration::from_secs(20),
+            heartbeat_timeout: Duration::from_secs(20),
+            tick: Duration::from_millis(2),
+            ..Default::default()
+        }
+    }
+
+    /// Leader + a rejoining fleet of `n` preferred-shard workers on
+    /// loopback; returns the leader's outcome.
+    fn drive(
+        p: &Problem,
+        opts: &RunOptions,
+        sopts: &ServiceOptions,
+        faults: &FaultPlan,
+        n: usize,
+    ) -> (RunTrace, ServiceStats) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::scope(|scope| {
+            let leader = scope.spawn(|| {
+                run_service(listener, p, Algorithm::LagWk, opts, sopts, faults).unwrap()
+            });
+            for s in 0..n {
+                let addr = addr.clone();
+                scope.spawn(move || {
+                    let cfg = WorkerConfig {
+                        preferred: Some(s),
+                        heartbeat_interval: Duration::from_millis(20),
+                        leader_timeout: Duration::from_secs(30),
+                    };
+                    loop {
+                        match serve_worker(&addr, p, &cfg) {
+                            Ok(o) if o.exit == WorkerExit::Shutdown => break,
+                            Ok(_) => std::thread::sleep(Duration::from_millis(2)), // rejoin
+                            Err(_) => break, // leader gone
+                        }
+                    }
+                });
+            }
+            leader.join().unwrap()
+        })
+    }
+
+    fn record_sig(records: &[IterRecord]) -> Vec<(usize, u64, u64, u64, u64)> {
+        records
+            .iter()
+            .map(|r| (r.k, r.obj_err.to_bits(), r.cum_uploads, r.cum_downloads, r.cum_grad_evals))
+            .collect()
+    }
+
+    /// With a full, fault-free fleet the service reproduces the sync
+    /// driver's communication pattern exactly.
+    #[test]
+    fn service_matches_sync_driver_without_faults() {
+        let p = synthetic::linreg_increasing_l(4, 15, 6, 91);
+        let opts = RunOptions { max_iters: 60, ..Default::default() };
+        let sync = run(&p, Algorithm::LagWk, &opts, &NativeEngine::new(&p));
+        let (trace, stats) = drive(&p, &opts, &quick_sopts(), &FaultPlan::default(), p.m());
+        assert_eq!(trace.upload_events, sync.upload_events);
+        assert_eq!(trace.total_uploads(), sync.total_uploads());
+        assert_eq!(stats.joins, p.m() as u64);
+        assert_eq!(stats.evictions, 0);
+        assert!(stats.bytes_down > 0 && stats.bytes_up > 0);
+    }
+
+    /// Scheduled drops + scheduled re-admissions: the run converges and is
+    /// bit-deterministic — records, events, and the final iterate byte-
+    /// compare equal across two independent executions.
+    #[test]
+    fn scheduled_churn_is_bit_deterministic() {
+        let p = synthetic::linreg_increasing_l(6, 12, 5, 92);
+        let opts = RunOptions { max_iters: 50, record_every: 1, ..Default::default() };
+        let faults = FaultPlan {
+            drop_after: vec![(5, 1), (5, 4), (12, 2)],
+            admit_at: vec![(9, 1), (9, 4), (20, 2)],
+        };
+        let (ta, sa) = drive(&p, &opts, &quick_sopts(), &faults, p.m());
+        let (tb, sb) = drive(&p, &opts, &quick_sopts(), &faults, p.m());
+        assert_eq!(record_sig(&ta.records), record_sig(&tb.records));
+        assert_eq!(ta.upload_events, tb.upload_events);
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&sa.final_theta), bits(&sb.final_theta));
+        assert_eq!(sa.evictions, 3);
+        assert_eq!(sb.joins, p.m() as u64 + 3); // initial fleet + 3 rejoins
+        // the dropped shards really were dark: no uploads in the gap
+        for (s, gap) in [(1usize, 6..=8), (4usize, 6..=8), (2usize, 13..=19)] {
+            assert!(
+                ta.upload_events[s].iter().all(|k| !gap.contains(k)),
+                "shard {s} uploaded during its dead window"
+            );
+        }
+        // rejoin forces a first-contact upload at the re-admission round
+        assert!(ta.upload_events[1].contains(&9));
+        assert!(ta.upload_events[4].contains(&9));
+        assert!(ta.upload_events[2].contains(&20));
+    }
+
+    /// Checkpoint at round 20, resume with a *fresh* fleet (the cached
+    /// gradients come back via the Assign handoff): the continuation is a
+    /// bitwise extension of the uninterrupted run.
+    #[test]
+    fn checkpoint_resume_is_bitwise_continuation() {
+        let p = synthetic::linreg_increasing_l(4, 14, 5, 93);
+        let dir = std::env::temp_dir().join("lag_service_resume_test");
+        let ckpt = dir.join("svc.ckpt");
+        let _ = std::fs::remove_file(&ckpt);
+
+        let opts_full = RunOptions { max_iters: 40, record_every: 1, ..Default::default() };
+        let (full, stats_full) =
+            drive(&p, &opts_full, &quick_sopts(), &FaultPlan::default(), p.m());
+
+        let opts_half = RunOptions { max_iters: 20, record_every: 1, ..Default::default() };
+        let sopts_half = ServiceOptions {
+            checkpoint: Some(ckpt.clone()),
+            checkpoint_every: 20,
+            ..quick_sopts()
+        };
+        drive(&p, &opts_half, &sopts_half, &FaultPlan::default(), p.m());
+
+        let st = TrainState::load(&ckpt).unwrap();
+        assert_eq!(st.k, 20);
+        let sopts_resume = ServiceOptions { resume: Some(st), ..quick_sopts() };
+        let (tail, stats_tail) =
+            drive(&p, &opts_full, &sopts_resume, &FaultPlan::default(), p.m());
+
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&stats_full.final_theta), bits(&stats_tail.final_theta));
+        // upload events after the snapshot line up exactly (the handoff
+        // restored every worker's trigger cache, so no spurious uploads)
+        for s in 0..p.m() {
+            let after: Vec<usize> =
+                full.upload_events[s].iter().copied().filter(|&k| k > 20).collect();
+            assert_eq!(tail.upload_events[s], after, "shard {s}");
+        }
+        // and the resumed records continue the uninterrupted objective
+        let full_tail: Vec<u64> = full
+            .records
+            .iter()
+            .filter(|r| r.k > 20)
+            .map(|r| r.obj_err.to_bits())
+            .collect();
+        let resumed: Vec<u64> = tail
+            .records
+            .iter()
+            .filter(|r| r.k > 20)
+            .map(|r| r.obj_err.to_bits())
+            .collect();
+        assert_eq!(full_tail, resumed);
+    }
+
+    /// A fleet that never materializes is a deadline error naming the
+    /// unowned shards — not a hang.
+    #[test]
+    fn missing_fleet_is_a_deadline_error() {
+        let p = synthetic::linreg_increasing_l(3, 10, 4, 94);
+        let opts = RunOptions { max_iters: 5, ..Default::default() };
+        let sopts = ServiceOptions {
+            join_timeout: Duration::from_millis(200),
+            tick: Duration::from_millis(2),
+            ..Default::default()
+        };
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let t0 = Instant::now();
+        let err = run_service(listener, &p, Algorithm::LagWk, &opts, &sopts, &FaultPlan::default())
+            .unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(5), "deadline did not bound the wait");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("0/3"), "{msg}");
+        assert!(msg.contains("[0, 1, 2]"), "{msg}");
+    }
+
+    /// Mid-run worker death without a plan: the leader evicts and finishes
+    /// with the survivors (no hang), and the trace stays internally
+    /// consistent.
+    #[test]
+    fn unplanned_death_survives_with_remaining_fleet() {
+        let p = synthetic::linreg_increasing_l(3, 12, 5, 95);
+        let opts = RunOptions { max_iters: 30, ..Default::default() };
+        let sopts = ServiceOptions {
+            round_timeout: Duration::from_millis(400),
+            heartbeat_timeout: Duration::from_millis(400),
+            ..quick_sopts()
+        };
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let p = &p;
+        let (trace, stats) = std::thread::scope(|scope| {
+            let leader = scope.spawn(|| {
+                run_service(
+                    listener,
+                    p,
+                    Algorithm::LagWk,
+                    &opts,
+                    &sopts,
+                    &FaultPlan::default(),
+                )
+                .unwrap()
+            });
+            for s in 0..p.m() {
+                let addr = addr.clone();
+                scope.spawn(move || {
+                    let cfg = WorkerConfig {
+                        preferred: Some(s),
+                        heartbeat_interval: Duration::from_millis(20),
+                        leader_timeout: Duration::from_secs(30),
+                    };
+                    if s == 1 {
+                        // this worker dies after a few rounds and never
+                        // comes back — raw connection, then silence
+                        let mut stream = TcpStream::connect(&addr).unwrap();
+                        stream
+                            .write_all(&WireMsg::Hello { worker: 1 }.encode())
+                            .unwrap();
+                        std::thread::sleep(Duration::from_millis(150));
+                        drop(stream); // hard kill
+                    } else {
+                        loop {
+                            match serve_worker(&addr, p, &cfg) {
+                                Ok(o) if o.exit == WorkerExit::Shutdown => break,
+                                Ok(_) => continue,
+                                Err(_) => break,
+                            }
+                        }
+                    }
+                });
+            }
+            leader.join().unwrap()
+        });
+        assert_eq!(trace.records.last().unwrap().k, 30, "run did not complete");
+        assert!(stats.evictions >= 1);
+        // survivors kept uploading after the death window
+        assert!(trace.upload_events[0].iter().any(|&k| k > 10));
+        assert!(trace.upload_events[2].iter().any(|&k| k > 10));
+    }
+}

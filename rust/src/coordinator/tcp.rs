@@ -5,9 +5,17 @@
 //! rounds over the wire protocol in [`super::wire`]. Workers run the
 //! trigger rule locally and answer with `Delta` frames (`None` = skipped).
 //!
-//! This is the deployment a team would actually launch (`lag leader` /
-//! `lag worker`); the in-process drivers remain the ground truth the tests
-//! compare against. Byte-level communication volume is accounted exactly.
+//! This is the fixed-fleet runtime (`lag leader` / `lag worker`); the
+//! elastic event-loop service lives in [`super::service`]. The in-process
+//! drivers remain the ground truth the tests compare against. Byte-level
+//! communication volume is accounted exactly.
+//!
+//! Failure behavior (this runtime is *fail-fast*, not elastic): every
+//! blocking wait carries a deadline — fleet assembly fails after
+//! [`TcpOptions::accept_timeout`] naming the worker indices that never
+//! connected, and a round reply missing for [`TcpOptions::round_timeout`]
+//! fails naming the worker and round — so a dead or absent worker can
+//! never hang the leader.
 
 use super::trigger::{DiffHistory, TriggerConfig};
 use super::wire::WireMsg;
@@ -15,10 +23,10 @@ use super::{Algorithm, RunOptions};
 use crate::data::{Problem, Task, WorkerShard};
 use crate::grad::worker_grad;
 use crate::linalg::{axpy, dist2, sub};
-use crate::metrics::{IterRecord, RunTrace};
+use crate::metrics::{RunTrace, TraceMeta, TraceRecorder};
 use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Leader statistics including exact wire bytes.
 #[derive(Debug, Clone, Default)]
@@ -29,6 +37,34 @@ pub struct TcpStats {
     pub bytes_up: u64,
 }
 
+/// Deadlines for the fixed-fleet TCP leader. Every blocking wait is
+/// bounded: a worker that never connects or dies mid-round produces a
+/// worker-identifying error instead of hanging the leader forever.
+#[derive(Debug, Clone)]
+pub struct TcpOptions {
+    /// Total budget for all M workers to connect and say `Hello`.
+    pub accept_timeout: Duration,
+    /// Per-round deadline for each worker's `Delta` reply.
+    pub round_timeout: Duration,
+}
+
+impl Default for TcpOptions {
+    fn default() -> Self {
+        TcpOptions {
+            accept_timeout: Duration::from_secs(30),
+            round_timeout: Duration::from_secs(60),
+        }
+    }
+}
+
+/// True for the error kinds a `read_timeout` expiry surfaces as.
+fn is_timeout(e: &anyhow::Error) -> bool {
+    matches!(
+        e.downcast_ref::<std::io::Error>().map(|io| io.kind()),
+        Some(std::io::ErrorKind::WouldBlock) | Some(std::io::ErrorKind::TimedOut)
+    )
+}
+
 /// Run the leader: accept `m` workers on `addr`, train, return the trace.
 /// `problem` is used for monitoring (objective evaluation) and M/d shapes;
 /// worker shards live in the worker processes.
@@ -37,6 +73,20 @@ pub fn run_leader(
     problem: &Problem,
     algo: Algorithm,
     opts: &RunOptions,
+    topts: &TcpOptions,
+) -> anyhow::Result<(RunTrace, TcpStats)> {
+    run_leader_on(TcpListener::bind(addr)?, problem, algo, opts, topts)
+}
+
+/// [`run_leader`] over a pre-bound listener — lets callers bind port 0 and
+/// learn the real address (`listener.local_addr()`) before any worker
+/// needs it (the tests' race-free setup).
+pub fn run_leader_on(
+    listener: TcpListener,
+    problem: &Problem,
+    algo: Algorithm,
+    opts: &RunOptions,
+    topts: &TcpOptions,
 ) -> anyhow::Result<(RunTrace, TcpStats)> {
     anyhow::ensure!(
         matches!(algo, Algorithm::Gd | Algorithm::LagWk),
@@ -44,24 +94,52 @@ pub fn run_leader(
     );
     let m = problem.m();
     let d = problem.d;
-    let listener = TcpListener::bind(addr)?;
-    let mut conns: Vec<Option<(BufReader<TcpStream>, TcpStream)>> = (0..m).map(|_| None).collect();
-    for _ in 0..m {
-        let (stream, _) = listener.accept()?;
-        stream.set_nodelay(true)?;
-        let mut reader = BufReader::new(stream.try_clone()?);
-        match WireMsg::read_from(&mut reader)? {
-            WireMsg::Hello { worker } => {
-                let w = worker as usize;
-                anyhow::ensure!(w < m, "worker index {w} out of range");
-                anyhow::ensure!(conns[w].is_none(), "duplicate worker {w}");
-                conns[w] = Some((reader, stream));
+
+    // fleet assembly with a hard deadline: the listener is polled
+    // nonblocking so a worker that never shows cannot park us in accept(2)
+    type Conn = (BufReader<TcpStream>, TcpStream);
+    listener.set_nonblocking(true)?;
+    let assembly_deadline = Instant::now() + topts.accept_timeout;
+    let mut conns: Vec<Option<Conn>> = (0..m).map(|_| None).collect();
+    let mut joined = 0usize;
+    while joined < m {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nonblocking(false)?;
+                stream.set_nodelay(true)?;
+                stream.set_read_timeout(Some(topts.round_timeout))?;
+                let mut reader = BufReader::new(stream.try_clone()?);
+                match WireMsg::read_from(&mut reader)
+                    .map_err(|e| e.context("handshake: reading Hello"))?
+                {
+                    WireMsg::Hello { worker } => {
+                        let w = worker as usize;
+                        anyhow::ensure!(w < m, "worker index {w} out of range");
+                        anyhow::ensure!(conns[w].is_none(), "duplicate worker {w}");
+                        conns[w] = Some((reader, stream));
+                        joined += 1;
+                    }
+                    other => anyhow::bail!("expected Hello, got {other:?}"),
+                }
             }
-            other => anyhow::bail!("expected Hello, got {other:?}"),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= assembly_deadline {
+                    let missing: Vec<usize> =
+                        (0..m).filter(|&w| conns[w].is_none()).collect();
+                    anyhow::bail!(
+                        "only {joined}/{m} workers connected within {:?}; \
+                         missing worker indices {missing:?}",
+                        topts.accept_timeout
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
         }
     }
-    let mut conns: Vec<(BufReader<TcpStream>, TcpStream)> =
-        conns.into_iter().map(|c| c.unwrap()).collect();
+    listener.set_nonblocking(false)?;
+    let mut conns: Vec<Conn> = conns.into_iter().map(|c| c.unwrap()).collect();
 
     let alpha = opts.alpha.unwrap_or_else(|| algo.default_alpha(problem.l_total, m));
     let xi = if algo == Algorithm::LagWk { opts.wk_xi } else { 0.0 };
@@ -73,32 +151,45 @@ pub fn run_leader(
     let mut uploads = 0u64;
     let mut downloads = 0u64;
     let mut events: Vec<Vec<usize>> = vec![Vec::new(); m];
-    let mut records = vec![IterRecord {
-        k: 0,
-        obj_err: problem.obj_err(&theta),
-        cum_uploads: 0,
-        cum_downloads: 0,
-        cum_grad_evals: 0,
-    }];
-    let mut converged_iter = None;
-    let mut uploads_at_target = None;
+    let mut recorder = TraceRecorder::new(
+        opts.record_every,
+        opts.max_iters,
+        opts.target_err,
+        opts.stop_at_target,
+        0,
+        problem.obj_err(&theta),
+    );
     let t0 = Instant::now();
 
-    'train: for k in 1..=opts.max_iters {
+    for k in 1..=opts.max_iters {
         let round = WireMsg::Round {
             k: k as u64,
             rhs: trigger.rhs(alpha, m, &history),
             theta: theta.clone(),
         };
         let frame_bytes = round.wire_bytes();
-        for (_, w) in conns.iter_mut() {
-            round.write_to(w)?;
+        for (w, (_, stream)) in conns.iter_mut().enumerate() {
+            round
+                .write_to(stream)
+                .map_err(|e| e.context(format!("worker {w}: broadcasting round {k}")))?;
             stats.bytes_down += frame_bytes;
         }
         downloads += m as u64;
 
-        for (r, _) in conns.iter_mut() {
-            let msg = WireMsg::read_from(r)?;
+        // per-round read deadline: each stream carries a read_timeout, so
+        // a worker that dies mid-round errors (naming itself) instead of
+        // blocking the leader forever
+        for (w, (reader, _)) in conns.iter_mut().enumerate() {
+            let msg = WireMsg::read_from(reader).map_err(|e| {
+                if is_timeout(&e) {
+                    anyhow::anyhow!(
+                        "worker {w}: no reply to round {k} within {:?} (deadline exceeded)",
+                        topts.round_timeout
+                    )
+                } else {
+                    e.context(format!("worker {w}: reading round-{k} reply"))
+                }
+            })?;
             stats.bytes_up += msg.wire_bytes();
             match msg {
                 WireMsg::Delta { k: mk, worker, delta } => {
@@ -117,23 +208,8 @@ pub fn run_leader(
         axpy(-alpha, &agg, &mut theta);
         history.push(dist2(&theta, &prev));
 
-        let obj = problem.obj_err(&theta);
-        let at_target = opts.target_err.map(|t| obj <= t).unwrap_or(false);
-        if k % opts.record_every == 0 || k == opts.max_iters || at_target {
-            records.push(IterRecord {
-                k,
-                obj_err: obj,
-                cum_uploads: uploads,
-                cum_downloads: downloads,
-                cum_grad_evals: downloads,
-            });
-        }
-        if at_target && converged_iter.is_none() {
-            converged_iter = Some(k);
-            uploads_at_target = Some(uploads);
-            if opts.stop_at_target {
-                break 'train;
-            }
+        if recorder.on_iter(k, problem.obj_err(&theta), uploads, downloads, downloads) {
+            break;
         }
     }
 
@@ -141,26 +217,23 @@ pub fn run_leader(
         let _ = WireMsg::Shutdown.write_to(w);
     }
 
-    Ok((
-        RunTrace {
-            algo: format!("{}+tcp", algo.name()),
-            problem: problem.name.clone(),
-            engine: "native-tcp".into(),
-            m,
-            alpha,
-            records,
-            upload_events: events,
-            converged_iter,
-            uploads_at_target,
-            wall_secs: t0.elapsed().as_secs_f64(),
-            thetas: Vec::new(),
-        },
-        stats,
-    ))
+    let meta = TraceMeta {
+        algo: format!("{}+tcp", algo.name()),
+        problem: problem.name.clone(),
+        engine: "native-tcp".into(),
+        m,
+        alpha,
+    };
+    Ok((recorder.into_trace(meta, events, t0.elapsed().as_secs_f64()), stats))
 }
 
 /// Run one worker: connect to the leader, announce the index, serve rounds
 /// until `Shutdown`. Owns its shard; gradients run natively in-process.
+///
+/// Termination: a leader that closes the connection *at a frame boundary*
+/// after at least one completed round is a graceful shutdown (equivalent
+/// to `Shutdown` — leaders that crash-stop after finishing are common);
+/// EOF mid-frame, or before any round was served, is an error.
 pub fn run_worker(
     addr: &str,
     worker: usize,
@@ -176,8 +249,8 @@ pub fn run_worker(
     let mut cached: Option<Vec<f64>> = None;
     let mut rounds = 0u64;
     loop {
-        match WireMsg::read_from(&mut reader)? {
-            WireMsg::Round { k, rhs, theta } => {
+        match WireMsg::read_from_opt(&mut reader)? {
+            Some(WireMsg::Round { k, rhs, theta }) => {
                 rounds += 1;
                 let (g, _loss) = worker_grad(task, shard, &theta);
                 let violated = match &cached {
@@ -196,8 +269,10 @@ pub fn run_worker(
                 };
                 WireMsg::Delta { k, worker: worker as u32, delta }.write_to(&mut writer)?;
             }
-            WireMsg::Shutdown => return Ok(rounds),
-            other => anyhow::bail!("unexpected message {other:?}"),
+            Some(WireMsg::Shutdown) => return Ok(rounds),
+            Some(other) => anyhow::bail!("unexpected message {other:?}"),
+            None if rounds > 0 => return Ok(rounds), // graceful EOF at boundary
+            None => anyhow::bail!("leader closed the connection before any round"),
         }
     }
 }
@@ -208,6 +283,24 @@ mod tests {
     use crate::coordinator::run;
     use crate::data::synthetic;
     use crate::grad::NativeEngine;
+    use std::io::Write;
+
+    /// Bind port 0 and hand the listener to the leader: the OS picks a free
+    /// port (no hardcoded-port collisions between parallel tests) and the
+    /// listener exists before any worker connects (no sleep, no race — a
+    /// connect that beats the leader thread just queues in the backlog).
+    fn test_listener() -> (TcpListener, String) {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap().to_string();
+        (l, addr)
+    }
+
+    fn quick_topts() -> TcpOptions {
+        TcpOptions {
+            accept_timeout: Duration::from_secs(10),
+            round_timeout: Duration::from_secs(10),
+        }
+    }
 
     /// Full distributed round-trip on localhost: leader thread + M worker
     /// threads, compared against the synchronous driver.
@@ -217,10 +310,12 @@ mod tests {
         let opts = RunOptions { max_iters: 80, ..Default::default() };
         let sync = run(&p, Algorithm::LagWk, &opts, &NativeEngine::new(&p));
 
-        let addr = "127.0.0.1:37411";
+        let (listener, addr) = test_listener();
+        let addr = addr.as_str();
         let (trace, stats) = std::thread::scope(|scope| {
-            let leader = scope.spawn(|| run_leader(addr, &p, Algorithm::LagWk, &opts).unwrap());
-            std::thread::sleep(std::time::Duration::from_millis(100));
+            let leader = scope.spawn(|| {
+                run_leader_on(listener, &p, Algorithm::LagWk, &opts, &quick_topts()).unwrap()
+            });
             let mut workers = Vec::new();
             for mi in 0..p.m() {
                 let shard = &p.workers[mi];
@@ -252,10 +347,12 @@ mod tests {
     fn tcp_gd_converges() {
         let p = synthetic::linreg_increasing_l(3, 12, 5, 92);
         let opts = RunOptions { max_iters: 6000, target_err: Some(1e-8), ..Default::default() };
-        let addr = "127.0.0.1:37412";
+        let (listener, addr) = test_listener();
+        let addr = addr.as_str();
         let (trace, _stats) = std::thread::scope(|scope| {
-            let leader = scope.spawn(|| run_leader(addr, &p, Algorithm::Gd, &opts).unwrap());
-            std::thread::sleep(std::time::Duration::from_millis(100));
+            let leader = scope.spawn(|| {
+                run_leader_on(listener, &p, Algorithm::Gd, &opts, &quick_topts()).unwrap()
+            });
             for mi in 0..p.m() {
                 let shard = &p.workers[mi];
                 let task = p.task;
@@ -264,5 +361,129 @@ mod tests {
             leader.join().unwrap()
         });
         assert!(trace.converged_iter.is_some(), "err={}", trace.final_err());
+    }
+
+    /// Satellite: a worker that never connects must produce a deadline
+    /// error naming the missing indices, not hang the leader in accept().
+    #[test]
+    fn absent_worker_is_a_deadline_error_not_a_hang() {
+        let p = synthetic::linreg_increasing_l(3, 10, 4, 93);
+        let opts = RunOptions { max_iters: 5, ..Default::default() };
+        let topts = TcpOptions {
+            accept_timeout: Duration::from_millis(200),
+            round_timeout: Duration::from_secs(1),
+        };
+        let (listener, addr) = test_listener();
+        let addr = addr.as_str();
+        let err = std::thread::scope(|scope| {
+            let leader =
+                scope.spawn(|| run_leader_on(listener, &p, Algorithm::Gd, &opts, &topts));
+            // one of three workers connects; the other two never do
+            let shard = &p.workers[0];
+            let task = p.task;
+            scope.spawn(move || {
+                let _ = run_worker(addr, 0, task, shard);
+            });
+            leader.join().unwrap().unwrap_err()
+        });
+        let msg = format!("{err:#}");
+        assert!(msg.contains("1/3"), "{msg}");
+        assert!(msg.contains("[1, 2]"), "{msg}");
+    }
+
+    /// Satellite: a worker that dies mid-round must fail the round with a
+    /// worker-identifying error, not hang the leader in read().
+    #[test]
+    fn mid_round_death_names_the_worker() {
+        let p = synthetic::linreg_increasing_l(2, 10, 4, 94);
+        let opts = RunOptions { max_iters: 50, ..Default::default() };
+        let topts = TcpOptions {
+            accept_timeout: Duration::from_secs(5),
+            round_timeout: Duration::from_millis(300),
+        };
+        let (listener, addr) = test_listener();
+        let addr = addr.as_str();
+        let err = std::thread::scope(|scope| {
+            let leader =
+                scope.spawn(|| run_leader_on(listener, &p, Algorithm::Gd, &opts, &topts));
+            let shard = &p.workers[0];
+            let task = p.task;
+            scope.spawn(move || {
+                let _ = run_worker(addr, 0, task, shard);
+            });
+            // worker 1 says Hello, then silently dies before ever replying
+            scope.spawn(move || {
+                let mut s = TcpStream::connect(addr).unwrap();
+                WireMsg::Hello { worker: 1 }.write_to(&mut s).unwrap();
+                // hold the socket open (no reply) until the leader errors;
+                // dropping it early would surface as EOF, which is also
+                // fine — the deadline path is what this test pins down
+                std::thread::sleep(Duration::from_secs(2));
+            });
+            leader.join().unwrap().unwrap_err()
+        });
+        let msg = format!("{err:#}");
+        assert!(msg.contains("worker 1"), "{msg}");
+    }
+
+    /// Satellite: leader EOF at a frame boundary after a completed round is
+    /// a graceful worker shutdown; mid-frame truncation is an error.
+    #[test]
+    fn worker_eof_classification() {
+        let p = synthetic::linreg_increasing_l(1, 8, 3, 95);
+        // graceful: one full round, then the "leader" just closes
+        let (listener, addr) = test_listener();
+        let addr = addr.as_str();
+        let rounds = std::thread::scope(|scope| {
+            let worker = {
+                let shard = &p.workers[0];
+                let task = p.task;
+                scope.spawn(move || run_worker(addr, 0, task, shard))
+            };
+            let (mut s, _) = listener.accept().unwrap();
+            let hello = WireMsg::read_from(&mut &s).unwrap();
+            assert!(matches!(hello, WireMsg::Hello { worker: 0 }));
+            WireMsg::Round { k: 1, rhs: 0.0, theta: vec![0.0; p.d] }.write_to(&mut s).unwrap();
+            let delta = WireMsg::read_from(&mut &s).unwrap();
+            assert!(matches!(delta, WireMsg::Delta { delta: Some(_), .. }));
+            drop(s); // EOF at a frame boundary
+            worker.join().unwrap()
+        });
+        assert_eq!(rounds.unwrap(), 1);
+
+        // truncation: half a Round frame, then close → must be an error
+        let (listener, addr) = test_listener();
+        let addr = addr.as_str();
+        let res = std::thread::scope(|scope| {
+            let worker = {
+                let shard = &p.workers[0];
+                let task = p.task;
+                scope.spawn(move || run_worker(addr, 0, task, shard))
+            };
+            let (mut s, _) = listener.accept().unwrap();
+            let _hello = WireMsg::read_from(&mut &s).unwrap();
+            let frame = WireMsg::Round { k: 1, rhs: 0.0, theta: vec![0.0; p.d] }.encode();
+            s.write_all(&frame[..frame.len() / 2]).unwrap();
+            drop(s); // EOF mid-frame
+            worker.join().unwrap()
+        });
+        let msg = format!("{:#}", res.unwrap_err());
+        assert!(msg.contains("mid-frame"), "{msg}");
+
+        // EOF before any round is also an error, not a silent success
+        let (listener, addr) = test_listener();
+        let addr = addr.as_str();
+        let res = std::thread::scope(|scope| {
+            let worker = {
+                let shard = &p.workers[0];
+                let task = p.task;
+                scope.spawn(move || run_worker(addr, 0, task, shard))
+            };
+            let (s, _) = listener.accept().unwrap();
+            let _hello = WireMsg::read_from(&mut &s).unwrap();
+            drop(s);
+            worker.join().unwrap()
+        });
+        assert!(res.is_err());
     }
 }

@@ -33,7 +33,7 @@ use super::{Algorithm, RunOptions};
 use crate::data::{Problem, Task, WorkerShard};
 use crate::grad::{batch, sample_rows_into, worker_grad_batch_into, worker_grad_into, BatchSpec};
 use crate::linalg::{axpy, dist2};
-use crate::metrics::{IterRecord, RunTrace};
+use crate::metrics::{RunTrace, TraceMeta, TraceRecorder};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
@@ -143,13 +143,22 @@ pub fn parallel_run(
     let t_start = Instant::now();
     let (to_server_tx, to_server_rx) = mpsc::channel::<FromWorker>();
 
-    let mut records = Vec::new();
+    let theta0 = opts.theta0.clone().unwrap_or_else(|| vec![0.0; d]);
     let mut events: Vec<Vec<usize>> = vec![Vec::new(); m];
     let mut uploads = 0u64;
     let mut downloads = 0u64;
     let mut grad_evals = 0u64;
-    let mut converged_iter = None;
-    let mut uploads_at_target = None;
+    // shared trace bookkeeping: thinning, target latching, stop decision
+    // (identical semantics across the sync driver, TCP and service
+    // runtimes — the cross-runtime byte comparisons rely on it)
+    let mut recorder = TraceRecorder::new(
+        opts.record_every,
+        opts.max_iters,
+        opts.target_err,
+        opts.stop_at_target,
+        0,
+        problem.obj_err(&theta0),
+    );
 
     std::thread::scope(|scope| {
         // spawn workers
@@ -226,22 +235,15 @@ pub fn parallel_run(
         drop(to_server_tx);
 
         // server loop
-        let mut theta = opts.theta0.clone().unwrap_or_else(|| vec![0.0; d]);
+        let mut theta = theta0.clone();
         let mut prev = vec![0.0; d];
         let mut agg = vec![0.0; d];
         let mut history = DiffHistory::new(opts.d_history);
-        records.push(IterRecord {
-            k: 0,
-            obj_err: problem.obj_err(&theta),
-            cum_uploads: 0,
-            cum_downloads: 0,
-            cum_grad_evals: 0,
-        });
 
         // broadcast buffer pool, refilled by the workers' replies — after
         // the first round no broadcast allocates
         let mut theta_pool: Vec<Vec<f64>> = Vec::new();
-        'outer: for k in 1..=opts.max_iters {
+        for k in 1..=opts.max_iters {
             let rhs = trigger.rhs(alpha, m, &history);
             if !topts.broadcast_latency.is_zero() {
                 std::thread::sleep(topts.broadcast_latency);
@@ -278,23 +280,8 @@ pub fn parallel_run(
             axpy(-alpha, &agg, &mut theta);
             history.push(dist2(&theta, &prev));
 
-            let obj = problem.obj_err(&theta);
-            let at_target = opts.target_err.map(|t| obj <= t).unwrap_or(false);
-            if k % opts.record_every == 0 || k == opts.max_iters || at_target {
-                records.push(IterRecord {
-                    k,
-                    obj_err: obj,
-                    cum_uploads: uploads,
-                    cum_downloads: downloads,
-                    cum_grad_evals: grad_evals,
-                });
-            }
-            if at_target && converged_iter.is_none() {
-                converged_iter = Some(k);
-                uploads_at_target = Some(uploads);
-                if opts.stop_at_target {
-                    break 'outer;
-                }
+            if recorder.on_iter(k, problem.obj_err(&theta), uploads, downloads, grad_evals) {
+                break;
             }
         }
 
@@ -303,19 +290,14 @@ pub fn parallel_run(
         }
     });
 
-    RunTrace {
+    let meta = TraceMeta {
         algo: format!("{}+threads", algo.name()),
         problem: problem.name.clone(),
         engine: "native-threaded".into(),
         m,
         alpha,
-        records,
-        upload_events: events,
-        converged_iter,
-        uploads_at_target,
-        wall_secs: t_start.elapsed().as_secs_f64(),
-        thetas: Vec::new(),
-    }
+    };
+    recorder.into_trace(meta, events, t_start.elapsed().as_secs_f64())
 }
 
 #[cfg(test)]

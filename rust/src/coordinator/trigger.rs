@@ -184,6 +184,11 @@ impl TriggerConfig {
     }
 
     /// The trigger RHS at stepsize α with M workers.
+    ///
+    /// `m` is the problem's *total* shard count, not the live membership:
+    /// the elastic service keeps M fixed while workers come and go, so the
+    /// skip threshold (and hence the surviving fleet's trace) never depends
+    /// on how many members happen to be connected.
     #[inline]
     pub fn rhs(&self, alpha: f64, m: usize, history: &DiffHistory) -> f64 {
         let denom = alpha * alpha * (m * m) as f64;

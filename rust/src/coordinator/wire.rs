@@ -32,12 +32,41 @@ pub enum WireMsg {
     },
     /// Leader → workers: training is over.
     Shutdown,
+    /// Leader → worker (event-loop service): shard assignment on admission.
+    /// Elastic membership: the worker proposed an index in its `Hello`
+    /// (`ANY_SHARD` = no preference) and the leader answers with the shard
+    /// it actually owns from the next round on.
+    Assign {
+        /// The assigned shard index.
+        worker: u32,
+        /// The round the assignment takes effect at (the next broadcast).
+        k: u64,
+        /// Checkpoint-style state handoff: the worker's cached gradient at
+        /// its last upload, when the leader still holds it (resume from a
+        /// checkpoint). `None` forces a first-contact upload — the same
+        /// conservative semantics as the PS2 restore path documented in
+        /// [`super::checkpoint::TrainState`].
+        cached: Option<Vec<f64>>,
+    },
+    /// Worker → leader: liveness signal while idle (no round in flight).
+    Heartbeat,
 }
+
+/// `Hello { worker: ANY_SHARD }` — the worker has no shard preference and
+/// accepts whatever the leader assigns.
+pub const ANY_SHARD: u32 = u32::MAX;
+
+/// Upper bound on a frame body accepted from the wire (64 MiB — a `Round`
+/// over a d = 8M-dimensional model; anything larger is hostile or corrupt).
+/// Checked *before* any allocation sized by the length prefix.
+pub const MAX_FRAME_LEN: usize = 1 << 26;
 
 const TAG_HELLO: u8 = 1;
 const TAG_ROUND: u8 = 2;
 const TAG_DELTA: u8 = 3;
 const TAG_SHUTDOWN: u8 = 4;
+const TAG_ASSIGN: u8 = 5;
+const TAG_HEARTBEAT: u8 = 6;
 
 fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
@@ -122,6 +151,10 @@ impl WireMsg {
                 8 + 4 + 1 + delta.as_ref().map(|d| vec_wire_len(d.len())).unwrap_or(0)
             }
             WireMsg::Shutdown => 0,
+            WireMsg::Assign { cached, .. } => {
+                4 + 8 + 1 + cached.as_ref().map(|c| vec_wire_len(c.len())).unwrap_or(0)
+            }
+            WireMsg::Heartbeat => 0,
         }
     }
 
@@ -156,6 +189,19 @@ impl WireMsg {
                 }
             }
             WireMsg::Shutdown => out.push(TAG_SHUTDOWN),
+            WireMsg::Assign { worker, k, cached } => {
+                out.push(TAG_ASSIGN);
+                put_u32(&mut out, *worker);
+                put_u64(&mut out, *k);
+                match cached {
+                    Some(c) => {
+                        out.push(1);
+                        put_vec(&mut out, c);
+                    }
+                    None => out.push(0),
+                }
+            }
+            WireMsg::Heartbeat => out.push(TAG_HEARTBEAT),
         }
         debug_assert_eq!(out.len(), 4 + body_len, "body_len out of sync with encode");
         out
@@ -165,7 +211,7 @@ impl WireMsg {
     pub fn decode(body: &[u8]) -> anyhow::Result<WireMsg> {
         anyhow::ensure!(!body.is_empty(), "empty frame");
         let mut c = Cursor { b: body, pos: 1 };
-        Ok(match body[0] {
+        let msg = match body[0] {
             TAG_HELLO => WireMsg::Hello { worker: c.u32()? },
             TAG_ROUND => WireMsg::Round { k: c.u64()?, rhs: c.f64()?, theta: c.vec()? },
             TAG_DELTA => {
@@ -176,8 +222,18 @@ impl WireMsg {
                 WireMsg::Delta { k, worker, delta }
             }
             TAG_SHUTDOWN => WireMsg::Shutdown,
+            TAG_ASSIGN => {
+                let worker = c.u32()?;
+                let k = c.u64()?;
+                let has = c.take(1)?[0];
+                let cached = if has == 1 { Some(c.vec()?) } else { None };
+                WireMsg::Assign { worker, k, cached }
+            }
+            TAG_HEARTBEAT => WireMsg::Heartbeat,
             t => anyhow::bail!("unknown wire tag {t}"),
-        })
+        };
+        anyhow::ensure!(c.pos == body.len(), "trailing bytes in frame");
+        Ok(msg)
     }
 
     /// Write a frame to a stream.
@@ -186,15 +242,45 @@ impl WireMsg {
         Ok(())
     }
 
-    /// Read a frame from a stream (blocking).
+    /// Read a frame from a stream (blocking). Errors on EOF — including a
+    /// clean close between frames; use [`WireMsg::read_from_opt`] when a
+    /// peer hanging up at a frame boundary is a legal outcome.
     pub fn read_from<R: Read>(r: &mut R) -> anyhow::Result<WireMsg> {
+        WireMsg::read_from_opt(r)?
+            .ok_or_else(|| anyhow::anyhow!("connection closed at frame boundary"))
+    }
+
+    /// Read a frame, distinguishing a clean close from corruption:
+    /// `Ok(None)` iff the stream hit EOF *exactly at a frame boundary*
+    /// (zero bytes of the next frame read); EOF anywhere inside a frame —
+    /// mid-header or mid-body — is an error naming how much was lost. The
+    /// length prefix is bounds-checked against [`MAX_FRAME_LEN`] before it
+    /// sizes any allocation, and the body buffer grows with the bytes
+    /// actually received, so a hostile prefix cannot force a huge
+    /// allocation.
+    pub fn read_from_opt<R: Read>(r: &mut R) -> anyhow::Result<Option<WireMsg>> {
         let mut len = [0u8; 4];
-        r.read_exact(&mut len)?;
+        let mut got = 0usize;
+        while got < 4 {
+            match r.read(&mut len[got..]) {
+                Ok(0) if got == 0 => return Ok(None),
+                Ok(0) => anyhow::bail!("connection closed mid-frame ({got}/4 header bytes)"),
+                Ok(n) => got += n,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e.into()),
+            }
+        }
         let n = u32::from_le_bytes(len) as usize;
-        anyhow::ensure!(n <= 1 << 30, "frame too large: {n}");
-        let mut body = vec![0u8; n];
-        r.read_exact(&mut body)?;
-        WireMsg::decode(&body)
+        anyhow::ensure!(n >= 1 && n <= MAX_FRAME_LEN, "frame length {n} out of bounds");
+        // allocation capped by bytes received, not by the untrusted prefix
+        let mut body = Vec::with_capacity(n.min(64 * 1024));
+        r.by_ref().take(n as u64).read_to_end(&mut body)?;
+        anyhow::ensure!(
+            body.len() == n,
+            "connection closed mid-frame ({}/{n} body bytes)",
+            body.len()
+        );
+        Ok(Some(WireMsg::decode(&body)?))
     }
 
     /// Wire size in bytes (frame header included) — communication-volume
@@ -202,6 +288,135 @@ impl WireMsg {
     /// without encoding (asserted equal to `encode().len()` by tests).
     pub fn wire_bytes(&self) -> u64 {
         (4 + self.body_len()) as u64
+    }
+}
+
+/// Incremental frame parser for nonblocking sockets: feed whatever bytes
+/// the kernel hands you — including one at a time — and complete frames
+/// fall out. This is the per-connection *partial-read state machine* of
+/// the event-loop service: a connection is never blocked on, so a frame
+/// may arrive split across arbitrarily many readiness events.
+///
+/// ```
+/// use lag::coordinator::wire::{FrameDecoder, WireMsg};
+///
+/// let frame = WireMsg::Hello { worker: 3 }.encode();
+/// let mut dec = FrameDecoder::new();
+/// let mut out = Vec::new();
+/// for b in &frame {
+///     dec.feed(std::slice::from_ref(b), &mut out).unwrap();
+/// }
+/// assert_eq!(out, vec![WireMsg::Hello { worker: 3 }]);
+/// assert!(!dec.mid_frame());
+/// ```
+#[derive(Debug, Default)]
+pub struct FrameDecoder {
+    header: [u8; 4],
+    header_got: usize,
+    body: Vec<u8>,
+    /// Body length of the frame in flight (`None` while reading the header).
+    body_need: Option<usize>,
+}
+
+impl FrameDecoder {
+    /// Fresh decoder, positioned at a frame boundary.
+    pub fn new() -> Self {
+        FrameDecoder::default()
+    }
+
+    /// Consume `data`, appending every completed [`WireMsg`] to `out`.
+    /// Errors on an out-of-bounds length prefix or an undecodable body —
+    /// the connection is then poisoned and must be dropped (frame sync is
+    /// lost). The body buffer grows with the bytes actually received, so a
+    /// hostile prefix cannot force a large allocation.
+    pub fn feed(&mut self, mut data: &[u8], out: &mut Vec<WireMsg>) -> anyhow::Result<()> {
+        while !data.is_empty() {
+            match self.body_need {
+                None => {
+                    let take = (4 - self.header_got).min(data.len());
+                    self.header[self.header_got..self.header_got + take]
+                        .copy_from_slice(&data[..take]);
+                    self.header_got += take;
+                    data = &data[take..];
+                    if self.header_got == 4 {
+                        let n = u32::from_le_bytes(self.header) as usize;
+                        anyhow::ensure!(
+                            n >= 1 && n <= MAX_FRAME_LEN,
+                            "frame length {n} out of bounds"
+                        );
+                        self.body.clear();
+                        self.body.reserve(n.min(64 * 1024));
+                        self.body_need = Some(n);
+                    }
+                }
+                Some(n) => {
+                    let take = (n - self.body.len()).min(data.len());
+                    self.body.extend_from_slice(&data[..take]);
+                    data = &data[take..];
+                    if self.body.len() == n {
+                        out.push(WireMsg::decode(&self.body)?);
+                        self.body_need = None;
+                        self.header_got = 0;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// True while a frame is partially buffered — EOF now means the peer
+    /// died mid-frame (truncation), not a graceful close.
+    pub fn mid_frame(&self) -> bool {
+        self.header_got != 0 || self.body_need.is_some()
+    }
+}
+
+/// Outgoing byte queue for nonblocking sockets — the *partial-write state
+/// machine* paired with [`FrameDecoder`]. Frames are staged here and
+/// drained as far as each writability event allows; [`WriteQueue::advance`]
+/// tracks how much the kernel actually accepted.
+#[derive(Debug, Default)]
+pub struct WriteQueue {
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl WriteQueue {
+    /// Empty queue.
+    pub fn new() -> Self {
+        WriteQueue::default()
+    }
+
+    /// Stage a frame; returns its wire size (for byte accounting).
+    pub fn push(&mut self, msg: &WireMsg) -> u64 {
+        let frame = msg.encode();
+        self.buf.extend_from_slice(&frame);
+        frame.len() as u64
+    }
+
+    /// The bytes still waiting for the socket.
+    pub fn pending(&self) -> &[u8] {
+        &self.buf[self.pos..]
+    }
+
+    /// True when everything staged has been written.
+    pub fn is_empty(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+
+    /// Mark `n` bytes of [`WriteQueue::pending`] as written. Reclaims the
+    /// buffer when drained (and compacts a large consumed prefix), so a
+    /// long-lived connection does not grow without bound.
+    pub fn advance(&mut self, n: usize) {
+        self.pos += n;
+        debug_assert!(self.pos <= self.buf.len());
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        } else if self.pos > 1 << 16 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
     }
 }
 
@@ -222,6 +437,9 @@ mod tests {
         roundtrip(WireMsg::Delta { k: 3, worker: 1, delta: Some(vec![0.25; 10]) });
         roundtrip(WireMsg::Delta { k: 3, worker: 1, delta: None });
         roundtrip(WireMsg::Shutdown);
+        roundtrip(WireMsg::Assign { worker: 5, k: 17, cached: Some(vec![-0.5, 2.0]) });
+        roundtrip(WireMsg::Assign { worker: ANY_SHARD, k: 0, cached: None });
+        roundtrip(WireMsg::Heartbeat);
     }
 
     #[test]
@@ -246,6 +464,126 @@ mod tests {
         assert!(WireMsg::decode(&[]).is_err());
         assert!(WireMsg::decode(&[99]).is_err());
         assert!(WireMsg::decode(&[TAG_ROUND, 1, 2]).is_err()); // truncated
+    }
+
+    /// Satellite: corrupt/hostile frames must fail cleanly, and an
+    /// attacker-controlled length prefix must never size an allocation.
+    #[test]
+    fn hostile_frames_rejected() {
+        // truncated bodies: every proper prefix of a valid body fails
+        let full = WireMsg::Round { k: 7, rhs: 0.5, theta: vec![1.0, 2.0, 3.0] }.encode();
+        for cut in 1..full.len() - 4 {
+            assert!(WireMsg::decode(&full[4..4 + cut]).is_err(), "cut={cut}");
+        }
+        // trailing junk after a well-formed message
+        let mut long = full[4..].to_vec();
+        long.push(0);
+        assert!(WireMsg::decode(&long).is_err());
+        // unknown tags
+        for tag in [0u8, 7, 42, 255] {
+            assert!(WireMsg::decode(&[tag, 0, 0, 0, 0]).is_err(), "tag={tag}");
+        }
+        // oversized length prefix: rejected before any body allocation
+        let mut stream = Vec::new();
+        stream.extend_from_slice(&(u32::MAX).to_le_bytes());
+        stream.extend_from_slice(&[0u8; 16]);
+        let mut r = &stream[..];
+        assert!(WireMsg::read_from(&mut r).is_err());
+        // zero-length frames are also out of bounds (no empty bodies exist)
+        let zero = 0u32.to_le_bytes();
+        let mut r = &zero[..];
+        assert!(WireMsg::read_from(&mut r).is_err());
+        // hostile vector length inside an otherwise plausible frame: the
+        // u64 count promises 2^40 elements but the body ends immediately
+        let mut body = vec![TAG_ROUND];
+        put_u64(&mut body, 3);
+        put_f64(&mut body, 0.0);
+        put_u64(&mut body, 1 << 40);
+        assert!(WireMsg::decode(&body).is_err());
+        // length prefix that lies about a huge body over a short stream:
+        // read_from must report mid-frame truncation, not hang or OOM
+        let mut stream = Vec::new();
+        stream.extend_from_slice(&((MAX_FRAME_LEN as u32) - 1).to_le_bytes());
+        stream.extend_from_slice(&[TAG_SHUTDOWN, 0, 0]);
+        let mut r = &stream[..];
+        let err = WireMsg::read_from(&mut r).unwrap_err().to_string();
+        assert!(err.contains("mid-frame"), "{err}");
+    }
+
+    /// Clean EOF at a frame boundary is `Ok(None)`; EOF inside a frame is
+    /// an error (mid-header and mid-body).
+    #[test]
+    fn eof_classification() {
+        let frame = WireMsg::Hello { worker: 1 }.encode();
+        // empty stream: boundary EOF
+        let mut r: &[u8] = &[];
+        assert!(WireMsg::read_from_opt(&mut r).unwrap().is_none());
+        // one full frame then boundary EOF
+        let mut r = &frame[..];
+        assert!(WireMsg::read_from_opt(&mut r).unwrap().is_some());
+        assert!(WireMsg::read_from_opt(&mut r).unwrap().is_none());
+        // mid-header and mid-body EOFs are errors
+        for cut in 1..frame.len() {
+            let mut r = &frame[..cut];
+            assert!(WireMsg::read_from_opt(&mut r).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn frame_decoder_byte_at_a_time() {
+        let msgs = vec![
+            WireMsg::Hello { worker: 2 },
+            WireMsg::Round { k: 5, rhs: 1e-9, theta: vec![0.5; 130] },
+            WireMsg::Delta { k: 5, worker: 2, delta: None },
+            WireMsg::Assign { worker: 9, k: 1, cached: Some(vec![1.0; 3]) },
+            WireMsg::Heartbeat,
+            WireMsg::Shutdown,
+        ];
+        let mut stream = Vec::new();
+        for m in &msgs {
+            stream.extend_from_slice(&m.encode());
+        }
+        // byte-at-a-time and a few awkward chunkings must all resync
+        for chunk in [1usize, 3, 7, stream.len()] {
+            let mut dec = FrameDecoder::new();
+            let mut out = Vec::new();
+            for piece in stream.chunks(chunk) {
+                dec.feed(piece, &mut out).unwrap();
+            }
+            assert_eq!(out, msgs, "chunk={chunk}");
+            assert!(!dec.mid_frame());
+        }
+        // mid_frame is set exactly while a frame is partially buffered
+        let mut dec = FrameDecoder::new();
+        let mut out = Vec::new();
+        dec.feed(&stream[..2], &mut out).unwrap();
+        assert!(dec.mid_frame());
+        // hostile length prefix poisons the decoder
+        let mut dec = FrameDecoder::new();
+        let err = dec.feed(&u32::MAX.to_le_bytes(), &mut Vec::new());
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn write_queue_partial_drain() {
+        let mut q = WriteQueue::new();
+        assert!(q.is_empty());
+        let a = WireMsg::Hello { worker: 1 };
+        let b = WireMsg::Round { k: 1, rhs: 0.0, theta: vec![2.0; 10] };
+        let bytes = q.push(&a) + q.push(&b);
+        assert_eq!(bytes, a.wire_bytes() + b.wire_bytes());
+        // drain in awkward chunks through a decoder: the byte stream must
+        // reassemble to exactly the pushed frames
+        let mut dec = FrameDecoder::new();
+        let mut out = Vec::new();
+        while !q.is_empty() {
+            let n = q.pending().len().min(5);
+            dec.feed(&q.pending()[..n], &mut out).unwrap();
+            q.advance(n);
+        }
+        assert_eq!(out, vec![a, b]);
+        assert!(q.is_empty());
+        assert_eq!(q.pending().len(), 0);
     }
 
     /// The element-at-a-time encoder the chunked `put_vec`/exact-size
@@ -282,6 +620,19 @@ mod tests {
                 }
             }
             WireMsg::Shutdown => body.push(TAG_SHUTDOWN),
+            WireMsg::Assign { worker, k, cached } => {
+                body.push(TAG_ASSIGN);
+                put_u32(&mut body, *worker);
+                put_u64(&mut body, *k);
+                match cached {
+                    Some(c) => {
+                        body.push(1);
+                        ref_put_vec(&mut body, c);
+                    }
+                    None => body.push(0),
+                }
+            }
+            WireMsg::Heartbeat => body.push(TAG_HEARTBEAT),
         }
         let mut out = Vec::with_capacity(4 + body.len());
         put_u32(&mut out, body.len() as u32);
@@ -306,6 +657,9 @@ mod tests {
             WireMsg::Hello { worker: 7 },
             WireMsg::Delta { k: 3, worker: 1, delta: None },
             WireMsg::Shutdown,
+            WireMsg::Assign { worker: 4, k: 12, cached: Some(vec![1.5; 65]) },
+            WireMsg::Assign { worker: 4, k: 12, cached: None },
+            WireMsg::Heartbeat,
         ] {
             assert_eq!(m.encode(), reference_encode(&m));
         }
@@ -319,6 +673,8 @@ mod tests {
             WireMsg::Delta { k: 2, worker: 0, delta: Some(vec![-1.0; 64]) },
             WireMsg::Delta { k: 2, worker: 0, delta: None },
             WireMsg::Shutdown,
+            WireMsg::Assign { worker: 3, k: 40, cached: Some(vec![0.25; 33]) },
+            WireMsg::Heartbeat,
         ] {
             let enc = m.encode();
             assert_eq!(enc.capacity(), enc.len(), "no over-allocation: {m:?}");

@@ -50,8 +50,11 @@ fn print_help() {
          run          execute a declarative JSON run config: lag run --config cfg.json\n  \
          train        run one algorithm on a synthetic problem (stochastic algorithms\n               \
          sgd|lasg-wk|lasg-ps take --batch full|N|0.N and --lasg-rule wk1|wk2|ps1|ps2)\n  \
-         leader       TCP parameter server: --addr 0.0.0.0:7070 --m 9 [--algo lag-wk]\n  \
-         worker       TCP worker: --addr host:7070 --index 0 (same problem flags)\n  \
+         leader       parameter server: --addr 0.0.0.0:7070 --m 9 [--algo lag-wk]\n               \
+         [--runtime service|tcp] [--min-workers K] [--join-timeout-ms N]\n               \
+         [--round-timeout-ms N] [--checkpoint F --checkpoint-every K] [--resume F]\n  \
+         worker       worker: --addr host:7070 [--index 0] (same problem flags);\n               \
+         service runtime adds [--rejoin N] [--heartbeat-ms N]\n  \
          plot         render a results CSV as an ASCII curve: lag plot results/fig3/lag-wk.csv\n  \
          info         list AOT artifacts\n\n\
          common flags: --engine pjrt|native  --artifacts DIR  --out DIR  --quick\n  \
@@ -194,27 +197,117 @@ fn cmd_leader(args: &Args) -> anyhow::Result<()> {
         target_err: args.opt("target").map(|s| s.parse()).transpose()?,
         ..Default::default()
     };
-    println!("leader on {addr}: waiting for {} workers...", problem.m());
-    let (trace, stats) = lag::coordinator::run_leader(&addr, &problem, algo, &opts)?;
-    println!("{}", trace.summary());
-    println!(
-        "wire volume: {:.1} KB down, {:.1} KB up",
-        stats.bytes_down as f64 / 1024.0,
-        stats.bytes_up as f64 / 1024.0
-    );
+    match args.opt_or("runtime", "service").as_str() {
+        // elastic event-loop service (default): late joins, drop
+        // tolerance, heartbeats, optional checkpoint/resume
+        "service" => {
+            let sopts = lag::coordinator::ServiceOptions {
+                min_workers: args.opt_usize("min-workers", 0)?,
+                join_timeout: args.opt_duration_ms("join-timeout-ms", 30_000)?,
+                round_timeout: args.opt_duration_ms("round-timeout-ms", 60_000)?,
+                heartbeat_timeout: args.opt_duration_ms("heartbeat-timeout-ms", 30_000)?,
+                resume: args
+                    .opt("resume")
+                    .map(lag::coordinator::TrainState::load)
+                    .transpose()?,
+                checkpoint: args.opt("checkpoint").map(std::path::PathBuf::from),
+                checkpoint_every: args.opt_usize("checkpoint-every", 0)?,
+                ..Default::default()
+            };
+            println!(
+                "service leader on {addr}: waiting for {} workers (elastic)...",
+                if sopts.min_workers == 0 { problem.m() } else { sopts.min_workers }
+            );
+            let listener = std::net::TcpListener::bind(&addr)?;
+            let (trace, stats) = lag::coordinator::run_service(
+                listener,
+                &problem,
+                algo,
+                &opts,
+                &sopts,
+                &lag::coordinator::FaultPlan::default(),
+            )?;
+            println!("{}", trace.summary());
+            println!(
+                "wire volume: {:.1} KB down, {:.1} KB up; joins {}, evictions {}",
+                stats.bytes_down as f64 / 1024.0,
+                stats.bytes_up as f64 / 1024.0,
+                stats.joins,
+                stats.evictions
+            );
+        }
+        // fixed-fleet blocking runtime (fails fast instead of tolerating
+        // churn)
+        "tcp" => {
+            let topts = lag::coordinator::TcpOptions {
+                accept_timeout: args.opt_duration_ms("join-timeout-ms", 30_000)?,
+                round_timeout: args.opt_duration_ms("round-timeout-ms", 60_000)?,
+            };
+            println!("leader on {addr}: waiting for {} workers...", problem.m());
+            let (trace, stats) =
+                lag::coordinator::run_leader(&addr, &problem, algo, &opts, &topts)?;
+            println!("{}", trace.summary());
+            println!(
+                "wire volume: {:.1} KB down, {:.1} KB up",
+                stats.bytes_down as f64 / 1024.0,
+                stats.bytes_up as f64 / 1024.0
+            );
+        }
+        other => anyhow::bail!("unknown --runtime '{other}' (expected service|tcp)"),
+    }
     Ok(())
 }
 
 fn cmd_worker(args: &Args) -> anyhow::Result<()> {
     let addr = args.opt_or("addr", "127.0.0.1:7070");
-    let index = args.opt_usize("index", 0)?;
     let problem = tcp_problem(args)?;
-    anyhow::ensure!(index < problem.m(), "--index {index} out of range");
-    println!("worker {index}: connecting to {addr}...");
-    let rounds =
-        lag::coordinator::run_worker(&addr, index, problem.task, &problem.workers[index])?;
-    println!("worker {index}: served {rounds} rounds, shutting down");
-    Ok(())
+    match args.opt_or("runtime", "service").as_str() {
+        // elastic worker: propose a shard (or take any), rejoin on leader
+        // hangup up to --rejoin times
+        "service" => {
+            let cfg = lag::coordinator::WorkerConfig {
+                preferred: args.opt("index").map(|s| s.parse()).transpose()?,
+                heartbeat_interval: args.opt_duration_ms("heartbeat-ms", 200)?,
+                leader_timeout: args.opt_duration_ms("leader-timeout-ms", 60_000)?,
+            };
+            let mut rejoins = args.opt_usize("rejoin", 0)?;
+            loop {
+                println!("worker: connecting to {addr}...");
+                let out = lag::coordinator::serve_worker(&addr, &problem, &cfg)?;
+                match out.exit {
+                    lag::coordinator::WorkerExit::Shutdown => {
+                        println!(
+                            "worker: served {} rounds on shard {:?}, shutting down",
+                            out.rounds, out.shard
+                        );
+                        return Ok(());
+                    }
+                    lag::coordinator::WorkerExit::LeaderClosed if rejoins > 0 => {
+                        rejoins -= 1;
+                        println!(
+                            "worker: leader hung up after {} rounds; rejoining ({rejoins} left)",
+                            out.rounds
+                        );
+                        std::thread::sleep(std::time::Duration::from_millis(200));
+                    }
+                    lag::coordinator::WorkerExit::LeaderClosed => {
+                        println!("worker: leader hung up after {} rounds", out.rounds);
+                        return Ok(());
+                    }
+                }
+            }
+        }
+        "tcp" => {
+            let index = args.opt_usize("index", 0)?;
+            anyhow::ensure!(index < problem.m(), "--index {index} out of range");
+            println!("worker {index}: connecting to {addr}...");
+            let rounds =
+                lag::coordinator::run_worker(&addr, index, problem.task, &problem.workers[index])?;
+            println!("worker {index}: served {rounds} rounds, shutting down");
+            Ok(())
+        }
+        other => anyhow::bail!("unknown --runtime '{other}' (expected service|tcp)"),
+    }
 }
 
 fn cmd_plot(args: &Args) -> anyhow::Result<()> {

@@ -147,6 +147,127 @@ impl RunTrace {
     }
 }
 
+/// Identity of a run, for assembling a [`RunTrace`] from a
+/// [`TraceRecorder`].
+#[derive(Debug, Clone)]
+pub struct TraceMeta {
+    /// Algorithm identifier (e.g. `lag-wk+svc`).
+    pub algo: String,
+    /// Problem name.
+    pub problem: String,
+    /// Engine identifier (e.g. `native-tcp`).
+    pub engine: String,
+    /// Worker count M.
+    pub m: usize,
+    /// Stepsize the run used.
+    pub alpha: f64,
+}
+
+/// Per-round trace bookkeeping shared by the deployment drivers (TCP
+/// leader, threaded transport, event-loop service): record thinning,
+/// convergence markers, and the stop-at-target decision — one
+/// implementation, so every driver's trace semantics are identical by
+/// construction (the byte-comparison tests depend on that).
+#[derive(Debug, Clone)]
+pub struct TraceRecorder {
+    record_every: usize,
+    last_k: usize,
+    target_err: Option<f64>,
+    stop_at_target: bool,
+    records: Vec<IterRecord>,
+    converged_iter: Option<usize>,
+    uploads_at_target: Option<u64>,
+}
+
+impl TraceRecorder {
+    /// Recorder for iterations `k0+1 ..= last_k` (`k0` > 0 on checkpoint
+    /// resume), seeded with the initial record at `k0`.
+    pub fn new(
+        record_every: usize,
+        last_k: usize,
+        target_err: Option<f64>,
+        stop_at_target: bool,
+        k0: usize,
+        initial_obj: f64,
+    ) -> Self {
+        TraceRecorder {
+            record_every: record_every.max(1),
+            last_k,
+            target_err,
+            stop_at_target,
+            records: vec![IterRecord {
+                k: k0,
+                obj_err: initial_obj,
+                cum_uploads: 0,
+                cum_downloads: 0,
+                cum_grad_evals: 0,
+            }],
+            converged_iter: None,
+            uploads_at_target: None,
+        }
+    }
+
+    /// Account iteration `k`: record it when the thinning schedule (or the
+    /// target crossing, or being the final iteration) says so, latch the
+    /// convergence markers on the first target crossing. Returns `true`
+    /// when the driver should stop now (first crossing with
+    /// `stop_at_target` set).
+    pub fn on_iter(
+        &mut self,
+        k: usize,
+        obj_err: f64,
+        uploads: u64,
+        downloads: u64,
+        grad_evals: u64,
+    ) -> bool {
+        let at_target = self.target_err.map(|t| obj_err <= t).unwrap_or(false);
+        if k % self.record_every == 0 || k == self.last_k || at_target {
+            self.records.push(IterRecord {
+                k,
+                obj_err,
+                cum_uploads: uploads,
+                cum_downloads: downloads,
+                cum_grad_evals: grad_evals,
+            });
+        }
+        if at_target && self.converged_iter.is_none() {
+            self.converged_iter = Some(k);
+            self.uploads_at_target = Some(uploads);
+            if self.stop_at_target {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// First iteration at which the target was reached, if any.
+    pub fn converged_iter(&self) -> Option<usize> {
+        self.converged_iter
+    }
+
+    /// Assemble the final [`RunTrace`].
+    pub fn into_trace(
+        self,
+        meta: TraceMeta,
+        upload_events: Vec<Vec<usize>>,
+        wall_secs: f64,
+    ) -> RunTrace {
+        RunTrace {
+            algo: meta.algo,
+            problem: meta.problem,
+            engine: meta.engine,
+            m: meta.m,
+            alpha: meta.alpha,
+            records: self.records,
+            upload_events,
+            converged_iter: self.converged_iter,
+            uploads_at_target: self.uploads_at_target,
+            wall_secs,
+            thetas: Vec::new(),
+        }
+    }
+}
+
 /// ASCII rendering of Fig. 2's communication-event stick plot.
 pub fn ascii_event_plot(trace: &RunTrace, workers: &[usize], width: usize) -> String {
     let max_iter = trace.records.len().max(1);
@@ -181,8 +302,20 @@ mod tests {
             m: 2,
             alpha: 0.1,
             records: vec![
-                IterRecord { k: 1, obj_err: 1.0, cum_uploads: 2, cum_downloads: 2, cum_grad_evals: 2 },
-                IterRecord { k: 2, obj_err: 0.5, cum_uploads: 4, cum_downloads: 4, cum_grad_evals: 4 },
+                IterRecord {
+                    k: 1,
+                    obj_err: 1.0,
+                    cum_uploads: 2,
+                    cum_downloads: 2,
+                    cum_grad_evals: 2,
+                },
+                IterRecord {
+                    k: 2,
+                    obj_err: 0.5,
+                    cum_uploads: 4,
+                    cum_downloads: 4,
+                    cum_grad_evals: 4,
+                },
             ],
             upload_events: vec![vec![1, 2], vec![1]],
             converged_iter: Some(2),
@@ -227,6 +360,36 @@ mod tests {
         toy_trace().write_events_csv(&p).unwrap();
         let s = std::fs::read_to_string(&p).unwrap();
         assert_eq!(s.lines().count(), 4); // header + 3 events
+    }
+
+    #[test]
+    fn recorder_thins_latches_and_stops() {
+        // record_every=2, 5 iters, target at obj ≤ 0.1, keep running past it
+        let mut r = TraceRecorder::new(2, 5, Some(0.1), false, 0, 1.0);
+        assert!(!r.on_iter(1, 0.9, 1, 1, 1)); // thinned out
+        assert!(!r.on_iter(2, 0.5, 2, 2, 2)); // recorded (k % 2)
+        assert!(!r.on_iter(3, 0.05, 3, 3, 3)); // recorded (at target), latched
+        assert!(!r.on_iter(4, 0.01, 4, 4, 4)); // recorded (still at target)
+        assert!(!r.on_iter(5, 0.2, 5, 5, 5)); // recorded (last iter)
+        assert_eq!(r.converged_iter(), Some(3));
+        let t = r.into_trace(
+            TraceMeta {
+                algo: "gd".into(),
+                problem: "toy".into(),
+                engine: "native".into(),
+                m: 1,
+                alpha: 0.1,
+            },
+            vec![vec![1]],
+            0.0,
+        );
+        let ks: Vec<usize> = t.records.iter().map(|r| r.k).collect();
+        assert_eq!(ks, vec![0, 2, 3, 4, 5]);
+        assert_eq!(t.uploads_at_target, Some(3));
+        // stop_at_target: the first crossing requests a stop
+        let mut r = TraceRecorder::new(1, 10, Some(0.1), true, 0, 1.0);
+        assert!(!r.on_iter(1, 0.5, 1, 1, 1));
+        assert!(r.on_iter(2, 0.1, 2, 2, 2));
     }
 
     #[test]

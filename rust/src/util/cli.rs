@@ -76,6 +76,23 @@ impl Args {
         }
     }
 
+    /// `--key` parsed as a duration in milliseconds (default when absent;
+    /// error when malformed) — the deadline/heartbeat knobs of the socket
+    /// runtimes.
+    pub fn opt_duration_ms(
+        &self,
+        key: &str,
+        default_ms: u64,
+    ) -> anyhow::Result<std::time::Duration> {
+        match self.opt(key) {
+            None => Ok(std::time::Duration::from_millis(default_ms)),
+            Some(s) => s
+                .parse::<u64>()
+                .map(std::time::Duration::from_millis)
+                .map_err(|_| anyhow::anyhow!("--{key}: expected milliseconds, got '{s}'")),
+        }
+    }
+
     /// True iff the bare `--key` flag was given.
     pub fn has_flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
@@ -116,6 +133,18 @@ mod tests {
     fn bad_numbers_error() {
         let a = args("x --n abc");
         assert!(a.opt_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn durations_in_milliseconds() {
+        let a = args("x --round-timeout 2500");
+        let d = a.opt_duration_ms("round-timeout", 100).unwrap();
+        assert_eq!(d, std::time::Duration::from_millis(2500));
+        assert_eq!(
+            a.opt_duration_ms("missing", 100).unwrap(),
+            std::time::Duration::from_millis(100)
+        );
+        assert!(args("x --t soon").opt_duration_ms("t", 1).is_err());
     }
 
     #[test]

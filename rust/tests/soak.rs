@@ -1,0 +1,262 @@
+//! Loopback soak: the event-loop parameter-server service under a large
+//! elastic fleet with injected disconnects and rejoins (DESIGN.md §11).
+//!
+//! What the soak certifies, beyond the in-module service tests:
+//!
+//! 1. **Scale** — a fleet of `LAG_SOAK_WORKERS` (default 64) real sockets
+//!    against one single-threaded readiness loop.
+//! 2. **Determinism under churn** — with boundary-aligned scheduled
+//!    drops/rejoins, two independent executions produce byte-identical
+//!    traces (records to the f64 bit, upload events, final iterate).
+//! 3. **Bounded failure** — a fleet that never shows up is a prompt,
+//!    worker-identifying error, not a hang; the whole soak respects a
+//!    wall-clock budget.
+//! 4. **Unplanned chaos** — worker threads killed at arbitrary (timing-
+//!    dependent) points never wedge the leader; survivors finish the run.
+//!
+//! CI runs this with `cargo test --release --test soak`; locally a smaller
+//! fleet can be chosen via the env var, e.g. `LAG_SOAK_WORKERS=16`.
+
+use lag::coordinator::{
+    run_service, serve_worker, Algorithm, FaultPlan, IterRecord, RunOptions, RunTrace,
+    ServiceOptions, ServiceStats, WorkerConfig, WorkerExit,
+};
+use lag::data::{synthetic, Problem};
+use std::net::TcpListener;
+use std::time::{Duration, Instant};
+
+/// Fleet size: `LAG_SOAK_WORKERS`, default 64 — the acceptance bar.
+/// Clamped to ≥ 8 so the churn fault plan always has shards to drop.
+fn fleet_size() -> usize {
+    std::env::var("LAG_SOAK_WORKERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .map(|n: usize| n.max(8))
+        .unwrap_or(64)
+}
+
+/// Per-test wall-clock budget. Generous for debug builds; release CI
+/// finishes far inside it. A hang — the bug class this PR exists to kill —
+/// blows the budget instead of wedging the job until the runner times out.
+const WALL_BUDGET: Duration = Duration::from_secs(120);
+
+fn sopts() -> ServiceOptions {
+    ServiceOptions {
+        join_timeout: Duration::from_secs(60),
+        round_timeout: Duration::from_secs(60),
+        heartbeat_timeout: Duration::from_secs(60),
+        tick: Duration::from_millis(1),
+        ..Default::default()
+    }
+}
+
+/// Leader plus a rejoining preferred-shard fleet on loopback.
+fn drive(
+    p: &Problem,
+    opts: &RunOptions,
+    so: &ServiceOptions,
+    faults: &FaultPlan,
+) -> (RunTrace, ServiceStats) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::scope(|scope| {
+        let leader = scope.spawn(|| {
+            run_service(listener, p, Algorithm::LagWk, opts, so, faults).unwrap()
+        });
+        for s in 0..p.m() {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                let cfg = WorkerConfig {
+                    preferred: Some(s),
+                    heartbeat_interval: Duration::from_millis(20),
+                    leader_timeout: Duration::from_secs(90),
+                };
+                loop {
+                    match serve_worker(&addr, p, &cfg) {
+                        Ok(o) if o.exit == WorkerExit::Shutdown => break,
+                        Ok(_) => std::thread::sleep(Duration::from_millis(2)), // evicted: rejoin
+                        Err(_) => break, // leader gone
+                    }
+                }
+            });
+        }
+        leader.join().unwrap()
+    })
+}
+
+fn record_sig(records: &[IterRecord]) -> Vec<(usize, u64, u64, u64)> {
+    records.iter().map(|r| (r.k, r.obj_err.to_bits(), r.cum_uploads, r.cum_downloads)).collect()
+}
+
+fn theta_bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The headline soak: a ≥ 64-worker fleet with a dozen scheduled
+/// disconnect/rejoin pairs spread across the run. Two executions must be
+/// byte-identical, every injected fault must be visible in the stats, and
+/// both runs must land inside the wall budget.
+#[test]
+fn churn_soak_is_byte_identical_across_runs() {
+    let m = fleet_size();
+    let p = synthetic::linreg_increasing_l(m, 8, 6, 1007);
+    let opts = RunOptions { max_iters: 28, record_every: 1, ..Default::default() };
+
+    // Spread drops across shards and rounds: every 5th shard drops after
+    // round 4 (rejoining at 9) or after round 13 (rejoining at 18).
+    let mut faults = FaultPlan::default();
+    for (i, s) in (0..m).step_by(5).enumerate() {
+        let (drop_k, admit_k) = if i % 2 == 0 { (4, 9) } else { (13, 18) };
+        faults.drop_after.push((drop_k, s));
+        faults.admit_at.push((admit_k, s));
+    }
+    let injected = faults.drop_after.len() as u64;
+    assert!(injected >= 2, "fault plan too small to exercise churn");
+
+    let t0 = Instant::now();
+    let (ta, sa) = drive(&p, &opts, &sopts(), &faults);
+    let (tb, sb) = drive(&p, &opts, &sopts(), &faults);
+    let elapsed = t0.elapsed();
+    assert!(elapsed < WALL_BUDGET, "soak blew the wall budget: {elapsed:?}");
+
+    // Byte-identical traces: every record (objective to the f64 bit,
+    // communication counters), every upload event, the final iterate.
+    assert_eq!(record_sig(&ta.records), record_sig(&tb.records));
+    assert_eq!(ta.upload_events, tb.upload_events);
+    assert_eq!(theta_bits(&sa.final_theta), theta_bits(&sb.final_theta));
+
+    // Every injected fault really happened, in both runs.
+    assert_eq!(sa.evictions, injected);
+    assert_eq!(sb.evictions, injected);
+    assert_eq!(sa.joins, m as u64 + injected);
+    assert_eq!(sb.joins, m as u64 + injected);
+
+    // Dropped shards were dark during their windows and forced a
+    // first-contact upload at the re-admission round.
+    for (&(drop_k, s), &(admit_k, _)) in faults.drop_after.iter().zip(&faults.admit_at) {
+        assert!(
+            ta.upload_events[s].iter().all(|&k| k <= drop_k || k >= admit_k),
+            "shard {s} uploaded while dropped"
+        );
+        assert!(
+            ta.upload_events[s].contains(&admit_k),
+            "shard {s} missing its forced rejoin upload at k={admit_k}"
+        );
+    }
+
+    // And the run still optimizes: the recorded objective error falls.
+    let first = ta.records.first().unwrap().obj_err;
+    let last = ta.records.last().unwrap().obj_err;
+    assert!(last < first, "objective did not decrease: {first} -> {last}");
+}
+
+/// A fleet that never connects is a deadline error naming the missing
+/// shards — within the configured timeout, not a hang (the seed runtime's
+/// failure mode).
+#[test]
+fn absent_fleet_fails_fast_with_named_shards() {
+    let m = fleet_size().min(8); // error path; no need for the full fleet
+    let p = synthetic::linreg_increasing_l(m, 8, 6, 1008);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let so = ServiceOptions {
+        join_timeout: Duration::from_millis(250),
+        tick: Duration::from_millis(1),
+        ..sopts()
+    };
+    let opts = RunOptions { max_iters: 5, ..Default::default() };
+
+    let t0 = Instant::now();
+    let err = run_service(listener, &p, Algorithm::LagWk, &opts, &so, &FaultPlan::default())
+        .unwrap_err()
+        .to_string();
+    let elapsed = t0.elapsed();
+
+    assert!(elapsed < Duration::from_secs(10), "deadline took {elapsed:?}");
+    assert!(err.contains(&format!("0/{m}")), "error should count members: {err}");
+    assert!(err.contains("unowned shards"), "error should name shards: {err}");
+}
+
+/// Unplanned chaos: a third of the fleet joins, then dies at a
+/// timing-dependent moment — connection dropped cold, mid-membership,
+/// never replying to a broadcast. The byte-compare does not apply (arrival
+/// timing decides the eviction rounds) but the leader must finish every
+/// round with the survivors, inside the budget, and still optimize.
+#[test]
+fn worker_kill_chaos_never_wedges_the_leader() {
+    use lag::coordinator::WireMsg;
+    use std::io::Write;
+
+    let m = fleet_size();
+    let p = synthetic::linreg_increasing_l(m, 8, 6, 1009);
+    let opts = RunOptions { max_iters: 25, record_every: 1, ..Default::default() };
+    let deserters = (0..m).filter(|s| s % 3 == 0 && *s > 0).count() as u64;
+    assert!(deserters >= 2);
+    let so = ServiceOptions {
+        // Don't let round 1 hinge on the deserters: if one dies before
+        // admission, the run must still start (with the survivors).
+        min_workers: m - deserters as usize,
+        round_timeout: Duration::from_secs(3),
+        heartbeat_timeout: Duration::from_secs(3),
+        ..sopts()
+    };
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let t0 = Instant::now();
+    let p = &p;
+    let (trace, stats) = std::thread::scope(|scope| {
+        let leader = scope.spawn(|| {
+            run_service(listener, p, Algorithm::LagWk, &opts, &so, &FaultPlan::default())
+                .unwrap()
+        });
+        for s in 0..m {
+            let addr = addr.clone();
+            if s % 3 == 0 && s > 0 {
+                // Deserter: join the fleet, hold the shard long enough to
+                // be broadcast to, then vanish without a goodbye.
+                scope.spawn(move || {
+                    let mut stream = std::net::TcpStream::connect(&addr).unwrap();
+                    stream.write_all(&WireMsg::Hello { worker: s as u32 }.encode()).unwrap();
+                    std::thread::sleep(Duration::from_millis(600));
+                    // dropping the stream here is the kill
+                });
+            } else {
+                scope.spawn(move || {
+                    let cfg = WorkerConfig {
+                        preferred: Some(s),
+                        heartbeat_interval: Duration::from_millis(20),
+                        leader_timeout: Duration::from_secs(90),
+                    };
+                    loop {
+                        match serve_worker(&addr, p, &cfg) {
+                            Ok(o) if o.exit == WorkerExit::Shutdown => break,
+                            Ok(_) => std::thread::sleep(Duration::from_millis(2)),
+                            Err(_) => break,
+                        }
+                    }
+                });
+            }
+        }
+        leader.join().unwrap()
+    });
+    let elapsed = t0.elapsed();
+    assert!(elapsed < WALL_BUDGET, "chaos soak blew the wall budget: {elapsed:?}");
+
+    // All rounds ran; deserters were detected and evicted (only admitted
+    // ones count — a deserter dying pre-admission is just a dropped
+    // connection); no survivor was ever evicted; the objective still fell.
+    assert_eq!(trace.records.last().unwrap().k, opts.max_iters);
+    assert!(stats.evictions >= 1, "no deserter was ever evicted");
+    assert!(
+        stats.evictions <= deserters,
+        "{} evictions but only {deserters} deserters — a survivor was evicted",
+        stats.evictions
+    );
+    assert!(
+        stats.joins >= m as u64 - deserters,
+        "the surviving fleet never fully assembled"
+    );
+    let first = trace.records.first().unwrap().obj_err;
+    let last = trace.records.last().unwrap().obj_err;
+    assert!(last < first, "objective did not decrease under chaos");
+}
