@@ -97,6 +97,13 @@ pub struct ServiceSpec {
     pub checkpoint: Option<String>,
     /// Checkpoint cadence in rounds (0 ⇒ never).
     pub checkpoint_every: usize,
+    /// Optional write-ahead round-log path (crash recovery, DESIGN.md
+    /// §12): every completed round is fsynced here before the next one
+    /// starts.
+    pub wal: Option<String>,
+    /// Replay an existing log at `wal` before serving (the restart path
+    /// after a leader crash).
+    pub resume_wal: bool,
 }
 
 impl Default for ServiceSpec {
@@ -109,6 +116,8 @@ impl Default for ServiceSpec {
             heartbeat_timeout: std::time::Duration::from_millis(30_000),
             checkpoint: None,
             checkpoint_every: 0,
+            wal: None,
+            resume_wal: false,
         }
     }
 }
@@ -274,6 +283,8 @@ fn parse_service(j: &Json) -> anyhow::Result<ServiceSpec> {
             "heartbeat_timeout_ms" => s.heartbeat_timeout = ms(v, k)?,
             "checkpoint" => s.checkpoint = v.as_str().map(String::from),
             "checkpoint_every" => s.checkpoint_every = v.as_usize().unwrap_or(0),
+            "wal" => s.wal = v.as_str().map(String::from),
+            "resume_wal" => s.resume_wal = matches!(v, Json::Bool(true)),
             other => anyhow::bail!("unknown service key '{other}'"),
         }
     }
@@ -366,7 +377,8 @@ mod tests {
                  "service": {"addr": "0.0.0.0:7070", "min_workers": 3,
                               "join_timeout_ms": 5000, "round_timeout_ms": 8000,
                               "heartbeat_timeout_ms": 2500,
-                              "checkpoint": "state.ckpt", "checkpoint_every": 50}}"#,
+                              "checkpoint": "state.ckpt", "checkpoint_every": 50,
+                              "wal": "rounds.wal", "resume_wal": true}}"#,
         )
         .unwrap();
         let s = c.service.unwrap();
@@ -377,6 +389,8 @@ mod tests {
         assert_eq!(s.heartbeat_timeout, std::time::Duration::from_millis(2500));
         assert_eq!(s.checkpoint.as_deref(), Some("state.ckpt"));
         assert_eq!(s.checkpoint_every, 50);
+        assert_eq!(s.wal.as_deref(), Some("rounds.wal"));
+        assert!(s.resume_wal);
 
         // Absent section → None; empty section → all defaults.
         let c = RunConfig::from_json_str(SAMPLE).unwrap();

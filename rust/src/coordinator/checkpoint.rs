@@ -8,13 +8,27 @@
 //! mirror, and the same vectors are what an `Assign` frame hands a worker
 //! that joins (or rejoins) a shard — the worker's trigger cache and the
 //! leader's evictable aggregate contribution stay one and the same object.
+//!
+//! This module also holds the leader's **write-ahead round log**
+//! ([`RoundLog`], DESIGN.md §12): an append-only file of one fsynced
+//! [`WalRecord`] per completed round — the evictions, uploads, and
+//! admissions the round applied, plus the recorded objective — so a
+//! leader killed at *any* byte boundary restarts by replaying the durable
+//! prefix through the exact round-application order and continues with a
+//! trace bit-identical to an uninterrupted run. A torn or corrupt tail
+//! record (the crash landed mid-append) is detected by its CRC32C and
+//! discarded; that round simply re-executes.
 
 use super::server::ParameterServer;
 use super::trigger::DiffHistory;
-use std::io::{Read, Write};
+use super::wire::crc32c;
+use std::io::{Read, Seek, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"LAGCKPT1";
+const WAL_MAGIC: &[u8; 8] = b"LAGWAL01";
+/// WAL header: magic, starting round k₀, initial objective error bits.
+const WAL_HEADER_LEN: u64 = 8 + 8 + 8;
 
 /// Complete snapshot of a run at iteration `k`.
 ///
@@ -218,6 +232,283 @@ impl<'a> Dec<'a> {
             t => anyhow::bail!("bad option tag {t}"),
         }
     }
+    fn u32s(&mut self) -> anyhow::Result<Vec<u32>> {
+        let n = self.u64()? as usize;
+        anyhow::ensure!(n <= 1 << 20, "shard list too large");
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.u32()?);
+        }
+        Ok(v)
+    }
+}
+
+fn put_u32s(b: &mut Vec<u8>, v: &[u32]) {
+    put_u64(b, v.len() as u64);
+    for x in v {
+        b.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+// -- write-ahead round log ----------------------------------------------
+
+/// Everything round `k` did to the server state, durable before the next
+/// round starts: the eviction/upload/admission sequence in its exact
+/// applied order, plus the recorded objective and the round's counter
+/// increments. Replaying a prefix of these records through
+/// [`WalRecord::replay`] reproduces the leader's post-round state — and
+/// the recorded trace — bit for bit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WalRecord {
+    /// The round this record completes.
+    pub k: u64,
+    /// Objective error recorded after the step (trace ingredient — the
+    /// crashed leader's in-memory recorder is lost, so the WAL is the
+    /// durable trace source).
+    pub obj_err: f64,
+    /// Uploads this round contributed to the cumulative counter.
+    pub d_uploads: u64,
+    /// Downloads (broadcasts) this round contributed.
+    pub d_downloads: u64,
+    /// Gradient evaluations this round contributed.
+    pub d_grad_evals: u64,
+    /// Shards admitted with this round as their effective round.
+    pub admits: Vec<u32>,
+    /// Shards evicted before the step, in applied order.
+    pub evict_pre: Vec<u32>,
+    /// Surviving uploads `(shard, δ∇)`, in ascending shard order.
+    pub uploads: Vec<(u32, Vec<f64>)>,
+    /// Shards evicted after the step, in applied order.
+    pub evict_post: Vec<u32>,
+}
+
+impl WalRecord {
+    fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        put_u64(&mut b, self.k);
+        b.extend_from_slice(&self.obj_err.to_le_bytes());
+        put_u64(&mut b, self.d_uploads);
+        put_u64(&mut b, self.d_downloads);
+        put_u64(&mut b, self.d_grad_evals);
+        put_u32s(&mut b, &self.admits);
+        put_u32s(&mut b, &self.evict_pre);
+        put_u64(&mut b, self.uploads.len() as u64);
+        for (s, dv) in &self.uploads {
+            b.extend_from_slice(&s.to_le_bytes());
+            put_f64s(&mut b, dv);
+        }
+        put_u32s(&mut b, &self.evict_post);
+        b
+    }
+
+    fn decode(buf: &[u8]) -> anyhow::Result<WalRecord> {
+        let mut c = Dec { b: buf, pos: 0 };
+        let k = c.u64()?;
+        let obj_err = f64::from_le_bytes(c.take(8)?.try_into().unwrap());
+        let d_uploads = c.u64()?;
+        let d_downloads = c.u64()?;
+        let d_grad_evals = c.u64()?;
+        let admits = c.u32s()?;
+        let evict_pre = c.u32s()?;
+        let n = c.u64()? as usize;
+        anyhow::ensure!(n <= 1 << 20, "upload list too large");
+        let mut uploads = Vec::with_capacity(n);
+        for _ in 0..n {
+            let s = c.u32()?;
+            uploads.push((s, c.f64s()?));
+        }
+        let evict_post = c.u32s()?;
+        anyhow::ensure!(c.pos == buf.len(), "trailing bytes in WAL record");
+        Ok(WalRecord {
+            k,
+            obj_err,
+            d_uploads,
+            d_downloads,
+            d_grad_evals,
+            admits,
+            evict_pre,
+            uploads,
+            evict_post,
+        })
+    }
+
+    /// Re-apply this round to `(server, contrib)` in exactly the order the
+    /// live leader applied it: pre-step evictions, uploads in ascending
+    /// shard order, the gradient step, post-step evictions. Bitwise
+    /// equality with the live path is what makes a crash-resumed trace
+    /// byte-identical to an uninterrupted one.
+    pub fn replay(
+        &self,
+        server: &mut ParameterServer,
+        contrib: &mut [Option<Vec<f64>>],
+        alpha: f64,
+    ) {
+        let evict = |server: &mut ParameterServer, contrib: &mut [Option<Vec<f64>>], s: usize| {
+            if let Some(g) = contrib[s].take() {
+                server.evict(s, &g);
+            } else {
+                server.hat_theta[s] = None;
+                server.hat_iter[s] = None;
+            }
+        };
+        for &s in &self.evict_pre {
+            evict(server, contrib, s as usize);
+        }
+        for (s, dv) in &self.uploads {
+            let s = *s as usize;
+            server.apply_delta(s, dv);
+            server.stamp_upload(s, self.k as usize);
+            match &mut contrib[s] {
+                Some(c) => crate::linalg::axpy(1.0, dv, c),
+                slot @ None => *slot = Some(dv.clone()),
+            }
+        }
+        server.step(alpha);
+        for &s in &self.evict_post {
+            evict(server, contrib, s as usize);
+        }
+    }
+}
+
+/// Result of scanning a WAL file: the durable prefix of records plus
+/// where (and whether) a torn tail was cut off.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WalLoad {
+    /// The round the log starts after (0 for a from-scratch run).
+    pub k0: u64,
+    /// Objective error at `k0` (seeds the resumed trace's first record).
+    pub initial_obj: f64,
+    /// Every intact record, in append order.
+    pub records: Vec<WalRecord>,
+    /// Bytes of the valid prefix (header + intact records) — the resume
+    /// path truncates the file here before appending again.
+    pub valid_bytes: u64,
+    /// True when trailing bytes after the valid prefix were discarded
+    /// (a crash landed mid-append).
+    pub torn_tail: bool,
+}
+
+/// Append-only, fsynced write-ahead log of completed rounds. Record
+/// framing is `[len: u32 LE][body][crc32c(body): u32 LE]`; a record is
+/// durable only once fully written and fsynced, so the loader can always
+/// distinguish "round completed" from "crash landed mid-append".
+#[derive(Debug)]
+pub struct RoundLog {
+    file: std::fs::File,
+    bytes: u64,
+}
+
+impl RoundLog {
+    /// Start a fresh log at `path` (truncating any previous file), rooted
+    /// at round `k0` with the objective error recorded there.
+    pub fn create<P: AsRef<Path>>(path: P, k0: u64, initial_obj: f64) -> anyhow::Result<RoundLog> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut file = std::fs::File::create(path)?;
+        let mut header = Vec::with_capacity(WAL_HEADER_LEN as usize);
+        header.extend_from_slice(WAL_MAGIC);
+        put_u64(&mut header, k0);
+        header.extend_from_slice(&initial_obj.to_le_bytes());
+        file.write_all(&header)?;
+        file.sync_data()?;
+        Ok(RoundLog { file, bytes: WAL_HEADER_LEN })
+    }
+
+    /// Reopen an existing log for appending, discarding the torn tail the
+    /// scan found (the file is truncated to `load.valid_bytes`).
+    pub fn resume<P: AsRef<Path>>(path: P, load: &WalLoad) -> anyhow::Result<RoundLog> {
+        let mut file = std::fs::OpenOptions::new().read(true).write(true).open(path)?;
+        file.set_len(load.valid_bytes)?;
+        file.sync_data()?;
+        file.seek(std::io::SeekFrom::End(0))?;
+        Ok(RoundLog { file, bytes: load.valid_bytes })
+    }
+
+    /// Append one round record and fsync it. Returns the framed record's
+    /// size in bytes (counted into `ServiceStats::wal_bytes` by the
+    /// service).
+    pub fn append(&mut self, rec: &WalRecord) -> anyhow::Result<u64> {
+        let body = rec.encode();
+        let mut frame = Vec::with_capacity(4 + body.len() + 4);
+        frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&body);
+        frame.extend_from_slice(&crc32c(&body).to_le_bytes());
+        self.file.write_all(&frame)?;
+        self.file.sync_data()?;
+        self.bytes += frame.len() as u64;
+        Ok(frame.len() as u64)
+    }
+
+    /// Total durable bytes written (header included).
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// Cut the log to its first `len` bytes and fsync. Test
+    /// instrumentation for torn-write crashes: the chaos suite appends a
+    /// record, truncates it mid-frame, and kills the leader — the next
+    /// incarnation's [`RoundLog::load`] must treat the stump as a torn
+    /// tail.
+    pub fn truncate(&mut self, len: u64) -> anyhow::Result<()> {
+        self.file.set_len(len)?;
+        self.file.sync_data()?;
+        self.file.seek(std::io::SeekFrom::Start(len))?;
+        self.bytes = self.bytes.min(len);
+        Ok(())
+    }
+
+    /// Scan a log file: validate the header, collect every intact record,
+    /// and stop — without erroring — at the first torn or corrupt tail
+    /// record (its bytes are reported so [`RoundLog::resume`] can cut them
+    /// off). A bad *header* is an error: there is nothing to resume from.
+    pub fn load<P: AsRef<Path>>(path: P) -> anyhow::Result<WalLoad> {
+        let mut buf = Vec::new();
+        std::fs::File::open(path)?.read_to_end(&mut buf)?;
+        anyhow::ensure!(
+            buf.len() >= WAL_HEADER_LEN as usize && &buf[..8] == WAL_MAGIC,
+            "bad WAL header"
+        );
+        let k0 = u64::from_le_bytes(buf[8..16].try_into().unwrap());
+        let initial_obj = f64::from_le_bytes(buf[16..24].try_into().unwrap());
+        let mut records = Vec::new();
+        let mut pos = WAL_HEADER_LEN as usize;
+        let mut torn = false;
+        while pos < buf.len() {
+            let intact = (|| -> Option<(WalRecord, usize)> {
+                let len_end = pos.checked_add(4)?;
+                if len_end > buf.len() {
+                    return None;
+                }
+                let n = u32::from_le_bytes(buf[pos..len_end].try_into().unwrap()) as usize;
+                if n > 1 << 30 {
+                    return None;
+                }
+                let crc_end = len_end.checked_add(n)?.checked_add(4)?;
+                if crc_end > buf.len() {
+                    return None;
+                }
+                let body = &buf[len_end..len_end + n];
+                let got = u32::from_le_bytes(buf[len_end + n..crc_end].try_into().unwrap());
+                if got != crc32c(body) {
+                    return None;
+                }
+                let rec = WalRecord::decode(body).ok()?;
+                Some((rec, crc_end))
+            })();
+            match intact {
+                Some((rec, next)) => {
+                    records.push(rec);
+                    pos = next;
+                }
+                None => {
+                    torn = true;
+                    break;
+                }
+            }
+        }
+        Ok(WalLoad { k0, initial_obj, records, valid_bytes: pos as u64, torn_tail: torn })
+    }
 }
 
 #[cfg(test)]
@@ -292,5 +583,128 @@ mod tests {
         b.step(0.05);
         assert_eq!(a.theta, b.theta);
         assert_eq!(a.history.get(1), b.history.get(1));
+    }
+
+    // -- WAL ----------------------------------------------------------
+
+    fn sample_record(k: u64) -> WalRecord {
+        WalRecord {
+            k,
+            obj_err: 0.5 / (k as f64 + 1.0),
+            d_uploads: 2,
+            d_downloads: 3,
+            d_grad_evals: 2,
+            admits: vec![1],
+            evict_pre: vec![2],
+            uploads: vec![(0, vec![0.25, -0.5]), (1, vec![1.0, 2.0])],
+            evict_post: vec![0],
+        }
+    }
+
+    fn wal_path(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join("lag_wal_test").join(name)
+    }
+
+    #[test]
+    fn wal_roundtrips_records_through_the_file() {
+        let path = wal_path("roundtrip.wal");
+        let mut log = RoundLog::create(&path, 7, 0.125).unwrap();
+        let recs: Vec<_> = (7..10).map(sample_record).collect();
+        let mut framed = 0;
+        for r in &recs {
+            framed += log.append(r).unwrap();
+        }
+        assert_eq!(log.bytes(), WAL_HEADER_LEN + framed);
+        let load = RoundLog::load(&path).unwrap();
+        assert_eq!(load.k0, 7);
+        assert_eq!(load.initial_obj, 0.125);
+        assert_eq!(load.records, recs);
+        assert_eq!(load.valid_bytes, log.bytes());
+        assert!(!load.torn_tail);
+    }
+
+    #[test]
+    fn wal_discards_a_torn_tail_and_resumes_cleanly() {
+        let path = wal_path("torn.wal");
+        let mut log = RoundLog::create(&path, 0, 1.0).unwrap();
+        log.append(&sample_record(0)).unwrap();
+        let durable = log.bytes();
+        log.append(&sample_record(1)).unwrap();
+        drop(log);
+        // Simulate a crash mid-append: chop the second record short.
+        let buf = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &buf[..durable as usize + 9]).unwrap();
+        let load = RoundLog::load(&path).unwrap();
+        assert_eq!(load.records, vec![sample_record(0)]);
+        assert_eq!(load.valid_bytes, durable);
+        assert!(load.torn_tail);
+        // Resume truncates the tail and appending continues the prefix.
+        let mut log = RoundLog::resume(&path, &load).unwrap();
+        assert_eq!(log.bytes(), durable);
+        log.append(&sample_record(1)).unwrap();
+        let load2 = RoundLog::load(&path).unwrap();
+        assert_eq!(load2.records, vec![sample_record(0), sample_record(1)]);
+        assert!(!load2.torn_tail);
+    }
+
+    #[test]
+    fn wal_crc_stops_the_durable_prefix_at_corruption() {
+        let path = wal_path("corrupt.wal");
+        let mut log = RoundLog::create(&path, 0, 1.0).unwrap();
+        log.append(&sample_record(0)).unwrap();
+        let durable = log.bytes();
+        log.append(&sample_record(1)).unwrap();
+        log.append(&sample_record(2)).unwrap();
+        drop(log);
+        // Flip one byte inside the second record's body.
+        let mut buf = std::fs::read(&path).unwrap();
+        let idx = durable as usize + 12;
+        buf[idx] ^= 0xFF;
+        std::fs::write(&path, &buf).unwrap();
+        let load = RoundLog::load(&path).unwrap();
+        assert_eq!(load.records, vec![sample_record(0)], "prefix ends before the corrupt record");
+        assert_eq!(load.valid_bytes, durable);
+        assert!(load.torn_tail);
+    }
+
+    #[test]
+    fn wal_rejects_a_bad_header() {
+        let path = wal_path("badheader.wal");
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, b"NOTAWAL!").unwrap();
+        assert!(RoundLog::load(&path).is_err());
+    }
+
+    #[test]
+    fn wal_replay_matches_the_live_application_order() {
+        // Live path: apply a round by hand in the service's order...
+        let mut live = ParameterServer::new(2, 3, 4, vec![0.0; 2]);
+        let mut live_contrib: Vec<Option<Vec<f64>>> = vec![None, None, Some(vec![0.5, 0.5])];
+        let rec = sample_record(0);
+        live.hat_theta[2] = Some(vec![9.0, 9.0]);
+        let mut replayed = ParameterServer::new(2, 3, 4, vec![0.0; 2]);
+        let mut rep_contrib = live_contrib.clone();
+        replayed.hat_theta[2] = Some(vec![9.0, 9.0]);
+
+        // evict_pre = [2] (held contribution), uploads 0 and 1, step, evict_post = [0]
+        live.evict(2, &live_contrib[2].take().unwrap());
+        for (s, dv) in &rec.uploads {
+            live.apply_delta(*s as usize, dv);
+            live.stamp_upload(*s as usize, rec.k as usize);
+            match &mut live_contrib[*s as usize] {
+                Some(c) => crate::linalg::axpy(1.0, dv, c),
+                slot @ None => *slot = Some(dv.clone()),
+            }
+        }
+        live.step(0.1);
+        live.evict(0, &live_contrib[0].take().unwrap());
+
+        rec.replay(&mut replayed, &mut rep_contrib, 0.1);
+        assert_eq!(live.theta, replayed.theta);
+        assert_eq!(live.agg_grad, replayed.agg_grad);
+        assert_eq!(live.hat_theta, replayed.hat_theta);
+        assert_eq!(live.hat_iter, replayed.hat_iter);
+        assert_eq!(live_contrib, rep_contrib);
+        assert_eq!(live.history.get(1), replayed.history.get(1));
     }
 }

@@ -1,0 +1,379 @@
+//! Deterministic fault injection for the socket transports (DESIGN.md
+//! §12): a seeded schedule of short reads/writes, connection resets,
+//! payload corruption, and frame delays, applied at the byte level so the
+//! partial-read/partial-write state machines and the CRC trailer are
+//! exercised exactly where real networks fail.
+//!
+//! Two integration shapes:
+//!
+//! * the event-loop service ([`super::service`]) holds a [`FaultInjector`]
+//!   and consults it inside its nonblocking `read_conn`/`write_conn`
+//!   paths (delay = skip the readiness event; the bytes are still there
+//!   next tick);
+//! * the blocking runtime ([`super::tcp`]) wraps each socket in a
+//!   [`FaultStream`], which implements `Read`/`Write` and injects on
+//!   every call (delay = a short sleep).
+//!
+//! Determinism discipline: the *schedule* is seeded (two runs with the
+//! same seed draw the same fault sequence per injector), but fault
+//! arrival interleaves with real socket timing, so injected faults are
+//! NOT part of the byte-compared trace contract. The contract is
+//! stronger: short reads, short writes, and delays are timing-only and
+//! must leave the trace untouched (the chaos test byte-compares a faulted
+//! run against a clean one), while corruption and resets surface as
+//! dropped connections whose evictions the stats count — never as wrong
+//! aggregate values.
+
+use crate::util::Rng;
+use std::io::{Read, Write};
+use std::time::Duration;
+
+/// Per-operation probabilities of each injected fault class. `Default` is
+/// all-zero (injection disabled — the transports take a fast path that
+/// never draws from the schedule).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultConfig {
+    /// Seed of the injector's splitmix64 schedule.
+    pub seed: u64,
+    /// P(cap a read to a few bytes) — stresses `FrameDecoder` resumption.
+    pub short_read: f64,
+    /// P(cap a write to a few bytes) — stresses `WriteQueue` draining.
+    pub short_write: f64,
+    /// P(flip one payload byte) — must surface as a CRC mismatch, never a
+    /// decoded message.
+    pub corrupt: f64,
+    /// P(fail the operation as a connection reset).
+    pub reset: f64,
+    /// P(defer the operation — timing-only, trace-neutral).
+    pub delay: f64,
+}
+
+impl FaultConfig {
+    /// True when any fault class has positive probability.
+    pub fn is_enabled(&self) -> bool {
+        self.short_read > 0.0
+            || self.short_write > 0.0
+            || self.corrupt > 0.0
+            || self.reset > 0.0
+            || self.delay > 0.0
+    }
+
+    /// Timing-only preset: aggressive short reads/writes and delays, no
+    /// corruption or resets. Safe to enable under a byte-compared run —
+    /// these faults reorder *when* bytes move, never *what* they say.
+    pub fn timing_only(seed: u64) -> Self {
+        FaultConfig {
+            seed,
+            short_read: 0.25,
+            short_write: 0.25,
+            corrupt: 0.0,
+            reset: 0.0,
+            delay: 0.1,
+        }
+    }
+}
+
+/// One decision drawn from the schedule for a single I/O operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoFault {
+    /// Let the operation through untouched.
+    None,
+    /// Cap the operation to this many bytes (≥ 1).
+    Short(usize),
+    /// Flip the byte at this offset (modulo the buffer length).
+    Corrupt(usize),
+    /// Fail the operation as if the peer reset the connection.
+    Reset,
+    /// Skip this I/O opportunity; the bytes move on a later call.
+    Delay,
+}
+
+/// Counters of the faults actually injected (distinct from the fault
+/// *consequences* — e.g. `ServiceStats::corrupt_frames_dropped` counts
+/// CRC rejections observed, which corruption on either peer's path can
+/// cause).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Reads capped short.
+    pub short_reads: u64,
+    /// Writes capped short.
+    pub short_writes: u64,
+    /// Payload bytes flipped.
+    pub corruptions: u64,
+    /// Operations failed with a connection reset.
+    pub resets: u64,
+    /// Operations deferred.
+    pub delays: u64,
+}
+
+/// Seeded fault schedule: every read/write opportunity draws one
+/// [`IoFault`] from the splitmix64 stream. Deterministic given the seed
+/// (the sequence of draws, not their wall-clock interleaving).
+#[derive(Debug)]
+pub struct FaultInjector {
+    cfg: FaultConfig,
+    rng: Rng,
+    /// What has been injected so far.
+    pub stats: FaultStats,
+}
+
+impl FaultInjector {
+    /// Injector over `cfg`'s schedule.
+    pub fn new(cfg: &FaultConfig) -> Self {
+        FaultInjector { cfg: cfg.clone(), rng: Rng::new(cfg.seed), stats: FaultStats::default() }
+    }
+
+    /// True when the schedule can ever inject (all-zero configs skip the
+    /// draw entirely, keeping the fault-free hot path allocation- and
+    /// rng-free).
+    pub fn enabled(&self) -> bool {
+        self.cfg.is_enabled()
+    }
+
+    /// Draw the fault for the next read operation.
+    pub fn read_fault(&mut self) -> IoFault {
+        self.draw(true)
+    }
+
+    /// Draw the fault for the next write operation.
+    pub fn write_fault(&mut self) -> IoFault {
+        self.draw(false)
+    }
+
+    fn draw(&mut self, is_read: bool) -> IoFault {
+        if !self.enabled() {
+            return IoFault::None;
+        }
+        let short_p = if is_read { self.cfg.short_read } else { self.cfg.short_write };
+        let u = self.rng.uniform();
+        let mut edge = self.cfg.reset;
+        if u < edge {
+            self.stats.resets += 1;
+            return IoFault::Reset;
+        }
+        edge += self.cfg.corrupt;
+        if u < edge {
+            let off = self.rng.below(1 << 16);
+            self.stats.corruptions += 1;
+            return IoFault::Corrupt(off);
+        }
+        edge += self.cfg.delay;
+        if u < edge {
+            self.stats.delays += 1;
+            return IoFault::Delay;
+        }
+        edge += short_p;
+        if u < edge {
+            // 1..=8 bytes: small enough to split any frame's header, body,
+            // and trailer across many operations
+            let cap = 1 + self.rng.below(8);
+            if is_read {
+                self.stats.short_reads += 1;
+            } else {
+                self.stats.short_writes += 1;
+            }
+            return IoFault::Short(cap);
+        }
+        IoFault::None
+    }
+}
+
+/// Blocking-stream adapter: wraps any `Read`/`Write` and applies the
+/// injector's schedule on every call. Used by the fixed-fleet TCP runtime
+/// ([`super::tcp`]); the event-loop service injects inline instead (it
+/// needs per-readiness-event control).
+#[derive(Debug)]
+pub struct FaultStream<S> {
+    inner: S,
+    inj: FaultInjector,
+}
+
+impl<S> FaultStream<S> {
+    /// Wrap `inner` with its own injector. Give each wrapped socket a
+    /// distinct `cfg.seed` so two streams draw independent schedules.
+    pub fn new(inner: S, cfg: &FaultConfig) -> Self {
+        FaultStream { inner, inj: FaultInjector::new(cfg) }
+    }
+
+    /// The wrapped stream (e.g. for `set_read_timeout` on a `TcpStream`).
+    pub fn get_ref(&self) -> &S {
+        &self.inner
+    }
+
+    /// Faults injected so far on this stream.
+    pub fn fault_stats(&self) -> FaultStats {
+        self.inj.stats
+    }
+}
+
+fn reset_err() -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::ConnectionReset, "injected connection reset")
+}
+
+impl<S: Read> Read for FaultStream<S> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if buf.is_empty() {
+            return self.inner.read(buf);
+        }
+        match self.inj.read_fault() {
+            IoFault::None => self.inner.read(buf),
+            IoFault::Short(cap) => self.inner.read(&mut buf[..cap.min(buf.len())]),
+            IoFault::Corrupt(off) => {
+                let n = self.inner.read(buf)?;
+                if n > 0 {
+                    buf[off % n] ^= 0xFF;
+                }
+                Ok(n)
+            }
+            IoFault::Reset => Err(reset_err()),
+            IoFault::Delay => {
+                // blocking stream: a delay is just a short stall
+                std::thread::sleep(Duration::from_millis(1));
+                self.inner.read(buf)
+            }
+        }
+    }
+}
+
+impl<S: Write> Write for FaultStream<S> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if buf.is_empty() {
+            return self.inner.write(buf);
+        }
+        match self.inj.write_fault() {
+            IoFault::None => self.inner.write(buf),
+            IoFault::Short(cap) => self.inner.write(&buf[..cap.min(buf.len())]),
+            IoFault::Corrupt(off) => {
+                // corrupt a copy: the flipped byte goes on the wire, the
+                // caller's buffer (and any retry) stays intact
+                let mut copy = buf.to_vec();
+                let at = off % copy.len();
+                copy[at] ^= 0xFF;
+                self.inner.write(&copy)
+            }
+            IoFault::Reset => Err(reset_err()),
+            IoFault::Delay => {
+                std::thread::sleep(Duration::from_millis(1));
+                self.inner.write(buf)
+            }
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::wire::{FrameDecoder, WireMsg};
+
+    #[test]
+    fn disabled_config_injects_nothing() {
+        let mut inj = FaultInjector::new(&FaultConfig::default());
+        for _ in 0..1000 {
+            assert_eq!(inj.read_fault(), IoFault::None);
+            assert_eq!(inj.write_fault(), IoFault::None);
+        }
+        assert_eq!(inj.stats, FaultStats::default());
+    }
+
+    #[test]
+    fn schedule_is_deterministic_per_seed() {
+        let cfg = FaultConfig {
+            seed: 42,
+            short_read: 0.3,
+            short_write: 0.2,
+            corrupt: 0.1,
+            reset: 0.05,
+            delay: 0.1,
+        };
+        let mut a = FaultInjector::new(&cfg);
+        let mut b = FaultInjector::new(&cfg);
+        for _ in 0..500 {
+            assert_eq!(a.read_fault(), b.read_fault());
+            assert_eq!(a.write_fault(), b.write_fault());
+        }
+        assert_eq!(a.stats, b.stats);
+        // everything configured actually fired
+        assert!(a.stats.short_reads > 0);
+        assert!(a.stats.short_writes > 0);
+        assert!(a.stats.corruptions > 0);
+        assert!(a.stats.resets > 0);
+        assert!(a.stats.delays > 0);
+    }
+
+    /// Timing-only faults through a `FaultStream` must deliver the exact
+    /// byte sequence: frames reassemble identically however the reads and
+    /// writes are chopped and stalled.
+    #[test]
+    fn timing_only_faults_preserve_the_byte_stream() {
+        let msgs = vec![
+            WireMsg::Hello { worker: 1 },
+            WireMsg::Round { k: 3, rhs: 0.25, theta: vec![1.5; 40] },
+            WireMsg::Delta { k: 3, worker: 1, delta: Some(vec![-0.5; 40]) },
+            WireMsg::Shutdown,
+        ];
+        let mut clean = Vec::new();
+        for m in &msgs {
+            clean.extend_from_slice(&m.encode());
+        }
+        // write through an injector into a buffer
+        let mut wire: Vec<u8> = Vec::new();
+        {
+            let mut fs = FaultStream::new(&mut wire, &FaultConfig::timing_only(7));
+            let mut off = 0;
+            while off < clean.len() {
+                off += fs.write(&clean[off..]).unwrap();
+            }
+        }
+        assert_eq!(wire, clean, "timing faults altered the bytes written");
+        // read back through another injector
+        let mut fs = FaultStream::new(&wire[..], &FaultConfig::timing_only(8));
+        let mut dec = FrameDecoder::new();
+        let mut out = Vec::new();
+        let mut buf = [0u8; 64];
+        loop {
+            let n = fs.read(&mut buf).unwrap();
+            if n == 0 {
+                break;
+            }
+            dec.feed(&buf[..n], &mut out).unwrap();
+        }
+        assert_eq!(out, msgs);
+        assert!(!dec.mid_frame());
+        assert!(fs.fault_stats().short_reads + fs.fault_stats().delays > 0);
+    }
+
+    /// A corrupting read path must surface as a CRC mismatch from the
+    /// decoder — the corrupt frame never decodes.
+    #[test]
+    fn corruption_is_caught_by_the_crc() {
+        let frame = WireMsg::Round { k: 1, rhs: 0.0, theta: vec![2.0; 16] }.encode();
+        let cfg = FaultConfig { seed: 5, corrupt: 1.0, ..Default::default() };
+        let mut fs = FaultStream::new(&frame[..], &cfg);
+        let mut dec = FrameDecoder::new();
+        let mut out = Vec::new();
+        let mut buf = [0u8; 4096];
+        let mut poisoned = false;
+        loop {
+            let n = fs.read(&mut buf).unwrap();
+            if n == 0 {
+                break;
+            }
+            if dec.feed(&buf[..n], &mut out).is_err() {
+                poisoned = true;
+                break;
+            }
+        }
+        // the one guarantee: corruption never yields a decoded message.
+        // Which failure shape it takes depends on where the flip landed —
+        // a poisoned decoder (body/trailer flip → CRC mismatch; length
+        // flip → bounds error) or a decoder left waiting for bytes that
+        // will never come (length flip that grew the frame).
+        assert!(out.is_empty(), "corrupted frame decoded to a message");
+        assert!(poisoned || dec.mid_frame());
+        assert!(fs.fault_stats().corruptions >= 1);
+    }
+}

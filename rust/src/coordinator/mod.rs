@@ -13,13 +13,19 @@
 //! * [`transport`] — a real message-passing deployment: worker threads,
 //!   channels, a serial-uplink latency model.
 //! * [`service`] — the nonblocking event-loop parameter-server service:
-//!   `poll(2)` readiness loop, heartbeat/deadline failure detection, and
+//!   `poll(2)` readiness loop, heartbeat/deadline failure detection,
 //!   elastic membership (late joins, mid-run drops with aggregate
-//!   eviction, checkpoint-handoff rejoins) over the [`wire`] codec.
+//!   eviction, checkpoint-handoff rejoins) over the [`wire`] codec, and a
+//!   fsynced write-ahead round log ([`checkpoint::RoundLog`]) that makes
+//!   the leader crash-recoverable with a bit-identical trace.
+//! * [`faults`] — deterministic byte-level fault injection (short
+//!   reads/writes, corruption, resets, delays) for both socket runtimes
+//!   (DESIGN.md §12).
 //! * [`lyapunov`] — the Lyapunov function (16) used by the convergence
 //!   property tests.
 
 pub mod checkpoint;
+pub mod faults;
 pub mod lyapunov;
 pub mod pool;
 pub mod proximal;
@@ -33,7 +39,8 @@ pub mod transport;
 pub mod trigger;
 pub mod wire;
 
-pub use checkpoint::TrainState;
+pub use checkpoint::{RoundLog, TrainState, WalLoad, WalRecord};
+pub use faults::{FaultConfig, FaultInjector, FaultStats, FaultStream, IoFault};
 pub use pool::{with_pool, PoolHandle};
 pub use proximal::{prox_run, ProxOptions};
 pub use quantize::QuantizedVec;
@@ -41,13 +48,13 @@ pub use robust::{robust_run, Attack, RobustOptions};
 pub use run::{run, run_with_workspace, RunOptions, RunWorkspace};
 pub use server::ParameterServer;
 pub use service::{
-    run_service, serve_worker, FaultPlan, ServiceOptions, ServiceStats, WorkerConfig,
-    WorkerExit, WorkerOutcome,
+    run_service, serve_worker, CrashPoint, FaultPlan, ServiceOptions, ServiceStats,
+    WorkerConfig, WorkerExit, WorkerOutcome,
 };
 pub use tcp::{run_leader, run_leader_on, run_worker, TcpOptions};
 pub use transport::{parallel_run, TransportOptions};
 pub use trigger::{DiffHistory, LasgRule, TriggerConfig};
-pub use wire::{FrameDecoder, WireMsg, WriteQueue};
+pub use wire::{CrcMismatch, FrameDecoder, WireMsg, WriteQueue};
 
 pub use crate::grad::BatchSpec;
 pub use crate::metrics::{IterRecord, RunTrace};

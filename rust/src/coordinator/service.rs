@@ -24,16 +24,26 @@
 //!   shard order, and the trigger RHS always divides by the *total* shard
 //!   count M, so a run under a scheduled [`FaultPlan`] is bit-reproducible
 //!   (the soak test byte-compares traces across repeated runs).
+//! * **Leader durability** (DESIGN.md §12) — with a write-ahead round log
+//!   ([`RoundLog`]) every completed round is fsynced before the next one
+//!   starts; `resume_wal` replays the durable prefix through the server
+//!   itself, so a killed leader restarts into a bit-identical
+//!   continuation (the chaos suite kills it three times and checks).
+//!   Frames carry CRC32C trailers; a corrupt frame is counted and dropped
+//!   with its connection, and [`serve_worker`] rides through leader
+//!   restarts with capped, jittered reconnect backoff.
 
-use super::checkpoint::TrainState;
+use super::checkpoint::{RoundLog, TrainState, WalRecord};
+use super::faults::{FaultConfig, FaultInjector, FaultStream, IoFault};
 use super::server::ParameterServer;
 use super::trigger::TriggerConfig;
-use super::wire::{FrameDecoder, WireMsg, WriteQueue, ANY_SHARD};
+use super::wire::{CrcMismatch, FrameDecoder, WireMsg, WriteQueue, ANY_SHARD};
 use super::{Algorithm, RunOptions};
 use crate::data::Problem;
 use crate::grad::worker_grad;
 use crate::linalg::{axpy, dist2, sub};
 use crate::metrics::{RunTrace, TraceMeta, TraceRecorder};
+use crate::util::{Backoff, BackoffPolicy};
 use std::collections::VecDeque;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -41,9 +51,12 @@ use std::time::{Duration, Instant};
 
 /// Minimal readiness facade over `poll(2)`. Linux gets the real system
 /// call through a two-line FFI declaration (no crate dependency); other
-/// platforms get a bounded-sleep fallback that reports every descriptor
-/// ready — the nonblocking reads then simply return `WouldBlock`, trading
-/// a few spurious wakeups for portability.
+/// platforms get a sleep fallback that reports every descriptor ready —
+/// the nonblocking reads then simply return `WouldBlock`, trading a few
+/// spurious wakeups for portability. The fallback sleeps the *caller's*
+/// timeout in full: [`Service::pump`] clamps it to the nearest
+/// heartbeat/round/join deadline, so no fixed bound is needed to keep
+/// deadlines honest.
 mod poller {
     use std::time::Duration;
 
@@ -124,12 +137,33 @@ mod poller {
 
     #[cfg(not(target_os = "linux"))]
     pub fn wait(interests: &[Interest], timeout: Duration) -> std::io::Result<Vec<Readiness>> {
-        std::thread::sleep(timeout.min(Duration::from_millis(5)));
+        // `timeout` is already clamped to the poll tick *and* the nearest
+        // wall-clock deadline by the caller, so sleep it in full instead
+        // of busy-polling on a fixed bound
+        std::thread::sleep(timeout);
         Ok(interests
             .iter()
             .map(|i| Readiness { readable: true, writable: i.want_write })
             .collect())
     }
+}
+
+/// Where a scheduled leader crash lands relative to a round's durability
+/// point (its fsynced [`WalRecord`]). Test instrumentation for the chaos
+/// suite: each variant kills the leader — an `Err` return with no
+/// `Shutdown` broadcast, indistinguishable to the fleet from a `kill -9` —
+/// at one of the three byte positions a real crash can occupy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CrashPoint {
+    /// Die after round `k` completed in memory but before its WAL record
+    /// was appended: the round is not durable and re-executes on resume.
+    BeforeWal(usize),
+    /// Die mid-append: round `k`'s record is cut to its first `n` framed
+    /// bytes — the torn tail [`RoundLog::load`] must detect and discard.
+    TornWal(usize, usize),
+    /// Die after round `k`'s record was fsynced: resume replays through
+    /// `k` and continues at `k+1`.
+    AfterWal(usize),
 }
 
 /// Knobs of the event-loop leader. All deadlines are wall-clock; none of
@@ -158,6 +192,15 @@ pub struct ServiceOptions {
     pub checkpoint: Option<std::path::PathBuf>,
     /// Checkpoint cadence in rounds (`0` ⇒ never).
     pub checkpoint_every: usize,
+    /// Write-ahead round log path: every completed round is fsynced here
+    /// before the next one starts (DESIGN.md §12). `None` ⇒ no WAL.
+    pub wal: Option<std::path::PathBuf>,
+    /// Replay an existing log at [`ServiceOptions::wal`] before serving:
+    /// the crash-recovery path. The log's root round must match the run's
+    /// starting round (`0`, or the resume checkpoint's `k`).
+    pub resume_wal: bool,
+    /// Scheduled crash for the chaos tests (`None` in production).
+    pub crash: Option<CrashPoint>,
 }
 
 impl Default for ServiceOptions {
@@ -171,6 +214,9 @@ impl Default for ServiceOptions {
             resume: None,
             checkpoint: None,
             checkpoint_every: 0,
+            wal: None,
+            resume_wal: false,
+            crash: None,
         }
     }
 }
@@ -192,12 +238,17 @@ pub struct FaultPlan {
     /// rejoin round is then whatever the race produces — fine for chaos
     /// tests, not for byte-compared runs).
     pub admit_at: Vec<(usize, usize)>,
+    /// Seeded byte-level fault injection on the leader's socket I/O
+    /// (short reads/writes, corruption, resets, delays — see
+    /// [`FaultConfig`]). Timing-only configs are trace-neutral; corruption
+    /// and resets surface as dropped connections, never as wrong values.
+    pub io: FaultConfig,
 }
 
 impl FaultPlan {
     /// True when the plan injects nothing.
     pub fn is_empty(&self) -> bool {
-        self.drop_after.is_empty() && self.admit_at.is_empty()
+        self.drop_after.is_empty() && self.admit_at.is_empty() && !self.io.is_enabled()
     }
 }
 
@@ -213,8 +264,35 @@ pub struct ServiceStats {
     pub joins: u64,
     /// Members evicted (deaths, deadline misses, scheduled drops).
     pub evictions: u64,
+    /// Re-admissions served: a shard that was owned before came back on a
+    /// fresh connection (the leader-side view of worker reconnects).
+    pub retries: u64,
+    /// Frames whose CRC32C trailer failed verification — dropped with
+    /// their connection before any payload reached the aggregate.
+    pub corrupt_frames_dropped: u64,
+    /// Durable write-ahead-log bytes at exit (`0` without a WAL).
+    pub wal_bytes: u64,
     /// Final iterate θ (bit-compared by the determinism tests).
     pub final_theta: Vec<f64>,
+}
+
+impl ServiceStats {
+    /// The robustness counters as a deterministic JSON object (sorted
+    /// keys) — the shape `lag leader --stats-out` writes next to the run
+    /// trace so chaos/soak jobs can assert on it.
+    pub fn robustness_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let n = |v: u64| Json::Num(v as f64);
+        Json::obj(vec![
+            ("bytes_down", n(self.bytes_down)),
+            ("bytes_up", n(self.bytes_up)),
+            ("corrupt_frames_dropped", n(self.corrupt_frames_dropped)),
+            ("evictions", n(self.evictions)),
+            ("joins", n(self.joins)),
+            ("retries", n(self.retries)),
+            ("wal_bytes", n(self.wal_bytes)),
+        ])
+    }
 }
 
 /// One live connection: socket plus its partial-read/partial-write state
@@ -234,6 +312,9 @@ struct Conn {
     replied: bool,
     /// Set when the connection must be discarded (EOF, protocol error).
     dead: bool,
+    /// Hang up once the write queue drains (set after staging a `Reject`
+    /// so the refusal actually reaches the peer before the close).
+    closing: bool,
 }
 
 impl Conn {
@@ -248,6 +329,7 @@ impl Conn {
             last_seen: Instant::now(),
             replied: false,
             dead: false,
+            closing: false,
         }
     }
 }
@@ -264,14 +346,22 @@ struct Service {
     /// quantity [`ParameterServer::evict`] subtracts on loss and `Assign`
     /// hands back on rejoin.
     contrib: Vec<Option<Vec<f64>>>,
+    /// Shards that have been owned at least once (a later admission of the
+    /// same shard is a reconnect, counted in `ServiceStats::retries`).
+    ever_owned: Vec<bool>,
+    /// Byte-level fault injection on every socket read/write (`None` ⇒
+    /// the fault-free hot path draws nothing).
+    inj: Option<FaultInjector>,
     stats: ServiceStats,
     tick: Duration,
 }
 
 impl Service {
-    /// One readiness cycle: poll (≤ `tick`), accept, drain readable
+    /// One readiness cycle: poll (≤ `tick`, clamped further to `max_wait`
+    /// — the distance to the caller's nearest deadline, which keeps the
+    /// non-Linux sleep fallback deadline-accurate), accept, drain readable
     /// sockets through the frame decoders, flush writable ones.
-    fn pump(&mut self) -> anyhow::Result<()> {
+    fn pump(&mut self, max_wait: Duration) -> anyhow::Result<()> {
         let mut interests =
             vec![poller::Interest { fd: poller::fd_of(&self.listener), want_write: false }];
         let mut idxs = Vec::new();
@@ -284,7 +374,7 @@ impl Service {
                 idxs.push(i);
             }
         }
-        let ready = poller::wait(&interests, self.tick)?;
+        let ready = poller::wait(&interests, self.tick.min(max_wait))?;
         if ready[0].readable {
             self.accept_all()?;
         }
@@ -325,6 +415,10 @@ impl Service {
     }
 
     /// Drain one socket without blocking; frame-decode into its inbox.
+    /// Every read consults the fault injector: delays skip the readiness
+    /// event (the bytes arrive next tick), short reads cap the buffer,
+    /// corruption flips a received byte (the CRC trailer catches it
+    /// downstream), resets kill the connection.
     fn read_conn(&mut self, i: usize) {
         let conn = match &mut self.conns[i] {
             Some(c) if !c.dead => c,
@@ -333,16 +427,40 @@ impl Service {
         let mut buf = [0u8; 16384];
         let mut msgs = Vec::new();
         loop {
-            match conn.stream.read(&mut buf) {
+            let fault = match &mut self.inj {
+                Some(inj) => inj.read_fault(),
+                None => IoFault::None,
+            };
+            let cap = match fault {
+                IoFault::Delay => break, // bytes stay queued for next tick
+                IoFault::Reset => {
+                    conn.dead = true;
+                    break;
+                }
+                IoFault::Short(c) => c.min(buf.len()),
+                _ => buf.len(),
+            };
+            match conn.stream.read(&mut buf[..cap]) {
                 Ok(0) => {
                     conn.dead = true;
                     break;
                 }
                 Ok(n) => {
+                    if let IoFault::Corrupt(off) = fault {
+                        buf[off % n] ^= 0xFF;
+                    }
                     conn.last_seen = Instant::now();
                     self.stats.bytes_up += n as u64;
-                    if conn.dec.feed(&buf[..n], &mut msgs).is_err() {
-                        conn.dead = true; // frame sync lost: hostile/corrupt
+                    if let Err(e) = conn.dec.feed(&buf[..n], &mut msgs) {
+                        // a CRC-rejected frame is dropped with its whole
+                        // connection: after corruption the length prefix
+                        // itself cannot be trusted, so resynchronizing
+                        // means reconnecting — the payload never reaches
+                        // the aggregate either way
+                        if e.downcast_ref::<CrcMismatch>().is_some() {
+                            self.stats.corrupt_frames_dropped += 1;
+                        }
+                        conn.dead = true;
                         break;
                     }
                 }
@@ -357,26 +475,54 @@ impl Service {
         conn.inbox.extend(msgs);
     }
 
-    /// Flush as much of one write queue as the socket accepts.
+    /// Flush as much of one write queue as the socket accepts, through the
+    /// same fault schedule as the read path (corruption flips a byte in a
+    /// copy — the queue keeps the true bytes, the peer's CRC check reports
+    /// the damage).
     fn write_conn(&mut self, i: usize) {
         let conn = match &mut self.conns[i] {
             Some(c) if !c.dead => c,
             _ => return,
         };
         while !conn.out.is_empty() {
-            match conn.stream.write(conn.out.pending()) {
+            let fault = match &mut self.inj {
+                Some(inj) => inj.write_fault(),
+                None => IoFault::None,
+            };
+            let pending = conn.out.pending();
+            let cap = match fault {
+                IoFault::Delay => break, // flush on a later readiness event
+                IoFault::Reset => {
+                    conn.dead = true;
+                    return;
+                }
+                IoFault::Short(c) => c.min(pending.len()),
+                _ => pending.len(),
+            };
+            let wrote = if let IoFault::Corrupt(off) = fault {
+                let mut copy = pending[..cap].to_vec();
+                let at = off % copy.len();
+                copy[at] ^= 0xFF;
+                conn.stream.write(&copy)
+            } else {
+                conn.stream.write(&pending[..cap])
+            };
+            match wrote {
                 Ok(0) => {
                     conn.dead = true;
                     return;
                 }
                 Ok(n) => conn.out.advance(n),
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
                 Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
                 Err(_) => {
                     conn.dead = true;
                     return;
                 }
             }
+        }
+        if conn.closing && conn.out.is_empty() {
+            conn.dead = true; // the Reject has flushed: hang up
         }
     }
 
@@ -430,10 +576,16 @@ impl Service {
     /// Membership window: admit pending `Hello`s whose shard is free and
     /// not held for a later scheduled re-admission. `effective_k` is the
     /// round the new member first participates in (stamped on `Assign`).
-    fn admit_pending(&mut self, effective_k: usize) {
+    /// Granted shards are appended to `admits` (the WAL's membership
+    /// delta). A `Hello` claiming a shard another live member owns — or
+    /// one out of range — is answered with a [`WireMsg::Reject`] naming
+    /// the offending claim, and the connection hangs up once the refusal
+    /// flushes; a shard *held* for a scheduled rejoin round merely stays
+    /// pending.
+    fn admit_pending(&mut self, effective_k: usize, admits: &mut Vec<u32>) {
         for i in 0..self.conns.len() {
             let proposed = match &self.conns[i] {
-                Some(c) if !c.dead && c.shard.is_none() => match c.hello {
+                Some(c) if !c.dead && !c.closing && c.shard.is_none() => match c.hello {
                     Some(p) => p,
                     None => continue,
                 },
@@ -445,17 +597,32 @@ impl Service {
             let free = |s: usize, svc: &Service| {
                 svc.owner[s].is_none() && !matches!(svc.admit_round[s], Some(r) if r > effective_k)
             };
-            let shard = if (proposed as usize) < m && free(proposed as usize, self) {
-                Some(proposed as usize)
-            } else if proposed == ANY_SHARD {
+            let shard = if proposed == ANY_SHARD {
                 (0..m).find(|&s| self.owner[s].is_none() && self.admit_round[s].is_none())
+            } else if (proposed as usize) < m && free(proposed as usize, self) {
+                Some(proposed as usize)
+            } else if (proposed as usize) < m && self.owner[proposed as usize].is_none() {
+                None // held for a scheduled rejoin round: stay pending
             } else {
-                None // held or taken: stay pending
+                // duplicate claim on a live member's shard, or out of
+                // range: refuse by name and hang up after the refusal
+                // reaches the peer
+                self.send(i, &WireMsg::Reject { worker: proposed });
+                if let Some(c) = &mut self.conns[i] {
+                    c.hello = None;
+                    c.closing = true;
+                }
+                continue;
             };
             let Some(s) = shard else { continue };
             self.owner[s] = Some(i);
             self.admit_round[s] = None;
             self.stats.joins += 1;
+            if self.ever_owned[s] {
+                self.stats.retries += 1; // a reconnect, not a first join
+            }
+            self.ever_owned[s] = true;
+            admits.push(s as u32);
             let assign = WireMsg::Assign {
                 worker: s as u32,
                 k: effective_k as u64,
@@ -539,6 +706,8 @@ pub fn run_service(
         owner: vec![None; m],
         admit_round: vec![None; m],
         contrib,
+        ever_owned: vec![false; m],
+        inj: if faults.io.is_enabled() { Some(FaultInjector::new(&faults.io)) } else { None },
         stats: ServiceStats::default(),
         tick: sopts.tick,
     };
@@ -546,35 +715,126 @@ pub fn run_service(
         anyhow::ensure!(s < m, "fault-plan shard {s} out of range");
     }
 
+    // write-ahead round log (DESIGN.md §12): every completed round is
+    // fsynced before the next starts, so a leader killed at any byte
+    // position resumes into a bit-identical continuation of itself
     let mut events: Vec<Vec<usize>> = vec![Vec::new(); m];
-    let mut recorder = TraceRecorder::new(
-        opts.record_every,
-        opts.max_iters,
-        opts.target_err,
-        opts.stop_at_target,
-        k0,
-        problem.obj_err(&ps.theta),
-    );
+    let mut wal: Option<RoundLog> = None;
+    let mut target_stop = false;
+    let mut recorder;
+    let k_start;
+    match (&sopts.wal, sopts.resume_wal) {
+        (Some(path), true) => {
+            let load = RoundLog::load(path)?;
+            anyhow::ensure!(
+                load.k0 as usize == k0,
+                "WAL root round {} does not match run start {k0}",
+                load.k0
+            );
+            recorder = TraceRecorder::new(
+                opts.record_every,
+                opts.max_iters,
+                opts.target_err,
+                opts.stop_at_target,
+                k0,
+                load.initial_obj,
+            );
+            // replay the durable prefix: the server state, contribution
+            // cache, trace records, and upload events come out exactly as
+            // the dead incarnation computed them
+            for rec in &load.records {
+                rec.replay(&mut ps, &mut svc.contrib, alpha);
+                uploads += rec.d_uploads;
+                downloads += rec.d_downloads;
+                for (s, _) in &rec.uploads {
+                    events[*s as usize].push(rec.k as usize);
+                }
+                for &a in &rec.admits {
+                    svc.ever_owned[a as usize] = true;
+                }
+                if recorder.on_iter(rec.k as usize, rec.obj_err, uploads, downloads, downloads) {
+                    target_stop = true;
+                }
+            }
+            k_start = k0 + load.records.len();
+            // re-arm scheduled holds that straddle the crash: a shard
+            // dropped at fk ≤ k_start whose re-admission round is still in
+            // the future must stay held, or the rejoin would land on a
+            // nondeterministic round
+            for &(r, s) in &faults.admit_at {
+                if r > k_start
+                    && faults
+                        .drop_after
+                        .iter()
+                        .any(|&(fk, fs)| fs == s && fk <= k_start && fk < r)
+                    && svc.admit_round[s].is_none_or(|cur| r < cur)
+                {
+                    svc.admit_round[s] = Some(r);
+                }
+            }
+            wal = Some(RoundLog::resume(path, &load)?);
+        }
+        (Some(path), false) => {
+            let initial_obj = problem.obj_err(&ps.theta);
+            recorder = TraceRecorder::new(
+                opts.record_every,
+                opts.max_iters,
+                opts.target_err,
+                opts.stop_at_target,
+                k0,
+                initial_obj,
+            );
+            wal = Some(RoundLog::create(path, k0 as u64, initial_obj)?);
+            k_start = k0;
+        }
+        (None, true) => anyhow::bail!("resume_wal set without a wal path"),
+        (None, false) => {
+            recorder = TraceRecorder::new(
+                opts.record_every,
+                opts.max_iters,
+                opts.target_err,
+                opts.stop_at_target,
+                k0,
+                problem.obj_err(&ps.theta),
+            );
+            k_start = k0;
+        }
+    }
+    if let Some(log) = &wal {
+        svc.stats.wal_bytes = log.bytes();
+    }
+    let mut wal_admits: Vec<u32> = Vec::new();
     let t0 = Instant::now();
 
-    for k in k0 + 1..=opts.max_iters {
+    for k in k_start + 1..=opts.max_iters {
+        if target_stop {
+            break; // the replayed prefix already hit the target
+        }
         // -- phase A: membership window -------------------------------
-        // scheduled re-admissions due at k must land; round 1 additionally
-        // waits for the initial fleet
-        let initial = k == k0 + 1;
+        // scheduled re-admissions due at k must land; the first served
+        // round additionally waits for the initial fleet (minus any shards
+        // the fault plan still holds for a later rejoin round)
+        let initial = k == k_start + 1;
+        let mut evict_pre: Vec<u32> = Vec::new();
         let deadline = Instant::now() + sopts.join_timeout;
         loop {
             svc.absorb_control();
-            svc.admit_pending(k);
             // a member that died between rounds is evicted here, before
             // the broadcast — its contribution leaves the aggregate now
+            // (and before admissions, so a rejoiner is not refused over
+            // its own dead predecessor)
             for (s, _) in svc.reap_dead() {
                 svc.evict(&mut ps, s);
+                evict_pre.push(s as u32);
             }
+            svc.admit_pending(k, &mut wal_admits);
             let admits_pending = (0..m).any(|s| {
                 matches!(svc.admit_round[s], Some(r) if r <= k) && svc.owner[s].is_none()
             });
-            let need = if initial { min_workers } else { 1 };
+            let held =
+                (0..m).filter(|&s| matches!(svc.admit_round[s], Some(r) if r > k)).count();
+            let need =
+                if initial { min_workers.saturating_sub(held).max(1) } else { 1 };
             if !admits_pending && svc.members() >= need {
                 break;
             }
@@ -586,7 +846,7 @@ pub fn run_service(
                     sopts.join_timeout,
                 );
             }
-            svc.pump()?;
+            svc.pump(deadline.saturating_duration_since(Instant::now()))?;
         }
 
         // -- phase B: broadcast and collect ---------------------------
@@ -671,7 +931,20 @@ pub fn run_service(
                 }
                 break;
             }
-            svc.pump()?;
+            // clamp the poll to the nearest wall-clock deadline — the
+            // round's reply budget or the earliest heartbeat expiry —
+            // which keeps the non-Linux sleep fallback deadline-accurate
+            let mut wake = reply_deadline;
+            for &s in &members {
+                if let Some(i) = svc.owner[s] {
+                    if let Some(c) = &svc.conns[i] {
+                        if !c.replied {
+                            wake = wake.min(c.last_seen + sopts.heartbeat_timeout);
+                        }
+                    }
+                }
+            }
+            svc.pump(wake.saturating_duration_since(Instant::now()))?;
         }
 
         // -- apply the round deterministically ------------------------
@@ -680,8 +953,10 @@ pub fn run_service(
         lost_unreplied.sort_unstable();
         for &s in &lost_unreplied {
             svc.evict(&mut ps, s);
+            evict_pre.push(s as u32);
         }
         // surviving uploads land in ascending shard order
+        let mut wal_uploads: Vec<(u32, Vec<f64>)> = Vec::new();
         for s in 0..m {
             if lost_unreplied.contains(&s) {
                 continue;
@@ -695,19 +970,23 @@ pub fn run_service(
                 }
                 uploads += 1;
                 events[s].push(k);
+                wal_uploads.push((s as u32, dv.clone()));
             }
         }
         ps.step(alpha);
         // members that replied and then died contributed to this step;
         // their eviction (like a scheduled drop) takes effect after it
+        let mut evict_post: Vec<u32> = Vec::new();
         lost_replied.sort_unstable();
         for &s in &lost_replied {
             svc.evict(&mut ps, s);
+            evict_post.push(s as u32);
         }
         for &(fk, s) in &faults.drop_after {
             if fk == k && svc.owner[s].is_some() {
                 svc.force_drop(s);
                 svc.evict(&mut ps, s);
+                evict_post.push(s as u32);
                 // hold the shard for its scheduled re-admission round (if
                 // the plan has one) so an eager rejoiner cannot land on a
                 // nondeterministic round
@@ -719,6 +998,44 @@ pub fn run_service(
                     .min();
             }
         }
+        let obj = problem.obj_err(&ps.theta);
+
+        // -- durability point -----------------------------------------
+        // the round is not real until its record is fsynced; the crash
+        // points bracket exactly that boundary (an `Err` return with no
+        // Shutdown broadcast — the fleet sees a silent leader death)
+        if let Some(log) = &mut wal {
+            if matches!(sopts.crash, Some(CrashPoint::BeforeWal(ck)) if ck == k) {
+                anyhow::bail!("injected crash before WAL append of round {k}");
+            }
+            let rec = WalRecord {
+                k: k as u64,
+                obj_err: obj,
+                d_uploads: wal_uploads.len() as u64,
+                d_downloads: members.len() as u64,
+                d_grad_evals: members.len() as u64,
+                admits: std::mem::take(&mut wal_admits),
+                evict_pre,
+                uploads: wal_uploads,
+                evict_post,
+            };
+            let before = log.bytes();
+            let framed = log.append(&rec)?;
+            if let Some(CrashPoint::TornWal(ck, keep)) = sopts.crash {
+                if ck == k {
+                    // tear the freshly appended frame: keep only its first
+                    // bytes (always strictly short of a whole record)
+                    log.truncate(before + (keep as u64).min(framed.saturating_sub(1)))?;
+                    anyhow::bail!("injected crash mid-append of round {k}");
+                }
+            }
+            svc.stats.wal_bytes = log.bytes();
+            if matches!(sopts.crash, Some(CrashPoint::AfterWal(ck)) if ck == k) {
+                anyhow::bail!("injected crash after WAL append of round {k}");
+            }
+        } else {
+            wal_admits.clear();
+        }
 
         if sopts.checkpoint_every > 0 && k % sopts.checkpoint_every == 0 {
             if let Some(path) = &sopts.checkpoint {
@@ -726,7 +1043,7 @@ pub fn run_service(
                     .save(path)?;
             }
         }
-        if recorder.on_iter(k, problem.obj_err(&ps.theta), uploads, downloads, downloads) {
+        if recorder.on_iter(k, obj, uploads, downloads, downloads) {
             break;
         }
     }
@@ -742,7 +1059,7 @@ pub fn run_service(
         if Instant::now() >= flush_deadline {
             break;
         }
-        svc.pump()?;
+        svc.pump(flush_deadline.saturating_duration_since(Instant::now()))?;
         let _ = svc.reap_dead();
     }
 
@@ -776,6 +1093,8 @@ pub struct WorkerOutcome {
     pub rounds: u64,
     /// The shard the leader assigned, if admission happened.
     pub shard: Option<usize>,
+    /// Reconnect attempts consumed before a session was established.
+    pub retries: u32,
 }
 
 /// Elastic-worker knobs.
@@ -788,6 +1107,14 @@ pub struct WorkerConfig {
     pub heartbeat_interval: Duration,
     /// Error out if the leader is silent this long.
     pub leader_timeout: Duration,
+    /// Reconnect schedule: a refused connection, a reset, a silent leader,
+    /// or a rejected shard claim is retried with capped exponential
+    /// backoff and seeded jitter until this budget runs out
+    /// ([`BackoffPolicy::none`] restores single-shot semantics).
+    pub reconnect: BackoffPolicy,
+    /// Byte-level fault injection on this worker's socket (tests; the
+    /// default all-zero config injects nothing).
+    pub io: FaultConfig,
 }
 
 impl Default for WorkerConfig {
@@ -796,6 +1123,35 @@ impl Default for WorkerConfig {
             preferred: None,
             heartbeat_interval: Duration::from_millis(200),
             leader_timeout: Duration::from_secs(60),
+            reconnect: BackoffPolicy::default(),
+            io: FaultConfig::default(),
+        }
+    }
+}
+
+/// Serve the leader at `addr`, retrying failed sessions on the
+/// [`WorkerConfig::reconnect`] backoff schedule. Clean endings —
+/// `Shutdown`, or the leader hanging up at a frame boundary — return
+/// immediately (the caller decides whether to rejoin); errors (connection
+/// refused, resets, a mid-frame close from a dying leader, a rejected
+/// shard claim from a stale-owner race) burn one retry each and surface
+/// only once the budget is exhausted.
+pub fn serve_worker(
+    addr: &str,
+    problem: &Problem,
+    cfg: &WorkerConfig,
+) -> anyhow::Result<WorkerOutcome> {
+    let mut backoff = Backoff::new(&cfg.reconnect);
+    loop {
+        match serve_worker_once(addr, problem, cfg) {
+            Ok(mut out) => {
+                out.retries = backoff.attempts();
+                return Ok(out);
+            }
+            Err(e) => match backoff.next_delay() {
+                Some(d) => std::thread::sleep(d),
+                None => return Err(e),
+            },
         }
     }
 }
@@ -805,14 +1161,15 @@ impl Default for WorkerConfig {
 /// `Assign` lands (resuming the handed-back gradient cache when one
 /// comes), heartbeat while idle. Returns instead of erroring when the
 /// leader hangs up cleanly — the caller decides whether to rejoin.
-pub fn serve_worker(
+fn serve_worker_once(
     addr: &str,
     problem: &Problem,
     cfg: &WorkerConfig,
 ) -> anyhow::Result<WorkerOutcome> {
-    let mut stream = TcpStream::connect(addr)?;
+    let stream = TcpStream::connect(addr)?;
     stream.set_nodelay(true)?;
     stream.set_read_timeout(Some(cfg.heartbeat_interval.max(Duration::from_millis(1))))?;
+    let mut stream = FaultStream::new(stream, &cfg.io);
     let proposed = match cfg.preferred {
         Some(s) => {
             anyhow::ensure!(s < problem.m(), "preferred shard {s} out of range");
@@ -860,7 +1217,18 @@ pub fn serve_worker(
                     rounds += 1;
                 }
                 WireMsg::Shutdown => {
-                    return Ok(WorkerOutcome { exit: WorkerExit::Shutdown, rounds, shard })
+                    return Ok(WorkerOutcome {
+                        exit: WorkerExit::Shutdown,
+                        rounds,
+                        shard,
+                        retries: 0,
+                    })
+                }
+                WireMsg::Reject { worker } => {
+                    // the named claim is already owned (or out of range);
+                    // retryable — a stale-owner race resolves once the
+                    // leader reaps our dead predecessor
+                    anyhow::bail!("leader rejected the claim for shard {worker}")
                 }
                 WireMsg::Heartbeat => {}
                 other => anyhow::bail!("unexpected message from leader: {other:?}"),
@@ -869,7 +1237,12 @@ pub fn serve_worker(
         match stream.read(&mut buf) {
             Ok(0) => {
                 anyhow::ensure!(!dec.mid_frame(), "leader closed mid-frame");
-                return Ok(WorkerOutcome { exit: WorkerExit::LeaderClosed, rounds, shard });
+                return Ok(WorkerOutcome {
+                    exit: WorkerExit::LeaderClosed,
+                    rounds,
+                    shard,
+                    retries: 0,
+                });
             }
             Ok(n) => {
                 last_leader = Instant::now();
@@ -936,6 +1309,7 @@ mod tests {
                         preferred: Some(s),
                         heartbeat_interval: Duration::from_millis(20),
                         leader_timeout: Duration::from_secs(30),
+                        ..Default::default()
                     };
                     loop {
                         match serve_worker(&addr, p, &cfg) {
@@ -982,6 +1356,7 @@ mod tests {
         let faults = FaultPlan {
             drop_after: vec![(5, 1), (5, 4), (12, 2)],
             admit_at: vec![(9, 1), (9, 4), (20, 2)],
+            ..Default::default()
         };
         let (ta, sa) = drive(&p, &opts, &quick_sopts(), &faults, p.m());
         let (tb, sb) = drive(&p, &opts, &quick_sopts(), &faults, p.m());
@@ -1112,6 +1487,7 @@ mod tests {
                         preferred: Some(s),
                         heartbeat_interval: Duration::from_millis(20),
                         leader_timeout: Duration::from_secs(30),
+                        ..Default::default()
                     };
                     if s == 1 {
                         // this worker dies after a few rounds and never
@@ -1140,5 +1516,92 @@ mod tests {
         // survivors kept uploading after the death window
         assert!(trace.upload_events[0].iter().any(|&k| k > 10));
         assert!(trace.upload_events[2].iter().any(|&k| k > 10));
+    }
+
+    /// A second worker claiming a shard a live member owns is refused *by
+    /// name* — a `Reject` carrying the offending claim — while the
+    /// legitimate owner keeps serving undisturbed.
+    #[test]
+    fn duplicate_hello_is_rejected_by_name() {
+        let p = synthetic::linreg_increasing_l(2, 10, 4, 96);
+        let opts = RunOptions { max_iters: 400, ..Default::default() };
+        let sopts = quick_sopts();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let p = &p;
+        std::thread::scope(|scope| {
+            let leader = scope.spawn(|| {
+                run_service(listener, p, Algorithm::LagWk, &opts, &sopts, &FaultPlan::default())
+                    .unwrap()
+            });
+            for s in 0..p.m() {
+                let addr = addr.clone();
+                scope.spawn(move || {
+                    let cfg = WorkerConfig {
+                        preferred: Some(s),
+                        heartbeat_interval: Duration::from_millis(20),
+                        leader_timeout: Duration::from_secs(30),
+                        ..Default::default()
+                    };
+                    loop {
+                        match serve_worker(&addr, p, &cfg) {
+                            Ok(o) if o.exit == WorkerExit::Shutdown => break,
+                            Ok(_) => continue,
+                            Err(_) => break,
+                        }
+                    }
+                });
+            }
+            // the duplicate claims shard 0 mid-run, with no retry budget
+            // so the rejection surfaces instead of being absorbed
+            let dup = scope.spawn({
+                let addr = addr.clone();
+                move || {
+                    std::thread::sleep(Duration::from_millis(60));
+                    let cfg = WorkerConfig {
+                        preferred: Some(0),
+                        reconnect: BackoffPolicy::none(),
+                        ..Default::default()
+                    };
+                    serve_worker(&addr, p, &cfg)
+                }
+            });
+            let err = dup.join().unwrap().unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("shard 0"), "rejection must name the claim: {msg}");
+            let (trace, stats) = leader.join().unwrap();
+            assert_eq!(trace.records.last().unwrap().k, 400, "owner was disturbed");
+            assert_eq!(stats.evictions, 0, "rejection must not evict the live owner");
+        });
+    }
+
+    /// Replaying a complete WAL with no further rounds to serve
+    /// reconstructs the original run's records, upload events, and final
+    /// iterate bit-for-bit — the foundation the chaos suite's mid-run
+    /// crash recovery builds on.
+    #[test]
+    fn wal_replay_reconstructs_the_full_trace() {
+        let p = synthetic::linreg_increasing_l(4, 12, 5, 97);
+        let dir = std::env::temp_dir().join("lag_service_wal_replay_test");
+        let wal = dir.join("rounds.wal");
+        let _ = std::fs::remove_file(&wal);
+        let opts = RunOptions { max_iters: 30, record_every: 1, ..Default::default() };
+        let sopts = ServiceOptions { wal: Some(wal.clone()), ..quick_sopts() };
+        let (orig, stats_orig) = drive(&p, &opts, &sopts, &FaultPlan::default(), p.m());
+        assert!(stats_orig.wal_bytes > 0, "run left no durable rounds");
+
+        // resume with max_iters == rounds already durable: the round loop
+        // is empty, so no fleet is needed — pure replay
+        let sopts2 =
+            ServiceOptions { wal: Some(wal.clone()), resume_wal: true, ..quick_sopts() };
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let (replayed, stats2) =
+            run_service(listener, &p, Algorithm::LagWk, &opts, &sopts2, &FaultPlan::default())
+                .unwrap();
+        assert_eq!(record_sig(&orig.records), record_sig(&replayed.records));
+        assert_eq!(orig.upload_events, replayed.upload_events);
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&stats_orig.final_theta), bits(&stats2.final_theta));
+        assert_eq!(stats2.wal_bytes, stats_orig.wal_bytes);
     }
 }

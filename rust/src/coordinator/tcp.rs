@@ -17,6 +17,7 @@
 //! fails naming the worker and round — so a dead or absent worker can
 //! never hang the leader.
 
+use super::faults::{FaultConfig, FaultStream};
 use super::trigger::{DiffHistory, TriggerConfig};
 use super::wire::WireMsg;
 use super::{Algorithm, RunOptions};
@@ -46,6 +47,13 @@ pub struct TcpOptions {
     pub accept_timeout: Duration,
     /// Per-round deadline for each worker's `Delta` reply.
     pub round_timeout: Duration,
+    /// Byte-level fault injection on the leader's side of every
+    /// connection ([`FaultStream`] wrapping; each stream draws from its
+    /// own seed so schedules don't correlate). The default all-zero config
+    /// injects nothing. This runtime is fail-fast: timing-only faults are
+    /// absorbed by the blocking reads, anything harsher errors the run —
+    /// elastic recovery lives in [`super::service`].
+    pub faults: FaultConfig,
 }
 
 impl Default for TcpOptions {
@@ -53,6 +61,7 @@ impl Default for TcpOptions {
         TcpOptions {
             accept_timeout: Duration::from_secs(30),
             round_timeout: Duration::from_secs(60),
+            faults: FaultConfig::default(),
         }
     }
 }
@@ -97,18 +106,29 @@ pub fn run_leader_on(
 
     // fleet assembly with a hard deadline: the listener is polled
     // nonblocking so a worker that never shows cannot park us in accept(2)
-    type Conn = (BufReader<TcpStream>, TcpStream);
+    type Conn = (BufReader<FaultStream<TcpStream>>, FaultStream<TcpStream>);
     listener.set_nonblocking(true)?;
     let assembly_deadline = Instant::now() + topts.accept_timeout;
     let mut conns: Vec<Option<Conn>> = (0..m).map(|_| None).collect();
     let mut joined = 0usize;
+    let mut accepted = 0u64;
     while joined < m {
         match listener.accept() {
             Ok((stream, _)) => {
                 stream.set_nonblocking(false)?;
                 stream.set_nodelay(true)?;
                 stream.set_read_timeout(Some(topts.round_timeout))?;
-                let mut reader = BufReader::new(stream.try_clone()?);
+                // distinct seeds per stream (and per direction) keep the
+                // fault schedules of a fleet from firing in lockstep
+                let lane_base = accepted * 2;
+                accepted += 1;
+                let seed_of = |lane: u64| FaultConfig {
+                    seed: topts.faults.seed.wrapping_add(lane_base + lane),
+                    ..topts.faults.clone()
+                };
+                let mut reader =
+                    BufReader::new(FaultStream::new(stream.try_clone()?, &seed_of(0)));
+                let stream = FaultStream::new(stream, &seed_of(1));
                 match WireMsg::read_from(&mut reader)
                     .map_err(|e| e.context("handshake: reading Hello"))?
                 {
@@ -299,6 +319,7 @@ mod tests {
         TcpOptions {
             accept_timeout: Duration::from_secs(10),
             round_timeout: Duration::from_secs(10),
+            ..Default::default()
         }
     }
 
@@ -343,6 +364,33 @@ mod tests {
         );
     }
 
+    /// Timing-only fault injection (short reads/writes, delays) on every
+    /// leader-side stream must be invisible in the trace: the blocking
+    /// reads absorb the chopping, and the run still matches the sync
+    /// driver exactly.
+    #[test]
+    fn tcp_timing_faults_are_trace_neutral() {
+        let p = synthetic::linreg_increasing_l(4, 15, 6, 91);
+        let opts = RunOptions { max_iters: 40, ..Default::default() };
+        let sync = run(&p, Algorithm::LagWk, &opts, &NativeEngine::new(&p));
+
+        let topts = TcpOptions { faults: FaultConfig::timing_only(17), ..quick_topts() };
+        let (listener, addr) = test_listener();
+        let addr = addr.as_str();
+        let (trace, _stats) = std::thread::scope(|scope| {
+            let leader = scope
+                .spawn(|| run_leader_on(listener, &p, Algorithm::LagWk, &opts, &topts).unwrap());
+            for mi in 0..p.m() {
+                let shard = &p.workers[mi];
+                let task = p.task;
+                scope.spawn(move || run_worker(addr, mi, task, shard).unwrap());
+            }
+            leader.join().unwrap()
+        });
+        assert_eq!(trace.upload_events, sync.upload_events);
+        assert_eq!(trace.total_uploads(), sync.total_uploads());
+    }
+
     #[test]
     fn tcp_gd_converges() {
         let p = synthetic::linreg_increasing_l(3, 12, 5, 92);
@@ -372,6 +420,7 @@ mod tests {
         let topts = TcpOptions {
             accept_timeout: Duration::from_millis(200),
             round_timeout: Duration::from_secs(1),
+            ..Default::default()
         };
         let (listener, addr) = test_listener();
         let addr = addr.as_str();
@@ -400,6 +449,7 @@ mod tests {
         let topts = TcpOptions {
             accept_timeout: Duration::from_secs(5),
             round_timeout: Duration::from_millis(300),
+            ..Default::default()
         };
         let (listener, addr) = test_listener();
         let addr = addr.as_str();

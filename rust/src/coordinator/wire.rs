@@ -1,6 +1,18 @@
 //! Wire protocol for the TCP deployment: length-prefixed frames with a
-//! 1-byte tag and little-endian payloads. No serde in the offline crate
-//! universe, so the codec is explicit — and tested for exact round-trips.
+//! 1-byte tag, little-endian payloads, and a CRC32C trailer. No serde in
+//! the offline crate universe, so the codec is explicit — and tested for
+//! exact round-trips.
+//!
+//! Frame layout: `[len: u32 LE][tag: u8][payload…][crc: u32 LE]` where
+//! `len` counts the tag + payload (not the trailer) and `crc` is CRC32C
+//! over the protocol version byte followed by the body. Folding
+//! [`WIRE_VERSION`] into the checksum versions the protocol without
+//! spending a wire byte per frame: a peer speaking a different revision
+//! fails every checksum and is dropped before a single field is decoded.
+//! The trailer is verified *before* [`WireMsg::decode`] runs, so a
+//! corrupted payload inside a well-formed frame — the failure mode that
+//! would otherwise silently poison the lazy aggregate — surfaces as a
+//! typed [`CrcMismatch`] and never becomes a message (DESIGN.md §12).
 
 use std::io::{Read, Write};
 
@@ -50,6 +62,13 @@ pub enum WireMsg {
     },
     /// Worker → leader: liveness signal while idle (no round in flight).
     Heartbeat,
+    /// Leader → worker: admission refused — the proposed shard is owned by
+    /// a live member. The worker must not retry the same claim; the frame
+    /// names the shard so the error on the worker side can too.
+    Reject {
+        /// The shard the worker claimed and was refused.
+        worker: u32,
+    },
 }
 
 /// `Hello { worker: ANY_SHARD }` — the worker has no shard preference and
@@ -67,6 +86,88 @@ const TAG_DELTA: u8 = 3;
 const TAG_SHUTDOWN: u8 = 4;
 const TAG_ASSIGN: u8 = 5;
 const TAG_HEARTBEAT: u8 = 6;
+const TAG_REJECT: u8 = 7;
+
+/// Protocol revision, folded into every frame's CRC (see the module docs).
+/// Bump on any change to the frame layout or a message's field set.
+pub const WIRE_VERSION: u8 = 2;
+
+/// Bytes of the CRC32C trailer appended after every frame body.
+pub const CRC_LEN: usize = 4;
+
+/// CRC32C (Castagnoli) lookup table, built at compile time from the
+/// reflected polynomial 0x82F63B78 — the same parameterization as SSE4.2's
+/// `crc32` instruction and iSCSI/ext4, so the known-answer vector
+/// (`"123456789"` → `0xE3069283`) pins the implementation.
+const CRC32C_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            crc = if crc & 1 != 0 { (crc >> 1) ^ 0x82F6_3B78 } else { crc >> 1 };
+            bit += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+};
+
+fn crc32c_update(mut state: u32, bytes: &[u8]) -> u32 {
+    for &b in bytes {
+        state = (state >> 8) ^ CRC32C_TABLE[((state ^ b as u32) & 0xFF) as usize];
+    }
+    state
+}
+
+/// One-shot CRC32C (Castagnoli) of `bytes` — standard init/final-xor of
+/// `!0`. Shared by the wire trailer and the write-ahead round log
+/// ([`super::checkpoint::RoundLog`]).
+pub fn crc32c(bytes: &[u8]) -> u32 {
+    !crc32c_update(!0, bytes)
+}
+
+/// The trailer value for a frame body: CRC32C over [`WIRE_VERSION`]
+/// followed by the body bytes.
+pub fn frame_crc(body: &[u8]) -> u32 {
+    !crc32c_update(crc32c_update(!0, &[WIRE_VERSION]), body)
+}
+
+/// A frame whose CRC32C trailer does not match its body — corruption on
+/// the wire (or a peer speaking a different [`WIRE_VERSION`]). Typed so
+/// transport layers can count corrupt frames distinctly from protocol
+/// errors via `anyhow::Error::downcast_ref::<CrcMismatch>()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CrcMismatch {
+    /// The trailer carried by the frame.
+    pub got: u32,
+    /// The checksum computed over the received body.
+    pub want: u32,
+}
+
+impl std::fmt::Display for CrcMismatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "frame CRC mismatch (got {:#010x}, computed {:#010x}): corrupt or version-skewed",
+            self.got, self.want
+        )
+    }
+}
+
+impl std::error::Error for CrcMismatch {}
+
+/// Verify a frame body against its 4-byte little-endian trailer.
+fn check_crc(body: &[u8], trailer: &[u8]) -> anyhow::Result<()> {
+    let got = u32::from_le_bytes(trailer.try_into().unwrap());
+    let want = frame_crc(body);
+    if got != want {
+        return Err(anyhow::Error::new(CrcMismatch { got, want }));
+    }
+    Ok(())
+}
 
 fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
@@ -155,15 +256,17 @@ impl WireMsg {
                 4 + 8 + 1 + cached.as_ref().map(|c| vec_wire_len(c.len())).unwrap_or(0)
             }
             WireMsg::Heartbeat => 0,
+            WireMsg::Reject { .. } => 4,
         }
     }
 
-    /// Serialize to a length-prefixed frame (tag byte + payload).
+    /// Serialize to a length-prefixed frame (tag byte + payload + CRC32C
+    /// trailer).
     pub fn encode(&self) -> Vec<u8> {
         // one exactly-sized allocation, body written straight after the
         // length prefix — no intermediate body buffer to copy
         let body_len = self.body_len();
-        let mut out = Vec::with_capacity(4 + body_len);
+        let mut out = Vec::with_capacity(4 + body_len + CRC_LEN);
         put_u32(&mut out, body_len as u32);
         match self {
             WireMsg::Hello { worker } => {
@@ -202,12 +305,21 @@ impl WireMsg {
                 }
             }
             WireMsg::Heartbeat => out.push(TAG_HEARTBEAT),
+            WireMsg::Reject { worker } => {
+                out.push(TAG_REJECT);
+                put_u32(&mut out, *worker);
+            }
         }
         debug_assert_eq!(out.len(), 4 + body_len, "body_len out of sync with encode");
+        let crc = frame_crc(&out[4..]);
+        put_u32(&mut out, crc);
         out
     }
 
-    /// Decode a frame body (everything after the length prefix).
+    /// Decode a frame body (everything after the length prefix, trailer
+    /// excluded). The caller must have verified the CRC trailer first —
+    /// [`WireMsg::decode_frame`], [`WireMsg::read_from_opt`], and
+    /// [`FrameDecoder`] all do.
     pub fn decode(body: &[u8]) -> anyhow::Result<WireMsg> {
         anyhow::ensure!(!body.is_empty(), "empty frame");
         let mut c = Cursor { b: body, pos: 1 };
@@ -230,10 +342,24 @@ impl WireMsg {
                 WireMsg::Assign { worker, k, cached }
             }
             TAG_HEARTBEAT => WireMsg::Heartbeat,
+            TAG_REJECT => WireMsg::Reject { worker: c.u32()? },
             t => anyhow::bail!("unknown wire tag {t}"),
         };
         anyhow::ensure!(c.pos == body.len(), "trailing bytes in frame");
         Ok(msg)
+    }
+
+    /// Decode one complete frame — length prefix, body, and CRC trailer —
+    /// verifying the length bounds and the checksum before any field is
+    /// parsed.
+    pub fn decode_frame(frame: &[u8]) -> anyhow::Result<WireMsg> {
+        anyhow::ensure!(frame.len() >= 4 + 1 + CRC_LEN, "frame too short");
+        let n = u32::from_le_bytes(frame[..4].try_into().unwrap()) as usize;
+        anyhow::ensure!(n >= 1 && n <= MAX_FRAME_LEN, "frame length {n} out of bounds");
+        anyhow::ensure!(frame.len() == 4 + n + CRC_LEN, "frame length prefix disagrees");
+        let body = &frame[4..4 + n];
+        check_crc(body, &frame[4 + n..])?;
+        WireMsg::decode(body)
     }
 
     /// Write a frame to a stream.
@@ -273,21 +399,24 @@ impl WireMsg {
         let n = u32::from_le_bytes(len) as usize;
         anyhow::ensure!(n >= 1 && n <= MAX_FRAME_LEN, "frame length {n} out of bounds");
         // allocation capped by bytes received, not by the untrusted prefix
-        let mut body = Vec::with_capacity(n.min(64 * 1024));
-        r.by_ref().take(n as u64).read_to_end(&mut body)?;
+        let want = n + CRC_LEN;
+        let mut body = Vec::with_capacity(want.min(64 * 1024));
+        r.by_ref().take(want as u64).read_to_end(&mut body)?;
         anyhow::ensure!(
-            body.len() == n,
-            "connection closed mid-frame ({}/{n} body bytes)",
+            body.len() == want,
+            "connection closed mid-frame ({}/{want} body bytes)",
             body.len()
         );
-        Ok(Some(WireMsg::decode(&body)?))
+        check_crc(&body[..n], &body[n..])?;
+        Ok(Some(WireMsg::decode(&body[..n])?))
     }
 
-    /// Wire size in bytes (frame header included) — communication-volume
-    /// accounting for the TCP deployment. Computed from the message shape
-    /// without encoding (asserted equal to `encode().len()` by tests).
+    /// Wire size in bytes (frame header and CRC trailer included) —
+    /// communication-volume accounting for the TCP deployment. Computed
+    /// from the message shape without encoding (asserted equal to
+    /// `encode().len()` by tests).
     pub fn wire_bytes(&self) -> u64 {
-        (4 + self.body_len()) as u64
+        (4 + self.body_len() + CRC_LEN) as u64
     }
 }
 
@@ -314,7 +443,8 @@ pub struct FrameDecoder {
     header: [u8; 4],
     header_got: usize,
     body: Vec<u8>,
-    /// Body length of the frame in flight (`None` while reading the header).
+    /// Bytes after the length prefix still owed for the frame in flight —
+    /// body plus CRC trailer (`None` while reading the header).
     body_need: Option<usize>,
 }
 
@@ -325,10 +455,12 @@ impl FrameDecoder {
     }
 
     /// Consume `data`, appending every completed [`WireMsg`] to `out`.
-    /// Errors on an out-of-bounds length prefix or an undecodable body —
-    /// the connection is then poisoned and must be dropped (frame sync is
-    /// lost). The body buffer grows with the bytes actually received, so a
-    /// hostile prefix cannot force a large allocation.
+    /// Errors on an out-of-bounds length prefix, a CRC trailer mismatch
+    /// (typed [`CrcMismatch`], checked before the body is decoded), or an
+    /// undecodable body — the connection is then poisoned and must be
+    /// dropped (frame sync is lost). The body buffer grows with the bytes
+    /// actually received, so a hostile prefix cannot force a large
+    /// allocation.
     pub fn feed(&mut self, mut data: &[u8], out: &mut Vec<WireMsg>) -> anyhow::Result<()> {
         while !data.is_empty() {
             match self.body_need {
@@ -345,16 +477,18 @@ impl FrameDecoder {
                             "frame length {n} out of bounds"
                         );
                         self.body.clear();
-                        self.body.reserve(n.min(64 * 1024));
-                        self.body_need = Some(n);
+                        self.body.reserve((n + CRC_LEN).min(64 * 1024));
+                        self.body_need = Some(n + CRC_LEN);
                     }
                 }
-                Some(n) => {
-                    let take = (n - self.body.len()).min(data.len());
+                Some(need) => {
+                    let take = (need - self.body.len()).min(data.len());
                     self.body.extend_from_slice(&data[..take]);
                     data = &data[take..];
-                    if self.body.len() == n {
-                        out.push(WireMsg::decode(&self.body)?);
+                    if self.body.len() == need {
+                        let n = need - CRC_LEN;
+                        check_crc(&self.body[..n], &self.body[n..])?;
+                        out.push(WireMsg::decode(&self.body[..n])?);
                         self.body_need = None;
                         self.header_got = 0;
                     }
@@ -426,7 +560,7 @@ mod tests {
 
     fn roundtrip(m: WireMsg) {
         let enc = m.encode();
-        let dec = WireMsg::decode(&enc[4..]).unwrap();
+        let dec = WireMsg::decode_frame(&enc).unwrap();
         assert_eq!(m, dec);
     }
 
@@ -440,6 +574,22 @@ mod tests {
         roundtrip(WireMsg::Assign { worker: 5, k: 17, cached: Some(vec![-0.5, 2.0]) });
         roundtrip(WireMsg::Assign { worker: ANY_SHARD, k: 0, cached: None });
         roundtrip(WireMsg::Heartbeat);
+        roundtrip(WireMsg::Reject { worker: 3 });
+    }
+
+    /// The CRC32C parameterization is pinned by the iSCSI known-answer
+    /// vector, and the frame trailer folds the version byte in.
+    #[test]
+    fn crc32c_known_answer() {
+        assert_eq!(crc32c(b"123456789"), 0xE306_9283);
+        assert_eq!(crc32c(b""), 0);
+        // the trailer is NOT the plain body CRC: the version byte is mixed
+        // in, so a version bump fails every frame
+        let body = [TAG_HEARTBEAT];
+        assert_ne!(frame_crc(&body), crc32c(&body));
+        let mut with_version = vec![WIRE_VERSION];
+        with_version.extend_from_slice(&body);
+        assert_eq!(frame_crc(&body), crc32c(&with_version));
     }
 
     #[test]
@@ -472,15 +622,16 @@ mod tests {
     fn hostile_frames_rejected() {
         // truncated bodies: every proper prefix of a valid body fails
         let full = WireMsg::Round { k: 7, rhs: 0.5, theta: vec![1.0, 2.0, 3.0] }.encode();
-        for cut in 1..full.len() - 4 {
-            assert!(WireMsg::decode(&full[4..4 + cut]).is_err(), "cut={cut}");
+        let body = &full[4..full.len() - CRC_LEN];
+        for cut in 1..body.len() {
+            assert!(WireMsg::decode(&body[..cut]).is_err(), "cut={cut}");
         }
         // trailing junk after a well-formed message
-        let mut long = full[4..].to_vec();
+        let mut long = body.to_vec();
         long.push(0);
         assert!(WireMsg::decode(&long).is_err());
         // unknown tags
-        for tag in [0u8, 7, 42, 255] {
+        for tag in [0u8, 8, 42, 255] {
             assert!(WireMsg::decode(&[tag, 0, 0, 0, 0]).is_err(), "tag={tag}");
         }
         // oversized length prefix: rejected before any body allocation
@@ -564,6 +715,91 @@ mod tests {
         assert!(err.is_err());
     }
 
+    /// Small fixture frames covering every variant (kept short so the
+    /// exhaustive split/flip loops below stay fast).
+    fn fixtures() -> Vec<WireMsg> {
+        vec![
+            WireMsg::Hello { worker: 2 },
+            WireMsg::Round { k: 5, rhs: 1e-9, theta: vec![0.5, -1.25, 3.0] },
+            WireMsg::Delta { k: 5, worker: 2, delta: Some(vec![0.125; 4]) },
+            WireMsg::Delta { k: 5, worker: 2, delta: None },
+            WireMsg::Assign { worker: 9, k: 1, cached: Some(vec![1.0; 3]) },
+            WireMsg::Heartbeat,
+            WireMsg::Reject { worker: 4 },
+            WireMsg::Shutdown,
+        ]
+    }
+
+    /// Tentpole guarantee: a corrupted frame never decodes. Every single-
+    /// byte flip anywhere in a frame — header, body, or trailer — yields
+    /// zero messages; flips past the intact header surface as the typed
+    /// [`CrcMismatch`] (which the service counts as a dropped corrupt
+    /// frame before anything reaches the aggregate).
+    #[test]
+    fn every_byte_flip_is_rejected_before_decode() {
+        for m in fixtures() {
+            let frame = m.encode();
+            for i in 0..frame.len() {
+                let mut bad = frame.clone();
+                bad[i] ^= 0xFF;
+                let mut dec = FrameDecoder::new();
+                let mut out = Vec::new();
+                let res = dec.feed(&bad, &mut out);
+                assert!(
+                    out.is_empty(),
+                    "corrupted frame produced a message: {m:?} flip at {i}"
+                );
+                if i >= 4 {
+                    // header intact ⇒ the frame completes and the CRC
+                    // check fires (a single-byte burst is always caught)
+                    let err = res.expect_err("flip inside body/trailer must error");
+                    assert!(
+                        err.downcast_ref::<CrcMismatch>().is_some(),
+                        "expected CrcMismatch for {m:?} flip at {i}: {err:#}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Satellite: `FrameDecoder` resumption property — each frame split at
+    /// every byte boundary, and every pairwise concatenation of frames,
+    /// decodes identically to the one-shot path.
+    #[test]
+    fn every_split_and_concat_decodes_identically() {
+        let msgs = fixtures();
+        for m in &msgs {
+            let frame = m.encode();
+            let oneshot = WireMsg::decode_frame(&frame).unwrap();
+            assert_eq!(&oneshot, m);
+            for split in 0..=frame.len() {
+                let mut dec = FrameDecoder::new();
+                let mut out = Vec::new();
+                dec.feed(&frame[..split], &mut out).unwrap();
+                dec.feed(&frame[split..], &mut out).unwrap();
+                assert_eq!(out, vec![oneshot.clone()], "split={split}");
+                assert!(!dec.mid_frame());
+            }
+        }
+        // pairwise concatenations, split at every byte boundary of the
+        // joined stream: resynchronization across frame boundaries
+        for a in &msgs {
+            for b in &msgs {
+                let mut stream = a.encode();
+                stream.extend_from_slice(&b.encode());
+                let want = vec![a.clone(), b.clone()];
+                for split in 0..=stream.len() {
+                    let mut dec = FrameDecoder::new();
+                    let mut out = Vec::new();
+                    dec.feed(&stream[..split], &mut out).unwrap();
+                    dec.feed(&stream[split..], &mut out).unwrap();
+                    assert_eq!(out, want, "pair=({a:?},{b:?}) split={split}");
+                    assert!(!dec.mid_frame());
+                }
+            }
+        }
+    }
+
     #[test]
     fn write_queue_partial_drain() {
         let mut q = WriteQueue::new();
@@ -586,8 +822,23 @@ mod tests {
         assert_eq!(q.pending().len(), 0);
     }
 
+    /// Bit-at-a-time CRC32C — an implementation independent of the
+    /// compile-time table, so the reference encoder does not share the
+    /// production code path it checks.
+    fn reference_crc32c(seed_bytes: &[u8]) -> u32 {
+        let mut crc: u32 = !0;
+        for &b in seed_bytes {
+            crc ^= b as u32;
+            for _ in 0..8 {
+                crc = if crc & 1 != 0 { (crc >> 1) ^ 0x82F6_3B78 } else { crc >> 1 };
+            }
+        }
+        !crc
+    }
+
     /// The element-at-a-time encoder the chunked `put_vec`/exact-size
-    /// `encode` replaced — frozen here as the byte-layout reference.
+    /// `encode` replaced — frozen here as the byte-layout reference
+    /// (length prefix, body, version-seeded CRC32C trailer).
     fn reference_encode(m: &WireMsg) -> Vec<u8> {
         let mut body = Vec::new();
         let ref_put_vec = |body: &mut Vec<u8>, v: &[f64]| {
@@ -633,10 +884,17 @@ mod tests {
                 }
             }
             WireMsg::Heartbeat => body.push(TAG_HEARTBEAT),
+            WireMsg::Reject { worker } => {
+                body.push(TAG_REJECT);
+                put_u32(&mut body, *worker);
+            }
         }
-        let mut out = Vec::with_capacity(4 + body.len());
+        let mut out = Vec::with_capacity(4 + body.len() + CRC_LEN);
         put_u32(&mut out, body.len() as u32);
         out.extend_from_slice(&body);
+        let mut versioned = vec![WIRE_VERSION];
+        versioned.extend_from_slice(&body);
+        put_u32(&mut out, reference_crc32c(&versioned));
         out
     }
 
@@ -660,6 +918,7 @@ mod tests {
             WireMsg::Assign { worker: 4, k: 12, cached: Some(vec![1.5; 65]) },
             WireMsg::Assign { worker: 4, k: 12, cached: None },
             WireMsg::Heartbeat,
+            WireMsg::Reject { worker: 11 },
         ] {
             assert_eq!(m.encode(), reference_encode(&m));
         }
@@ -675,11 +934,12 @@ mod tests {
             WireMsg::Shutdown,
             WireMsg::Assign { worker: 3, k: 40, cached: Some(vec![0.25; 33]) },
             WireMsg::Heartbeat,
+            WireMsg::Reject { worker: 0 },
         ] {
             let enc = m.encode();
             assert_eq!(enc.capacity(), enc.len(), "no over-allocation: {m:?}");
             assert_eq!(m.wire_bytes(), enc.len() as u64, "{m:?}");
-            assert_eq!(WireMsg::decode(&enc[4..]).unwrap(), m);
+            assert_eq!(WireMsg::decode_frame(&enc).unwrap(), m);
         }
     }
 

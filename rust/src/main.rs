@@ -52,9 +52,12 @@ fn print_help() {
          sgd|lasg-wk|lasg-ps take --batch full|N|0.N and --lasg-rule wk1|wk2|ps1|ps2)\n  \
          leader       parameter server: --addr 0.0.0.0:7070 --m 9 [--algo lag-wk]\n               \
          [--runtime service|tcp] [--min-workers K] [--join-timeout-ms N]\n               \
-         [--round-timeout-ms N] [--checkpoint F --checkpoint-every K] [--resume F]\n  \
+         [--round-timeout-ms N] [--checkpoint F --checkpoint-every K] [--resume F]\n               \
+         [--wal F] [--resume-wal] [--stats-out F]  (WAL = crash-recoverable:\n               \
+         rerun with --wal F --resume-wal after a crash to continue bit-exactly)\n  \
          worker       worker: --addr host:7070 [--index 0] (same problem flags);\n               \
-         service runtime adds [--rejoin N] [--heartbeat-ms N]\n  \
+         service runtime adds [--rejoin N] [--heartbeat-ms N] [--retries N]\n               \
+         [--retry-base-ms N] [--retry-cap-ms N] [--retry-seed S]\n  \
          plot         render a results CSV as an ASCII curve: lag plot results/fig3/lag-wk.csv\n  \
          info         list AOT artifacts\n\n\
          common flags: --engine pjrt|native  --artifacts DIR  --out DIR  --quick\n  \
@@ -212,6 +215,8 @@ fn cmd_leader(args: &Args) -> anyhow::Result<()> {
                     .transpose()?,
                 checkpoint: args.opt("checkpoint").map(std::path::PathBuf::from),
                 checkpoint_every: args.opt_usize("checkpoint-every", 0)?,
+                wal: args.opt("wal").map(std::path::PathBuf::from),
+                resume_wal: args.has_flag("resume-wal"),
                 ..Default::default()
             };
             println!(
@@ -229,12 +234,20 @@ fn cmd_leader(args: &Args) -> anyhow::Result<()> {
             )?;
             println!("{}", trace.summary());
             println!(
-                "wire volume: {:.1} KB down, {:.1} KB up; joins {}, evictions {}",
+                "wire volume: {:.1} KB down, {:.1} KB up; joins {}, evictions {}, \
+                 retries {}, corrupt frames dropped {}, WAL bytes {}",
                 stats.bytes_down as f64 / 1024.0,
                 stats.bytes_up as f64 / 1024.0,
                 stats.joins,
-                stats.evictions
+                stats.evictions,
+                stats.retries,
+                stats.corrupt_frames_dropped,
+                stats.wal_bytes
             );
+            if let Some(out) = args.opt("stats-out") {
+                std::fs::write(out, stats.robustness_json().to_string())?;
+                println!("wrote {out}");
+            }
         }
         // fixed-fleet blocking runtime (fails fast instead of tolerating
         // churn)
@@ -242,6 +255,7 @@ fn cmd_leader(args: &Args) -> anyhow::Result<()> {
             let topts = lag::coordinator::TcpOptions {
                 accept_timeout: args.opt_duration_ms("join-timeout-ms", 30_000)?,
                 round_timeout: args.opt_duration_ms("round-timeout-ms", 60_000)?,
+                ..Default::default()
             };
             println!("leader on {addr}: waiting for {} workers...", problem.m());
             let (trace, stats) =
@@ -269,11 +283,21 @@ fn cmd_worker(args: &Args) -> anyhow::Result<()> {
                 preferred: args.opt("index").map(|s| s.parse()).transpose()?,
                 heartbeat_interval: args.opt_duration_ms("heartbeat-ms", 200)?,
                 leader_timeout: args.opt_duration_ms("leader-timeout-ms", 60_000)?,
+                reconnect: lag::util::BackoffPolicy {
+                    base: args.opt_duration_ms("retry-base-ms", 20)?,
+                    cap: args.opt_duration_ms("retry-cap-ms", 500)?,
+                    max_retries: args.opt_usize("retries", 5)? as u32,
+                    seed: args.opt_usize("retry-seed", 0)? as u64,
+                },
+                ..Default::default()
             };
             let mut rejoins = args.opt_usize("rejoin", 0)?;
             loop {
                 println!("worker: connecting to {addr}...");
                 let out = lag::coordinator::serve_worker(&addr, &problem, &cfg)?;
+                if out.retries > 0 {
+                    println!("worker: session needed {} reconnect attempt(s)", out.retries);
+                }
                 match out.exit {
                     lag::coordinator::WorkerExit::Shutdown => {
                         println!(

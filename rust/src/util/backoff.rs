@@ -1,0 +1,146 @@
+//! Capped exponential backoff with seeded, deterministic jitter.
+//!
+//! Used by the elastic worker's reconnect loop (DESIGN.md §12): after a
+//! failed connect or a lost leader, the worker sleeps `base·2^attempt`
+//! (capped), scaled by a jitter factor in `[0.5, 1.0)` drawn from a
+//! seeded splitmix64 stream — so a fleet configured with distinct seeds
+//! de-synchronizes its retries (no thundering herd), while any single
+//! worker's retry schedule is exactly reproducible.
+
+use crate::util::Rng;
+use std::time::Duration;
+
+/// Shape of a backoff schedule.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BackoffPolicy {
+    /// First delay (before jitter).
+    pub base: Duration,
+    /// Upper bound on any single delay (before jitter).
+    pub cap: Duration,
+    /// Attempts allowed before the schedule is exhausted (`0` = never
+    /// retry).
+    pub max_retries: u32,
+    /// Seed of the jitter stream.
+    pub seed: u64,
+}
+
+impl Default for BackoffPolicy {
+    fn default() -> Self {
+        BackoffPolicy {
+            base: Duration::from_millis(20),
+            cap: Duration::from_millis(500),
+            max_retries: 5,
+            seed: 0,
+        }
+    }
+}
+
+impl BackoffPolicy {
+    /// A policy that never retries (callers that want single-shot
+    /// connection semantics).
+    pub fn none() -> Self {
+        BackoffPolicy { max_retries: 0, ..Default::default() }
+    }
+}
+
+/// Live backoff state over a [`BackoffPolicy`].
+#[derive(Debug)]
+pub struct Backoff {
+    policy: BackoffPolicy,
+    attempt: u32,
+    rng: Rng,
+}
+
+impl Backoff {
+    /// Fresh schedule at attempt 0.
+    pub fn new(policy: &BackoffPolicy) -> Self {
+        Backoff { policy: policy.clone(), attempt: 0, rng: Rng::new(policy.seed) }
+    }
+
+    /// The delay before the next retry, or `None` when the schedule is
+    /// exhausted. Each call consumes one attempt; the returned delay is
+    /// `min(cap, base·2^n)` scaled by a jitter factor in `[0.5, 1.0)`.
+    pub fn next_delay(&mut self) -> Option<Duration> {
+        if self.attempt >= self.policy.max_retries {
+            return None;
+        }
+        let exp = self.attempt.min(20); // 2^20 · base saturates any sane cap
+        self.attempt += 1;
+        let raw = self.policy.base.saturating_mul(1u32 << exp).min(self.policy.cap);
+        let jitter = 0.5 + 0.5 * self.rng.uniform();
+        Some(raw.mul_f64(jitter))
+    }
+
+    /// Retries consumed so far.
+    pub fn attempts(&self) -> u32 {
+        self.attempt
+    }
+
+    /// Reset to attempt 0 after a success (the jitter stream keeps
+    /// advancing — resets do not replay delays).
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delays_grow_then_exhaust() {
+        let policy = BackoffPolicy {
+            base: Duration::from_millis(10),
+            cap: Duration::from_millis(200),
+            max_retries: 6,
+            seed: 1,
+        };
+        let mut b = Backoff::new(&policy);
+        let mut prev_raw = Duration::ZERO;
+        for n in 0..6 {
+            let d = b.next_delay().expect("attempt within budget");
+            // jitter keeps every delay within [raw/2, raw]
+            let raw = policy.base.saturating_mul(1 << n).min(policy.cap);
+            assert!(d >= raw.mul_f64(0.5) && d <= raw, "n={n} d={d:?} raw={raw:?}");
+            assert!(raw >= prev_raw);
+            prev_raw = raw;
+        }
+        assert!(b.next_delay().is_none(), "schedule must exhaust");
+        assert_eq!(b.attempts(), 6);
+    }
+
+    #[test]
+    fn seeded_jitter_is_deterministic_and_seed_dependent() {
+        let policy = BackoffPolicy { seed: 7, ..Default::default() };
+        let mut a = Backoff::new(&policy);
+        let mut b = Backoff::new(&policy);
+        let da: Vec<_> = std::iter::from_fn(|| a.next_delay()).collect();
+        let db: Vec<_> = std::iter::from_fn(|| b.next_delay()).collect();
+        assert_eq!(da, db);
+        let mut c = Backoff::new(&BackoffPolicy { seed: 8, ..policy });
+        let dc: Vec<_> = std::iter::from_fn(|| c.next_delay()).collect();
+        assert_eq!(da.len(), dc.len());
+        assert_ne!(da, dc, "different seeds must de-synchronize retries");
+    }
+
+    #[test]
+    fn reset_restores_the_budget_without_replaying_jitter() {
+        let policy = BackoffPolicy { max_retries: 2, seed: 3, ..Default::default() };
+        let mut b = Backoff::new(&policy);
+        let first = b.next_delay().unwrap();
+        assert!(b.next_delay().is_some());
+        assert!(b.next_delay().is_none());
+        b.reset();
+        assert_eq!(b.attempts(), 0);
+        let again = b.next_delay().unwrap();
+        assert_ne!(first, again, "jitter stream must advance across resets");
+        assert!(b.next_delay().is_some());
+        assert!(b.next_delay().is_none());
+    }
+
+    #[test]
+    fn zero_retries_never_delays() {
+        let mut b = Backoff::new(&BackoffPolicy::none());
+        assert!(b.next_delay().is_none());
+    }
+}

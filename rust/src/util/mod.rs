@@ -12,7 +12,10 @@
 //! * [`cli`] — the `--key value` argument grammar of the `lag` binary.
 //! * [`timer`] — sample-based benchmark timing for the `benches/`
 //!   binaries.
+//! * [`backoff`] — capped exponential backoff with seeded deterministic
+//!   jitter (worker reconnect loops, DESIGN.md §12).
 
+pub mod backoff;
 pub mod cli;
 pub mod csv;
 pub mod csv_read;
@@ -20,6 +23,7 @@ pub mod json;
 pub mod rng;
 pub mod timer;
 
+pub use backoff::{Backoff, BackoffPolicy};
 pub use rng::Rng;
 
 /// `format!`-style helper: human-readable large numbers (`12_345` -> "12345",

@@ -5,9 +5,12 @@
 //!
 //! 1. **Scale** — a fleet of `LAG_SOAK_WORKERS` (default 64) real sockets
 //!    against one single-threaded readiness loop.
-//! 2. **Determinism under churn** — with boundary-aligned scheduled
-//!    drops/rejoins, two independent executions produce byte-identical
-//!    traces (records to the f64 bit, upload events, final iterate).
+//! 2. **Determinism under churn and timing faults** — with
+//!    boundary-aligned scheduled drops/rejoins *and* seeded timing-only
+//!    byte-level fault injection (short reads/writes, delays; seed via
+//!    `LAG_SOAK_FAULT_SEED`, default 7), two independent executions
+//!    produce byte-identical traces (records to the f64 bit, upload
+//!    events, final iterate).
 //! 3. **Bounded failure** — a fleet that never shows up is a prompt,
 //!    worker-identifying error, not a hang; the whole soak respects a
 //!    wall-clock budget.
@@ -18,8 +21,8 @@
 //! fleet can be chosen via the env var, e.g. `LAG_SOAK_WORKERS=16`.
 
 use lag::coordinator::{
-    run_service, serve_worker, Algorithm, FaultPlan, IterRecord, RunOptions, RunTrace,
-    ServiceOptions, ServiceStats, WorkerConfig, WorkerExit,
+    run_service, serve_worker, Algorithm, FaultConfig, FaultPlan, IterRecord, RunOptions,
+    RunTrace, ServiceOptions, ServiceStats, WorkerConfig, WorkerExit,
 };
 use lag::data::{synthetic, Problem};
 use std::net::TcpListener;
@@ -70,6 +73,7 @@ fn drive(
                     preferred: Some(s),
                     heartbeat_interval: Duration::from_millis(20),
                     leader_timeout: Duration::from_secs(90),
+                    ..Default::default()
                 };
                 loop {
                     match serve_worker(&addr, p, &cfg) {
@@ -112,6 +116,14 @@ fn churn_soak_is_byte_identical_across_runs() {
     }
     let injected = faults.drop_after.len() as u64;
     assert!(injected >= 2, "fault plan too small to exercise churn");
+    // Timing-only byte-level injection on top of the churn: short
+    // reads/writes and delays chop the leader's socket I/O but are
+    // trace-neutral by contract, so the byte-compare below still holds.
+    let fault_seed = std::env::var("LAG_SOAK_FAULT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(7u64);
+    faults.io = FaultConfig::timing_only(fault_seed);
 
     let t0 = Instant::now();
     let (ta, sa) = drive(&p, &opts, &sopts(), &faults);
@@ -226,6 +238,7 @@ fn worker_kill_chaos_never_wedges_the_leader() {
                         preferred: Some(s),
                         heartbeat_interval: Duration::from_millis(20),
                         leader_timeout: Duration::from_secs(90),
+                        ..Default::default()
                     };
                     loop {
                         match serve_worker(&addr, p, &cfg) {
