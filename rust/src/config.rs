@@ -104,6 +104,22 @@ pub struct ServiceSpec {
     /// Replay an existing log at `wal` before serving (the restart path
     /// after a leader crash).
     pub resume_wal: bool,
+    /// Deadline-paced rounds (DESIGN.md §13): commit each round this long
+    /// after its broadcast with whatever uploads arrived, carrying
+    /// laggards as LAG forced skips. `None` ⇒ block on every member.
+    pub round_deadline: Option<std::time::Duration>,
+    /// Staleness cap D: force-wait any member whose upload age would
+    /// exceed D rounds under pacing (0 ⇒ uncapped).
+    pub max_staleness: usize,
+    /// Per-connection write-queue bound in bytes; a consumer lagging past
+    /// it is evicted as a slow consumer (0 ⇒ unbounded).
+    pub max_queued_bytes: usize,
+    /// Admission cap: `Hello`s beyond this many members are `Reject`ed
+    /// (0 ⇒ uncapped).
+    pub max_workers: usize,
+    /// Screen every upload against the smoothness bound and quarantine
+    /// violators (the service form of `coordinator::robust`).
+    pub screen: bool,
 }
 
 impl Default for ServiceSpec {
@@ -118,6 +134,11 @@ impl Default for ServiceSpec {
             checkpoint_every: 0,
             wal: None,
             resume_wal: false,
+            round_deadline: None,
+            max_staleness: 0,
+            max_queued_bytes: 0,
+            max_workers: 0,
+            screen: false,
         }
     }
 }
@@ -285,6 +306,11 @@ fn parse_service(j: &Json) -> anyhow::Result<ServiceSpec> {
             "checkpoint_every" => s.checkpoint_every = v.as_usize().unwrap_or(0),
             "wal" => s.wal = v.as_str().map(String::from),
             "resume_wal" => s.resume_wal = matches!(v, Json::Bool(true)),
+            "round_deadline_ms" => s.round_deadline = Some(ms(v, k)?),
+            "max_staleness" => s.max_staleness = v.as_usize().unwrap_or(s.max_staleness),
+            "max_queued_bytes" => s.max_queued_bytes = v.as_usize().unwrap_or(s.max_queued_bytes),
+            "max_workers" => s.max_workers = v.as_usize().unwrap_or(s.max_workers),
+            "screen" => s.screen = matches!(v, Json::Bool(true)),
             other => anyhow::bail!("unknown service key '{other}'"),
         }
     }
@@ -378,7 +404,10 @@ mod tests {
                               "join_timeout_ms": 5000, "round_timeout_ms": 8000,
                               "heartbeat_timeout_ms": 2500,
                               "checkpoint": "state.ckpt", "checkpoint_every": 50,
-                              "wal": "rounds.wal", "resume_wal": true}}"#,
+                              "wal": "rounds.wal", "resume_wal": true,
+                              "round_deadline_ms": 250, "max_staleness": 6,
+                              "max_queued_bytes": 1048576, "max_workers": 12,
+                              "screen": true}}"#,
         )
         .unwrap();
         let s = c.service.unwrap();
@@ -391,6 +420,11 @@ mod tests {
         assert_eq!(s.checkpoint_every, 50);
         assert_eq!(s.wal.as_deref(), Some("rounds.wal"));
         assert!(s.resume_wal);
+        assert_eq!(s.round_deadline, Some(std::time::Duration::from_millis(250)));
+        assert_eq!(s.max_staleness, 6);
+        assert_eq!(s.max_queued_bytes, 1 << 20);
+        assert_eq!(s.max_workers, 12);
+        assert!(s.screen);
 
         // Absent section → None; empty section → all defaults.
         let c = RunConfig::from_json_str(SAMPLE).unwrap();

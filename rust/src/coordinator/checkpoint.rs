@@ -26,7 +26,12 @@ use std::io::{Read, Seek, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"LAGCKPT1";
-const WAL_MAGIC: &[u8; 8] = b"LAGWAL01";
+/// WAL format v2: uploads carry the round they *answered* (deadline-paced
+/// straggler replies apply under an older θ than the committing round), so
+/// replay restamps `hat_iter` exactly as the live leader did. v1 logs
+/// (`LAGWAL01`) are refused — a deliberate break, caught by the header
+/// check, rather than a silent misreplay of staleness state.
+const WAL_MAGIC: &[u8; 8] = b"LAGWAL02";
 /// WAL header: magic, starting round k₀, initial objective error bits.
 const WAL_HEADER_LEN: u64 = 8 + 8 + 8;
 
@@ -276,8 +281,12 @@ pub struct WalRecord {
     pub admits: Vec<u32>,
     /// Shards evicted before the step, in applied order.
     pub evict_pre: Vec<u32>,
-    /// Surviving uploads `(shard, δ∇)`, in ascending shard order.
-    pub uploads: Vec<(u32, Vec<f64>)>,
+    /// Surviving uploads `(shard, answered round, δ∇)`, in ascending shard
+    /// order. The answered round is the broadcast the delta responded to —
+    /// equal to [`WalRecord::k`] for on-time replies, older for parked
+    /// straggler replies committed under deadline pacing — and is what
+    /// replay stamps into `ParameterServer::hat_iter`.
+    pub uploads: Vec<(u32, u64, Vec<f64>)>,
     /// Shards evicted after the step, in applied order.
     pub evict_post: Vec<u32>,
 }
@@ -293,8 +302,9 @@ impl WalRecord {
         put_u32s(&mut b, &self.admits);
         put_u32s(&mut b, &self.evict_pre);
         put_u64(&mut b, self.uploads.len() as u64);
-        for (s, dv) in &self.uploads {
+        for (s, mk, dv) in &self.uploads {
             b.extend_from_slice(&s.to_le_bytes());
+            put_u64(&mut b, *mk);
             put_f64s(&mut b, dv);
         }
         put_u32s(&mut b, &self.evict_post);
@@ -315,7 +325,8 @@ impl WalRecord {
         let mut uploads = Vec::with_capacity(n);
         for _ in 0..n {
             let s = c.u32()?;
-            uploads.push((s, c.f64s()?));
+            let mk = c.u64()?;
+            uploads.push((s, mk, c.f64s()?));
         }
         let evict_post = c.u32s()?;
         anyhow::ensure!(c.pos == buf.len(), "trailing bytes in WAL record");
@@ -354,10 +365,10 @@ impl WalRecord {
         for &s in &self.evict_pre {
             evict(server, contrib, s as usize);
         }
-        for (s, dv) in &self.uploads {
+        for (s, mk, dv) in &self.uploads {
             let s = *s as usize;
             server.apply_delta(s, dv);
-            server.stamp_upload(s, self.k as usize);
+            server.stamp_upload(s, *mk as usize);
             match &mut contrib[s] {
                 Some(c) => crate::linalg::axpy(1.0, dv, c),
                 slot @ None => *slot = Some(dv.clone()),
@@ -596,7 +607,9 @@ mod tests {
             d_grad_evals: 2,
             admits: vec![1],
             evict_pre: vec![2],
-            uploads: vec![(0, vec![0.25, -0.5]), (1, vec![1.0, 2.0])],
+            // shard 0's reply answers this round; shard 1's is a parked
+            // straggler reply answering an older broadcast
+            uploads: vec![(0, k, vec![0.25, -0.5]), (1, k.saturating_sub(2), vec![1.0, 2.0])],
             evict_post: vec![0],
         }
     }
@@ -688,9 +701,9 @@ mod tests {
 
         // evict_pre = [2] (held contribution), uploads 0 and 1, step, evict_post = [0]
         live.evict(2, &live_contrib[2].take().unwrap());
-        for (s, dv) in &rec.uploads {
+        for (s, mk, dv) in &rec.uploads {
             live.apply_delta(*s as usize, dv);
-            live.stamp_upload(*s as usize, rec.k as usize);
+            live.stamp_upload(*s as usize, *mk as usize);
             match &mut live_contrib[*s as usize] {
                 Some(c) => crate::linalg::axpy(1.0, dv, c),
                 slot @ None => *slot = Some(dv.clone()),

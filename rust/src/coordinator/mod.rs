@@ -13,11 +13,14 @@
 //! * [`transport`] — a real message-passing deployment: worker threads,
 //!   channels, a serial-uplink latency model.
 //! * [`service`] — the nonblocking event-loop parameter-server service:
-//!   `poll(2)` readiness loop, heartbeat/deadline failure detection,
-//!   elastic membership (late joins, mid-run drops with aggregate
-//!   eviction, checkpoint-handoff rejoins) over the [`wire`] codec, and a
-//!   fsynced write-ahead round log ([`checkpoint::RoundLog`]) that makes
-//!   the leader crash-recoverable with a bit-identical trace.
+//!   `epoll` readiness loop (portable sleep-poll fallback off Linux),
+//!   heartbeat/deadline failure detection, elastic membership (late
+//!   joins, mid-run drops with aggregate eviction, checkpoint-handoff
+//!   rejoins) over the [`wire`] codec, a fsynced write-ahead round log
+//!   ([`checkpoint::RoundLog`]) that makes the leader crash-recoverable
+//!   with a bit-identical trace, and the graceful-degradation ladder
+//!   (deadline-paced rounds with LAG forced skips, write backpressure,
+//!   on-the-wire Byzantine screening — DESIGN.md §13).
 //! * [`faults`] — deterministic byte-level fault injection (short
 //!   reads/writes, corruption, resets, delays) for both socket runtimes
 //!   (DESIGN.md §12).
@@ -44,11 +47,11 @@ pub use faults::{FaultConfig, FaultInjector, FaultStats, FaultStream, IoFault};
 pub use pool::{with_pool, PoolHandle};
 pub use proximal::{prox_run, ProxOptions};
 pub use quantize::QuantizedVec;
-pub use robust::{robust_run, Attack, RobustOptions};
+pub use robust::{robust_run, screen_admits, Attack, RobustOptions, SCREEN_STRIKES};
 pub use run::{run, run_with_workspace, RunOptions, RunWorkspace};
 pub use server::ParameterServer;
 pub use service::{
-    run_service, serve_worker, CrashPoint, FaultPlan, ServiceOptions, ServiceStats,
+    run_service, serve_worker, CrashPoint, EvictCause, FaultPlan, ServiceOptions, ServiceStats,
     WorkerConfig, WorkerExit, WorkerOutcome,
 };
 pub use tcp::{run_leader, run_leader_on, run_worker, TcpOptions};

@@ -69,9 +69,55 @@ pub struct RobustOptions {
 }
 
 impl RobustOptions {
-    /// Options with the default tolerance (1e-6) and eviction patience (3).
+    /// Options with the default tolerance ([`SCREEN_TOLERANCE`]) and
+    /// eviction patience ([`SCREEN_STRIKES`]).
     pub fn new(base: RunOptions, byzantine: Vec<usize>, attack: Attack, defend: bool) -> Self {
-        RobustOptions { base, byzantine, attack, defend, tolerance: 1e-6, evict_after: 3 }
+        RobustOptions {
+            base,
+            byzantine,
+            attack,
+            defend,
+            tolerance: SCREEN_TOLERANCE,
+            evict_after: SCREEN_STRIKES,
+        }
+    }
+}
+
+/// Default multiplicative slack on the smoothness bound (fp headroom).
+/// Shared by [`RobustOptions::new`] and the service leader's `--screen`.
+pub const SCREEN_TOLERANCE: f64 = 1e-6;
+
+/// Default number of consecutive violations before eviction, shared by
+/// [`RobustOptions::new`] and the service leader's quarantine ladder.
+pub const SCREEN_STRIKES: u32 = 3;
+
+/// The smoothness screen as one shared predicate: admit an upload iff
+///
+/// ```text
+///   ‖δ∇‖² ≤ ((1 + tol)·L_m)² · ‖θ − θ̂_m‖² + floor
+/// ```
+///
+/// (all arguments squared — `delta_norm2`, `anchor_dist2`, and
+/// `agg_grad_norm2` are ‖·‖² values as produced by `norm2`/`dist2`). The
+/// absolute floor `1e-18·(1 + ‖∇̄‖²)` covers fp rounding near
+/// machine-precision convergence, where ‖Δθ‖ → 0 makes the relative bound
+/// vacuous; anything under it is harmless by construction.
+/// `anchor_dist2 = None` (no anchor yet) trusts the upload — without an
+/// anchor no screen can bound a first message.
+pub fn screen_admits(
+    delta_norm2: f64,
+    anchor_dist2: Option<f64>,
+    l_m: f64,
+    tolerance: f64,
+    agg_grad_norm2: f64,
+) -> bool {
+    match anchor_dist2 {
+        None => true,
+        Some(d2) => {
+            let floor = 1e-18 * (1.0 + agg_grad_norm2);
+            let lim = (1.0 + tolerance) * l_m;
+            delta_norm2 <= lim * lim * d2 + floor
+        }
     }
 }
 
@@ -155,18 +201,14 @@ pub fn robust_run(
             events[mi].push(k);
 
             if opts.defend && k > 1 {
-                // smoothness screen (exact bound, see module docs). The
-                // absolute floor covers fp rounding near machine-precision
-                // convergence (‖Δθ‖ → 0 makes the relative bound vacuous);
-                // anything under it is harmless by construction.
-                let floor = 1e-18 * (1.0 + norm2(&server.agg_grad));
-                let ok = match server.hat_dist_sq(mi) {
-                    None => true,
-                    Some(d2) => {
-                        let lim = (1.0 + opts.tolerance) * problem.l_m[mi];
-                        norm2(&delta) <= lim * lim * d2 + floor
-                    }
-                };
+                // smoothness screen (exact bound — see [`screen_admits`])
+                let ok = screen_admits(
+                    norm2(&delta),
+                    server.hat_dist_sq(mi),
+                    problem.l_m[mi],
+                    opts.tolerance,
+                    norm2(&server.agg_grad),
+                );
                 if !ok {
                     stats.rejected += 1;
                     if !is_byz {

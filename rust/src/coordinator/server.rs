@@ -120,7 +120,10 @@ impl ParameterServer {
 
     /// Rounds since worker m's last upload as of iteration `k`; `None` if
     /// it has never uploaded (the PS rules treat that as an unconditional
-    /// contact).
+    /// contact). Besides the LASG-PS2 rule, this age is what the service
+    /// leader's `--max-staleness D` cap bounds under deadline pacing: a
+    /// member whose age would reach D is force-waited instead of being
+    /// carried as another forced skip (DESIGN.md §13).
     pub fn upload_age(&self, m: usize, k: usize) -> Option<usize> {
         self.hat_iter[m].map(|last| k.saturating_sub(last))
     }

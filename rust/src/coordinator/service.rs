@@ -5,12 +5,25 @@
 //! a single-threaded *readiness loop*: every socket is nonblocking, frames
 //! are reassembled by the per-connection [`FrameDecoder`] /
 //! [`WriteQueue`] state machines, and the loop multiplexes over a
-//! hand-rolled `poll(2)` shim ([`poller`] — no dependencies; portable
-//! sleep-poll fallback off Linux). On top of that sit:
+//! hand-rolled `epoll` shim ([`poller`] — no dependencies, O(ready)
+//! wakeups; portable sleep-poll fallback off Linux). On top of that sit:
 //!
 //! * **Heartbeats + deadlines** — workers ping while idle; the leader
 //!   declares a silent member dead and a round that misses its reply
 //!   deadline proceeds without the laggard instead of hanging.
+//! * **Graceful degradation** (DESIGN.md §13) — with
+//!   [`ServiceOptions::round_deadline`] set, the leader commits each round
+//!   with whatever uploads arrived by the pace deadline; a missing member
+//!   becomes a LAG *forced skip* (its cached gradient stays in the lazy
+//!   aggregate — zero change to the update rule), bounded by the
+//!   [`ServiceOptions::max_staleness`] cap that force-waits — and
+//!   force-uploads, via a `-∞` trigger RHS — any member whose upload age
+//!   would exceed D. Bounded [`WriteQueue`]s downgrade slow consumers to
+//!   eviction instead of unbounded buffering, admission past
+//!   [`ServiceOptions::max_workers`] is refused, and
+//!   [`ServiceOptions::screen`] runs the smoothness-bound Byzantine
+//!   screen from [`super::robust`] on every upload, feeding the same
+//!   quarantine/evict ladder.
 //! * **Elastic membership** — workers join late (`Hello` proposes a shard,
 //!   the leader answers with an `Assign`), drop mid-run (the leader
 //!   *evicts* their standing contribution from the lazy aggregate and
@@ -35,13 +48,14 @@
 
 use super::checkpoint::{RoundLog, TrainState, WalRecord};
 use super::faults::{FaultConfig, FaultInjector, FaultStream, IoFault};
+use super::robust::{screen_admits, SCREEN_STRIKES, SCREEN_TOLERANCE};
 use super::server::ParameterServer;
 use super::trigger::TriggerConfig;
 use super::wire::{CrcMismatch, FrameDecoder, WireMsg, WriteQueue, ANY_SHARD};
 use super::{Algorithm, RunOptions};
 use crate::data::Problem;
 use crate::grad::worker_grad;
-use crate::linalg::{axpy, dist2, sub};
+use crate::linalg::{axpy, dist2, norm2, sub};
 use crate::metrics::{RunTrace, TraceMeta, TraceRecorder};
 use crate::util::{Backoff, BackoffPolicy};
 use std::collections::VecDeque;
@@ -49,14 +63,23 @@ use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::time::{Duration, Instant};
 
-/// Minimal readiness facade over `poll(2)`. Linux gets the real system
-/// call through a two-line FFI declaration (no crate dependency); other
-/// platforms get a sleep fallback that reports every descriptor ready —
-/// the nonblocking reads then simply return `WouldBlock`, trading a few
-/// spurious wakeups for portability. The fallback sleeps the *caller's*
-/// timeout in full: [`Service::pump`] clamps it to the nearest
-/// heartbeat/round/join deadline, so no fixed bound is needed to keep
-/// deadlines honest.
+/// Minimal readiness facade over `epoll` (ROADMAP item 3: O(ready)
+/// wakeups at thousands of connections, where the previous `poll(2)` shim
+/// paid O(registered) per call). Linux gets the real system calls through
+/// a four-line FFI declaration (no crate dependency); other platforms get
+/// a sleep fallback that reports every descriptor ready — the nonblocking
+/// reads then simply return `WouldBlock`, trading a few spurious wakeups
+/// for portability. The fallback sleeps the *caller's* timeout in full:
+/// [`Service::pump`] clamps it to the nearest heartbeat/round/join
+/// deadline, so no fixed bound is needed to keep deadlines honest.
+///
+/// The [`Poller`] is stateful (an epoll instance persists across calls)
+/// but the interface is unchanged from the `poll(2)` era: the caller
+/// hands [`Poller::wait`] the full interest list each cycle and gets one
+/// [`Readiness`] back per entry, in order. The poller diffs that list
+/// against its registrations (add/modify/delete), so churned connections
+/// — whose file descriptors the kernel recycles — are re-registered
+/// transparently.
 mod poller {
     use std::time::Duration;
 
@@ -90,61 +113,193 @@ mod poller {
     }
 
     #[cfg(target_os = "linux")]
-    pub fn wait(interests: &[Interest], timeout: Duration) -> std::io::Result<Vec<Readiness>> {
+    mod sys {
+        pub const EPOLL_CLOEXEC: i32 = 0o2000000;
+        pub const EPOLL_CTL_ADD: i32 = 1;
+        pub const EPOLL_CTL_DEL: i32 = 2;
+        pub const EPOLL_CTL_MOD: i32 = 3;
+        pub const EPOLLIN: u32 = 0x001;
+        pub const EPOLLOUT: u32 = 0x004;
+        pub const EPOLLERR: u32 = 0x008;
+        pub const EPOLLHUP: u32 = 0x010;
+
+        /// `struct epoll_event` is packed on x86-64 (a historical ABI
+        /// accident the kernel preserves); everywhere else it has natural
+        /// alignment.
+        #[cfg(target_arch = "x86_64")]
+        #[repr(C, packed)]
+        #[derive(Clone, Copy)]
+        pub struct EpollEvent {
+            pub events: u32,
+            pub data: u64,
+        }
+
+        #[cfg(not(target_arch = "x86_64"))]
         #[repr(C)]
-        struct PollFd {
-            fd: i32,
-            events: i16,
-            revents: i16,
+        #[derive(Clone, Copy)]
+        pub struct EpollEvent {
+            pub events: u32,
+            pub data: u64,
         }
-        const POLLIN: i16 = 0x001;
-        const POLLOUT: i16 = 0x004;
-        const POLLERR: i16 = 0x008;
-        const POLLHUP: i16 = 0x010;
-        const POLLNVAL: i16 = 0x020;
+
         extern "C" {
-            fn poll(fds: *mut PollFd, nfds: u64, timeout: i32) -> i32;
+            pub fn epoll_create1(flags: i32) -> i32;
+            pub fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+            pub fn epoll_wait(
+                epfd: i32,
+                events: *mut EpollEvent,
+                maxevents: i32,
+                timeout: i32,
+            ) -> i32;
+            pub fn close(fd: i32) -> i32;
         }
-        let mut fds: Vec<PollFd> = interests
-            .iter()
-            .map(|i| PollFd {
-                fd: i.fd,
-                events: POLLIN | if i.want_write { POLLOUT } else { 0 },
-                revents: 0,
-            })
-            .collect();
-        let ms = timeout.as_millis().min(i32::MAX as u128) as i32;
-        loop {
-            let r = unsafe { poll(fds.as_mut_ptr(), fds.len() as u64, ms) };
-            if r >= 0 {
-                break;
-            }
-            let e = std::io::Error::last_os_error();
-            if e.kind() != std::io::ErrorKind::Interrupted {
-                return Err(e);
-            }
-        }
-        // error/hangup conditions are folded into readability: the next
-        // nonblocking read surfaces the actual EOF or errno
-        Ok(fds
-            .iter()
-            .map(|f| Readiness {
-                readable: f.revents & (POLLIN | POLLHUP | POLLERR | POLLNVAL) != 0,
-                writable: f.revents & (POLLOUT | POLLERR | POLLHUP) != 0,
-            })
-            .collect())
     }
 
+    /// Level-triggered epoll instance plus the fd → interest map it
+    /// currently has registered.
+    #[cfg(target_os = "linux")]
+    #[derive(Debug)]
+    pub struct Poller {
+        epfd: i32,
+        /// fd → `want_write` as registered with the kernel.
+        registered: std::collections::HashMap<i32, bool>,
+    }
+
+    #[cfg(target_os = "linux")]
+    impl Poller {
+        /// Fresh epoll instance (close-on-exec).
+        pub fn new() -> std::io::Result<Self> {
+            let epfd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(std::io::Error::last_os_error());
+            }
+            Ok(Poller { epfd, registered: std::collections::HashMap::new() })
+        }
+
+        fn ctl(&self, op: i32, fd: i32, want_write: bool) -> std::io::Result<()> {
+            let events =
+                sys::EPOLLIN | if want_write { sys::EPOLLOUT } else { 0 };
+            let mut ev = sys::EpollEvent { events, data: fd as u32 as u64 };
+            if unsafe { sys::epoll_ctl(self.epfd, op, fd, &mut ev) } < 0 {
+                return Err(std::io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        /// Register (diffing against the previous call's interest list),
+        /// wait up to `timeout`, and report readiness per interest, in
+        /// order. Interests absent since the last call are deregistered;
+        /// a recycled fd number is re-registered via the MOD/ADD
+        /// fallbacks, so connection churn cannot desynchronize the map.
+        pub fn wait(
+            &mut self,
+            interests: &[Interest],
+            timeout: Duration,
+        ) -> std::io::Result<Vec<Readiness>> {
+            // drop registrations that vanished from the interest list
+            // (closed connections — the kernel usually auto-removes them,
+            // but the fd may already be reused by a new accept)
+            let live: std::collections::HashMap<i32, bool> =
+                interests.iter().map(|i| (i.fd, i.want_write)).collect();
+            let epfd = self.epfd;
+            self.registered.retain(|fd, _| {
+                if live.contains_key(fd) {
+                    return true;
+                }
+                let mut ev = sys::EpollEvent { events: 0, data: 0 };
+                // failure is fine: close() already removed it
+                unsafe { sys::epoll_ctl(epfd, sys::EPOLL_CTL_DEL, *fd, &mut ev) };
+                false
+            });
+            for (&fd, &want_write) in &live {
+                match self.registered.get(&fd) {
+                    Some(&w) if w == want_write => {}
+                    Some(_) => {
+                        // interest changed; ENOENT means the fd was closed
+                        // and recycled since — fall back to a fresh ADD
+                        if self.ctl(sys::EPOLL_CTL_MOD, fd, want_write).is_err() {
+                            self.ctl(sys::EPOLL_CTL_ADD, fd, want_write)?;
+                        }
+                        self.registered.insert(fd, want_write);
+                    }
+                    None => {
+                        // EEXIST means a recycled fd the kernel still has
+                        // registered from its previous life — MOD it
+                        if self.ctl(sys::EPOLL_CTL_ADD, fd, want_write).is_err() {
+                            self.ctl(sys::EPOLL_CTL_MOD, fd, want_write)?;
+                        }
+                        self.registered.insert(fd, want_write);
+                    }
+                }
+            }
+            let mut events =
+                vec![sys::EpollEvent { events: 0, data: 0 }; interests.len().max(1)];
+            let ms = timeout.as_millis().min(i32::MAX as u128) as i32;
+            let n = loop {
+                let r = unsafe {
+                    sys::epoll_wait(self.epfd, events.as_mut_ptr(), events.len() as i32, ms)
+                };
+                if r >= 0 {
+                    break r as usize;
+                }
+                let e = std::io::Error::last_os_error();
+                if e.kind() != std::io::ErrorKind::Interrupted {
+                    return Err(e);
+                }
+            };
+            // map fd-keyed kernel events back onto interest-list order;
+            // error/hangup conditions are folded into readability (and
+            // writability), so the next nonblocking op surfaces the
+            // actual EOF or errno
+            let pos: std::collections::HashMap<i32, usize> =
+                interests.iter().enumerate().map(|(p, i)| (i.fd, p)).collect();
+            let mut out = vec![Readiness::default(); interests.len()];
+            for ev in &events[..n] {
+                let bits = ev.events;
+                if let Some(&p) = pos.get(&(ev.data as u32 as i32)) {
+                    out[p] = Readiness {
+                        readable: bits & (sys::EPOLLIN | sys::EPOLLHUP | sys::EPOLLERR) != 0,
+                        writable: bits & (sys::EPOLLOUT | sys::EPOLLERR | sys::EPOLLHUP) != 0,
+                    };
+                }
+            }
+            Ok(out)
+        }
+    }
+
+    #[cfg(target_os = "linux")]
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            unsafe { sys::close(self.epfd) };
+        }
+    }
+
+    /// Portable fallback: sleep the (caller-clamped) timeout, then report
+    /// everything ready — nonblocking I/O turns the spurious wakeups into
+    /// cheap `WouldBlock`s.
     #[cfg(not(target_os = "linux"))]
-    pub fn wait(interests: &[Interest], timeout: Duration) -> std::io::Result<Vec<Readiness>> {
-        // `timeout` is already clamped to the poll tick *and* the nearest
-        // wall-clock deadline by the caller, so sleep it in full instead
-        // of busy-polling on a fixed bound
-        std::thread::sleep(timeout);
-        Ok(interests
-            .iter()
-            .map(|i| Readiness { readable: true, writable: i.want_write })
-            .collect())
+    #[derive(Debug)]
+    pub struct Poller;
+
+    #[cfg(not(target_os = "linux"))]
+    impl Poller {
+        /// Fresh (stateless) fallback poller.
+        pub fn new() -> std::io::Result<Self> {
+            Ok(Poller)
+        }
+
+        /// Sleep `timeout` in full, then report every descriptor ready.
+        pub fn wait(
+            &mut self,
+            interests: &[Interest],
+            timeout: Duration,
+        ) -> std::io::Result<Vec<Readiness>> {
+            std::thread::sleep(timeout);
+            Ok(interests
+                .iter()
+                .map(|i| Readiness { readable: true, writable: i.want_write })
+                .collect())
+        }
     }
 }
 
@@ -201,6 +356,39 @@ pub struct ServiceOptions {
     pub resume_wal: bool,
     /// Scheduled crash for the chaos tests (`None` in production).
     pub crash: Option<CrashPoint>,
+    /// Deadline-paced rounds (DESIGN.md §13): once this much wall-clock
+    /// time passes after a broadcast, the round commits with whatever
+    /// uploads arrived; members still computing become *forced skips* —
+    /// their cached gradient stays in the lazy aggregate, exactly a LAG
+    /// skip — and their late reply is parked in flight and applied at a
+    /// later commit. `None` ⇒ the legacy blocking behavior (every round
+    /// waits for every member up to [`ServiceOptions::round_timeout`]).
+    pub round_deadline: Option<Duration>,
+    /// Staleness cap D for deadline pacing, mirroring LASG-PS2's D-round
+    /// discipline: a member whose upload age would reach D (see
+    /// [`ParameterServer::upload_age`]) is force-waited (the pace deadline
+    /// does not skip it) *and* force-uploaded (its `Round` carries a `-∞`
+    /// trigger RHS, which no gradient change can satisfy). `0` ⇒ no cap.
+    pub max_staleness: usize,
+    /// Evict a member after this many *consecutive* forced skips (missed
+    /// pace deadlines) — the quarantine rung of the degradation ladder.
+    /// `0` ⇒ never.
+    pub miss_limit: usize,
+    /// Write backpressure: a connection whose [`WriteQueue`] holds more
+    /// than this many pending bytes is a slow consumer — it is dropped
+    /// (and its shard evicted, cause [`EvictCause::SlowConsumer`]) instead
+    /// of buffering the leader toward OOM. `0` ⇒ unbounded.
+    pub max_queued_bytes: usize,
+    /// Admission control: once this many shards are owned, further
+    /// `Hello`s are answered with [`WireMsg::Reject`]. `0` ⇒ no cap
+    /// (every shard may be owned).
+    pub max_workers: usize,
+    /// Screen every upload on the wire with the smoothness bound from
+    /// [`super::robust`]: ‖δ∇‖ ≤ (1+ε)·L_m·‖θ̂_m − θᵏ‖ is a theorem for
+    /// honest workers, so violations are Byzantine; three consecutive
+    /// strikes quarantine the shard (its `Hello`s are refused for the
+    /// rest of the run) and evict the member.
+    pub screen: bool,
 }
 
 impl Default for ServiceOptions {
@@ -217,6 +405,12 @@ impl Default for ServiceOptions {
             wal: None,
             resume_wal: false,
             crash: None,
+            round_deadline: None,
+            max_staleness: 0,
+            miss_limit: 0,
+            max_queued_bytes: 0,
+            max_workers: 0,
+            screen: false,
         }
     }
 }
@@ -238,6 +432,17 @@ pub struct FaultPlan {
     /// rejoin round is then whatever the race produces — fine for chaos
     /// tests, not for byte-compared runs).
     pub admit_at: Vec<(usize, usize)>,
+    /// `(from_k, shard, resume_k)`: deterministic straggler window for the
+    /// deadline-pacing tests. The member owning `shard` is broadcast round
+    /// `from_k` as usual, but its reply is *diverted* — parked in flight —
+    /// and rounds `from_k..resume_k` commit without it (forced skips, its
+    /// cached gradient standing in); round `resume_k` force-waits for the
+    /// parked reply and applies it. Keyed to the virtual round clock, not
+    /// wall time, so two runs of the same plan byte-compare equal however
+    /// the real socket timing interleaves. Requires `resume_k > from_k`;
+    /// windows for one shard must not overlap; incompatible with
+    /// scheduled crashes / WAL resume (in-flight state is not durable).
+    pub straggle: Vec<(usize, usize, usize)>,
     /// Seeded byte-level fault injection on the leader's socket I/O
     /// (short reads/writes, corruption, resets, delays — see
     /// [`FaultConfig`]). Timing-only configs are trace-neutral; corruption
@@ -248,7 +453,44 @@ pub struct FaultPlan {
 impl FaultPlan {
     /// True when the plan injects nothing.
     pub fn is_empty(&self) -> bool {
-        self.drop_after.is_empty() && self.admit_at.is_empty() && !self.io.is_enabled()
+        self.drop_after.is_empty()
+            && self.admit_at.is_empty()
+            && self.straggle.is_empty()
+            && !self.io.is_enabled()
+    }
+}
+
+/// Why a member left the fleet — the per-event eviction causes
+/// [`ServiceStats::robustness_json`] reports (the degradation ladder's
+/// exit rungs, DESIGN.md §13).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictCause {
+    /// Connection loss: EOF, reset, a protocol violation, a corrupt
+    /// frame, or heartbeat silence.
+    HeartbeatLoss,
+    /// Missed the round deadline: the hard `round_timeout` force-drop, or
+    /// [`ServiceOptions::miss_limit`] consecutive forced skips.
+    DeadlineMiss,
+    /// Write queue exceeded [`ServiceOptions::max_queued_bytes`]: the
+    /// peer reads slower than the leader broadcasts.
+    SlowConsumer,
+    /// Struck out against the smoothness screen
+    /// ([`ServiceOptions::screen`]); the shard is also quarantined.
+    ScreenViolation,
+    /// Scheduled drop from the [`FaultPlan`] (tests).
+    Scheduled,
+}
+
+impl EvictCause {
+    /// Stable snake_case key used in the JSON stats artifact.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EvictCause::HeartbeatLoss => "heartbeat_loss",
+            EvictCause::DeadlineMiss => "deadline_miss",
+            EvictCause::SlowConsumer => "slow_consumer",
+            EvictCause::ScreenViolation => "screen_violation",
+            EvictCause::Scheduled => "scheduled",
+        }
     }
 }
 
@@ -272,6 +514,19 @@ pub struct ServiceStats {
     pub corrupt_frames_dropped: u64,
     /// Durable write-ahead-log bytes at exit (`0` without a WAL).
     pub wal_bytes: u64,
+    /// Rounds committed while a member's reply was still in flight — one
+    /// count per member per skipped round (deadline pacing, DESIGN.md
+    /// §13).
+    pub forced_skips: u64,
+    /// Uploads rejected by the smoothness screen
+    /// ([`ServiceOptions::screen`]).
+    pub screen_rejected: u64,
+    /// Shards quarantined by the screen's strike ladder: their `Hello`s
+    /// are refused for the rest of the run.
+    pub quarantined: u64,
+    /// Eviction log — `(shard, cause)` in the order the evictions were
+    /// applied. `eviction_causes.len() == evictions`.
+    pub eviction_causes: Vec<(u32, EvictCause)>,
     /// Final iterate θ (bit-compared by the determinism tests).
     pub final_theta: Vec<f64>,
 }
@@ -279,17 +534,49 @@ pub struct ServiceStats {
 impl ServiceStats {
     /// The robustness counters as a deterministic JSON object (sorted
     /// keys) — the shape `lag leader --stats-out` writes next to the run
-    /// trace so chaos/soak jobs can assert on it.
+    /// trace so chaos/soak jobs can assert on it. Evictions are reported
+    /// three ways: the aggregate count, a per-cause histogram
+    /// (`evictions_by_cause`, every cause key always present), and the
+    /// ordered per-event log (`eviction_log`).
     pub fn robustness_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
         let n = |v: u64| Json::Num(v as f64);
+        const CAUSES: [EvictCause; 5] = [
+            EvictCause::HeartbeatLoss,
+            EvictCause::DeadlineMiss,
+            EvictCause::SlowConsumer,
+            EvictCause::ScreenViolation,
+            EvictCause::Scheduled,
+        ];
+        let by_cause = CAUSES
+            .iter()
+            .map(|c| {
+                let count = self.eviction_causes.iter().filter(|(_, ec)| ec == c).count();
+                (c.name(), n(count as u64))
+            })
+            .collect();
+        let log = self
+            .eviction_causes
+            .iter()
+            .map(|(s, c)| {
+                Json::obj(vec![
+                    ("cause", Json::Str(c.name().into())),
+                    ("shard", n(*s as u64)),
+                ])
+            })
+            .collect();
         Json::obj(vec![
             ("bytes_down", n(self.bytes_down)),
             ("bytes_up", n(self.bytes_up)),
             ("corrupt_frames_dropped", n(self.corrupt_frames_dropped)),
+            ("eviction_log", Json::Arr(log)),
             ("evictions", n(self.evictions)),
+            ("evictions_by_cause", Json::obj(by_cause)),
+            ("forced_skips", n(self.forced_skips)),
             ("joins", n(self.joins)),
+            ("quarantined", n(self.quarantined)),
             ("retries", n(self.retries)),
+            ("screen_rejected", n(self.screen_rejected)),
             ("wal_bytes", n(self.wal_bytes)),
         ])
     }
@@ -312,6 +599,10 @@ struct Conn {
     replied: bool,
     /// Set when the connection must be discarded (EOF, protocol error).
     dead: bool,
+    /// Set alongside `dead` when the write queue blew past the
+    /// backpressure bound — the eviction is then attributed to
+    /// [`EvictCause::SlowConsumer`] instead of a plain death.
+    slow: bool,
     /// Hang up once the write queue drains (set after staging a `Reject`
     /// so the refusal actually reaches the peer before the close).
     closing: bool,
@@ -329,9 +620,30 @@ impl Conn {
             last_seen: Instant::now(),
             replied: false,
             dead: false,
+            slow: false,
             closing: false,
         }
     }
+}
+
+/// A reply parked in flight: the member was broadcast round `k` but the
+/// round committed without it (deadline pacing). Its delta — answering
+/// θᵏ, the iterate it was actually computed at — lands at a later commit.
+struct Inflight {
+    /// The round the parked reply answers (uploads are stamped with this,
+    /// so staleness accounting stays honest).
+    k: usize,
+    /// Apply exactly at this round (scheduled [`FaultPlan::straggle`]
+    /// windows — the commit force-waits); `None` ⇒ apply at the first
+    /// commit after the reply arrives.
+    due: Option<usize>,
+    /// The parked reply once it arrives (`Some(None)` is a skip reply —
+    /// nothing to apply).
+    delta: Option<Option<Vec<f64>>>,
+    /// θᵏ the reply answers, kept only while the smoothness screen is on
+    /// (the screen's distance term must be measured at the answered
+    /// iterate, not the current one).
+    theta: Option<Vec<f64>>,
 }
 
 /// The leader's mutable world, threaded through the phase helpers.
@@ -349,9 +661,31 @@ struct Service {
     /// Shards that have been owned at least once (a later admission of the
     /// same shard is a reconnect, counted in `ServiceStats::retries`).
     ever_owned: Vec<bool>,
+    /// Per-shard parked reply (deadline pacing) — `Some` while the member
+    /// is in flight: broadcast but not yet applied.
+    pending: Vec<Option<Inflight>>,
+    /// Consecutive forced skips per shard (reset by any applied upload or
+    /// on-time reply); reaching [`ServiceOptions::miss_limit`] evicts.
+    miss_counts: Vec<u32>,
+    /// Smoothness-screen anchors: θ at each shard's last *accepted*
+    /// upload (`None` ⇒ first contact, trusted once). Only populated when
+    /// the screen is on.
+    anchors: Vec<Option<Vec<f64>>>,
+    /// Consecutive screen violations per shard (reset on accept).
+    strikes: Vec<u32>,
+    /// Shards struck out by the screen: evicted, and refused re-admission
+    /// for the rest of the run.
+    quarantined: Vec<bool>,
+    /// Backpressure bound on each connection's write queue (`0` ⇒
+    /// unbounded) — [`ServiceOptions::max_queued_bytes`].
+    max_queued: usize,
+    /// Admission cap ([`ServiceOptions::max_workers`], `0` ⇒ none).
+    max_workers: usize,
     /// Byte-level fault injection on every socket read/write (`None` ⇒
     /// the fault-free hot path draws nothing).
     inj: Option<FaultInjector>,
+    /// Readiness multiplexer (epoll on Linux).
+    poller: poller::Poller,
     stats: ServiceStats,
     tick: Duration,
 }
@@ -374,7 +708,7 @@ impl Service {
                 idxs.push(i);
             }
         }
-        let ready = poller::wait(&interests, self.tick.min(max_wait))?;
+        let ready = self.poller.wait(&interests, self.tick.min(max_wait))?;
         if ready[0].readable {
             self.accept_all()?;
         }
@@ -526,27 +860,42 @@ impl Service {
         }
     }
 
-    /// Stage a frame on connection `i` (accounted in `bytes_down`).
+    /// Stage a frame on connection `i` (accounted in `bytes_down`). With
+    /// a backpressure bound set, a queue that exceeds it marks the
+    /// connection a dead slow consumer — the frames already staged are
+    /// dropped with it, bounding leader memory at `max_queued` bytes per
+    /// connection instead of growing with every broadcast a lagging peer
+    /// fails to drain.
     fn send(&mut self, i: usize, msg: &WireMsg) {
         if let Some(c) = &mut self.conns[i] {
             self.stats.bytes_down += c.out.push(msg);
+            if self.max_queued > 0 && c.out.pending().len() > self.max_queued {
+                c.dead = true;
+                c.slow = true;
+            }
         }
     }
 
     /// Remove every connection flagged dead; returns the shards they
-    /// owned, with the replied flag, in ascending shard order.
-    fn reap_dead(&mut self) -> Vec<(usize, bool)> {
+    /// owned — with the replied flag and the eviction cause the death
+    /// maps to — in ascending shard order.
+    fn reap_dead(&mut self) -> Vec<(usize, bool, EvictCause)> {
         let mut lost = Vec::new();
         for slot in self.conns.iter_mut() {
             if matches!(slot, Some(c) if c.dead) {
                 let c = slot.take().unwrap();
                 if let Some(s) = c.shard {
                     self.owner[s] = None;
-                    lost.push((s, c.replied));
+                    let cause = if c.slow {
+                        EvictCause::SlowConsumer
+                    } else {
+                        EvictCause::HeartbeatLoss
+                    };
+                    lost.push((s, c.replied, cause));
                 }
             }
         }
-        lost.sort_unstable();
+        lost.sort_unstable_by_key(|&(s, _, _)| s);
         lost
     }
 
@@ -578,10 +927,11 @@ impl Service {
     /// round the new member first participates in (stamped on `Assign`).
     /// Granted shards are appended to `admits` (the WAL's membership
     /// delta). A `Hello` claiming a shard another live member owns — or
-    /// one out of range — is answered with a [`WireMsg::Reject`] naming
-    /// the offending claim, and the connection hangs up once the refusal
-    /// flushes; a shard *held* for a scheduled rejoin round merely stays
-    /// pending.
+    /// one out of range, or a quarantined shard, or any claim past the
+    /// [`ServiceOptions::max_workers`] admission cap — is answered with a
+    /// [`WireMsg::Reject`] naming the offending claim, and the connection
+    /// hangs up once the refusal flushes; a shard *held* for a scheduled
+    /// rejoin round merely stays pending.
     fn admit_pending(&mut self, effective_k: usize, admits: &mut Vec<u32>) {
         for i in 0..self.conns.len() {
             let proposed = match &self.conns[i] {
@@ -592,16 +942,34 @@ impl Service {
                 _ => continue,
             };
             let m = self.owner.len();
-            // a shard is grantable when unowned and not held for a
-            // re-admission round later than this one
+            // admission control: a full fleet refuses every new claim
+            // outright (the peer should not sit in the pending pool
+            // burning a connection slot until someone leaves)
+            if self.max_workers > 0 && self.members() >= self.max_workers {
+                self.send(i, &WireMsg::Reject { worker: proposed });
+                if let Some(c) = &mut self.conns[i] {
+                    c.hello = None;
+                    c.closing = true;
+                }
+                continue;
+            }
+            // a shard is grantable when unowned, not quarantined, and not
+            // held for a re-admission round later than this one
             let free = |s: usize, svc: &Service| {
-                svc.owner[s].is_none() && !matches!(svc.admit_round[s], Some(r) if r > effective_k)
+                svc.owner[s].is_none()
+                    && !svc.quarantined[s]
+                    && !matches!(svc.admit_round[s], Some(r) if r > effective_k)
             };
             let shard = if proposed == ANY_SHARD {
-                (0..m).find(|&s| self.owner[s].is_none() && self.admit_round[s].is_none())
+                (0..m).find(|&s| {
+                    self.owner[s].is_none() && !self.quarantined[s] && self.admit_round[s].is_none()
+                })
             } else if (proposed as usize) < m && free(proposed as usize, self) {
                 Some(proposed as usize)
-            } else if (proposed as usize) < m && self.owner[proposed as usize].is_none() {
+            } else if (proposed as usize) < m
+                && self.owner[proposed as usize].is_none()
+                && !self.quarantined[proposed as usize]
+            {
                 None // held for a scheduled rejoin round: stay pending
             } else {
                 // duplicate claim on a live member's shard, or out of
@@ -617,6 +985,7 @@ impl Service {
             let Some(s) = shard else { continue };
             self.owner[s] = Some(i);
             self.admit_round[s] = None;
+            self.miss_counts[s] = 0;
             self.stats.joins += 1;
             if self.ever_owned[s] {
                 self.stats.retries += 1; // a reconnect, not a first join
@@ -642,15 +1011,22 @@ impl Service {
     }
 
     /// Evict shard `s`: subtract its standing contribution from the lazy
-    /// aggregate and forget its caches (rejoin becomes first contact).
-    fn evict(&mut self, ps: &mut ParameterServer, s: usize) {
+    /// aggregate and forget its caches — parked in-flight reply, screen
+    /// anchor, strike and miss counters included (rejoin becomes first
+    /// contact). The cause is recorded in the per-event eviction log.
+    fn evict(&mut self, ps: &mut ParameterServer, s: usize, cause: EvictCause) {
         if let Some(g) = self.contrib[s].take() {
             ps.evict(s, &g);
         } else {
             ps.hat_theta[s] = None;
             ps.hat_iter[s] = None;
         }
+        self.pending[s] = None;
+        self.anchors[s] = None;
+        self.strikes[s] = 0;
+        self.miss_counts[s] = 0;
         self.stats.evictions += 1;
+        self.stats.eviction_causes.push((s as u32, cause));
     }
 
     /// Drop the member owning shard `s` on purpose (scheduled fault):
@@ -660,6 +1036,50 @@ impl Service {
             self.conns[i] = None; // drop closes the socket
         }
     }
+}
+
+/// Screen one upload through the smoothness bound ([`screen_admits`]),
+/// anchored at the θ of the shard's last *accepted* upload — the wire
+/// analogue of θ̂_m. The leader keeps its own anchors rather than trusting
+/// a worker's cache claims, so a Byzantine member cannot launder a bad
+/// delta by lying about what it cached. First contact (no anchor yet) is
+/// trusted, mirroring the robust driver's trusted-bootstrap assumption.
+/// `answered` is the broadcast θ the delta responds to — the current
+/// iterate for on-time replies, the parked round's iterate for stragglers.
+///
+/// Returns whether the delta may enter the aggregate. A rejection bumps
+/// the shard's strike ladder; [`SCREEN_STRIKES`] consecutive strikes mark
+/// it quarantined (its future `Hello`s are refused) and append it to
+/// `quarantine` for the caller to evict after the step.
+fn screen_upload(
+    svc: &mut Service,
+    ps: &ParameterServer,
+    problem: &Problem,
+    s: usize,
+    delta: &[f64],
+    answered: &[f64],
+    quarantine: &mut Vec<usize>,
+) -> bool {
+    let admitted = screen_admits(
+        norm2(delta),
+        svc.anchors[s].as_ref().map(|a| dist2(a, answered)),
+        problem.l_m[s],
+        SCREEN_TOLERANCE,
+        norm2(&ps.agg_grad),
+    );
+    if admitted {
+        svc.strikes[s] = 0;
+        svc.anchors[s] = Some(answered.to_vec());
+    } else {
+        svc.stats.screen_rejected += 1;
+        svc.strikes[s] += 1;
+        if svc.strikes[s] >= SCREEN_STRIKES && !svc.quarantined[s] {
+            svc.quarantined[s] = true;
+            svc.stats.quarantined += 1;
+            quarantine.push(s);
+        }
+    }
+    admitted
 }
 
 /// Run the event-loop leader on a pre-bound listener until
@@ -707,12 +1127,28 @@ pub fn run_service(
         admit_round: vec![None; m],
         contrib,
         ever_owned: vec![false; m],
+        pending: (0..m).map(|_| None).collect(),
+        miss_counts: vec![0; m],
+        anchors: vec![None; m],
+        strikes: vec![0; m],
+        quarantined: vec![false; m],
+        max_queued: sopts.max_queued_bytes,
+        max_workers: sopts.max_workers,
         inj: if faults.io.is_enabled() { Some(FaultInjector::new(&faults.io)) } else { None },
+        poller: poller::Poller::new()?,
         stats: ServiceStats::default(),
         tick: sopts.tick,
     };
     for &(_, s) in faults.admit_at.iter().chain(&faults.drop_after) {
         anyhow::ensure!(s < m, "fault-plan shard {s} out of range");
+    }
+    for &(fk, s, rk) in &faults.straggle {
+        anyhow::ensure!(s < m, "straggle-plan shard {s} out of range");
+        anyhow::ensure!(rk > fk, "straggle window for shard {s} must end after round {fk}");
+        anyhow::ensure!(
+            sopts.crash.is_none() && !sopts.resume_wal,
+            "straggle plans cannot cross a leader crash (in-flight replies are not durable)"
+        );
     }
 
     // write-ahead round log (DESIGN.md §12): every completed round is
@@ -746,8 +1182,8 @@ pub fn run_service(
                 rec.replay(&mut ps, &mut svc.contrib, alpha);
                 uploads += rec.d_uploads;
                 downloads += rec.d_downloads;
-                for (s, _) in &rec.uploads {
-                    events[*s as usize].push(rec.k as usize);
+                for (s, mk, _) in &rec.uploads {
+                    events[*s as usize].push(*mk as usize);
                 }
                 for &a in &rec.admits {
                     svc.ever_owned[a as usize] = true;
@@ -823,8 +1259,8 @@ pub fn run_service(
             // the broadcast — its contribution leaves the aggregate now
             // (and before admissions, so a rejoiner is not refused over
             // its own dead predecessor)
-            for (s, _) in svc.reap_dead() {
-                svc.evict(&mut ps, s);
+            for (s, _, cause) in svc.reap_dead() {
+                svc.evict(&mut ps, s, cause);
                 evict_pre.push(s as u32);
             }
             svc.admit_pending(k, &mut wal_admits);
@@ -850,40 +1286,115 @@ pub fn run_service(
         }
 
         // -- phase B: broadcast and collect ---------------------------
+        // every owned shard is a member this round, but members with a
+        // reply already in flight (deadline pacing) are not re-broadcast
+        // — they are still computing an earlier θ
         let members: Vec<usize> = (0..m).filter(|&s| svc.owner[s].is_some()).collect();
-        let round = WireMsg::Round {
+        let pacing = sopts.round_deadline.is_some();
+        // staleness discipline (LASG-PS2): a member whose upload age
+        // would reach D is force-waited (the pace deadline must not skip
+        // it) and — when it is broadcast — force-uploaded via a -∞ RHS,
+        // which no gradient change satisfies; a member with no standing
+        // upload at all (first contact) is always force-waited
+        let mut wait_member = vec![false; m];
+        let mut force_upload = vec![false; m];
+        if pacing {
+            for &s in &members {
+                match ps.hat_iter[s] {
+                    None => wait_member[s] = true,
+                    Some(last) => {
+                        if sopts.max_staleness > 0
+                            && k.saturating_sub(last) >= sopts.max_staleness
+                        {
+                            wait_member[s] = true;
+                            if svc.pending[s].is_none() {
+                                force_upload[s] = true;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let rhs = trigger.rhs(alpha, m, &ps.history);
+        let normal = WireMsg::Round { k: k as u64, rhs, theta: ps.theta.clone() };
+        let forced = members.iter().any(|&s| force_upload[s]).then(|| WireMsg::Round {
             k: k as u64,
-            rhs: trigger.rhs(alpha, m, &ps.history),
+            rhs: f64::NEG_INFINITY,
             theta: ps.theta.clone(),
-        };
+        });
+        let mut is_participant = vec![false; m];
+        let mut broadcast = 0u64;
         for &s in &members {
+            if svc.pending[s].is_some() {
+                continue; // in flight: still owes an earlier round's reply
+            }
+            is_participant[s] = true;
             let i = svc.owner[s].unwrap();
             if let Some(c) = &mut svc.conns[i] {
                 c.replied = false;
             }
-            svc.send(i, &round);
+            match (&forced, force_upload[s]) {
+                (Some(fmsg), true) => svc.send(i, fmsg),
+                _ => svc.send(i, &normal),
+            }
+            broadcast += 1;
         }
-        downloads += members.len() as u64;
+        downloads += broadcast;
+        // θᵏ as the screen will need it for replies that land late
+        let theta_k: Option<Vec<f64>> = sopts.screen.then(|| ps.theta.clone());
+        // scheduled straggler windows: divert this round's reply into the
+        // in-flight slot *now*, so rounds from_k..resume_k commit without
+        // the member however fast its reply actually arrives — deadline
+        // decisions keyed to the round clock, not wall time. The staleness
+        // cap outranks the plan: a force-waited member is not diverted, so
+        // committed upload ages stay ≤ D unconditionally.
+        for &(fk, s, rk) in &faults.straggle {
+            if fk == k && is_participant[s] && !wait_member[s] && svc.pending[s].is_none() {
+                is_participant[s] = false;
+                svc.pending[s] =
+                    Some(Inflight { k, due: Some(rk), delta: None, theta: theta_k.clone() });
+            }
+        }
 
         let mut deltas: Vec<Option<Option<Vec<f64>>>> = vec![None; m];
-        let mut lost_unreplied: Vec<usize> = Vec::new();
-        let mut lost_replied: Vec<usize> = Vec::new();
+        let mut lost_unreplied: Vec<(usize, EvictCause)> = Vec::new();
+        let mut lost_replied: Vec<(usize, EvictCause)> = Vec::new();
         let reply_deadline = Instant::now() + sopts.round_timeout;
+        let pace_deadline = sopts.round_deadline.map(|d| Instant::now() + d);
         loop {
             svc.absorb_control();
-            // collect queued Deltas from members
-            for s in &members {
-                let Some(i) = svc.owner[*s] else { continue };
+            // route queued Deltas: an on-time reply from a participant
+            // lands in this round's slot; a parked member's reply —
+            // answering the round it was diverted from — lands in its
+            // in-flight slot
+            for &s in &members {
+                let Some(i) = svc.owner[s] else { continue };
                 let Some(c) = &mut svc.conns[i] else { continue };
                 while let Some(msg) = c.inbox.pop_front() {
                     match msg {
-                        WireMsg::Delta { k: mk, worker, delta } if mk == k as u64 => {
+                        WireMsg::Delta { k: mk, worker, delta } => {
                             let ws = worker as usize;
-                            if ws == *s && deltas[ws].is_none() {
-                                deltas[ws] = Some(delta);
-                                c.replied = true;
-                            } else {
+                            if ws != s {
                                 c.dead = true;
+                                break;
+                            }
+                            match &mut svc.pending[s] {
+                                Some(p) if p.delta.is_none() && mk == p.k as u64 => {
+                                    p.delta = Some(delta);
+                                    c.replied = true;
+                                }
+                                None if is_participant[s]
+                                    && mk == k as u64
+                                    && deltas[s].is_none() =>
+                                {
+                                    deltas[s] = Some(delta);
+                                    c.replied = true;
+                                }
+                                _ => {
+                                    c.dead = true;
+                                }
+                            }
+                            if c.dead {
                                 break;
                             }
                         }
@@ -897,8 +1408,8 @@ pub fn run_service(
             }
             // a member silent past the heartbeat window is dead
             let now = Instant::now();
-            for s in &members {
-                if let Some(i) = svc.owner[*s] {
+            for &s in &members {
+                if let Some(i) = svc.owner[s] {
                     if let Some(c) = &mut svc.conns[i] {
                         if !c.replied && now.duration_since(c.last_seen) > sopts.heartbeat_timeout
                         {
@@ -907,34 +1418,100 @@ pub fn run_service(
                     }
                 }
             }
-            for (s, replied) in svc.reap_dead() {
-                if replied {
-                    lost_replied.push(s);
+            for (s, replied, cause) in svc.reap_dead() {
+                let inflight = svc.pending[s].is_some();
+                if inflight {
+                    // an in-flight member died: its parked reply (arrived
+                    // or not) never entered the aggregate — discard it
+                    svc.pending[s] = None;
+                }
+                if replied && !inflight {
+                    lost_replied.push((s, cause));
                 } else {
-                    lost_unreplied.push(s);
+                    lost_unreplied.push((s, cause));
                     deltas[s] = None; // discard any partial state
                 }
             }
-            let outstanding = members
-                .iter()
-                .any(|&s| svc.owner[s].is_some() && deltas[s].is_none());
-            if !outstanding {
+            // pace deadline: park every outstanding participant that is
+            // not force-waited and commit without it — a LAG forced skip
+            if let Some(pd) = pace_deadline {
+                if Instant::now() >= pd {
+                    for &s in &members {
+                        if is_participant[s]
+                            && svc.owner[s].is_some()
+                            && svc.pending[s].is_none()
+                            && deltas[s].is_none()
+                            && !wait_member[s]
+                        {
+                            svc.pending[s] = Some(Inflight {
+                                k,
+                                due: None,
+                                delta: None,
+                                theta: theta_k.clone(),
+                            });
+                        }
+                    }
+                }
+            }
+            // the round is gated by (a) participants that neither replied
+            // nor were paced out, and (b) in-flight replies that must
+            // land at this commit: a scheduled window due now, or a
+            // member whose staleness the cap no longer tolerates
+            let outstanding = members.iter().any(|&s| {
+                is_participant[s]
+                    && svc.owner[s].is_some()
+                    && svc.pending[s].is_none()
+                    && deltas[s].is_none()
+            });
+            let blocked = members.iter().any(|&s| {
+                svc.owner[s].is_some()
+                    && matches!(&svc.pending[s], Some(p) if p.delta.is_none()
+                        && (p.due.is_some_and(|r| r <= k)
+                            || (p.due.is_none() && wait_member[s])))
+            });
+            if !outstanding && !blocked {
                 break;
             }
             if Instant::now() >= reply_deadline {
-                // deadline miss ≡ death: evict the laggards and move on
+                // deadline miss ≡ death: evict whoever still gates the
+                // round and move on
                 for &s in &members {
-                    if svc.owner[s].is_some() && deltas[s].is_none() {
+                    if svc.owner[s].is_none() {
+                        continue;
+                    }
+                    let gating = match &svc.pending[s] {
+                        None => is_participant[s] && deltas[s].is_none(),
+                        Some(p) => {
+                            p.delta.is_none()
+                                && (p.due.is_some_and(|r| r <= k)
+                                    || (p.due.is_none() && wait_member[s]))
+                        }
+                    };
+                    if gating {
                         svc.force_drop(s);
-                        lost_unreplied.push(s);
+                        svc.pending[s] = None;
+                        lost_unreplied.push((s, EvictCause::DeadlineMiss));
                     }
                 }
                 break;
             }
             // clamp the poll to the nearest wall-clock deadline — the
-            // round's reply budget or the earliest heartbeat expiry —
-            // which keeps the non-Linux sleep fallback deadline-accurate
+            // round's reply budget, the pace deadline while it can still
+            // park someone, or the earliest heartbeat expiry — which
+            // keeps the non-Linux sleep fallback deadline-accurate
             let mut wake = reply_deadline;
+            if let Some(pd) = pace_deadline {
+                let paceable = members.iter().any(|&s| {
+                    is_participant[s]
+                        && svc.owner[s].is_some()
+                        && svc.pending[s].is_none()
+                        && deltas[s].is_none()
+                        && !wait_member[s]
+                });
+                if paceable {
+                    wake = wake.min(pd);
+                }
+            }
             for &s in &members {
                 if let Some(i) = svc.owner[s] {
                     if let Some(c) = &svc.conns[i] {
@@ -948,44 +1525,114 @@ pub fn run_service(
         }
 
         // -- apply the round deterministically ------------------------
-        // members that vanished *without* replying leave the aggregate
-        // before the step (their old gradient no longer represents them);
-        lost_unreplied.sort_unstable();
-        for &s in &lost_unreplied {
-            svc.evict(&mut ps, s);
+        // members that vanished *without* contributing leave the
+        // aggregate before the step (their old gradient no longer
+        // represents them)
+        lost_unreplied.sort_unstable_by_key(|&(s, _)| s);
+        for &(s, cause) in &lost_unreplied {
+            svc.evict(&mut ps, s, cause);
             evict_pre.push(s as u32);
         }
-        // surviving uploads land in ascending shard order
-        let mut wal_uploads: Vec<(u32, Vec<f64>)> = Vec::new();
+        // surviving uploads land in ascending shard order: on-time
+        // replies apply at this round's θ; ripe parked replies — a
+        // scheduled window due now, or a wall-paced reply that has
+        // arrived — apply at the θ they answered and are stamped with
+        // that round, so staleness accounting stays honest
+        let mut wal_uploads: Vec<(u32, u64, Vec<f64>)> = Vec::new();
+        let mut quarantine: Vec<usize> = Vec::new();
         for s in 0..m {
-            if lost_unreplied.contains(&s) {
+            if lost_unreplied.iter().any(|&(ls, _)| ls == s) {
                 continue;
             }
-            if let Some(Some(dv)) = &deltas[s] {
-                ps.apply_delta(s, dv);
-                ps.stamp_upload(s, k);
-                match &mut svc.contrib[s] {
-                    Some(c) => axpy(1.0, dv, c),
-                    slot @ None => *slot = Some(dv.clone()),
+            let ripe = matches!(&svc.pending[s], Some(p) if p.delta.is_some()
+                && p.due.is_none_or(|r| r <= k));
+            if ripe {
+                let p = svc.pending[s].take().unwrap();
+                svc.miss_counts[s] = 0;
+                if let Some(dv) = p.delta.unwrap() {
+                    // the parked reply answers θ at round p.k (falling
+                    // back to the current iterate only if the screen was
+                    // toggled mid-flight, which cannot happen in-run)
+                    let admit = !sopts.screen
+                        || screen_upload(
+                            &mut svc,
+                            &ps,
+                            problem,
+                            s,
+                            &dv,
+                            p.theta.as_deref().unwrap_or(&ps.theta),
+                            &mut quarantine,
+                        );
+                    if admit {
+                        ps.apply_delta(s, &dv);
+                        ps.stamp_upload(s, p.k);
+                        match &mut svc.contrib[s] {
+                            Some(c) => axpy(1.0, &dv, c),
+                            slot @ None => *slot = Some(dv.clone()),
+                        }
+                        uploads += 1;
+                        events[s].push(p.k);
+                        wal_uploads.push((s as u32, p.k as u64, dv));
+                    }
                 }
-                uploads += 1;
-                events[s].push(k);
-                wal_uploads.push((s as u32, dv.clone()));
+            } else if let Some(Some(dv)) = &deltas[s] {
+                let admit = !sopts.screen
+                    || screen_upload(&mut svc, &ps, problem, s, dv, &ps.theta, &mut quarantine);
+                if admit {
+                    ps.apply_delta(s, dv);
+                    ps.stamp_upload(s, k);
+                    match &mut svc.contrib[s] {
+                        Some(c) => axpy(1.0, dv, c),
+                        slot @ None => *slot = Some(dv.clone()),
+                    }
+                    uploads += 1;
+                    events[s].push(k);
+                    wal_uploads.push((s as u32, k as u64, dv.clone()));
+                }
+            }
+            // any on-time reply — upload or skip — clears the
+            // consecutive-miss ladder
+            if is_participant[s] && deltas[s].is_some() {
+                svc.miss_counts[s] = 0;
             }
         }
         ps.step(alpha);
         // members that replied and then died contributed to this step;
         // their eviction (like a scheduled drop) takes effect after it
         let mut evict_post: Vec<u32> = Vec::new();
-        lost_replied.sort_unstable();
-        for &s in &lost_replied {
-            svc.evict(&mut ps, s);
+        lost_replied.sort_unstable_by_key(|&(s, _)| s);
+        for &(s, cause) in &lost_replied {
+            svc.evict(&mut ps, s, cause);
             evict_post.push(s as u32);
+        }
+        // screen strike-outs: the rejected upload never entered the
+        // aggregate, but the member's standing contribution did —
+        // subtract it after the step, like any post-reply eviction; the
+        // shard stays quarantined (its Hellos are refused from here on)
+        for &s in &quarantine {
+            svc.force_drop(s);
+            svc.evict(&mut ps, s, EvictCause::ScreenViolation);
+            evict_post.push(s as u32);
+        }
+        // forced-skip accounting and the consecutive-miss ladder: every
+        // owned shard still in flight at this commit was carried by its
+        // cached gradient this round — exactly a LAG skip, forced by the
+        // pace deadline instead of the trigger
+        for s in 0..m {
+            if svc.owner[s].is_some() && svc.pending[s].is_some() {
+                svc.stats.forced_skips += 1;
+                svc.miss_counts[s] += 1;
+                if sopts.miss_limit > 0 && svc.miss_counts[s] as usize >= sopts.miss_limit {
+                    svc.force_drop(s);
+                    svc.evict(&mut ps, s, EvictCause::DeadlineMiss);
+                    evict_post.push(s as u32);
+                }
+            }
         }
         for &(fk, s) in &faults.drop_after {
             if fk == k && svc.owner[s].is_some() {
                 svc.force_drop(s);
-                svc.evict(&mut ps, s);
+                svc.evict(&mut ps, s, EvictCause::Scheduled);
                 evict_post.push(s as u32);
                 // hold the shard for its scheduled re-admission round (if
                 // the plan has one) so an eager rejoiner cannot land on a
@@ -1012,8 +1659,8 @@ pub fn run_service(
                 k: k as u64,
                 obj_err: obj,
                 d_uploads: wal_uploads.len() as u64,
-                d_downloads: members.len() as u64,
-                d_grad_evals: members.len() as u64,
+                d_downloads: broadcast,
+                d_grad_evals: broadcast,
                 admits: std::mem::take(&mut wal_admits),
                 evict_pre,
                 uploads: wal_uploads,
@@ -1199,6 +1846,9 @@ fn serve_worker_once(
                     let s = shard
                         .ok_or_else(|| anyhow::anyhow!("Round before Assign (no shard)"))?;
                     let (g, _loss) = worker_grad(problem.task, &problem.workers[s], &theta);
+                    // strict comparison, so a leader-sent rhs of -∞ forces
+                    // the upload (staleness-cap contact) with no extra
+                    // wire machinery — dist² ≥ 0 > -∞ always
                     let violated = match &cached {
                         None => true,
                         Some(c) => dist2(c, &g) > rhs,
@@ -1603,5 +2253,302 @@ mod tests {
         let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
         assert_eq!(bits(&stats_orig.final_theta), bits(&stats2.final_theta));
         assert_eq!(stats2.wal_bytes, stats_orig.wal_bytes);
+    }
+
+    /// Deadline pacing with scheduled straggler windows: rounds commit
+    /// without the parked members (forced skips — their cached gradients
+    /// stand in, exactly a LAG skip), the late replies land at the θ they
+    /// answered, and the whole run byte-compares equal across two
+    /// executions because every decision is keyed to the round clock.
+    #[test]
+    fn planned_stragglers_pace_rounds_bit_deterministically() {
+        let p = synthetic::linreg_increasing_l(6, 12, 5, 98);
+        let opts = RunOptions { max_iters: 40, record_every: 1, ..Default::default() };
+        let faults =
+            FaultPlan { straggle: vec![(5, 1, 9), (12, 3, 15)], ..Default::default() };
+        let sopts = ServiceOptions {
+            round_deadline: Some(Duration::from_secs(10)),
+            ..quick_sopts()
+        };
+        let (ta, sa) = drive(&p, &opts, &sopts, &faults, p.m());
+        let (tb, sb) = drive(&p, &opts, &sopts, &faults, p.m());
+        assert_eq!(record_sig(&ta.records), record_sig(&tb.records));
+        assert_eq!(ta.upload_events, tb.upload_events);
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&sa.final_theta), bits(&sb.final_theta));
+        // each window (fk, s, rk) carries the shard for exactly rk−fk
+        // commits, and nobody is evicted over a *scheduled* delay
+        assert_eq!(sa.forced_skips, (9 - 5) + (15 - 12));
+        assert_eq!(sa.evictions, 0);
+        assert_eq!(sa.quarantined, 0);
+        // the shard is dark while parked: any upload it lands is stamped
+        // with the round it answered (fk), never a window-interior round
+        for (fk, s, rk) in [(5usize, 1usize, 9usize), (12, 3, 15)] {
+            assert!(
+                ta.upload_events[s].iter().all(|&k| !(fk + 1..=rk).contains(&k)),
+                "shard {s} uploaded inside its straggle window"
+            );
+        }
+    }
+
+    /// The consecutive-miss ladder: a member parked past `miss_limit`
+    /// commits is evicted with the deadline cause — and, being a crash-free
+    /// eviction, its shard rejoins and finishes the run.
+    #[test]
+    fn miss_limit_evicts_a_persistent_straggler() {
+        let p = synthetic::linreg_increasing_l(4, 12, 5, 99);
+        let opts = RunOptions { max_iters: 20, record_every: 1, ..Default::default() };
+        // the window never closes on its own — the ladder must
+        let faults = FaultPlan { straggle: vec![(5, 1, 200)], ..Default::default() };
+        let sopts = ServiceOptions {
+            round_deadline: Some(Duration::from_secs(10)),
+            miss_limit: 3,
+            ..quick_sopts()
+        };
+        let (trace, stats) = drive(&p, &opts, &sopts, &faults, p.m());
+        assert_eq!(trace.records.last().unwrap().k, 20, "run did not complete");
+        // misses at commits 5, 6, 7 hit the limit: one eviction,
+        // attributed to the deadline — no quarantine, no screen strikes
+        assert_eq!(stats.forced_skips, 3);
+        assert_eq!(stats.evictions, 1);
+        assert_eq!(stats.eviction_causes, vec![(1, EvictCause::DeadlineMiss)]);
+        assert_eq!(stats.quarantined, 0);
+    }
+
+    /// Write backpressure: a peer that never drains its socket trips the
+    /// `max_queued_bytes` bound on the very send that exceeds it, and the
+    /// reap attributes the death to [`EvictCause::SlowConsumer`].
+    #[test]
+    fn backpressure_marks_slow_consumers() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let _client = TcpStream::connect(addr).unwrap(); // never reads
+        let (peer, _) = listener.accept().unwrap();
+        peer.set_nonblocking(true).unwrap();
+        let mut conn = Conn::new(peer);
+        conn.shard = Some(0);
+        let mut svc = Service {
+            listener,
+            conns: vec![Some(conn)],
+            owner: vec![Some(0)],
+            admit_round: vec![None],
+            contrib: vec![None],
+            ever_owned: vec![true],
+            pending: vec![None],
+            miss_counts: vec![0],
+            anchors: vec![None],
+            strikes: vec![0],
+            quarantined: vec![false],
+            max_queued: 64,
+            max_workers: 0,
+            inj: None,
+            poller: poller::Poller::new().unwrap(),
+            stats: ServiceStats::default(),
+            tick: Duration::from_millis(2),
+        };
+        // a ~500-byte Round frame blows the 64-byte bound without a single
+        // socket write: the queue itself is the evidence
+        svc.send(0, &WireMsg::Round { k: 1, rhs: 0.0, theta: vec![1.0; 64] });
+        assert_eq!(svc.reap_dead(), vec![(0, false, EvictCause::SlowConsumer)]);
+        assert!(svc.owner[0].is_none(), "the slow consumer's shard must be freed");
+        assert!(svc.stats.bytes_down > 64, "the staged frame is still accounted");
+    }
+
+    /// Admission control: with `max_workers` shards owned, a further
+    /// `Hello` is refused by name while the admitted fleet runs
+    /// undisturbed.
+    #[test]
+    fn admission_cap_rejects_surplus_workers() {
+        let p = synthetic::linreg_increasing_l(2, 10, 4, 100);
+        let opts = RunOptions { max_iters: 400, ..Default::default() };
+        let sopts = ServiceOptions { min_workers: 1, max_workers: 1, ..quick_sopts() };
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let p = &p;
+        std::thread::scope(|scope| {
+            let leader = scope.spawn(|| {
+                run_service(listener, p, Algorithm::LagWk, &opts, &sopts, &FaultPlan::default())
+                    .unwrap()
+            });
+            scope.spawn({
+                let addr = addr.clone();
+                move || {
+                    let cfg = WorkerConfig {
+                        preferred: Some(0),
+                        heartbeat_interval: Duration::from_millis(20),
+                        leader_timeout: Duration::from_secs(30),
+                        ..Default::default()
+                    };
+                    loop {
+                        match serve_worker(&addr, p, &cfg) {
+                            Ok(o) if o.exit == WorkerExit::Shutdown => break,
+                            Ok(_) => continue,
+                            Err(_) => break,
+                        }
+                    }
+                }
+            });
+            // the surplus worker claims the *other*, perfectly free shard —
+            // and is still refused, because the fleet is at capacity
+            let surplus = scope.spawn({
+                let addr = addr.clone();
+                move || {
+                    std::thread::sleep(Duration::from_millis(60));
+                    let cfg = WorkerConfig {
+                        preferred: Some(1),
+                        reconnect: BackoffPolicy::none(),
+                        ..Default::default()
+                    };
+                    serve_worker(&addr, p, &cfg)
+                }
+            });
+            let err = surplus.join().unwrap().unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("shard 1"), "refusal must name the claim: {msg}");
+            let (trace, stats) = leader.join().unwrap();
+            assert_eq!(trace.records.last().unwrap().k, 400, "fleet was disturbed");
+            assert_eq!(stats.joins, 1);
+            assert_eq!(stats.evictions, 0);
+        });
+    }
+
+    /// On-the-wire Byzantine screening: a member that uploads smoothness-
+    /// violating garbage strikes out, is quarantined and evicted with the
+    /// screen cause, and its rejoin attempt is refused — while the honest
+    /// remainder finishes the run.
+    #[test]
+    fn screen_quarantines_a_byzantine_member() {
+        let p = synthetic::linreg_increasing_l(2, 10, 4, 101);
+        let opts = RunOptions { max_iters: 400, ..Default::default() };
+        let sopts = ServiceOptions { screen: true, ..quick_sopts() };
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let p = &p;
+        std::thread::scope(|scope| {
+            let leader = scope.spawn(|| {
+                run_service(listener, p, Algorithm::LagWk, &opts, &sopts, &FaultPlan::default())
+                    .unwrap()
+            });
+            scope.spawn({
+                let addr = addr.clone();
+                move || {
+                    let cfg = WorkerConfig {
+                        preferred: Some(0),
+                        heartbeat_interval: Duration::from_millis(20),
+                        leader_timeout: Duration::from_secs(30),
+                        ..Default::default()
+                    };
+                    loop {
+                        match serve_worker(&addr, p, &cfg) {
+                            Ok(o) if o.exit == WorkerExit::Shutdown => break,
+                            Ok(_) => continue,
+                            Err(_) => break,
+                        }
+                    }
+                }
+            });
+            let attacker = scope.spawn({
+                let addr = addr.clone();
+                move || {
+                    let mut stream = TcpStream::connect(&addr).unwrap();
+                    stream.write_all(&WireMsg::Hello { worker: 1 }.encode()).unwrap();
+                    let mut dec = FrameDecoder::new();
+                    let mut buf = [0u8; 65536];
+                    let mut rounds_seen = 0u32;
+                    'session: loop {
+                        let n = match stream.read(&mut buf) {
+                            Ok(0) | Err(_) => break 'session,
+                            Ok(n) => n,
+                        };
+                        let mut msgs = Vec::new();
+                        if dec.feed(&buf[..n], &mut msgs).is_err() {
+                            break 'session;
+                        }
+                        for msg in msgs {
+                            match msg {
+                                WireMsg::Round { k, theta, .. } => {
+                                    rounds_seen += 1;
+                                    // an innocuous first contact buys the
+                                    // trusted anchor; everything after is
+                                    // smoothness-violating garbage
+                                    let delta = if rounds_seen == 1 {
+                                        vec![0.0; theta.len()]
+                                    } else {
+                                        vec![1e6; theta.len()]
+                                    };
+                                    let frame = WireMsg::Delta {
+                                        k,
+                                        worker: 1,
+                                        delta: Some(delta),
+                                    }
+                                    .encode();
+                                    if stream.write_all(&frame).is_err() {
+                                        break 'session;
+                                    }
+                                }
+                                WireMsg::Shutdown => break 'session,
+                                _ => {}
+                            }
+                        }
+                    }
+                    // quarantined: the rejoin must be refused by name
+                    let cfg = WorkerConfig {
+                        preferred: Some(1),
+                        reconnect: BackoffPolicy::none(),
+                        ..Default::default()
+                    };
+                    serve_worker(&addr, p, &cfg)
+                }
+            });
+            let err = attacker.join().unwrap().unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("shard 1"), "quarantine must refuse by name: {msg}");
+            let (trace, stats) = leader.join().unwrap();
+            assert_eq!(trace.records.last().unwrap().k, 400, "honest run did not finish");
+            assert_eq!(stats.screen_rejected, SCREEN_STRIKES as u64);
+            assert_eq!(stats.quarantined, 1);
+            assert_eq!(stats.eviction_causes, vec![(1, EvictCause::ScreenViolation)]);
+            // the last recorded objective is finite: the garbage never
+            // entered the aggregate
+            assert!(trace.records.last().unwrap().obj_err.is_finite());
+        });
+    }
+
+    /// The robustness artifact carries every degradation counter, the
+    /// per-cause histogram (all keys always present), and the ordered
+    /// per-event eviction log.
+    #[test]
+    fn robustness_json_reports_causes_and_log() {
+        let stats = ServiceStats {
+            forced_skips: 7,
+            screen_rejected: 3,
+            quarantined: 1,
+            evictions: 2,
+            eviction_causes: vec![
+                (4, EvictCause::ScreenViolation),
+                (2, EvictCause::DeadlineMiss),
+            ],
+            ..Default::default()
+        };
+        let s = stats.robustness_json().to_string();
+        assert!(s.contains("\"forced_skips\":7"), "{s}");
+        assert!(s.contains("\"screen_rejected\":3"), "{s}");
+        assert!(s.contains("\"quarantined\":1"), "{s}");
+        assert!(s.contains("\"evictions\":2"), "{s}");
+        // histogram: hit causes counted, untouched causes present as zero
+        assert!(s.contains("\"deadline_miss\":1"), "{s}");
+        assert!(s.contains("\"screen_violation\":1"), "{s}");
+        assert!(s.contains("\"heartbeat_loss\":0"), "{s}");
+        assert!(s.contains("\"slow_consumer\":0"), "{s}");
+        // ordered per-event log
+        assert!(
+            s.contains(
+                "\"eviction_log\":[{\"cause\":\"screen_violation\",\"shard\":4},\
+                 {\"cause\":\"deadline_miss\",\"shard\":2}]"
+            ),
+            "{s}"
+        );
+        // and the artifact round-trips through the crate's own parser
+        crate::util::json::parse(&s).unwrap();
     }
 }

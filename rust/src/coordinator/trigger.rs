@@ -197,6 +197,11 @@ impl TriggerConfig {
 
     /// LAG-WK (15a): does worker m *violate* the skip condition (and thus
     /// upload)? `grad_diff_sq = ‖∇L_m(θ̂) − ∇L_m(θᵏ)‖²`.
+    ///
+    /// The comparison is strict, so an `rhs` of `f64::NEG_INFINITY` makes
+    /// every worker upload (`grad_diff_sq ≥ 0 > −∞`) — the service
+    /// leader's zero-wire-change way of force-contacting a member whose
+    /// upload age hit the `--max-staleness` cap (DESIGN.md §13).
     #[inline]
     pub fn wk_violated(&self, grad_diff_sq: f64, rhs: f64) -> bool {
         grad_diff_sq > rhs

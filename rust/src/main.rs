@@ -54,7 +54,10 @@ fn print_help() {
          [--runtime service|tcp] [--min-workers K] [--join-timeout-ms N]\n               \
          [--round-timeout-ms N] [--checkpoint F --checkpoint-every K] [--resume F]\n               \
          [--wal F] [--resume-wal] [--stats-out F]  (WAL = crash-recoverable:\n               \
-         rerun with --wal F --resume-wal after a crash to continue bit-exactly)\n  \
+         rerun with --wal F --resume-wal after a crash to continue bit-exactly);\n               \
+         degradation: [--round-deadline-ms N] pace rounds past stragglers,\n               \
+         [--max-staleness D] [--miss-limit K] [--max-queued-bytes B]\n               \
+         [--max-workers K] [--screen] (smoothness-screen uploads)\n  \
          worker       worker: --addr host:7070 [--index 0] (same problem flags);\n               \
          service runtime adds [--rejoin N] [--heartbeat-ms N] [--retries N]\n               \
          [--retry-base-ms N] [--retry-cap-ms N] [--retry-seed S]\n  \
@@ -217,6 +220,15 @@ fn cmd_leader(args: &Args) -> anyhow::Result<()> {
                 checkpoint_every: args.opt_usize("checkpoint-every", 0)?,
                 wal: args.opt("wal").map(std::path::PathBuf::from),
                 resume_wal: args.has_flag("resume-wal"),
+                round_deadline: args
+                    .opt("round-deadline-ms")
+                    .map(|_| args.opt_duration_ms("round-deadline-ms", 0))
+                    .transpose()?,
+                max_staleness: args.opt_usize("max-staleness", 0)?,
+                miss_limit: args.opt_usize("miss-limit", 0)?,
+                max_queued_bytes: args.opt_usize("max-queued-bytes", 0)?,
+                max_workers: args.opt_usize("max-workers", 0)?,
+                screen: args.has_flag("screen"),
                 ..Default::default()
             };
             println!(
@@ -244,6 +256,12 @@ fn cmd_leader(args: &Args) -> anyhow::Result<()> {
                 stats.corrupt_frames_dropped,
                 stats.wal_bytes
             );
+            if stats.forced_skips + stats.screen_rejected + stats.quarantined > 0 {
+                println!(
+                    "degradation: forced skips {}, screen rejections {}, quarantined {}",
+                    stats.forced_skips, stats.screen_rejected, stats.quarantined
+                );
+            }
             if let Some(out) = args.opt("stats-out") {
                 std::fs::write(out, stats.robustness_json().to_string())?;
                 println!("wrote {out}");

@@ -16,16 +16,23 @@
 //! 3. **Corruption is contained.** Flipped bytes on the leader's sockets
 //!    surface as CRC-verified frame drops (counted in `ServiceStats`),
 //!    never as decoded garbage; the run completes and still optimizes.
+//! 4. **Byzantine members are screened on the wire.** A protocol-fluent
+//!    attacker blowing its gradients up is caught by the `--screen`
+//!    smoothness bound, quarantined, and evicted — and the honest
+//!    remainder still converges to the honest-subset optimum.
 //!
 //! CI runs this with `cargo test --release --test chaos`.
 
 use lag::coordinator::{
-    run_service, serve_worker, Algorithm, CrashPoint, FaultConfig, FaultPlan, IterRecord,
-    RunOptions, RunTrace, ServiceOptions, ServiceStats, WorkerConfig, WorkerExit,
+    run_service, serve_worker, Algorithm, CrashPoint, EvictCause, FaultConfig, FaultPlan,
+    FrameDecoder, IterRecord, RunOptions, RunTrace, ServiceOptions, ServiceStats, WireMsg,
+    WorkerConfig, WorkerExit,
 };
 use lag::data::{synthetic, Problem};
+use lag::grad::worker_grad;
 use lag::util::BackoffPolicy;
-use std::net::TcpListener;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -254,4 +261,166 @@ fn corrupt_frames_are_dropped_and_the_run_survives() {
         corrupt_seen += stats.corrupt_frames_dropped;
     }
     assert!(corrupt_seen >= 1, "no injected flip ever tripped the leader's CRC counter");
+}
+
+/// Rebuild the problem restricted to the honest shards (for computing the
+/// honest-subset optimum the screened run should reach) — the same
+/// construction the robust driver's tests use.
+fn honest_subproblem(p: &Problem, byz: &[usize]) -> Problem {
+    let shards: Vec<_> = p
+        .workers
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| !byz.contains(i))
+        .map(|(_, s)| (s.storage.to_dense().slice_rows(0, s.n_real), s.y[..s.n_real].to_vec()))
+        .collect();
+    Problem::build("honest", p.task, shards, None).unwrap()
+}
+
+/// On-the-wire Byzantine screening under the Blowup attack: one worker
+/// speaks the protocol perfectly but claims 50× its true gradient every
+/// round. With `screen` armed the leader's smoothness bound must strike
+/// it out, quarantine its shard (rejoins refused), and evict its standing
+/// contribution — after which the honest fleet converges to the
+/// honest-subset optimum as if the attacker had never existed.
+#[test]
+fn screened_blowup_attacker_is_quarantined_and_honest_fleet_converges() {
+    let m = 5;
+    let byz = 4usize;
+    let scale = 50.0;
+    let p = synthetic::linreg_increasing_l(m, 8, 5, 2029);
+    let opts = RunOptions { max_iters: 2000, record_every: 10, ..Default::default() };
+    let so = ServiceOptions { screen: true, ..sopts() };
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let done = AtomicBool::new(false);
+    let p_ref = &p;
+    let done_ref = &done;
+    let t0 = Instant::now();
+    let (trace, stats) = std::thread::scope(|scope| {
+        let leader = scope.spawn(|| {
+            let out =
+                run_service(listener, p_ref, Algorithm::LagWk, &opts, &so, &FaultPlan::default());
+            done_ref.store(true, Ordering::SeqCst);
+            out.unwrap()
+        });
+        // honest fleet on every shard but the attacker's
+        for s in (0..m).filter(|&s| s != byz) {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                let cfg = WorkerConfig {
+                    preferred: Some(s),
+                    heartbeat_interval: Duration::from_millis(20),
+                    leader_timeout: Duration::from_secs(90),
+                    ..Default::default()
+                };
+                loop {
+                    match serve_worker(&addr, p_ref, &cfg) {
+                        Ok(o) if o.exit == WorkerExit::Shutdown => break,
+                        Ok(_) => std::thread::sleep(Duration::from_millis(2)),
+                        Err(_) => break,
+                    }
+                }
+            });
+        }
+        // the attacker: honest wire behavior, dishonest payloads — it
+        // tracks the gradient cache it *claims* so its deltas are
+        // protocol-consistent, and rejoins until the quarantine refuses it
+        scope.spawn({
+            let addr = addr.clone();
+            move || {
+                let mut cache: Option<Vec<f64>> = None;
+                while !done_ref.load(Ordering::SeqCst) {
+                    let Ok(mut stream) = TcpStream::connect(&addr) else {
+                        std::thread::sleep(Duration::from_millis(5));
+                        continue;
+                    };
+                    stream.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+                    if stream.write_all(&WireMsg::Hello { worker: byz as u32 }.encode()).is_err()
+                    {
+                        continue;
+                    }
+                    let mut dec = FrameDecoder::new();
+                    let mut buf = [0u8; 65536];
+                    'session: loop {
+                        if done_ref.load(Ordering::SeqCst) {
+                            return;
+                        }
+                        let n = match stream.read(&mut buf) {
+                            Ok(0) => break 'session,
+                            Ok(n) => n,
+                            Err(e)
+                                if matches!(
+                                    e.kind(),
+                                    std::io::ErrorKind::WouldBlock
+                                        | std::io::ErrorKind::TimedOut
+                                ) =>
+                            {
+                                if stream.write_all(&WireMsg::Heartbeat.encode()).is_err() {
+                                    break 'session;
+                                }
+                                continue;
+                            }
+                            Err(_) => break 'session,
+                        };
+                        let mut msgs = Vec::new();
+                        if dec.feed(&buf[..n], &mut msgs).is_err() {
+                            break 'session;
+                        }
+                        for msg in msgs {
+                            match msg {
+                                WireMsg::Assign { cached, .. } => cache = cached,
+                                WireMsg::Round { k, theta, .. } => {
+                                    let (g, _) =
+                                        worker_grad(p_ref.task, &p_ref.workers[byz], &theta);
+                                    let target: Vec<f64> =
+                                        g.iter().map(|x| scale * x).collect();
+                                    let delta: Vec<f64> = match &cache {
+                                        Some(c) => {
+                                            target.iter().zip(c).map(|(t, c)| t - c).collect()
+                                        }
+                                        None => target.clone(),
+                                    };
+                                    cache = Some(target);
+                                    let frame = WireMsg::Delta {
+                                        k,
+                                        worker: byz as u32,
+                                        delta: Some(delta),
+                                    }
+                                    .encode();
+                                    if stream.write_all(&frame).is_err() {
+                                        break 'session;
+                                    }
+                                }
+                                WireMsg::Reject { .. } => return, // quarantined: stay out
+                                WireMsg::Shutdown => return,
+                                _ => {}
+                            }
+                        }
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            }
+        });
+        leader.join().unwrap()
+    });
+    let elapsed = t0.elapsed();
+    assert!(elapsed < WALL_BUDGET, "screened run blew the wall budget: {elapsed:?}");
+
+    // the screen engaged: strikes, quarantine, and a screen-caused
+    // eviction of exactly the attacker's shard
+    assert_eq!(trace.records.last().unwrap().k, opts.max_iters);
+    assert!(stats.screen_rejected >= 3, "only {} screen rejections", stats.screen_rejected);
+    assert_eq!(stats.quarantined, 1);
+    assert!(
+        stats.eviction_causes.contains(&(byz as u32, EvictCause::ScreenViolation)),
+        "no screen-caused eviction of shard {byz}: {:?}",
+        stats.eviction_causes
+    );
+
+    // with the attacker's trusted-bootstrap contribution evicted, the
+    // honest fleet's optimum is reached as if it had never joined
+    let honest = honest_subproblem(&p, &[byz]);
+    let herr = honest.obj_err(&stats.final_theta);
+    assert!(herr < 1e-6, "honest-subset error {herr}");
 }

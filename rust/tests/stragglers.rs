@@ -1,0 +1,282 @@
+//! Straggler soak: deadline-paced rounds over a 16-worker loopback fleet
+//! with scheduled straggler windows, plus a wall-clock pacing smoke test
+//! with a genuinely slow worker (DESIGN.md §13).
+//!
+//! What this certifies:
+//!
+//! 1. **Partial aggregation is LAG.** Rounds committed without a parked
+//!    member are exact LAG forced skips — the cached gradient stands in,
+//!    and the late reply lands stamped with the round it answered, so
+//!    staleness accounting stays honest.
+//! 2. **Pacing is deterministic.** Straggle decisions are keyed to the
+//!    virtual round clock, so two runs of the same plan byte-compare
+//!    equal (records, upload events, final iterate) however the real
+//!    socket timing interleaves.
+//! 3. **The staleness cap holds.** No shard's upload-event gap ever
+//!    exceeds `max_staleness` — the cap force-waits a member before its
+//!    age can reach D+1.
+//! 4. **The fleet keeps pace.** A worker that sleeps through every round
+//!    budget slows nobody down: the honest majority commits on the pace
+//!    deadline and the sleeper's replies trickle in as forced skips.
+//!
+//! CI runs this with `cargo test --release --test stragglers`.
+
+use lag::coordinator::{
+    run_service, serve_worker, Algorithm, FaultPlan, FrameDecoder, IterRecord, RunOptions,
+    RunTrace, ServiceOptions, ServiceStats, WireMsg, WorkerConfig, WorkerExit,
+};
+use lag::data::{synthetic, Problem};
+use lag::grad::worker_grad;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+/// Per-test wall budget: a wedged pace loop must fail loudly, not hang
+/// the job until the CI runner's timeout.
+const WALL_BUDGET: Duration = Duration::from_secs(120);
+
+fn sopts() -> ServiceOptions {
+    ServiceOptions {
+        join_timeout: Duration::from_secs(60),
+        round_timeout: Duration::from_secs(60),
+        heartbeat_timeout: Duration::from_secs(60),
+        tick: Duration::from_millis(1),
+        ..Default::default()
+    }
+}
+
+fn record_sig(records: &[IterRecord]) -> Vec<(usize, u64, u64, u64)> {
+    records.iter().map(|r| (r.k, r.obj_err.to_bits(), r.cum_uploads, r.cum_downloads)).collect()
+}
+
+fn theta_bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Leader + a preferred-shard rejoining fleet on loopback.
+fn drive(
+    p: &Problem,
+    algo: Algorithm,
+    opts: &RunOptions,
+    so: &ServiceOptions,
+    faults: &FaultPlan,
+) -> (RunTrace, ServiceStats) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::scope(|scope| {
+        let leader =
+            scope.spawn(|| run_service(listener, p, algo, opts, so, faults).unwrap());
+        for s in 0..p.m() {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                let cfg = WorkerConfig {
+                    preferred: Some(s),
+                    heartbeat_interval: Duration::from_millis(20),
+                    leader_timeout: Duration::from_secs(90),
+                    ..Default::default()
+                };
+                loop {
+                    match serve_worker(&addr, p, &cfg) {
+                        Ok(o) if o.exit == WorkerExit::Shutdown => break,
+                        Ok(_) => std::thread::sleep(Duration::from_millis(2)),
+                        Err(_) => break,
+                    }
+                }
+            });
+        }
+        leader.join().unwrap()
+    })
+}
+
+/// The headline soak: 16 workers, 2 of them straggling through three
+/// scheduled windows, a staleness cap of D = 6, and deadline pacing
+/// armed. Every round commits, forced-skip accounting matches the plan
+/// exactly, no upload-event gap exceeds D, nobody is evicted — and two
+/// independent executions byte-compare equal.
+#[test]
+fn sixteen_worker_straggler_soak_is_bit_deterministic() {
+    const D: usize = 6;
+    let m = 16;
+    let p = synthetic::linreg_increasing_l(m, 8, 6, 3001);
+    let opts = RunOptions { max_iters: 40, record_every: 1, ..Default::default() };
+    // two straggling shards, three windows, each shorter than D so the
+    // plan and the cap never fight (the cap outranks the plan)
+    let windows = [(6usize, 3usize, 9usize), (12, 11, 16), (20, 3, 24)];
+    let faults = FaultPlan { straggle: windows.to_vec(), ..Default::default() };
+    let so = ServiceOptions {
+        round_deadline: Some(Duration::from_secs(10)),
+        max_staleness: D,
+        ..sopts()
+    };
+
+    // GD (rhs = 0): every broadcast member uploads every round, so the
+    // upload-event structure is fully determined by the pacing machinery
+    let t0 = Instant::now();
+    let (ta, sa) = drive(&p, Algorithm::Gd, &opts, &so, &faults);
+    let (tb, sb) = drive(&p, Algorithm::Gd, &opts, &so, &faults);
+    let elapsed = t0.elapsed();
+    assert!(elapsed < WALL_BUDGET, "straggler soak blew the wall budget: {elapsed:?}");
+
+    // bit-determinism across executions
+    assert_eq!(record_sig(&ta.records), record_sig(&tb.records));
+    assert_eq!(ta.upload_events, tb.upload_events);
+    assert_eq!(theta_bits(&sa.final_theta), theta_bits(&sb.final_theta));
+
+    // every round committed, with the whole fleet intact at the end
+    assert_eq!(ta.records.last().unwrap().k, opts.max_iters);
+    assert_eq!(sa.evictions, 0);
+    assert_eq!(sa.quarantined, 0);
+    assert_eq!(sa.joins, m as u64);
+
+    // forced skips are exactly the plan's window lengths: each (fk, s,
+    // rk) carries the shard through commits fk..rk on its cached gradient
+    let expected: usize = windows.iter().map(|&(fk, _, rk)| rk - fk).sum();
+    assert_eq!(sa.forced_skips, expected as u64);
+    assert_eq!(sb.forced_skips, expected as u64);
+
+    // the parked reply is stamped with the round it answered (the window
+    // start), and the shard is dark through the window interior
+    for &(fk, s, rk) in &windows {
+        assert!(ta.upload_events[s].contains(&fk), "shard {s}: no upload stamped {fk}");
+        assert!(
+            ta.upload_events[s].iter().all(|&k| !(fk + 1..=rk).contains(&k)),
+            "shard {s} uploaded inside its straggle window"
+        );
+    }
+
+    // staleness discipline: under GD every broadcast produces an upload,
+    // so consecutive upload-event gaps bound each shard's committed age —
+    // none may exceed the cap
+    for s in 0..m {
+        for w in ta.upload_events[s].windows(2) {
+            assert!(
+                w[1] - w[0] <= D,
+                "shard {s}: upload gap {} -> {} exceeds the D = {D} staleness cap",
+                w[0],
+                w[1]
+            );
+        }
+    }
+}
+
+/// Wall-clock pacing smoke test: a worker that sleeps well past the pace
+/// deadline on every round must not slow the fleet — the honest majority
+/// commits on the deadline, the sleeper's late replies land as parked
+/// uploads, and nobody is evicted.
+#[test]
+fn slow_worker_does_not_slow_the_fleet() {
+    let m = 3;
+    let sleeper = 2usize;
+    let nap = Duration::from_millis(300);
+    let p = synthetic::linreg_increasing_l(m, 8, 5, 3002);
+    let opts = RunOptions { max_iters: 30, record_every: 1, ..Default::default() };
+    let so = ServiceOptions {
+        round_deadline: Some(Duration::from_millis(50)),
+        heartbeat_timeout: Duration::from_secs(30),
+        ..sopts()
+    };
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let p = &p;
+    let t0 = Instant::now();
+    let (trace, stats) = std::thread::scope(|scope| {
+        let leader = scope.spawn(|| {
+            run_service(listener, p, Algorithm::Gd, &opts, &so, &FaultPlan::default()).unwrap()
+        });
+        for s in 0..m - 1 {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                let cfg = WorkerConfig {
+                    preferred: Some(s),
+                    heartbeat_interval: Duration::from_millis(20),
+                    leader_timeout: Duration::from_secs(90),
+                    ..Default::default()
+                };
+                loop {
+                    match serve_worker(&addr, p, &cfg) {
+                        Ok(o) if o.exit == WorkerExit::Shutdown => break,
+                        Ok(_) => std::thread::sleep(Duration::from_millis(2)),
+                        Err(_) => break,
+                    }
+                }
+            });
+        }
+        // the sleeper speaks the protocol honestly but naps through every
+        // round budget before computing its gradient
+        scope.spawn({
+            let addr = addr.clone();
+            move || {
+                let mut stream = TcpStream::connect(&addr).unwrap();
+                stream.write_all(&WireMsg::Hello { worker: sleeper as u32 }.encode()).unwrap();
+                let mut dec = FrameDecoder::new();
+                let mut cache: Option<Vec<f64>> = None;
+                let mut buf = [0u8; 65536];
+                'session: loop {
+                    let n = match stream.read(&mut buf) {
+                        Ok(0) | Err(_) => break 'session,
+                        Ok(n) => n,
+                    };
+                    let mut msgs = Vec::new();
+                    if dec.feed(&buf[..n], &mut msgs).is_err() {
+                        break 'session;
+                    }
+                    for msg in msgs {
+                        match msg {
+                            WireMsg::Assign { cached, .. } => cache = cached,
+                            WireMsg::Round { k, theta, .. } => {
+                                std::thread::sleep(nap);
+                                let (g, _) = worker_grad(p.task, &p.workers[sleeper], &theta);
+                                let delta: Vec<f64> = match &cache {
+                                    Some(c) => g.iter().zip(c).map(|(a, b)| a - b).collect(),
+                                    None => g.clone(),
+                                };
+                                cache = Some(g);
+                                let frame = WireMsg::Delta {
+                                    k,
+                                    worker: sleeper as u32,
+                                    delta: Some(delta),
+                                }
+                                .encode();
+                                if stream.write_all(&frame).is_err() {
+                                    break 'session;
+                                }
+                            }
+                            WireMsg::Shutdown => break 'session,
+                            _ => {}
+                        }
+                    }
+                }
+            }
+        });
+        leader.join().unwrap()
+    });
+    let elapsed = t0.elapsed();
+
+    // every round committed, and the run took nowhere near 30 naps —
+    // the sleeper was paced around, not waited for
+    assert_eq!(trace.records.last().unwrap().k, opts.max_iters);
+    assert!(
+        elapsed < nap * 10,
+        "fleet did not keep pace: {elapsed:?} for 30 rounds around a {nap:?} sleeper"
+    );
+    assert!(elapsed < WALL_BUDGET);
+
+    // the sleeper was carried as forced skips, never evicted
+    assert!(stats.forced_skips >= 2, "only {} forced skips", stats.forced_skips);
+    assert_eq!(stats.evictions, 0);
+    assert_eq!(stats.quarantined, 0);
+
+    // its parked uploads landed honestly: stamped with the rounds they
+    // answered, strictly increasing
+    let ev = &trace.upload_events[sleeper];
+    assert!(!ev.is_empty(), "sleeper never uploaded");
+    assert!(ev.windows(2).all(|w| w[0] < w[1]));
+    // and the honest majority uploaded nearly every round under GD
+    for s in 0..m - 1 {
+        assert!(
+            trace.upload_events[s].len() >= opts.max_iters - 2,
+            "honest shard {s} uploaded only {} times",
+            trace.upload_events[s].len()
+        );
+    }
+}
