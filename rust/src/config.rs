@@ -120,6 +120,16 @@ pub struct ServiceSpec {
     /// Screen every upload against the smoothness bound and quarantine
     /// violators (the service form of `coordinator::robust`).
     pub screen: bool,
+    /// Hot-standby address advertised to workers in `Assign` (DESIGN.md
+    /// §14); setting it turns on WAL retention and ack-gated commits on
+    /// the primary.
+    pub standby_addr: Option<String>,
+    /// Run as the hot standby of this primary (`HOST:PORT`) instead of
+    /// serving workers directly: replicate its WAL and promote on death.
+    pub primary: Option<String>,
+    /// How long the primary waits for a standby `WalAck` before declaring
+    /// the standby dead and detaching it.
+    pub ack_timeout: std::time::Duration,
 }
 
 impl Default for ServiceSpec {
@@ -139,6 +149,9 @@ impl Default for ServiceSpec {
             max_queued_bytes: 0,
             max_workers: 0,
             screen: false,
+            standby_addr: None,
+            primary: None,
+            ack_timeout: std::time::Duration::from_millis(5_000),
         }
     }
 }
@@ -311,6 +324,9 @@ fn parse_service(j: &Json) -> anyhow::Result<ServiceSpec> {
             "max_queued_bytes" => s.max_queued_bytes = v.as_usize().unwrap_or(s.max_queued_bytes),
             "max_workers" => s.max_workers = v.as_usize().unwrap_or(s.max_workers),
             "screen" => s.screen = matches!(v, Json::Bool(true)),
+            "standby_addr" => s.standby_addr = v.as_str().map(String::from),
+            "primary" => s.primary = v.as_str().map(String::from),
+            "ack_timeout_ms" => s.ack_timeout = ms(v, k)?,
             other => anyhow::bail!("unknown service key '{other}'"),
         }
     }
@@ -407,7 +423,9 @@ mod tests {
                               "wal": "rounds.wal", "resume_wal": true,
                               "round_deadline_ms": 250, "max_staleness": 6,
                               "max_queued_bytes": 1048576, "max_workers": 12,
-                              "screen": true}}"#,
+                              "screen": true,
+                              "standby_addr": "10.0.0.2:7071",
+                              "ack_timeout_ms": 1500}}"#,
         )
         .unwrap();
         let s = c.service.unwrap();
@@ -425,6 +443,18 @@ mod tests {
         assert_eq!(s.max_queued_bytes, 1 << 20);
         assert_eq!(s.max_workers, 12);
         assert!(s.screen);
+        assert_eq!(s.standby_addr.as_deref(), Some("10.0.0.2:7071"));
+        assert!(s.primary.is_none());
+        assert_eq!(s.ack_timeout, std::time::Duration::from_millis(1500));
+
+        // The standby role is its own section: `primary` marks this
+        // process as the hot standby of that leader.
+        let c = RunConfig::from_json_str(
+            r#"{"problem": {"kind": "synthetic", "task": "linreg", "m": 4},
+                 "service": {"addr": "0.0.0.0:7071", "primary": "10.0.0.1:7070"}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.service.unwrap().primary.as_deref(), Some("10.0.0.1:7070"));
 
         // Absent section → None; empty section → all defaults.
         let c = RunConfig::from_json_str(SAMPLE).unwrap();

@@ -32,8 +32,10 @@ const MAGIC: &[u8; 8] = b"LAGCKPT1";
 /// (`LAGWAL01`) are refused — a deliberate break, caught by the header
 /// check, rather than a silent misreplay of staleness state.
 const WAL_MAGIC: &[u8; 8] = b"LAGWAL02";
-/// WAL header: magic, starting round k₀, initial objective error bits.
-const WAL_HEADER_LEN: u64 = 8 + 8 + 8;
+/// WAL header length in bytes: magic, starting round k₀, initial objective
+/// error bits. The same 24 bytes open both the on-disk log and the
+/// replication stream a primary ships to its hot standby (DESIGN.md §14).
+pub const WAL_HEADER_LEN: u64 = 8 + 8 + 8;
 
 /// Complete snapshot of a run at iteration `k`.
 ///
@@ -381,6 +383,83 @@ impl WalRecord {
     }
 }
 
+// -- shared record framing ----------------------------------------------
+//
+// One framing, two transports: `RoundLog::append` writes these bytes to
+// disk and the primary ships the *same* bytes to its standby inside a
+// `WalShip` wire frame, so the replication stream is byte-identical to
+// the log and the standby parses it with the same helpers.
+
+/// Build the 24-byte WAL header (magic, k₀, initial objective error) that
+/// opens both the on-disk log and the replication stream.
+pub fn wal_header(k0: u64, initial_obj: f64) -> Vec<u8> {
+    let mut header = Vec::with_capacity(WAL_HEADER_LEN as usize);
+    header.extend_from_slice(WAL_MAGIC);
+    put_u64(&mut header, k0);
+    header.extend_from_slice(&initial_obj.to_le_bytes());
+    header
+}
+
+/// Validate a WAL header and return `(k0, initial_obj)`. Errors on a bad
+/// magic or a buffer shorter than [`WAL_HEADER_LEN`].
+pub fn parse_wal_header(buf: &[u8]) -> anyhow::Result<(u64, f64)> {
+    anyhow::ensure!(
+        buf.len() >= WAL_HEADER_LEN as usize && &buf[..8] == WAL_MAGIC,
+        "bad WAL header"
+    );
+    let k0 = u64::from_le_bytes(buf[8..16].try_into().unwrap());
+    let initial_obj = f64::from_le_bytes(buf[16..24].try_into().unwrap());
+    Ok((k0, initial_obj))
+}
+
+/// Frame one record in the WAL's on-disk layout:
+/// `[len: u32 LE][body][crc32c(body): u32 LE]`.
+pub fn frame_record(rec: &WalRecord) -> Vec<u8> {
+    let body = rec.encode();
+    let mut frame = Vec::with_capacity(4 + body.len() + 4);
+    frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&body);
+    frame.extend_from_slice(&crc32c(&body).to_le_bytes());
+    frame
+}
+
+/// Try to read one intact framed record starting at `pos`: returns the
+/// record and the position just past its CRC trailer, or `None` when the
+/// bytes there are torn (truncated) or corrupt (CRC mismatch) — the
+/// loader's "durable prefix ends here" signal.
+fn scan_record(buf: &[u8], pos: usize) -> Option<(WalRecord, usize)> {
+    let len_end = pos.checked_add(4)?;
+    if len_end > buf.len() {
+        return None;
+    }
+    let n = u32::from_le_bytes(buf[pos..len_end].try_into().unwrap()) as usize;
+    if n > 1 << 30 {
+        return None;
+    }
+    let crc_end = len_end.checked_add(n)?.checked_add(4)?;
+    if crc_end > buf.len() {
+        return None;
+    }
+    let body = &buf[len_end..len_end + n];
+    let got = u32::from_le_bytes(buf[len_end + n..crc_end].try_into().unwrap());
+    if got != crc32c(body) {
+        return None;
+    }
+    let rec = WalRecord::decode(body).ok()?;
+    Some((rec, crc_end))
+}
+
+/// Parse exactly one framed record (the payload of a `WalShip` frame).
+/// Errors on torn bytes, a CRC mismatch, or trailing garbage — a corrupt
+/// shipped record must die here, counted, and never reach replay.
+pub fn parse_framed_record(frame: &[u8]) -> anyhow::Result<WalRecord> {
+    match scan_record(frame, 0) {
+        Some((rec, next)) if next == frame.len() => Ok(rec),
+        Some(_) => anyhow::bail!("trailing bytes after framed WAL record"),
+        None => anyhow::bail!("torn or corrupt framed WAL record"),
+    }
+}
+
 /// Result of scanning a WAL file: the durable prefix of records plus
 /// where (and whether) a torn tail was cut off.
 #[derive(Debug, Clone, PartialEq)]
@@ -417,11 +496,7 @@ impl RoundLog {
             std::fs::create_dir_all(parent)?;
         }
         let mut file = std::fs::File::create(path)?;
-        let mut header = Vec::with_capacity(WAL_HEADER_LEN as usize);
-        header.extend_from_slice(WAL_MAGIC);
-        put_u64(&mut header, k0);
-        header.extend_from_slice(&initial_obj.to_le_bytes());
-        file.write_all(&header)?;
+        file.write_all(&wal_header(k0, initial_obj))?;
         file.sync_data()?;
         Ok(RoundLog { file, bytes: WAL_HEADER_LEN })
     }
@@ -438,13 +513,10 @@ impl RoundLog {
 
     /// Append one round record and fsync it. Returns the framed record's
     /// size in bytes (counted into `ServiceStats::wal_bytes` by the
-    /// service).
+    /// service). The bytes written are exactly [`frame_record`]`(rec)` —
+    /// what a replicating primary ships to its standby.
     pub fn append(&mut self, rec: &WalRecord) -> anyhow::Result<u64> {
-        let body = rec.encode();
-        let mut frame = Vec::with_capacity(4 + body.len() + 4);
-        frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
-        frame.extend_from_slice(&body);
-        frame.extend_from_slice(&crc32c(&body).to_le_bytes());
+        let frame = frame_record(rec);
         self.file.write_all(&frame)?;
         self.file.sync_data()?;
         self.bytes += frame.len() as u64;
@@ -476,38 +548,12 @@ impl RoundLog {
     pub fn load<P: AsRef<Path>>(path: P) -> anyhow::Result<WalLoad> {
         let mut buf = Vec::new();
         std::fs::File::open(path)?.read_to_end(&mut buf)?;
-        anyhow::ensure!(
-            buf.len() >= WAL_HEADER_LEN as usize && &buf[..8] == WAL_MAGIC,
-            "bad WAL header"
-        );
-        let k0 = u64::from_le_bytes(buf[8..16].try_into().unwrap());
-        let initial_obj = f64::from_le_bytes(buf[16..24].try_into().unwrap());
+        let (k0, initial_obj) = parse_wal_header(&buf)?;
         let mut records = Vec::new();
         let mut pos = WAL_HEADER_LEN as usize;
         let mut torn = false;
         while pos < buf.len() {
-            let intact = (|| -> Option<(WalRecord, usize)> {
-                let len_end = pos.checked_add(4)?;
-                if len_end > buf.len() {
-                    return None;
-                }
-                let n = u32::from_le_bytes(buf[pos..len_end].try_into().unwrap()) as usize;
-                if n > 1 << 30 {
-                    return None;
-                }
-                let crc_end = len_end.checked_add(n)?.checked_add(4)?;
-                if crc_end > buf.len() {
-                    return None;
-                }
-                let body = &buf[len_end..len_end + n];
-                let got = u32::from_le_bytes(buf[len_end + n..crc_end].try_into().unwrap());
-                if got != crc32c(body) {
-                    return None;
-                }
-                let rec = WalRecord::decode(body).ok()?;
-                Some((rec, crc_end))
-            })();
-            match intact {
+            match scan_record(&buf, pos) {
                 Some((rec, next)) => {
                     records.push(rec);
                     pos = next;
@@ -678,6 +724,40 @@ mod tests {
         assert_eq!(load.records, vec![sample_record(0)], "prefix ends before the corrupt record");
         assert_eq!(load.valid_bytes, durable);
         assert!(load.torn_tail);
+    }
+
+    /// The replication stream is the disk log: header + framed records
+    /// concatenated are byte-identical to the file `RoundLog` wrote, and
+    /// the wire-side parser round-trips each framed record while rejecting
+    /// corruption, truncation, and trailing garbage.
+    #[test]
+    fn shared_framing_matches_the_disk_log_byte_for_byte() {
+        let path = wal_path("framing.wal");
+        let mut log = RoundLog::create(&path, 3, 0.5).unwrap();
+        let recs: Vec<_> = (3..6).map(sample_record).collect();
+        for r in &recs {
+            log.append(r).unwrap();
+        }
+        drop(log);
+        let mut stream = wal_header(3, 0.5);
+        for r in &recs {
+            stream.extend_from_slice(&frame_record(r));
+        }
+        assert_eq!(std::fs::read(&path).unwrap(), stream);
+        assert_eq!(parse_wal_header(&stream).unwrap(), (3, 0.5));
+        for r in &recs {
+            assert_eq!(parse_framed_record(&frame_record(r)).unwrap(), *r);
+        }
+        let frame = frame_record(&recs[0]);
+        for cut in 0..frame.len() {
+            assert!(parse_framed_record(&frame[..cut]).is_err(), "cut={cut}");
+        }
+        let mut bad = frame.clone();
+        bad[10] ^= 0x10;
+        assert!(parse_framed_record(&bad).is_err());
+        let mut long = frame.clone();
+        long.push(0);
+        assert!(parse_framed_record(&long).is_err());
     }
 
     #[test]

@@ -46,6 +46,10 @@ pub struct FaultConfig {
     pub reset: f64,
     /// P(defer the operation — timing-only, trace-neutral).
     pub delay: f64,
+    /// P(a hot standby stalls before sending a `WalAck`) — stresses the
+    /// primary's ack-gated commit wait (DESIGN.md §14). Timing-only:
+    /// drawn standby-side per acknowledged record, never alters bytes.
+    pub ack_delay: f64,
 }
 
 impl FaultConfig {
@@ -56,6 +60,7 @@ impl FaultConfig {
             || self.corrupt > 0.0
             || self.reset > 0.0
             || self.delay > 0.0
+            || self.ack_delay > 0.0
     }
 
     /// Timing-only preset: aggressive short reads/writes and delays, no
@@ -69,6 +74,7 @@ impl FaultConfig {
             corrupt: 0.0,
             reset: 0.0,
             delay: 0.1,
+            ack_delay: 0.0,
         }
     }
 }
@@ -104,6 +110,8 @@ pub struct FaultStats {
     pub resets: u64,
     /// Operations deferred.
     pub delays: u64,
+    /// `WalAck` sends stalled (standby-side ack-delay injection).
+    pub ack_delays: u64,
 }
 
 /// Seeded fault schedule: every read/write opportunity draws one
@@ -138,6 +146,20 @@ impl FaultInjector {
     /// Draw the fault for the next write operation.
     pub fn write_fault(&mut self) -> IoFault {
         self.draw(false)
+    }
+
+    /// Draw whether the next `WalAck` should be stalled before it is sent
+    /// (standby-side ack-delay injection — timing-only, the ack still goes
+    /// out afterwards). Deterministic in the schedule like every draw.
+    pub fn ack_delay_fault(&mut self) -> bool {
+        if self.cfg.ack_delay <= 0.0 {
+            return false;
+        }
+        let hit = self.rng.uniform() < self.cfg.ack_delay;
+        if hit {
+            self.stats.ack_delays += 1;
+        }
+        hit
     }
 
     fn draw(&mut self, is_read: bool) -> IoFault {
@@ -288,12 +310,14 @@ mod tests {
             corrupt: 0.1,
             reset: 0.05,
             delay: 0.1,
+            ack_delay: 0.2,
         };
         let mut a = FaultInjector::new(&cfg);
         let mut b = FaultInjector::new(&cfg);
         for _ in 0..500 {
             assert_eq!(a.read_fault(), b.read_fault());
             assert_eq!(a.write_fault(), b.write_fault());
+            assert_eq!(a.ack_delay_fault(), b.ack_delay_fault());
         }
         assert_eq!(a.stats, b.stats);
         // everything configured actually fired
@@ -302,6 +326,12 @@ mod tests {
         assert!(a.stats.corruptions > 0);
         assert!(a.stats.resets > 0);
         assert!(a.stats.delays > 0);
+        assert!(a.stats.ack_delays > 0);
+        // an unconfigured ack_delay never draws (and never shifts the
+        // schedule of the other fault classes)
+        let mut c = FaultInjector::new(&FaultConfig { ack_delay: 0.0, ..cfg });
+        assert!(!c.ack_delay_fault());
+        assert_eq!(c.stats.ack_delays, 0);
     }
 
     /// Timing-only faults through a `FaultStream` must deliver the exact

@@ -18,9 +18,12 @@
 //!   joins, mid-run drops with aggregate eviction, checkpoint-handoff
 //!   rejoins) over the [`wire`] codec, a fsynced write-ahead round log
 //!   ([`checkpoint::RoundLog`]) that makes the leader crash-recoverable
-//!   with a bit-identical trace, and the graceful-degradation ladder
+//!   with a bit-identical trace, the graceful-degradation ladder
 //!   (deadline-paced rounds with LAG forced skips, write backpressure,
-//!   on-the-wire Byzantine screening — DESIGN.md §13).
+//!   on-the-wire Byzantine screening — DESIGN.md §13), and hot-standby
+//!   replication: live WAL shipping with ack-gated commits, automatic
+//!   worker failover, and bit-identical standby takeover (DESIGN.md
+//!   §14).
 //! * [`faults`] — deterministic byte-level fault injection (short
 //!   reads/writes, corruption, resets, delays) for both socket runtimes
 //!   (DESIGN.md §12).
@@ -42,7 +45,10 @@ pub mod transport;
 pub mod trigger;
 pub mod wire;
 
-pub use checkpoint::{RoundLog, TrainState, WalLoad, WalRecord};
+pub use checkpoint::{
+    frame_record, parse_framed_record, parse_wal_header, wal_header, RoundLog, TrainState,
+    WalLoad, WalRecord, WAL_HEADER_LEN,
+};
 pub use faults::{FaultConfig, FaultInjector, FaultStats, FaultStream, IoFault};
 pub use pool::{with_pool, PoolHandle};
 pub use proximal::{prox_run, ProxOptions};

@@ -45,8 +45,22 @@
 //!   Frames carry CRC32C trailers; a corrupt frame is counted and dropped
 //!   with its connection, and [`serve_worker`] rides through leader
 //!   restarts with capped, jittered reconnect backoff.
+//! * **Hot-standby replication** (DESIGN.md §14) — a standby leader
+//!   ([`ServiceOptions::standby_of`]) attaches to the primary with a
+//!   `Promote` handshake, receives the WAL header and every committed
+//!   round as CRC-trailed `WalShip` frames (byte-identical to the disk
+//!   log), and acks each record after replaying it; the primary gates
+//!   every commit on that ack (write-ahead across the wire) or on the
+//!   standby's declared death. When the primary dies, the standby
+//!   promotes itself at its last fully replayed round boundary and the
+//!   fleet fails over through the standby address advertised in every
+//!   `Assign` — the post-failover trace is byte-identical to an
+//!   uninterrupted single-leader run.
 
-use super::checkpoint::{RoundLog, TrainState, WalRecord};
+use super::checkpoint::{
+    frame_record, parse_framed_record, parse_wal_header, wal_header, RoundLog, TrainState,
+    WalRecord,
+};
 use super::faults::{FaultConfig, FaultInjector, FaultStream, IoFault};
 use super::robust::{screen_admits, SCREEN_STRIKES, SCREEN_TOLERANCE};
 use super::server::ParameterServer;
@@ -319,6 +333,11 @@ pub enum CrashPoint {
     /// Die after round `k`'s record was fsynced: resume replays through
     /// `k` and continues at `k+1`.
     AfterWal(usize),
+    /// Die mid-`WalShip`: round `k`'s record reached the disk WAL, but
+    /// only the first `n` bytes of its replication frame reach the
+    /// standby's socket — a torn ship the standby must discard before
+    /// promoting at its previous round boundary (DESIGN.md §14).
+    MidShip(usize, usize),
 }
 
 /// Knobs of the event-loop leader. All deadlines are wall-clock; none of
@@ -389,6 +408,21 @@ pub struct ServiceOptions {
     /// strikes quarantine the shard (its `Hello`s are refused for the
     /// rest of the run) and evict the member.
     pub screen: bool,
+    /// Run as a hot standby (DESIGN.md §14): connect to this primary
+    /// address as a replication client, mirror its round log live, and
+    /// either return the replica's trace on a clean `Shutdown` or promote
+    /// at the last fully replayed round boundary when the stream dies.
+    /// Incompatible with `resume`/`wal`/`crash`/`straggle` options.
+    pub standby_of: Option<String>,
+    /// Primary side: advertise this failover address in every `Assign`
+    /// and accept one standby's `Promote` attach. This is the replication
+    /// opt-in — it also makes the leader retain the framed-record backlog
+    /// a late-attaching standby is served before live shipping begins.
+    pub standby_addr: Option<String>,
+    /// Primary side: how long a committed round waits for the standby's
+    /// `WalAck` before the standby is declared dead and detached (the run
+    /// then continues solo; a later attach replays the full backlog).
+    pub ack_timeout: Duration,
 }
 
 impl Default for ServiceOptions {
@@ -411,6 +445,9 @@ impl Default for ServiceOptions {
             max_queued_bytes: 0,
             max_workers: 0,
             screen: false,
+            standby_of: None,
+            standby_addr: None,
+            ack_timeout: Duration::from_secs(5),
         }
     }
 }
@@ -524,6 +561,19 @@ pub struct ServiceStats {
     /// Shards quarantined by the screen's strike ladder: their `Hello`s
     /// are refused for the rest of the run.
     pub quarantined: u64,
+    /// `WalShip` record frames shipped to an attached standby (primary
+    /// side; the header frame is not counted) — or records received and
+    /// replayed (standby side). See DESIGN.md §14.
+    pub wal_shipped_records: u64,
+    /// Largest `shipped − acked` round gap observed at a ship (primary
+    /// side; `0` without a standby).
+    pub ack_lag_max: u64,
+    /// Standby promotions: `0` on a primary, `1` after a failover
+    /// takeover.
+    pub promotions: u64,
+    /// The round boundary a promotion took over at (rounds are 1-based,
+    /// so `0` unambiguously means "no failover").
+    pub failover_round: u64,
     /// Eviction log — `(shard, cause)` in the order the evictions were
     /// applied. `eviction_causes.len() == evictions`.
     pub eviction_causes: Vec<(u32, EvictCause)>,
@@ -566,18 +616,22 @@ impl ServiceStats {
             })
             .collect();
         Json::obj(vec![
+            ("ack_lag_max", n(self.ack_lag_max)),
             ("bytes_down", n(self.bytes_down)),
             ("bytes_up", n(self.bytes_up)),
             ("corrupt_frames_dropped", n(self.corrupt_frames_dropped)),
             ("eviction_log", Json::Arr(log)),
             ("evictions", n(self.evictions)),
             ("evictions_by_cause", Json::obj(by_cause)),
+            ("failover_round", n(self.failover_round)),
             ("forced_skips", n(self.forced_skips)),
             ("joins", n(self.joins)),
+            ("promotions", n(self.promotions)),
             ("quarantined", n(self.quarantined)),
             ("retries", n(self.retries)),
             ("screen_rejected", n(self.screen_rejected)),
             ("wal_bytes", n(self.wal_bytes)),
+            ("wal_shipped_records", n(self.wal_shipped_records)),
         ])
     }
 }
@@ -684,6 +738,25 @@ struct Service {
     /// Byte-level fault injection on every socket read/write (`None` ⇒
     /// the fault-free hot path draws nothing).
     inj: Option<FaultInjector>,
+    /// Failover address advertised in every `Assign`
+    /// ([`ServiceOptions::standby_addr`], DESIGN.md §14).
+    standby_addr: Option<String>,
+    /// True when replication is on (`standby_addr` configured): every
+    /// committed round's framed record is retained in `repl_backlog` and
+    /// one standby's `Promote` attach is accepted.
+    repl_retain: bool,
+    /// Connection slab index of the attached standby, if any.
+    standby: Option<usize>,
+    /// Highest round the standby has acknowledged replaying (cumulative).
+    last_acked: u64,
+    /// Root round of the replication stream (the WAL's k₀).
+    repl_k0: u64,
+    /// The framed WAL header an attaching standby receives first.
+    repl_header: Vec<u8>,
+    /// Every committed round's framed record `(k, bytes)` in order — the
+    /// catch-up backlog an attaching standby is served before live
+    /// shipping begins. Empty unless `repl_retain`.
+    repl_backlog: Vec<(u64, Vec<u8>)>,
     /// Readiness multiplexer (epoll on Linux).
     poller: poller::Poller,
     stats: ServiceStats,
@@ -881,9 +954,12 @@ impl Service {
     /// maps to — in ascending shard order.
     fn reap_dead(&mut self) -> Vec<(usize, bool, EvictCause)> {
         let mut lost = Vec::new();
-        for slot in self.conns.iter_mut() {
+        for (i, slot) in self.conns.iter_mut().enumerate() {
             if matches!(slot, Some(c) if c.dead) {
                 let c = slot.take().unwrap();
+                if self.standby == Some(i) {
+                    self.standby = None; // a dead standby detaches silently
+                }
                 if let Some(s) = c.shard {
                     self.owner[s] = None;
                     let cause = if c.slow {
@@ -900,9 +976,18 @@ impl Service {
     }
 
     /// Pop queued `Hello`s into `conn.hello` and drop protocol garbage;
-    /// `Delta`s are left queued for the round collector.
+    /// `Delta`s are left queued for the round collector. Replication
+    /// control rides the same path: a `Promote{k}` is a standby's attach
+    /// offer (`k` = highest round it already holds — `0` for a fresh
+    /// standby), accepted only when replication is on and no standby is
+    /// attached (one standby at a time: the second attach is `Reject`ed,
+    /// which is also the split-brain guard — a refused standby exits
+    /// rather than promote); a `WalAck{k}` from the attached standby
+    /// advances the cumulative ack watermark the commit gate waits on.
     fn absorb_control(&mut self) {
-        for c in self.conns.iter_mut().flatten() {
+        let mut attach: Option<(usize, u64)> = None;
+        for (i, slot) in self.conns.iter_mut().enumerate() {
+            let Some(c) = slot else { continue };
             while let Some(front) = c.inbox.front() {
                 match front {
                     WireMsg::Hello { worker } => {
@@ -912,12 +997,57 @@ impl Service {
                     WireMsg::Heartbeat => {
                         c.inbox.pop_front();
                     }
+                    WireMsg::Promote { k } => {
+                        let have = *k;
+                        c.inbox.pop_front();
+                        if self.repl_retain
+                            && self.standby.is_none()
+                            && attach.is_none()
+                            && c.shard.is_none()
+                        {
+                            attach = Some((i, have));
+                        } else {
+                            // not replicating, or a standby is already
+                            // attached, or the peer is a member: refuse
+                            // and hang up once the refusal flushes
+                            self.stats.bytes_down +=
+                                c.out.push(&WireMsg::Reject { worker: ANY_SHARD });
+                            c.closing = true;
+                        }
+                        break;
+                    }
+                    WireMsg::WalAck { k } => {
+                        let acked = *k;
+                        c.inbox.pop_front();
+                        if self.standby == Some(i) {
+                            self.last_acked = self.last_acked.max(acked);
+                        } else {
+                            c.dead = true; // acks only come from the standby
+                            break;
+                        }
+                    }
                     WireMsg::Delta { .. } => break,
                     _ => {
                         c.dead = true; // leaders never receive Round/Assign
                         break;
                     }
                 }
+            }
+        }
+        if let Some((i, have)) = attach {
+            // attach the standby: ship the WAL header, then every
+            // retained record past what it claims to hold — the wire
+            // stream is byte-identical to the disk log, so its replay is
+            // exactly a `--resume-wal` replay
+            self.standby = Some(i);
+            self.last_acked = self.repl_k0.max(have);
+            let header = WireMsg::WalShip { k: self.repl_k0, rec: self.repl_header.clone() };
+            self.send(i, &header);
+            let backlog: Vec<(u64, Vec<u8>)> =
+                self.repl_backlog.iter().filter(|(rk, _)| *rk > have).cloned().collect();
+            for (rk, bytes) in backlog {
+                self.send(i, &WireMsg::WalShip { k: rk, rec: bytes });
+                self.stats.wal_shipped_records += 1;
             }
         }
     }
@@ -996,6 +1126,7 @@ impl Service {
                 worker: s as u32,
                 k: effective_k as u64,
                 cached: self.contrib[s].clone(),
+                standby: self.standby_addr.clone(),
             };
             self.send(i, &assign);
             if let Some(c) = &mut self.conns[i] {
@@ -1082,6 +1213,65 @@ fn screen_upload(
     admitted
 }
 
+/// Ship round `k`'s framed record to the attached standby (if any) and
+/// gate the commit on its `WalAck` — write-ahead across the wire
+/// (DESIGN.md §14). A standby that neither acks within
+/// [`ServiceOptions::ack_timeout`] nor stays connected is declared dead
+/// and detached; the primary then commits solo, and a later attach is
+/// served the retained backlog from scratch. The gate is timing-only:
+/// it can stall the round, never change it, so the recorded trace is
+/// identical with or without a standby.
+fn ship_round(
+    svc: &mut Service,
+    k: usize,
+    frame: Vec<u8>,
+    sopts: &ServiceOptions,
+) -> anyhow::Result<()> {
+    let msg = WireMsg::WalShip { k: k as u64, rec: frame };
+    if let Some(CrashPoint::MidShip(ck, keep)) = sopts.crash {
+        if ck == k {
+            // die mid-frame: push the first `keep` bytes straight onto the
+            // socket so the standby sees a torn ship — the wire analogue
+            // of a torn disk tail — then crash
+            if let Some(i) = svc.standby {
+                let bytes = msg.encode();
+                let cut = keep.min(bytes.len().saturating_sub(1));
+                if let Some(c) = &mut svc.conns[i] {
+                    c.stream.set_nonblocking(false)?;
+                    let _ = c.stream.write_all(&bytes[..cut]);
+                }
+            }
+            anyhow::bail!("injected crash mid-ship of round {k}");
+        }
+    }
+    let Some(i) = svc.standby else { return Ok(()) };
+    svc.send(i, &msg);
+    svc.write_conn(i); // push the frame toward the wire before waiting
+    svc.stats.wal_shipped_records += 1;
+    let lag = (k as u64).saturating_sub(svc.last_acked);
+    svc.stats.ack_lag_max = svc.stats.ack_lag_max.max(lag);
+    // the ack gate: wait for WalAck{≥ k}, the standby's death, or the
+    // ack timeout — whichever comes first. Dead workers discovered while
+    // pumping here stay unreaped until the next round's phase A (reaping
+    // mid-commit would evict contributions outside the WAL's accounting)
+    let deadline = Instant::now() + sopts.ack_timeout;
+    while svc.last_acked < k as u64 {
+        let dead = match &svc.conns[i] {
+            Some(c) => c.dead,
+            None => true,
+        };
+        if dead || Instant::now() >= deadline {
+            // declared dead: detach and commit solo from here on
+            svc.conns[i] = None;
+            svc.standby = None;
+            break;
+        }
+        svc.pump(deadline.saturating_duration_since(Instant::now()))?;
+        svc.absorb_control();
+    }
+    Ok(())
+}
+
 /// Run the event-loop leader on a pre-bound listener until
 /// `opts.max_iters` rounds (or the target) complete, tolerating the
 /// membership churn injected by `faults` and any real churn the fleet
@@ -1135,6 +1325,13 @@ pub fn run_service(
         max_queued: sopts.max_queued_bytes,
         max_workers: sopts.max_workers,
         inj: if faults.io.is_enabled() { Some(FaultInjector::new(&faults.io)) } else { None },
+        standby_addr: sopts.standby_addr.clone(),
+        repl_retain: sopts.standby_addr.is_some(),
+        standby: None,
+        last_acked: 0,
+        repl_k0: 0,
+        repl_header: Vec::new(),
+        repl_backlog: Vec::new(),
         poller: poller::Poller::new()?,
         stats: ServiceStats::default(),
         tick: sopts.tick,
@@ -1159,88 +1356,173 @@ pub fn run_service(
     let mut target_stop = false;
     let mut recorder;
     let k_start;
-    match (&sopts.wal, sopts.resume_wal) {
-        (Some(path), true) => {
-            let load = RoundLog::load(path)?;
-            anyhow::ensure!(
-                load.k0 as usize == k0,
-                "WAL root round {} does not match run start {k0}",
-                load.k0
-            );
-            recorder = TraceRecorder::new(
-                opts.record_every,
-                opts.max_iters,
-                opts.target_err,
-                opts.stop_at_target,
-                k0,
-                load.initial_obj,
-            );
-            // replay the durable prefix: the server state, contribution
-            // cache, trace records, and upload events come out exactly as
-            // the dead incarnation computed them
-            for rec in &load.records {
-                rec.replay(&mut ps, &mut svc.contrib, alpha);
-                uploads += rec.d_uploads;
-                downloads += rec.d_downloads;
-                for (s, mk, _) in &rec.uploads {
-                    events[*s as usize].push(*mk as usize);
-                }
-                for &a in &rec.admits {
-                    svc.ever_owned[a as usize] = true;
-                }
-                if recorder.on_iter(rec.k as usize, rec.obj_err, uploads, downloads, downloads) {
-                    target_stop = true;
-                }
-            }
-            k_start = k0 + load.records.len();
-            // re-arm scheduled holds that straddle the crash: a shard
-            // dropped at fk ≤ k_start whose re-admission round is still in
-            // the future must stay held, or the rejoin would land on a
-            // nondeterministic round
-            for &(r, s) in &faults.admit_at {
-                if r > k_start
-                    && faults
-                        .drop_after
-                        .iter()
-                        .any(|&(fk, fs)| fs == s && fk <= k_start && fk < r)
-                    && svc.admit_round[s].is_none_or(|cur| r < cur)
-                {
-                    svc.admit_round[s] = Some(r);
-                }
-            }
-            wal = Some(RoundLog::resume(path, &load)?);
+    let t0 = Instant::now();
+    if let Some(primary) = &sopts.standby_of {
+        // -- hot-standby mode (DESIGN.md §14) -------------------------
+        // mirror the primary's round log live; on a clean Shutdown the
+        // replica's trace *is* the run's trace, and on primary death the
+        // standby promotes at its last fully replayed round boundary
+        anyhow::ensure!(
+            sopts.resume.is_none()
+                && sopts.wal.is_none()
+                && !sopts.resume_wal
+                && sopts.crash.is_none()
+                && sopts.standby_addr.is_none(),
+            "standby mode is incompatible with resume/WAL/crash/standby-addr options"
+        );
+        anyhow::ensure!(
+            faults.straggle.is_empty(),
+            "straggle plans cannot cross a failover (in-flight replies are not durable)"
+        );
+        let (rec, ks, stop, end) = replicate_from(
+            primary,
+            &mut svc,
+            &mut ps,
+            &mut events,
+            &mut uploads,
+            &mut downloads,
+            alpha,
+            opts,
+            sopts,
+        )?;
+        recorder = rec;
+        k_start = ks;
+        target_stop = stop;
+        if matches!(end, ReplicaEnd::Finished) {
+            // the primary finished and said so: nothing to take over —
+            // return the replica's view of the completed run
+            svc.stats.final_theta = ps.theta.clone();
+            let meta = TraceMeta {
+                algo: format!("{}+svc", algo.name()),
+                problem: problem.name.clone(),
+                engine: "native-service".into(),
+                m,
+                alpha,
+            };
+            return Ok((recorder.into_trace(meta, events, t0.elapsed().as_secs_f64()), svc.stats));
         }
-        (Some(path), false) => {
-            let initial_obj = problem.obj_err(&ps.theta);
-            recorder = TraceRecorder::new(
-                opts.record_every,
-                opts.max_iters,
-                opts.target_err,
-                opts.stop_at_target,
-                k0,
-                initial_obj,
-            );
-            wal = Some(RoundLog::create(path, k0 as u64, initial_obj)?);
-            k_start = k0;
+        // promotion: the replication stream died without a Shutdown, so
+        // the primary is dead. Take over at the round boundary the
+        // replayed prefix ends on (the listener accepted no frames until
+        // now, so no split brain — worker Hellos waited in the TCP
+        // backlog); the reconnecting fleet re-runs admission and gets its
+        // cached gradients back through the usual `Assign{cached}` path
+        svc.stats.promotions += 1;
+        svc.stats.failover_round = k_start as u64;
+        // re-arm scheduled holds that straddle the failover, exactly as a
+        // WAL resume does: the rejoin must land on its planned round
+        for &(r, s) in &faults.admit_at {
+            if r > k_start
+                && faults
+                    .drop_after
+                    .iter()
+                    .any(|&(fk, fs)| fs == s && fk <= k_start && fk < r)
+                && svc.admit_round[s].is_none_or(|cur| r < cur)
+            {
+                svc.admit_round[s] = Some(r);
+            }
         }
-        (None, true) => anyhow::bail!("resume_wal set without a wal path"),
-        (None, false) => {
-            recorder = TraceRecorder::new(
-                opts.record_every,
-                opts.max_iters,
-                opts.target_err,
-                opts.stop_at_target,
-                k0,
-                problem.obj_err(&ps.theta),
-            );
-            k_start = k0;
+    } else {
+        let root_obj: f64;
+        match (&sopts.wal, sopts.resume_wal) {
+            (Some(path), true) => {
+                let load = RoundLog::load(path)?;
+                anyhow::ensure!(
+                    load.k0 as usize == k0,
+                    "WAL root round {} does not match run start {k0}",
+                    load.k0
+                );
+                root_obj = load.initial_obj;
+                recorder = TraceRecorder::new(
+                    opts.record_every,
+                    opts.max_iters,
+                    opts.target_err,
+                    opts.stop_at_target,
+                    k0,
+                    load.initial_obj,
+                );
+                // replay the durable prefix: the server state, contribution
+                // cache, trace records, and upload events come out exactly
+                // as the dead incarnation computed them
+                for rec in &load.records {
+                    rec.replay(&mut ps, &mut svc.contrib, alpha);
+                    uploads += rec.d_uploads;
+                    downloads += rec.d_downloads;
+                    for (s, mk, _) in &rec.uploads {
+                        events[*s as usize].push(*mk as usize);
+                    }
+                    for &a in &rec.admits {
+                        svc.ever_owned[a as usize] = true;
+                    }
+                    if recorder.on_iter(rec.k as usize, rec.obj_err, uploads, downloads, downloads)
+                    {
+                        target_stop = true;
+                    }
+                    if svc.repl_retain {
+                        // a standby attaching later must be able to replay
+                        // this prefix too: retain it re-framed (the frame
+                        // bytes are identical to the disk log's)
+                        svc.repl_backlog.push((rec.k, frame_record(rec)));
+                    }
+                }
+                k_start = k0 + load.records.len();
+                // re-arm scheduled holds that straddle the crash: a shard
+                // dropped at fk ≤ k_start whose re-admission round is still
+                // in the future must stay held, or the rejoin would land on
+                // a nondeterministic round
+                for &(r, s) in &faults.admit_at {
+                    if r > k_start
+                        && faults
+                            .drop_after
+                            .iter()
+                            .any(|&(fk, fs)| fs == s && fk <= k_start && fk < r)
+                        && svc.admit_round[s].is_none_or(|cur| r < cur)
+                    {
+                        svc.admit_round[s] = Some(r);
+                    }
+                }
+                wal = Some(RoundLog::resume(path, &load)?);
+            }
+            (Some(path), false) => {
+                let initial_obj = problem.obj_err(&ps.theta);
+                root_obj = initial_obj;
+                recorder = TraceRecorder::new(
+                    opts.record_every,
+                    opts.max_iters,
+                    opts.target_err,
+                    opts.stop_at_target,
+                    k0,
+                    initial_obj,
+                );
+                wal = Some(RoundLog::create(path, k0 as u64, initial_obj)?);
+                k_start = k0;
+            }
+            (None, true) => anyhow::bail!("resume_wal set without a wal path"),
+            (None, false) => {
+                let initial_obj = problem.obj_err(&ps.theta);
+                root_obj = initial_obj;
+                recorder = TraceRecorder::new(
+                    opts.record_every,
+                    opts.max_iters,
+                    opts.target_err,
+                    opts.stop_at_target,
+                    k0,
+                    initial_obj,
+                );
+                k_start = k0;
+            }
+        }
+        if svc.repl_retain {
+            // the stream a standby replays opens with the same header the
+            // disk log carries — byte-identical replication (DESIGN.md §14)
+            svc.repl_k0 = k0 as u64;
+            svc.repl_header = wal_header(k0 as u64, root_obj);
         }
     }
     if let Some(log) = &wal {
         svc.stats.wal_bytes = log.bytes();
     }
     let mut wal_admits: Vec<u32> = Vec::new();
-    let t0 = Instant::now();
 
     for k in k_start + 1..=opts.max_iters {
         if target_stop {
@@ -1648,10 +1930,12 @@ pub fn run_service(
         let obj = problem.obj_err(&ps.theta);
 
         // -- durability point -----------------------------------------
-        // the round is not real until its record is fsynced; the crash
-        // points bracket exactly that boundary (an `Err` return with no
-        // Shutdown broadcast — the fleet sees a silent leader death)
-        if let Some(log) = &mut wal {
+        // the round is not real until its record is fsynced and — with a
+        // standby attached — shipped and acknowledged (write-ahead across
+        // the wire, DESIGN.md §14); the crash points bracket exactly
+        // these byte positions (an `Err` return with no Shutdown
+        // broadcast — the fleet sees a silent leader death)
+        if wal.is_some() || svc.repl_retain {
             if matches!(sopts.crash, Some(CrashPoint::BeforeWal(ck)) if ck == k) {
                 anyhow::bail!("injected crash before WAL append of round {k}");
             }
@@ -1666,17 +1950,24 @@ pub fn run_service(
                 uploads: wal_uploads,
                 evict_post,
             };
-            let before = log.bytes();
-            let framed = log.append(&rec)?;
-            if let Some(CrashPoint::TornWal(ck, keep)) = sopts.crash {
-                if ck == k {
-                    // tear the freshly appended frame: keep only its first
-                    // bytes (always strictly short of a whole record)
-                    log.truncate(before + (keep as u64).min(framed.saturating_sub(1)))?;
-                    anyhow::bail!("injected crash mid-append of round {k}");
+            if let Some(log) = &mut wal {
+                let before = log.bytes();
+                let framed = log.append(&rec)?;
+                if let Some(CrashPoint::TornWal(ck, keep)) = sopts.crash {
+                    if ck == k {
+                        // tear the freshly appended frame: keep only its
+                        // first bytes (always strictly short of a record)
+                        log.truncate(before + (keep as u64).min(framed.saturating_sub(1)))?;
+                        anyhow::bail!("injected crash mid-append of round {k}");
+                    }
                 }
+                svc.stats.wal_bytes = log.bytes();
             }
-            svc.stats.wal_bytes = log.bytes();
+            if svc.repl_retain {
+                let frame = frame_record(&rec);
+                svc.repl_backlog.push((k as u64, frame.clone()));
+                ship_round(&mut svc, k, frame, sopts)?;
+            }
             if matches!(sopts.crash, Some(CrashPoint::AfterWal(ck)) if ck == k) {
                 anyhow::bail!("injected crash after WAL append of round {k}");
             }
@@ -1721,6 +2012,190 @@ pub fn run_service(
     Ok((recorder.into_trace(meta, events, t0.elapsed().as_secs_f64()), svc.stats))
 }
 
+/// How the replication phase of a standby run ended.
+enum ReplicaEnd {
+    /// The primary sent `Shutdown`: the run is over, the replica's trace
+    /// is the run's trace, and no promotion happens.
+    Finished,
+    /// The stream died without a `Shutdown` (EOF or reset): the primary
+    /// is dead and the standby must promote.
+    Promoted,
+}
+
+/// Hot-standby replication client (DESIGN.md §14): connect to the
+/// primary, offer an attach with `Promote{0}`, parse the shipped WAL
+/// header, then replay every `WalShip` record exactly as a
+/// `--resume-wal` replay does — acking *after* the replay, so the
+/// primary's commit gate means what it says. Returns the warm recorder,
+/// the last fully replayed round, the target-stop flag, and how the
+/// stream ended. A corrupt frame or a sequencing gap is fatal: the
+/// record dies at its CRC (counted, never replayed) and the standby
+/// exits rather than promote a doubtful prefix. The standby's own
+/// listener accepts nothing until promotion — worker `Hello`s wait in
+/// the TCP backlog, so a not-yet-promoted standby can never serve a
+/// round (split-brain avoidance).
+#[allow(clippy::too_many_arguments)]
+fn replicate_from(
+    primary: &str,
+    svc: &mut Service,
+    ps: &mut ParameterServer,
+    events: &mut [Vec<usize>],
+    uploads: &mut u64,
+    downloads: &mut u64,
+    alpha: f64,
+    opts: &RunOptions,
+    sopts: &ServiceOptions,
+) -> anyhow::Result<(TraceRecorder, usize, bool, ReplicaEnd)> {
+    // the primary may not be listening yet: retry within the join budget
+    let connect_deadline = Instant::now() + sopts.join_timeout;
+    let mut stream = loop {
+        match TcpStream::connect(primary) {
+            Ok(s) => break s,
+            Err(e) => {
+                anyhow::ensure!(
+                    Instant::now() < connect_deadline,
+                    "standby could not reach primary {primary}: {e}"
+                );
+                std::thread::sleep(sopts.tick.max(Duration::from_millis(1)));
+            }
+        }
+    };
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(sopts.tick.max(Duration::from_millis(1))))?;
+    stream.write_all(&WireMsg::Promote { k: 0 }.encode())?;
+    let mut dec = FrameDecoder::new();
+    let mut inbox: VecDeque<WireMsg> = VecDeque::new();
+    let mut recorder: Option<TraceRecorder> = None;
+    let mut target_stop = false;
+    let mut next_k: u64 = 1; // round the next shipped record must carry
+    let mut buf = [0u8; 65536];
+    let end = 'repl: loop {
+        while let Some(msg) = inbox.pop_front() {
+            match msg {
+                WireMsg::WalShip { k, rec } if recorder.is_none() => {
+                    // first frame: the WAL header opens the stream
+                    let (hk0, initial_obj) = parse_wal_header(&rec)?;
+                    anyhow::ensure!(k == hk0, "header frame round {k} does not match k0 {hk0}");
+                    anyhow::ensure!(
+                        hk0 == 0,
+                        "standby replication requires a primary rooted at round 0 (got k0={hk0})"
+                    );
+                    recorder = Some(TraceRecorder::new(
+                        opts.record_every,
+                        opts.max_iters,
+                        opts.target_err,
+                        opts.stop_at_target,
+                        0,
+                        initial_obj,
+                    ));
+                    if stream.write_all(&WireMsg::WalAck { k: hk0 }.encode()).is_err() {
+                        break 'repl ReplicaEnd::Promoted;
+                    }
+                }
+                WireMsg::WalShip { k, rec } => {
+                    let record = match parse_framed_record(&rec) {
+                        Ok(r) => r,
+                        Err(e) => {
+                            // dies at the CRC: counted, never replayed
+                            svc.stats.corrupt_frames_dropped += 1;
+                            return Err(e.context(format!(
+                                "replication stream corrupt after {} replayed rounds",
+                                next_k - 1
+                            )));
+                        }
+                    };
+                    anyhow::ensure!(
+                        k == record.k && record.k == next_k,
+                        "replication gap: shipped round {} (frame says {k}), expected {next_k}",
+                        record.k
+                    );
+                    record.replay(ps, &mut svc.contrib, alpha);
+                    *uploads += record.d_uploads;
+                    *downloads += record.d_downloads;
+                    for (s, mk, _) in &record.uploads {
+                        events[*s as usize].push(*mk as usize);
+                    }
+                    for &a in &record.admits {
+                        svc.ever_owned[a as usize] = true;
+                    }
+                    let hit = recorder.as_mut().expect("header precedes records").on_iter(
+                        record.k as usize,
+                        record.obj_err,
+                        *uploads,
+                        *downloads,
+                        *downloads,
+                    );
+                    if hit {
+                        target_stop = true;
+                    }
+                    svc.stats.wal_shipped_records += 1;
+                    next_k += 1;
+                    // seeded ack-delay fault: stall before acknowledging,
+                    // growing the primary's measured ack lag (timing-only
+                    // — the primary's gate waits, the trace is unchanged)
+                    if let Some(inj) = &mut svc.inj {
+                        if inj.ack_delay_fault() {
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                    }
+                    if stream.write_all(&WireMsg::WalAck { k: record.k }.encode()).is_err() {
+                        break 'repl ReplicaEnd::Promoted;
+                    }
+                }
+                WireMsg::Shutdown => break 'repl ReplicaEnd::Finished,
+                WireMsg::Reject { .. } => {
+                    anyhow::bail!(
+                        "primary refused the standby attach (another standby is live, \
+                         or replication is off)"
+                    )
+                }
+                WireMsg::Heartbeat => {}
+                other => anyhow::bail!("unexpected replication frame: {other:?}"),
+            }
+        }
+        match stream.read(&mut buf) {
+            Ok(0) => {
+                // EOF without Shutdown: the primary died. A partial frame
+                // left in the decoder is a torn ship — discarded, exactly
+                // like a torn disk tail — and promotion happens at the
+                // last *fully replayed* round boundary
+                anyhow::ensure!(recorder.is_some(), "primary vanished before the WAL header");
+                break 'repl ReplicaEnd::Promoted;
+            }
+            Ok(n) => {
+                let mut msgs = Vec::new();
+                if let Err(e) = dec.feed(&buf[..n], &mut msgs) {
+                    if e.downcast_ref::<CrcMismatch>().is_some() {
+                        svc.stats.corrupt_frames_dropped += 1;
+                    }
+                    return Err(e.context(format!(
+                        "replication stream corrupt after {} replayed rounds",
+                        next_k - 1
+                    )));
+                }
+                inbox.extend(msgs);
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => {
+                // a reset is a primary death too
+                anyhow::ensure!(recorder.is_some(), "primary vanished before the WAL header");
+                break 'repl ReplicaEnd::Promoted;
+            }
+        }
+    };
+    let Some(recorder) = recorder else {
+        // a Shutdown can land before the attach was ever served (a run
+        // that finished immediately): there is no replica to speak of
+        anyhow::bail!("primary finished before attaching the standby (no header received)");
+    };
+    Ok((recorder, (next_k - 1) as usize, target_stop, end))
+}
+
 /// How an elastic worker's session ended.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum WorkerExit {
@@ -1742,6 +2217,10 @@ pub struct WorkerOutcome {
     pub shard: Option<usize>,
     /// Reconnect attempts consumed before a session was established.
     pub retries: u32,
+    /// The failover address the leader last advertised in `Assign`, if
+    /// any — the caller can retarget here after the primary dies
+    /// (DESIGN.md §14).
+    pub standby: Option<String>,
 }
 
 /// Elastic-worker knobs.
@@ -1776,29 +2255,63 @@ impl Default for WorkerConfig {
     }
 }
 
+/// Live observations [`serve_worker_once`] records as the session runs,
+/// kept by the retry loop even when the session later dies with an
+/// error: rounds served (a productive session resets the reconnect
+/// backoff to its base delay — the escalated cap belongs to an older
+/// outage, not this one) and the standby address the leader last
+/// advertised in `Assign` (the failover target tried on later
+/// reconnects, DESIGN.md §14).
+#[derive(Debug, Clone, Default)]
+struct SessionProbe {
+    rounds: u64,
+    standby: Option<String>,
+}
+
 /// Serve the leader at `addr`, retrying failed sessions on the
 /// [`WorkerConfig::reconnect`] backoff schedule. Clean endings —
 /// `Shutdown`, or the leader hanging up at a frame boundary — return
 /// immediately (the caller decides whether to rejoin); errors (connection
 /// refused, resets, a mid-frame close from a dying leader, a rejected
 /// shard claim from a stale-owner race) burn one retry each and surface
-/// only once the budget is exhausted.
+/// only once the budget is exhausted. A session that served at least one
+/// round resets the backoff before its death is retried (this outage is
+/// new — reconnection restarts at the base delay), and once a leader has
+/// advertised a standby address the retries alternate between the primary
+/// and the standby until one of them answers (failover, DESIGN.md §14).
 pub fn serve_worker(
     addr: &str,
     problem: &Problem,
     cfg: &WorkerConfig,
 ) -> anyhow::Result<WorkerOutcome> {
     let mut backoff = Backoff::new(&cfg.reconnect);
+    let mut standby: Option<String> = None;
+    let mut on_standby = false;
     loop {
-        match serve_worker_once(addr, problem, cfg) {
+        let target = if on_standby { standby.as_deref().unwrap_or(addr) } else { addr };
+        let mut probe = SessionProbe::default();
+        let result = serve_worker_once(target, problem, cfg, &mut probe);
+        if probe.standby.is_some() {
+            standby = probe.standby.clone();
+        }
+        match result {
             Ok(mut out) => {
                 out.retries = backoff.attempts();
+                out.standby = standby;
                 return Ok(out);
             }
-            Err(e) => match backoff.next_delay() {
-                Some(d) => std::thread::sleep(d),
-                None => return Err(e),
-            },
+            Err(e) => {
+                if probe.rounds > 0 {
+                    backoff.reset(); // productive session: a fresh outage
+                }
+                match backoff.next_delay() {
+                    Some(d) => std::thread::sleep(d),
+                    None => return Err(e),
+                }
+                if standby.is_some() {
+                    on_standby = !on_standby; // alternate primary ↔ standby
+                }
+            }
         }
     }
 }
@@ -1812,6 +2325,7 @@ fn serve_worker_once(
     addr: &str,
     problem: &Problem,
     cfg: &WorkerConfig,
+    probe: &mut SessionProbe,
 ) -> anyhow::Result<WorkerOutcome> {
     let stream = TcpStream::connect(addr)?;
     stream.set_nodelay(true)?;
@@ -1830,17 +2344,19 @@ fn serve_worker_once(
     let mut inbox: VecDeque<WireMsg> = VecDeque::new();
     let mut shard: Option<usize> = None;
     let mut cached: Option<Vec<f64>> = None;
-    let mut rounds = 0u64;
     let mut last_leader = Instant::now();
     let mut buf = [0u8; 16384];
     loop {
         while let Some(msg) = inbox.pop_front() {
             match msg {
-                WireMsg::Assign { worker, k: _, cached: handoff } => {
+                WireMsg::Assign { worker, k: _, cached: handoff, standby } => {
                     let s = worker as usize;
                     anyhow::ensure!(s < problem.m(), "assigned shard {s} out of range");
                     shard = Some(s);
                     cached = handoff; // None ⇒ forced first-contact upload
+                    if standby.is_some() {
+                        probe.standby = standby; // failover target (§14)
+                    }
                 }
                 WireMsg::Round { k, rhs, theta } => {
                     let s = shard
@@ -1864,14 +2380,15 @@ fn serve_worker_once(
                         None
                     };
                     stream.write_all(&WireMsg::Delta { k, worker: s as u32, delta }.encode())?;
-                    rounds += 1;
+                    probe.rounds += 1;
                 }
                 WireMsg::Shutdown => {
                     return Ok(WorkerOutcome {
                         exit: WorkerExit::Shutdown,
-                        rounds,
+                        rounds: probe.rounds,
                         shard,
                         retries: 0,
+                        standby: probe.standby.clone(),
                     })
                 }
                 WireMsg::Reject { worker } => {
@@ -1889,9 +2406,10 @@ fn serve_worker_once(
                 anyhow::ensure!(!dec.mid_frame(), "leader closed mid-frame");
                 return Ok(WorkerOutcome {
                     exit: WorkerExit::LeaderClosed,
-                    rounds,
+                    rounds: probe.rounds,
                     shard,
                     retries: 0,
+                    standby: probe.standby.clone(),
                 });
             }
             Ok(n) => {
@@ -2342,6 +2860,13 @@ mod tests {
             max_queued: 64,
             max_workers: 0,
             inj: None,
+            standby_addr: None,
+            repl_retain: false,
+            standby: None,
+            last_acked: 0,
+            repl_k0: 0,
+            repl_header: Vec::new(),
+            repl_backlog: Vec::new(),
             poller: poller::Poller::new().unwrap(),
             stats: ServiceStats::default(),
             tick: Duration::from_millis(2),
@@ -2352,6 +2877,92 @@ mod tests {
         assert_eq!(svc.reap_dead(), vec![(0, false, EvictCause::SlowConsumer)]);
         assert!(svc.owner[0].is_none(), "the slow consumer's shard must be freed");
         assert!(svc.stats.bytes_down > 64, "the staged frame is still accounted");
+    }
+
+    /// A promotion must not scramble the eviction log: evictions applied
+    /// by the promoted standby land in its `eviction_log` in the same
+    /// deterministic insertion order an uninterrupted leader would record
+    /// (scheduled drops in plan order — here deliberately 3-then-1, so a
+    /// sneaky sort would be caught), and the failover counters pin the
+    /// takeover boundary. The primary dies at `BeforeWal(6)` with rounds
+    /// 1–5 ack-gated onto the standby, so the takeover is at round 5; the
+    /// scheduled drops at round 8 are served by the promoted standby.
+    #[test]
+    fn eviction_log_order_survives_promotion() {
+        let p = synthetic::linreg_increasing_l(4, 10, 4, 170);
+        let p = &p;
+        let opts = RunOptions { max_iters: 12, ..Default::default() };
+        let primary_lis = TcpListener::bind("127.0.0.1:0").unwrap();
+        let primary_addr = primary_lis.local_addr().unwrap().to_string();
+        let standby_lis = TcpListener::bind("127.0.0.1:0").unwrap();
+        let standby_addr = standby_lis.local_addr().unwrap().to_string();
+        let psopts = ServiceOptions {
+            crash: Some(CrashPoint::BeforeWal(6)),
+            standby_addr: Some(standby_addr.clone()),
+            ..quick_sopts()
+        };
+        let ssopts = ServiceOptions { standby_of: Some(primary_addr.clone()), ..quick_sopts() };
+        let drops = FaultPlan {
+            drop_after: vec![(8, 3), (8, 1)],
+            ..Default::default()
+        };
+        std::thread::scope(|scope| {
+            let primary = scope.spawn(|| {
+                run_service(primary_lis, p, Algorithm::LagWk, &opts, &psopts, &FaultPlan::default())
+            });
+            let standby = scope.spawn(|| {
+                run_service(standby_lis, p, Algorithm::LagWk, &opts, &ssopts, &drops)
+            });
+            for s in 0..4 {
+                let primary_addr = primary_addr.clone();
+                scope.spawn(move || {
+                    let cfg = WorkerConfig {
+                        preferred: Some(s),
+                        heartbeat_interval: Duration::from_millis(20),
+                        leader_timeout: Duration::from_secs(20),
+                        reconnect: BackoffPolicy {
+                            base: Duration::from_millis(5),
+                            cap: Duration::from_millis(40),
+                            max_retries: 6,
+                            seed: s as u64 + 1,
+                        },
+                        ..Default::default()
+                    };
+                    let mut target = primary_addr.clone();
+                    let mut standby: Option<String> = None;
+                    loop {
+                        match serve_worker(&target, p, &cfg) {
+                            Ok(o) => {
+                                if o.standby.is_some() {
+                                    standby = o.standby.clone();
+                                }
+                                if o.exit == WorkerExit::Shutdown {
+                                    break;
+                                }
+                            }
+                            Err(_) => match &standby {
+                                Some(sb) if target != *sb => target = sb.clone(),
+                                _ => break,
+                            },
+                        }
+                    }
+                });
+            }
+            let perr = primary.join().unwrap().unwrap_err();
+            assert!(perr.to_string().contains("injected crash"), "{perr:#}");
+            let (trace, stats) = standby.join().unwrap().unwrap();
+            assert_eq!(stats.promotions, 1);
+            assert_eq!(stats.failover_round, 5, "rounds 1-5 were ack-gated before the crash");
+            assert_eq!(trace.records.last().unwrap().k, 12, "post-failover run must finish");
+            // the scheduled drops at round 8 are applied by the promoted
+            // standby in plan order (3 before 1), exactly as an
+            // uninterrupted leader would log them — insertion order, not
+            // a sort
+            assert_eq!(
+                stats.eviction_causes,
+                vec![(3, EvictCause::Scheduled), (1, EvictCause::Scheduled)]
+            );
+        });
     }
 
     /// Admission control: with `max_workers` shards owned, a further
@@ -2524,6 +3135,10 @@ mod tests {
             screen_rejected: 3,
             quarantined: 1,
             evictions: 2,
+            wal_shipped_records: 12,
+            ack_lag_max: 2,
+            promotions: 1,
+            failover_round: 9,
             eviction_causes: vec![
                 (4, EvictCause::ScreenViolation),
                 (2, EvictCause::DeadlineMiss),
@@ -2535,6 +3150,11 @@ mod tests {
         assert!(s.contains("\"screen_rejected\":3"), "{s}");
         assert!(s.contains("\"quarantined\":1"), "{s}");
         assert!(s.contains("\"evictions\":2"), "{s}");
+        // replication counters (DESIGN.md §14)
+        assert!(s.contains("\"wal_shipped_records\":12"), "{s}");
+        assert!(s.contains("\"ack_lag_max\":2"), "{s}");
+        assert!(s.contains("\"promotions\":1"), "{s}");
+        assert!(s.contains("\"failover_round\":9"), "{s}");
         // histogram: hit causes counted, untouched causes present as zero
         assert!(s.contains("\"deadline_miss\":1"), "{s}");
         assert!(s.contains("\"screen_violation\":1"), "{s}");

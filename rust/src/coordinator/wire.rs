@@ -59,6 +59,10 @@ pub enum WireMsg {
         /// conservative semantics as the PS2 restore path documented in
         /// [`super::checkpoint::TrainState`].
         cached: Option<Vec<f64>>,
+        /// Failover address of the hot standby, when one is attached:
+        /// workers that lose the leader retry here through their backoff
+        /// loop (DESIGN.md §14). `None` ⇒ no standby; die with the leader.
+        standby: Option<String>,
     },
     /// Worker → leader: liveness signal while idle (no round in flight).
     Heartbeat,
@@ -68,6 +72,32 @@ pub enum WireMsg {
     Reject {
         /// The shard the worker claimed and was refused.
         worker: u32,
+    },
+    /// Primary → standby: one write-ahead round-log record, shipped in the
+    /// *disk framing* (`[len][body][crc32c(body)]` — see
+    /// [`super::checkpoint::frame_record`]) so the replication stream is
+    /// byte-identical to the on-disk `LAGWAL02` log and double-CRC
+    /// protected (inner record CRC + this frame's trailer). The first ship
+    /// after attach carries the 24-byte WAL header instead of a record.
+    WalShip {
+        /// Round the record commits (the header ship carries `k0`).
+        k: u64,
+        /// Disk-framed record bytes, opaque at the wire layer.
+        rec: Vec<u8>,
+    },
+    /// Standby → primary: record `k` is received, CRC-verified, *and
+    /// replayed* into the warm replica. The primary's ack-gated commit
+    /// rule blocks on this (DESIGN.md §14).
+    WalAck {
+        /// The round being acknowledged.
+        k: u64,
+    },
+    /// Standby → primary on connect: the replication handshake. `k` is the
+    /// last round the standby already holds (0 ⇒ fresh attach); the
+    /// primary responds by shipping the WAL header and backlog from `k+1`.
+    Promote {
+        /// Last round already held by the standby.
+        k: u64,
     },
 }
 
@@ -87,10 +117,19 @@ const TAG_SHUTDOWN: u8 = 4;
 const TAG_ASSIGN: u8 = 5;
 const TAG_HEARTBEAT: u8 = 6;
 const TAG_REJECT: u8 = 7;
+const TAG_WAL_SHIP: u8 = 8;
+const TAG_WAL_ACK: u8 = 9;
+const TAG_PROMOTE: u8 = 10;
+
+/// Upper bound on the `Assign.standby` address accepted from the wire — a
+/// host:port string, not a payload; anything longer is hostile.
+const MAX_ADDR_LEN: usize = 512;
 
 /// Protocol revision, folded into every frame's CRC (see the module docs).
 /// Bump on any change to the frame layout or a message's field set.
-pub const WIRE_VERSION: u8 = 2;
+/// v3: `WalShip`/`WalAck`/`Promote` replication frames and the optional
+/// `Assign.standby` failover address.
+pub const WIRE_VERSION: u8 = 3;
 
 /// Bytes of the CRC32C trailer appended after every frame body.
 pub const CRC_LEN: usize = 4;
@@ -206,6 +245,17 @@ fn vec_wire_len(n: usize) -> usize {
     8 + 8 * n
 }
 
+/// Serialize an opaque byte blob: u64 length prefix, then the raw bytes.
+fn put_bytes(buf: &mut Vec<u8>, b: &[u8]) {
+    put_u64(buf, b.len() as u64);
+    buf.extend_from_slice(b);
+}
+
+/// Encoded size of a length-prefixed byte blob.
+fn bytes_wire_len(n: usize) -> usize {
+    8 + n
+}
+
 struct Cursor<'a> {
     b: &'a [u8],
     pos: usize,
@@ -239,6 +289,16 @@ impl<'a> Cursor<'a> {
         }
         Ok(v)
     }
+    fn bytes(&mut self) -> anyhow::Result<Vec<u8>> {
+        let n = self.u64()? as usize;
+        anyhow::ensure!(n <= MAX_FRAME_LEN, "byte blob too large: {n}");
+        Ok(self.take(n)?.to_vec())
+    }
+    fn string(&mut self) -> anyhow::Result<String> {
+        let n = self.u64()? as usize;
+        anyhow::ensure!(n <= MAX_ADDR_LEN, "address too long: {n}");
+        Ok(String::from_utf8(self.take(n)?.to_vec())?)
+    }
 }
 
 impl WireMsg {
@@ -252,11 +312,18 @@ impl WireMsg {
                 8 + 4 + 1 + delta.as_ref().map(|d| vec_wire_len(d.len())).unwrap_or(0)
             }
             WireMsg::Shutdown => 0,
-            WireMsg::Assign { cached, .. } => {
-                4 + 8 + 1 + cached.as_ref().map(|c| vec_wire_len(c.len())).unwrap_or(0)
+            WireMsg::Assign { cached, standby, .. } => {
+                4 + 8
+                    + 1
+                    + cached.as_ref().map(|c| vec_wire_len(c.len())).unwrap_or(0)
+                    + 1
+                    + standby.as_ref().map(|s| bytes_wire_len(s.len())).unwrap_or(0)
             }
             WireMsg::Heartbeat => 0,
             WireMsg::Reject { .. } => 4,
+            WireMsg::WalShip { rec, .. } => 8 + bytes_wire_len(rec.len()),
+            WireMsg::WalAck { .. } => 8,
+            WireMsg::Promote { .. } => 8,
         }
     }
 
@@ -292,7 +359,7 @@ impl WireMsg {
                 }
             }
             WireMsg::Shutdown => out.push(TAG_SHUTDOWN),
-            WireMsg::Assign { worker, k, cached } => {
+            WireMsg::Assign { worker, k, cached, standby } => {
                 out.push(TAG_ASSIGN);
                 put_u32(&mut out, *worker);
                 put_u64(&mut out, *k);
@@ -303,11 +370,31 @@ impl WireMsg {
                     }
                     None => out.push(0),
                 }
+                match standby {
+                    Some(s) => {
+                        out.push(1);
+                        put_bytes(&mut out, s.as_bytes());
+                    }
+                    None => out.push(0),
+                }
             }
             WireMsg::Heartbeat => out.push(TAG_HEARTBEAT),
             WireMsg::Reject { worker } => {
                 out.push(TAG_REJECT);
                 put_u32(&mut out, *worker);
+            }
+            WireMsg::WalShip { k, rec } => {
+                out.push(TAG_WAL_SHIP);
+                put_u64(&mut out, *k);
+                put_bytes(&mut out, rec);
+            }
+            WireMsg::WalAck { k } => {
+                out.push(TAG_WAL_ACK);
+                put_u64(&mut out, *k);
+            }
+            WireMsg::Promote { k } => {
+                out.push(TAG_PROMOTE);
+                put_u64(&mut out, *k);
             }
         }
         debug_assert_eq!(out.len(), 4 + body_len, "body_len out of sync with encode");
@@ -339,10 +426,15 @@ impl WireMsg {
                 let k = c.u64()?;
                 let has = c.take(1)?[0];
                 let cached = if has == 1 { Some(c.vec()?) } else { None };
-                WireMsg::Assign { worker, k, cached }
+                let has = c.take(1)?[0];
+                let standby = if has == 1 { Some(c.string()?) } else { None };
+                WireMsg::Assign { worker, k, cached, standby }
             }
             TAG_HEARTBEAT => WireMsg::Heartbeat,
             TAG_REJECT => WireMsg::Reject { worker: c.u32()? },
+            TAG_WAL_SHIP => WireMsg::WalShip { k: c.u64()?, rec: c.bytes()? },
+            TAG_WAL_ACK => WireMsg::WalAck { k: c.u64()? },
+            TAG_PROMOTE => WireMsg::Promote { k: c.u64()? },
             t => anyhow::bail!("unknown wire tag {t}"),
         };
         anyhow::ensure!(c.pos == body.len(), "trailing bytes in frame");
@@ -571,10 +663,19 @@ mod tests {
         roundtrip(WireMsg::Delta { k: 3, worker: 1, delta: Some(vec![0.25; 10]) });
         roundtrip(WireMsg::Delta { k: 3, worker: 1, delta: None });
         roundtrip(WireMsg::Shutdown);
-        roundtrip(WireMsg::Assign { worker: 5, k: 17, cached: Some(vec![-0.5, 2.0]) });
-        roundtrip(WireMsg::Assign { worker: ANY_SHARD, k: 0, cached: None });
+        roundtrip(WireMsg::Assign {
+            worker: 5,
+            k: 17,
+            cached: Some(vec![-0.5, 2.0]),
+            standby: Some("10.0.0.2:7071".into()),
+        });
+        roundtrip(WireMsg::Assign { worker: ANY_SHARD, k: 0, cached: None, standby: None });
         roundtrip(WireMsg::Heartbeat);
         roundtrip(WireMsg::Reject { worker: 3 });
+        roundtrip(WireMsg::WalShip { k: 12, rec: vec![0xAB; 37] });
+        roundtrip(WireMsg::WalShip { k: 0, rec: Vec::new() });
+        roundtrip(WireMsg::WalAck { k: 12 });
+        roundtrip(WireMsg::Promote { k: 0 });
     }
 
     /// The CRC32C parameterization is pinned by the iSCSI known-answer
@@ -630,10 +731,32 @@ mod tests {
         let mut long = body.to_vec();
         long.push(0);
         assert!(WireMsg::decode(&long).is_err());
-        // unknown tags
-        for tag in [0u8, 8, 42, 255] {
+        // unknown tags (8–10 became the replication frames in v3)
+        for tag in [0u8, 11, 42, 255] {
             assert!(WireMsg::decode(&[tag, 0, 0, 0, 0]).is_err(), "tag={tag}");
         }
+        // hostile byte-blob length inside a WalShip: the u64 count promises
+        // more than MAX_FRAME_LEN but the body ends immediately
+        let mut body = vec![TAG_WAL_SHIP];
+        put_u64(&mut body, 4);
+        put_u64(&mut body, (MAX_FRAME_LEN as u64) + 1);
+        assert!(WireMsg::decode(&body).is_err());
+        // hostile standby-address length inside an Assign
+        let mut body = vec![TAG_ASSIGN];
+        put_u32(&mut body, 1);
+        put_u64(&mut body, 2);
+        body.push(0); // no cached gradient
+        body.push(1); // standby present…
+        put_u64(&mut body, (MAX_ADDR_LEN as u64) + 1); // …but absurdly long
+        assert!(WireMsg::decode(&body).is_err());
+        // non-UTF-8 standby address is rejected, not lossily accepted
+        let mut body = vec![TAG_ASSIGN];
+        put_u32(&mut body, 1);
+        put_u64(&mut body, 2);
+        body.push(0);
+        body.push(1);
+        put_bytes(&mut body, &[0xFF, 0xFE]);
+        assert!(WireMsg::decode(&body).is_err());
         // oversized length prefix: rejected before any body allocation
         let mut stream = Vec::new();
         stream.extend_from_slice(&(u32::MAX).to_le_bytes());
@@ -686,7 +809,8 @@ mod tests {
             WireMsg::Hello { worker: 2 },
             WireMsg::Round { k: 5, rhs: 1e-9, theta: vec![0.5; 130] },
             WireMsg::Delta { k: 5, worker: 2, delta: None },
-            WireMsg::Assign { worker: 9, k: 1, cached: Some(vec![1.0; 3]) },
+            WireMsg::Assign { worker: 9, k: 1, cached: Some(vec![1.0; 3]), standby: None },
+            WireMsg::WalShip { k: 2, rec: vec![7u8; 19] },
             WireMsg::Heartbeat,
             WireMsg::Shutdown,
         ];
@@ -723,10 +847,19 @@ mod tests {
             WireMsg::Round { k: 5, rhs: 1e-9, theta: vec![0.5, -1.25, 3.0] },
             WireMsg::Delta { k: 5, worker: 2, delta: Some(vec![0.125; 4]) },
             WireMsg::Delta { k: 5, worker: 2, delta: None },
-            WireMsg::Assign { worker: 9, k: 1, cached: Some(vec![1.0; 3]) },
+            WireMsg::Assign {
+                worker: 9,
+                k: 1,
+                cached: Some(vec![1.0; 3]),
+                standby: Some("127.0.0.1:7071".into()),
+            },
+            WireMsg::Assign { worker: 9, k: 1, cached: None, standby: None },
             WireMsg::Heartbeat,
             WireMsg::Reject { worker: 4 },
             WireMsg::Shutdown,
+            WireMsg::WalShip { k: 3, rec: vec![0x5A; 11] },
+            WireMsg::WalAck { k: 3 },
+            WireMsg::Promote { k: 0 },
         ]
     }
 
@@ -796,6 +929,34 @@ mod tests {
                     assert_eq!(out, want, "pair=({a:?},{b:?}) split={split}");
                     assert!(!dec.mid_frame());
                 }
+            }
+        }
+    }
+
+    /// Satellite: the replication frames obey the same hostile-input
+    /// bounds as every other frame — a length prefix past `MAX_FRAME_LEN`
+    /// poisons the decoder before any allocation, and every single-bit
+    /// corruption of a `WalShip`/`WalAck`/`Promote` dies at the CRC
+    /// trailer as a typed [`CrcMismatch`].
+    #[test]
+    fn replication_frames_bounded_and_crc_gated() {
+        let mut dec = FrameDecoder::new();
+        let hostile = ((MAX_FRAME_LEN as u32) + 1).to_le_bytes();
+        assert!(dec.feed(&hostile, &mut Vec::new()).is_err());
+        for m in [
+            WireMsg::WalShip { k: 4, rec: vec![9u8; 64] },
+            WireMsg::WalAck { k: 4 },
+            WireMsg::Promote { k: 4 },
+        ] {
+            let frame = m.encode();
+            for i in 4..frame.len() {
+                let mut bad = frame.clone();
+                bad[i] ^= 0x01;
+                let err = WireMsg::decode_frame(&bad).unwrap_err();
+                assert!(
+                    err.downcast_ref::<CrcMismatch>().is_some(),
+                    "expected CrcMismatch for {m:?} flip at {i}: {err:#}"
+                );
             }
         }
     }
@@ -871,7 +1032,7 @@ mod tests {
                 }
             }
             WireMsg::Shutdown => body.push(TAG_SHUTDOWN),
-            WireMsg::Assign { worker, k, cached } => {
+            WireMsg::Assign { worker, k, cached, standby } => {
                 body.push(TAG_ASSIGN);
                 put_u32(&mut body, *worker);
                 put_u64(&mut body, *k);
@@ -882,11 +1043,37 @@ mod tests {
                     }
                     None => body.push(0),
                 }
+                match standby {
+                    Some(s) => {
+                        body.push(1);
+                        put_u64(&mut body, s.len() as u64);
+                        for b in s.as_bytes() {
+                            body.push(*b);
+                        }
+                    }
+                    None => body.push(0),
+                }
             }
             WireMsg::Heartbeat => body.push(TAG_HEARTBEAT),
             WireMsg::Reject { worker } => {
                 body.push(TAG_REJECT);
                 put_u32(&mut body, *worker);
+            }
+            WireMsg::WalShip { k, rec } => {
+                body.push(TAG_WAL_SHIP);
+                put_u64(&mut body, *k);
+                put_u64(&mut body, rec.len() as u64);
+                for b in rec {
+                    body.push(*b);
+                }
+            }
+            WireMsg::WalAck { k } => {
+                body.push(TAG_WAL_ACK);
+                put_u64(&mut body, *k);
+            }
+            WireMsg::Promote { k } => {
+                body.push(TAG_PROMOTE);
+                put_u64(&mut body, *k);
             }
         }
         let mut out = Vec::with_capacity(4 + body.len() + CRC_LEN);
@@ -915,10 +1102,19 @@ mod tests {
             WireMsg::Hello { worker: 7 },
             WireMsg::Delta { k: 3, worker: 1, delta: None },
             WireMsg::Shutdown,
-            WireMsg::Assign { worker: 4, k: 12, cached: Some(vec![1.5; 65]) },
-            WireMsg::Assign { worker: 4, k: 12, cached: None },
+            WireMsg::Assign {
+                worker: 4,
+                k: 12,
+                cached: Some(vec![1.5; 65]),
+                standby: Some("standby.local:7071".into()),
+            },
+            WireMsg::Assign { worker: 4, k: 12, cached: None, standby: None },
             WireMsg::Heartbeat,
             WireMsg::Reject { worker: 11 },
+            WireMsg::WalShip { k: 8, rec: (0..=255u8).collect() },
+            WireMsg::WalShip { k: 8, rec: Vec::new() },
+            WireMsg::WalAck { k: 8 },
+            WireMsg::Promote { k: 19 },
         ] {
             assert_eq!(m.encode(), reference_encode(&m));
         }
@@ -932,9 +1128,17 @@ mod tests {
             WireMsg::Delta { k: 2, worker: 0, delta: Some(vec![-1.0; 64]) },
             WireMsg::Delta { k: 2, worker: 0, delta: None },
             WireMsg::Shutdown,
-            WireMsg::Assign { worker: 3, k: 40, cached: Some(vec![0.25; 33]) },
+            WireMsg::Assign {
+                worker: 3,
+                k: 40,
+                cached: Some(vec![0.25; 33]),
+                standby: Some("h:1".into()),
+            },
             WireMsg::Heartbeat,
             WireMsg::Reject { worker: 0 },
+            WireMsg::WalShip { k: 6, rec: vec![1u8; 100] },
+            WireMsg::WalAck { k: 6 },
+            WireMsg::Promote { k: 2 },
         ] {
             let enc = m.encode();
             assert_eq!(enc.capacity(), enc.len(), "no over-allocation: {m:?}");

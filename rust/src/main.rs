@@ -28,6 +28,7 @@ fn main() {
         Some("info") => cmd_info(&args),
         Some("leader") => cmd_leader(&args),
         Some("worker") => cmd_worker(&args),
+        Some("wal-dump") => cmd_wal_dump(&args),
         Some("plot") => cmd_plot(&args),
         Some("help") | None => {
             print_help();
@@ -55,12 +56,18 @@ fn print_help() {
          [--round-timeout-ms N] [--checkpoint F --checkpoint-every K] [--resume F]\n               \
          [--wal F] [--resume-wal] [--stats-out F]  (WAL = crash-recoverable:\n               \
          rerun with --wal F --resume-wal after a crash to continue bit-exactly);\n               \
+         replication: [--standby-addr HOST:PORT] advertise + ship the round log to\n               \
+         a hot standby with ack-gated commits [--ack-timeout-ms N], or run AS the\n               \
+         standby with [--standby --primary HOST:PORT] (promotes on primary death);\n               \
          degradation: [--round-deadline-ms N] pace rounds past stragglers,\n               \
          [--max-staleness D] [--miss-limit K] [--max-queued-bytes B]\n               \
          [--max-workers K] [--screen] (smoothness-screen uploads)\n  \
          worker       worker: --addr host:7070 [--index 0] (same problem flags);\n               \
          service runtime adds [--rejoin N] [--heartbeat-ms N] [--retries N]\n               \
-         [--retry-base-ms N] [--retry-cap-ms N] [--retry-seed S]\n  \
+         [--retry-base-ms N] [--retry-cap-ms N] [--retry-seed S]; fails over to\n               \
+         the leader-advertised standby address automatically\n  \
+         wal-dump     validate a --wal round log and print per-round summaries:\n               \
+         lag wal-dump run.wal (exit 1 on a torn or corrupt tail)\n  \
          plot         render a results CSV as an ASCII curve: lag plot results/fig3/lag-wk.csv\n  \
          info         list AOT artifacts\n\n\
          common flags: --engine pjrt|native  --artifacts DIR  --out DIR  --quick\n  \
@@ -229,12 +236,25 @@ fn cmd_leader(args: &Args) -> anyhow::Result<()> {
                 max_queued_bytes: args.opt_usize("max-queued-bytes", 0)?,
                 max_workers: args.opt_usize("max-workers", 0)?,
                 screen: args.has_flag("screen"),
+                standby_of: if args.has_flag("standby") {
+                    Some(args.opt("primary").map(String::from).ok_or_else(|| {
+                        anyhow::anyhow!("--standby requires --primary HOST:PORT")
+                    })?)
+                } else {
+                    None
+                },
+                standby_addr: args.opt("standby-addr").map(String::from),
+                ack_timeout: args.opt_duration_ms("ack-timeout-ms", 5_000)?,
                 ..Default::default()
             };
-            println!(
-                "service leader on {addr}: waiting for {} workers (elastic)...",
-                if sopts.min_workers == 0 { problem.m() } else { sopts.min_workers }
-            );
+            if let Some(primary) = &sopts.standby_of {
+                println!("standby leader on {addr}: replicating from {primary}...");
+            } else {
+                println!(
+                    "service leader on {addr}: waiting for {} workers (elastic)...",
+                    if sopts.min_workers == 0 { problem.m() } else { sopts.min_workers }
+                );
+            }
             let listener = std::net::TcpListener::bind(&addr)?;
             let (trace, stats) = lag::coordinator::run_service(
                 listener,
@@ -260,6 +280,16 @@ fn cmd_leader(args: &Args) -> anyhow::Result<()> {
                 println!(
                     "degradation: forced skips {}, screen rejections {}, quarantined {}",
                     stats.forced_skips, stats.screen_rejected, stats.quarantined
+                );
+            }
+            if stats.wal_shipped_records + stats.promotions > 0 {
+                println!(
+                    "replication: {} records shipped, ack lag max {}, promotions {}, \
+                     failover round {}",
+                    stats.wal_shipped_records,
+                    stats.ack_lag_max,
+                    stats.promotions,
+                    stats.failover_round
                 );
             }
             if let Some(out) = args.opt("stats-out") {
@@ -350,6 +380,58 @@ fn cmd_worker(args: &Args) -> anyhow::Result<()> {
         }
         other => anyhow::bail!("unknown --runtime '{other}' (expected service|tcp)"),
     }
+}
+
+/// Validate a `LAGWAL02` round log and print per-round summaries — the
+/// failover-triage companion to `--wal`: the same reader the resume and
+/// replication paths use walks the file, so whatever it prints is exactly
+/// what a recovering leader (or an attaching standby) would replay. Exits
+/// nonzero when the tail is torn or corrupt.
+fn cmd_wal_dump(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: lag wal-dump <wal-file>"))?;
+    let load = lag::coordinator::RoundLog::load(path)?;
+    println!(
+        "{path}: LAGWAL02, root round {}, initial objective {:.6e}",
+        load.k0, load.initial_obj
+    );
+    for rec in &load.records {
+        let stamps: Vec<String> =
+            rec.uploads.iter().map(|(s, mk, _)| format!("{s}@{mk}")).collect();
+        let churn = if rec.admits.is_empty() && rec.evict_pre.is_empty() && rec.evict_post.is_empty()
+        {
+            String::new()
+        } else {
+            format!(
+                "  admits {:?} evict_pre {:?} evict_post {:?}",
+                rec.admits, rec.evict_pre, rec.evict_post
+            )
+        };
+        println!(
+            "  round {:>6}  obj {:.6e}  uploads {:>3} [{}]{churn}",
+            rec.k,
+            rec.obj_err,
+            rec.d_uploads,
+            stamps.join(" "),
+        );
+    }
+    println!(
+        "{} records, {} valid bytes",
+        load.records.len(),
+        load.valid_bytes
+    );
+    if load.torn_tail {
+        anyhow::bail!(
+            "torn or corrupt tail after {} valid bytes ({} whole records) — \
+             a resume would truncate here",
+            load.valid_bytes,
+            load.records.len()
+        );
+    }
+    println!("clean tail: every record framed and CRC-valid");
+    Ok(())
 }
 
 fn cmd_plot(args: &Args) -> anyhow::Result<()> {

@@ -246,6 +246,7 @@ fn corrupt_frames_are_dropped_and_the_run_survives() {
             corrupt: 0.04,
             reset: 0.01,
             delay: 0.05,
+            ack_delay: 0.0,
         };
         let t0 = Instant::now();
         let (trace, stats) = run_clean(&p, &opts, &so, &faults);

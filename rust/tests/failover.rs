@@ -1,0 +1,393 @@
+//! Failover suite: hot-standby leader replication under fire
+//! (DESIGN.md §14).
+//!
+//! What this certifies, beyond the chaos suite's single-leader recovery:
+//!
+//! 1. **Takeover is exact.** A 16-worker run whose primary is killed at
+//!    every crash position a replicated round can occupy — before the
+//!    record exists, mid disk-append, mid `WalShip` (a torn wire frame),
+//!    and after the ack-gated commit — fails over to the standby and
+//!    still produces a final trace (records to the f64 bit, upload
+//!    events, final iterate) identical to an uninterrupted single-leader
+//!    run, scheduled membership churn straddling the failover included.
+//! 2. **The takeover boundary is deterministic.** Because the primary
+//!    gates every commit on the standby's ack, the promotion round is a
+//!    function of the crash point alone: `BeforeWal(k)`/`TornWal(k,_)`/
+//!    `MidShip(k,_)` promote at `k-1`, `AfterWal(k)` at `k` — pinned
+//!    exactly, not bounded.
+//! 3. **Workers find the standby on their own.** The fleet learns the
+//!    failover address from `Assign`, rides out the primary's death
+//!    through its reconnect backoff, and re-runs admission against the
+//!    promoted standby with the cached-gradient handoff — no external
+//!    coordination.
+//! 4. **Corruption dies at the CRC.** A byte flipped inside a shipped
+//!    record kills the standby at the frame trailer — counted, never
+//!    replayed — and the primary, after the ack gate declares that
+//!    standby dead, detaches it and carries the run to convergence.
+//!
+//! CI runs this with `cargo test --release --test failover`.
+
+use lag::coordinator::{
+    run_service, serve_worker, Algorithm, CrashPoint, FaultConfig, FaultPlan, IterRecord,
+    RunOptions, RunTrace, ServiceOptions, ServiceStats, WireMsg, WorkerConfig, WorkerExit,
+};
+use lag::data::{synthetic, Problem};
+use lag::util::BackoffPolicy;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+/// Per-case wall budget: a wedged failover must fail loudly, not hang
+/// the job until the CI runner's timeout.
+const WALL_BUDGET: Duration = Duration::from_secs(120);
+
+fn sopts() -> ServiceOptions {
+    ServiceOptions {
+        join_timeout: Duration::from_secs(60),
+        round_timeout: Duration::from_secs(60),
+        heartbeat_timeout: Duration::from_secs(60),
+        tick: Duration::from_millis(1),
+        ..Default::default()
+    }
+}
+
+/// Scheduled churn straddling every crash point in the matrix: shard 2
+/// is dropped before the earliest failover and re-admitted after it
+/// (the hold must survive the takeover), shard 6 churns entirely on the
+/// post-failover side. The same plan drives the primary, the standby,
+/// and the uninterrupted reference — rounds at or before the takeover
+/// fire on the primary (and reach the standby replayed from the WAL),
+/// later rounds fire on whichever leader is live.
+fn churn() -> FaultPlan {
+    FaultPlan {
+        drop_after: vec![(5, 2), (25, 6)],
+        admit_at: vec![(10, 2), (28, 6)],
+        ..Default::default()
+    }
+}
+
+fn record_sig(records: &[IterRecord]) -> Vec<(usize, u64, u64, u64)> {
+    records.iter().map(|r| (r.k, r.obj_err.to_bits(), r.cum_uploads, r.cum_downloads)).collect()
+}
+
+fn theta_bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// A preferred-shard fleet that survives a leader failover: each worker
+/// remembers the standby address its `Assign`s advertised and, when a
+/// session dies past the reconnect budget, retargets to the other
+/// incarnation — the client-side half of DESIGN.md §14.
+fn spawn_fleet<'scope, 'env>(
+    scope: &'scope std::thread::Scope<'scope, 'env>,
+    p: &'env Problem,
+    primary: &'env str,
+    done: &'env AtomicBool,
+) {
+    for s in 0..p.m() {
+        scope.spawn(move || {
+            let cfg = WorkerConfig {
+                preferred: Some(s),
+                heartbeat_interval: Duration::from_millis(20),
+                leader_timeout: Duration::from_secs(60),
+                // a deep budget with a small cap: one call rides out both
+                // an admission hold (`Reject`s burn retries) and the
+                // connect storm against a freshly dead primary
+                reconnect: BackoffPolicy {
+                    base: Duration::from_millis(2),
+                    cap: Duration::from_millis(20),
+                    max_retries: 40,
+                    seed: s as u64 + 1,
+                },
+                ..Default::default()
+            };
+            let mut target = primary.to_string();
+            let mut standby: Option<String> = None;
+            while !done.load(Ordering::SeqCst) {
+                match serve_worker(&target, p, &cfg) {
+                    Ok(o) => {
+                        if o.standby.is_some() {
+                            standby = o.standby.clone();
+                        }
+                        if o.exit == WorkerExit::Shutdown {
+                            break;
+                        }
+                    }
+                    Err(_) => {
+                        // budget exhausted against this incarnation: try
+                        // the other one (primary ↔ standby)
+                        if let Some(sb) = &standby {
+                            target = if target == *sb { primary.to_string() } else { sb.clone() };
+                        }
+                    }
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        });
+    }
+}
+
+/// One uninterrupted single-leader run over the same fleet and churn
+/// plan (the reference every failover case is byte-compared against).
+fn run_clean(p: &Problem, opts: &RunOptions, faults: &FaultPlan) -> (RunTrace, ServiceStats) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let done = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let leader = scope.spawn(|| {
+            let out = run_service(listener, p, Algorithm::LagWk, opts, &sopts(), faults);
+            done.store(true, Ordering::SeqCst);
+            out.unwrap()
+        });
+        spawn_fleet(scope, p, &addr, &done);
+        leader.join().unwrap()
+    })
+}
+
+/// The headline failover test: for each crash position a replicated
+/// round can die at — including mid-`WalShip`, the torn wire frame —
+/// the primary is killed, the fleet fails over through the advertised
+/// standby address, the standby promotes at its last fully acked round
+/// boundary, and the completed run's trace is byte-identical to the
+/// uninterrupted reference. The promotion round is asserted exactly:
+/// ack-gated commits make it a deterministic function of the crash
+/// point.
+#[test]
+fn failover_is_bit_identical_at_every_crash_point() {
+    let m = 16;
+    let p = synthetic::linreg_increasing_l(m, 10, 4, 2030);
+    let opts = RunOptions { max_iters: 30, record_every: 1, ..Default::default() };
+    let faults = churn();
+    let (clean_trace, clean_stats) = run_clean(&p, &opts, &faults);
+    assert_eq!(clean_trace.records.last().unwrap().k, opts.max_iters);
+
+    // (crash point, promotion round it must pin, needs a disk WAL)
+    let cases = [
+        (CrashPoint::BeforeWal(8), 7u64, false),
+        (CrashPoint::TornWal(12, 9), 11, true),
+        (CrashPoint::MidShip(15, 9), 14, false),
+        (CrashPoint::AfterWal(20), 20, false),
+    ];
+    for (crash, takeover, needs_wal) in cases {
+        let wal = needs_wal.then(|| {
+            let path = std::env::temp_dir().join("lag_failover_torn.wal");
+            let _ = std::fs::remove_file(&path);
+            path
+        });
+        let primary_lis = TcpListener::bind("127.0.0.1:0").unwrap();
+        let primary_addr = primary_lis.local_addr().unwrap().to_string();
+        let standby_lis = TcpListener::bind("127.0.0.1:0").unwrap();
+        let standby_addr = standby_lis.local_addr().unwrap().to_string();
+        let psopts = ServiceOptions {
+            crash: Some(crash),
+            standby_addr: Some(standby_addr.clone()),
+            wal: wal.clone(),
+            ..sopts()
+        };
+        let ssopts = ServiceOptions { standby_of: Some(primary_addr.clone()), ..sopts() };
+        let done = AtomicBool::new(false);
+        let p = &p;
+        let opts = &opts;
+        let faults = &faults;
+        let t0 = Instant::now();
+        let (perr, (trace, stats)) = std::thread::scope(|scope| {
+            let primary = scope.spawn(|| {
+                run_service(primary_lis, p, Algorithm::LagWk, opts, &psopts, faults)
+            });
+            let standby = scope.spawn(|| {
+                let out = run_service(standby_lis, p, Algorithm::LagWk, opts, &ssopts, faults);
+                done.store(true, Ordering::SeqCst);
+                out
+            });
+            spawn_fleet(scope, p, &primary_addr, &done);
+            (primary.join().unwrap().unwrap_err(), standby.join().unwrap().unwrap())
+        });
+        let elapsed = t0.elapsed();
+        assert!(elapsed < WALL_BUDGET, "{crash:?}: failover blew the wall budget: {elapsed:?}");
+        assert!(
+            perr.to_string().contains("injected crash"),
+            "{crash:?}: primary died of the wrong cause: {perr:#}"
+        );
+
+        // the takeover boundary, pinned exactly
+        assert_eq!(stats.promotions, 1, "{crash:?}");
+        assert_eq!(stats.failover_round, takeover, "{crash:?}: wrong promotion round");
+        assert_eq!(
+            stats.wal_shipped_records,
+            takeover,
+            "{crash:?}: replayed records must match the promotion round"
+        );
+
+        // bit-identical survival: every record, every upload event, the
+        // final iterate — churn straddling the takeover included
+        assert_eq!(trace.records.last().unwrap().k, opts.max_iters, "{crash:?}");
+        assert_eq!(record_sig(&trace.records), record_sig(&clean_trace.records), "{crash:?}");
+        assert_eq!(trace.upload_events, clean_trace.upload_events, "{crash:?}");
+        assert_eq!(
+            theta_bits(&stats.final_theta),
+            theta_bits(&clean_stats.final_theta),
+            "{crash:?}"
+        );
+        if let Some(path) = wal {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// The replication frame (`WalShip`) index the proxy corrupts: 0 is the
+/// WAL header, i ≥ 1 is round i — so flipping index 4 leaves rounds 1–3
+/// cleanly replayed and kills the standby on round 4's record.
+const CORRUPT_SHIP: u32 = 4;
+
+/// Man-in-the-middle proxy for the replication channel: standby→primary
+/// bytes (`Promote`, `WalAck`s) pass verbatim; primary→standby bytes are
+/// length-parsed into frames and the `CORRUPT_SHIP`-th `WalShip` gets
+/// one payload byte flipped, so the outer CRC trailer must catch it at
+/// the standby.
+fn flipping_proxy(listener: TcpListener, primary: String) {
+    let Ok((standby_side, _)) = listener.accept() else { return };
+    let Ok(primary_side) = TcpStream::connect(primary.as_str()) else { return };
+    let mut up_src = standby_side.try_clone().unwrap();
+    let mut up_dst = primary_side.try_clone().unwrap();
+    let up = std::thread::spawn(move || {
+        let mut b = [0u8; 4096];
+        loop {
+            match up_src.read(&mut b) {
+                Ok(0) | Err(_) => break,
+                Ok(n) => {
+                    if up_dst.write_all(&b[..n]).is_err() {
+                        break;
+                    }
+                }
+            }
+        }
+        let _ = up_dst.shutdown(std::net::Shutdown::Both);
+    });
+    let mut down_src = primary_side;
+    let mut down_dst = standby_side;
+    let ship_tag = WireMsg::WalShip { k: 0, rec: Vec::new() }.encode()[4];
+    let mut buf: Vec<u8> = Vec::new();
+    let mut ships = 0u32;
+    let mut chunk = [0u8; 65536];
+    loop {
+        let n = match down_src.read(&mut chunk) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => n,
+        };
+        buf.extend_from_slice(&chunk[..n]);
+        // forward whole frames only: [len u32 LE][tag][payload][crc u32
+        // LE], the length prefix covering tag + payload
+        let mut fwd = 0usize;
+        while buf.len() - fwd >= 4 {
+            let len = u32::from_le_bytes(buf[fwd..fwd + 4].try_into().unwrap()) as usize;
+            let total = 4 + len + 4;
+            if buf.len() - fwd < total {
+                break;
+            }
+            if buf[fwd + 4] == ship_tag {
+                if ships == CORRUPT_SHIP {
+                    buf[fwd + 6] ^= 0xFF;
+                }
+                ships += 1;
+            }
+            fwd += total;
+        }
+        if down_dst.write_all(&buf[..fwd]).is_err() {
+            break;
+        }
+        buf.drain(..fwd);
+    }
+    let _ = down_dst.shutdown(std::net::Shutdown::Both);
+    let _ = up.join();
+}
+
+/// Corruption containment on the replication channel: a byte flipped
+/// inside the fifth `WalShip` frame, while the standby acks under seeded
+/// ack delays, must die at the standby's CRC — the standby errors out
+/// after exactly the three cleanly replayed rounds, never applying the
+/// poisoned one — and the primary, its ack gate left hanging, declares
+/// the standby dead, detaches it, and finishes the run solo, still
+/// converging.
+#[test]
+fn corrupt_wal_ship_dies_at_the_crc_and_the_primary_survives() {
+    let m = 8;
+    let p = synthetic::linreg_increasing_l(m, 8, 4, 2031);
+    let opts = RunOptions { max_iters: 30, record_every: 1, ..Default::default() };
+
+    let primary_lis = TcpListener::bind("127.0.0.1:0").unwrap();
+    let primary_addr = primary_lis.local_addr().unwrap().to_string();
+    let standby_lis = TcpListener::bind("127.0.0.1:0").unwrap();
+    let standby_addr = standby_lis.local_addr().unwrap().to_string();
+    let proxy_lis = TcpListener::bind("127.0.0.1:0").unwrap();
+    let proxy_addr = proxy_lis.local_addr().unwrap().to_string();
+
+    let psopts = ServiceOptions {
+        standby_addr: Some(standby_addr.clone()),
+        // a hanging ack should detach the dead standby promptly, not
+        // stall the round for the default five seconds
+        ack_timeout: Duration::from_millis(1000),
+        ..sopts()
+    };
+    // the standby attaches through the byte-flipping proxy, acking under
+    // seeded delays (timing-only: the gate waits, the trace is unchanged)
+    let ssopts = ServiceOptions { standby_of: Some(proxy_addr.clone()), ..sopts() };
+    let ack_faults = FaultPlan {
+        io: FaultConfig {
+            seed: 7,
+            short_read: 0.0,
+            short_write: 0.0,
+            corrupt: 0.0,
+            reset: 0.0,
+            delay: 0.0,
+            ack_delay: 0.3,
+        },
+        ..Default::default()
+    };
+
+    let done = AtomicBool::new(false);
+    let p = &p;
+    let opts = &opts;
+    let t0 = Instant::now();
+    let ((trace, stats), serr) = std::thread::scope(|scope| {
+        scope.spawn(|| flipping_proxy(proxy_lis, primary_addr.clone()));
+        let primary = scope.spawn(|| {
+            let no_faults = FaultPlan::default();
+            let out = run_service(primary_lis, p, Algorithm::LagWk, opts, &psopts, &no_faults);
+            done.store(true, Ordering::SeqCst);
+            out
+        });
+        let standby = scope.spawn(|| {
+            run_service(standby_lis, p, Algorithm::LagWk, opts, &ssopts, &ack_faults)
+        });
+        spawn_fleet(scope, p, &primary_addr, &done);
+        (primary.join().unwrap().unwrap(), standby.join().unwrap().unwrap_err())
+    });
+    let elapsed = t0.elapsed();
+    assert!(elapsed < WALL_BUDGET, "corruption run blew the wall budget: {elapsed:?}");
+
+    // the corrupt record died at the CRC: the standby reports exactly the
+    // three rounds it replayed cleanly — the poisoned fourth was never
+    // applied
+    let msg = format!("{serr:#}");
+    assert!(
+        msg.contains("replication stream corrupt after 3 replayed rounds"),
+        "standby died of the wrong cause: {msg}"
+    );
+
+    // the primary detached the dead standby and finished the run solo —
+    // no promotion, shipping stopped at the kill, and the ack gate's lag
+    // accounting engaged
+    assert_eq!(trace.records.last().unwrap().k, opts.max_iters);
+    let first = trace.records.first().unwrap().obj_err;
+    let last = trace.records.last().unwrap().obj_err;
+    assert!(last < first, "objective did not decrease: {first} -> {last}");
+    assert_eq!(stats.promotions, 0);
+    assert_eq!(stats.failover_round, 0);
+    assert!(
+        stats.wal_shipped_records >= CORRUPT_SHIP as u64,
+        "only {} records shipped before the kill",
+        stats.wal_shipped_records
+    );
+    assert!(stats.ack_lag_max >= 1, "the ack gate never measured an outstanding record");
+}
