@@ -156,6 +156,62 @@ impl Default for ServiceSpec {
     }
 }
 
+/// Fleet-simulation knobs for the discrete-event simulator (`lag sim`,
+/// DESIGN.md §15), the config-file counterpart of the CLI's `--net` /
+/// `--compute` flags. Times are given in microseconds in the JSON
+/// (`latency_us`, `grad_us`, `round_deadline_ms` for the pace deadline)
+/// and lowered to the runner's nanosecond clock.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimSpec {
+    /// Network model (`sim.net`: `{"kind": "ideal" | "constant" |
+    /// "shared-leader" | "per-link", "latency_us", "gbps", "spread",
+    /// "seed"}`).
+    pub net: crate::sim::NetSpec,
+    /// Per-worker compute-speed model (`sim.compute`: `{"kind":
+    /// "uniform" | "lognormal" | "two-class", "grad_us", "sigma",
+    /// "slow_mult", "slow_fraction", "seed"}`).
+    pub compute: crate::sim::ComputeSpec,
+    /// Seed for the event queue's equal-timestamp tie-breaking.
+    pub sim_seed: u64,
+    /// Rotate worker→speed assignment by this many slots (timing
+    /// sensitivity studies; trace-neutral by the differential suite).
+    pub compute_rotation: usize,
+    /// Deadline-paced rounds on simulated time (the sim analog of
+    /// `service.round_deadline_ms`). `None` ⇒ block on every member.
+    pub round_deadline: Option<std::time::Duration>,
+    /// Staleness cap D under pacing (0 ⇒ uncapped).
+    pub max_staleness: usize,
+}
+
+impl Default for SimSpec {
+    fn default() -> Self {
+        SimSpec {
+            net: crate::sim::NetSpec::Ideal,
+            compute: crate::sim::ComputeSpec::Uniform { grad_ns: 1_000_000 },
+            sim_seed: 0,
+            compute_rotation: 0,
+            round_deadline: None,
+            max_staleness: 0,
+        }
+    }
+}
+
+impl SimSpec {
+    /// Lower to the runner's [`crate::sim::SimOptions`]. Fault plans are
+    /// a CLI/test concern and stay at their default (empty) here.
+    pub fn to_options(&self) -> crate::sim::SimOptions {
+        crate::sim::SimOptions {
+            net: self.net,
+            compute: self.compute,
+            sim_seed: self.sim_seed,
+            compute_rotation: self.compute_rotation,
+            round_deadline_ns: self.round_deadline.map(|d| d.as_nanos() as u64),
+            max_staleness: self.max_staleness,
+            ..Default::default()
+        }
+    }
+}
+
 /// A fully described run.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -173,6 +229,8 @@ pub struct RunConfig {
     pub trace_out: Option<String>,
     /// Optional socket-service deployment section (`"service"`).
     pub service: Option<ServiceSpec>,
+    /// Optional discrete-event fleet-simulation section (`"sim"`).
+    pub sim: Option<SimSpec>,
 }
 
 impl RunConfig {
@@ -201,6 +259,10 @@ impl RunConfig {
             Ok(s) => Some(parse_service(s)?),
             Err(_) => None,
         };
+        let sim = match root.get("sim") {
+            Ok(s) => Some(parse_sim(s)?),
+            Err(_) => None,
+        };
         Ok(RunConfig {
             problem,
             algorithm,
@@ -214,6 +276,7 @@ impl RunConfig {
                 .to_string(),
             trace_out: root.get("trace_out").ok().and_then(|v| v.as_str()).map(String::from),
             service,
+            sim,
         })
     }
 }
@@ -328,6 +391,84 @@ fn parse_service(j: &Json) -> anyhow::Result<ServiceSpec> {
             "primary" => s.primary = v.as_str().map(String::from),
             "ack_timeout_ms" => s.ack_timeout = ms(v, k)?,
             other => anyhow::bail!("unknown service key '{other}'"),
+        }
+    }
+    Ok(s)
+}
+
+fn parse_sim_net(j: &Json) -> anyhow::Result<crate::sim::NetSpec> {
+    let obj = j.as_obj().ok_or_else(|| anyhow::anyhow!("sim.net must be an object"))?;
+    let (mut kind, mut latency_us, mut gbps, mut spread, mut seed) =
+        ("ideal".to_string(), 0.0, 10.0, 0.5, 0u64);
+    for (k, v) in obj {
+        match k.as_str() {
+            "kind" => {
+                kind = v
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("sim.net.kind must be a string"))?
+                    .to_string();
+            }
+            "latency_us" => latency_us = v.as_f64().unwrap_or(latency_us),
+            "gbps" => gbps = v.as_f64().unwrap_or(gbps),
+            "spread" => spread = v.as_f64().unwrap_or(spread),
+            "seed" => seed = v.as_f64().unwrap_or(0.0) as u64,
+            other => anyhow::bail!("unknown sim.net key '{other}'"),
+        }
+    }
+    crate::sim::NetSpec::parse(&kind, (latency_us * 1000.0) as u64, gbps, spread, seed)
+}
+
+fn parse_sim_compute(j: &Json) -> anyhow::Result<crate::sim::ComputeSpec> {
+    let obj = j.as_obj().ok_or_else(|| anyhow::anyhow!("sim.compute must be an object"))?;
+    let (mut kind, mut grad_us, mut sigma, mut slow_mult, mut slow_fraction, mut seed) =
+        ("uniform".to_string(), 1000.0, 0.5, 10.0, 0.1, 0u64);
+    for (k, v) in obj {
+        match k.as_str() {
+            "kind" => {
+                kind = v
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("sim.compute.kind must be a string"))?
+                    .to_string();
+            }
+            "grad_us" => grad_us = v.as_f64().unwrap_or(grad_us),
+            "sigma" => sigma = v.as_f64().unwrap_or(sigma),
+            "slow_mult" => slow_mult = v.as_f64().unwrap_or(slow_mult),
+            "slow_fraction" => slow_fraction = v.as_f64().unwrap_or(slow_fraction),
+            "seed" => seed = v.as_f64().unwrap_or(0.0) as u64,
+            other => anyhow::bail!("unknown sim.compute key '{other}'"),
+        }
+    }
+    crate::sim::ComputeSpec::parse(
+        &kind,
+        (grad_us * 1000.0) as u64,
+        sigma,
+        slow_mult,
+        slow_fraction,
+        seed,
+    )
+}
+
+fn parse_sim(j: &Json) -> anyhow::Result<SimSpec> {
+    let obj = j.as_obj().ok_or_else(|| anyhow::anyhow!("sim must be an object"))?;
+    let mut s = SimSpec::default();
+    for (k, v) in obj {
+        match k.as_str() {
+            "net" => s.net = parse_sim_net(v)?,
+            "compute" => s.compute = parse_sim_compute(v)?,
+            "sim_seed" => s.sim_seed = v.as_f64().unwrap_or(0.0) as u64,
+            "compute_rotation" => s.compute_rotation = v.as_usize().unwrap_or(0),
+            "round_deadline_ms" => {
+                s.round_deadline = Some(
+                    v.as_f64()
+                        .filter(|x| *x >= 0.0)
+                        .map(|x| std::time::Duration::from_millis(x as u64))
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("sim.round_deadline_ms must be milliseconds")
+                        })?,
+                );
+            }
+            "max_staleness" => s.max_staleness = v.as_usize().unwrap_or(s.max_staleness),
+            other => anyhow::bail!("unknown sim key '{other}'"),
         }
     }
     Ok(s)
@@ -477,6 +618,57 @@ mod tests {
                  "service": {"join_timeout_ms": "soon"}}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn parses_sim_section() {
+        let c = RunConfig::from_json_str(
+            r#"{"problem": {"kind": "synthetic", "task": "linreg", "m": 4},
+                 "sim": {"net": {"kind": "shared-leader", "latency_us": 20, "gbps": 40.0},
+                          "compute": {"kind": "lognormal", "grad_us": 1000,
+                                       "sigma": 0.7, "seed": 21},
+                          "sim_seed": 99, "compute_rotation": 2,
+                          "round_deadline_ms": 10, "max_staleness": 6}}"#,
+        )
+        .unwrap();
+        let s = c.sim.unwrap();
+        assert_eq!(
+            s.net,
+            crate::sim::NetSpec::SharedLeader { latency_ns: 20_000, gbps: 40.0 }
+        );
+        assert_eq!(
+            s.compute,
+            crate::sim::ComputeSpec::LogNormal { median_ns: 1_000_000, sigma: 0.7, seed: 21 }
+        );
+        assert_eq!(s.sim_seed, 99);
+        assert_eq!(s.compute_rotation, 2);
+        assert_eq!(s.round_deadline, Some(std::time::Duration::from_millis(10)));
+        assert_eq!(s.max_staleness, 6);
+        let o = s.to_options();
+        assert_eq!(o.round_deadline_ns, Some(10_000_000));
+        assert_eq!(o.max_staleness, 6);
+        assert!(o.faults.is_empty());
+
+        // Absent section → None; empty section → all defaults.
+        let c = RunConfig::from_json_str(SAMPLE).unwrap();
+        assert!(c.sim.is_none());
+        let c = RunConfig::from_json_str(
+            r#"{"problem": {"kind": "synthetic", "task": "linreg", "m": 4}, "sim": {}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.sim.unwrap(), SimSpec::default());
+
+        // Typos fail loudly, at every nesting level.
+        for bad in [
+            r#"{"problem": {"kind": "synthetic", "task": "linreg", "m": 4},
+                 "sim": {"nett": {}}}"#,
+            r#"{"problem": {"kind": "synthetic", "task": "linreg", "m": 4},
+                 "sim": {"net": {"kind": "carrier-pigeon"}}}"#,
+            r#"{"problem": {"kind": "synthetic", "task": "linreg", "m": 4},
+                 "sim": {"compute": {"gradus": 5}}}"#,
+        ] {
+            assert!(RunConfig::from_json_str(bad).is_err(), "accepted: {bad}");
+        }
     }
 
     #[test]

@@ -290,6 +290,75 @@ mod tests {
         assert_eq!(d[0], -5.0);
         assert_eq!(d[2], 5.0);
     }
+
+    /// Round-trip across pathological magnitudes: ±0, subnormals, constant
+    /// vectors (zero span), and values near the f64 exponent ceiling. In
+    /// every regime the decoded values stay inside `[lo, hi]` and within one
+    /// quantization step of the input — no NaN, no infinity, no panic.
+    #[test]
+    fn roundtrip_survives_extreme_magnitudes() {
+        let mut rng = Rng::new(5);
+        let cases: Vec<Vec<f64>> = vec![
+            vec![-0.0, 0.0, -0.0],                     // signed zeros
+            vec![0.0, 1e-310, 3e-310],                 // subnormal span (< the 1e-300 clamp)
+            vec![f64::MIN_POSITIVE; 4],                // constant vector, zero span
+            vec![-1e300, 0.0, 1e300],                  // near the exponent ceiling
+            vec![1e-300, 1.0, 1e300],                  // 600 decades in one block
+            vec![-4.9e-324, 4.9e-324],                 // smallest subnormals
+        ];
+        for (ci, v) in cases.iter().enumerate() {
+            for bits in [1, 2, 8, 24] {
+                let q = QuantizedVec::encode(v, bits, &mut rng);
+                let dec = q.decode();
+                let span = q.hi - q.lo;
+                // one step when the span is real; the whole (tiny) span when
+                // it is below the encoder's 1e-300 division clamp
+                let step = span / ((1u32 << bits) - 1) as f64;
+                let tol = if span < 1e-300 { span } else { step } + 1e-12;
+                for (a, b) in v.iter().zip(&dec) {
+                    assert!(b.is_finite(), "case {ci} bits {bits}: decode({a}) = {b}");
+                    assert!((q.lo..=q.hi).contains(b), "case {ci} bits {bits}: {b} outside range");
+                    assert!((a - b).abs() <= tol, "case {ci} bits {bits}: |{a} - {b}| > {tol}");
+                }
+            }
+        }
+        // signed zeros and constant vectors decode exactly
+        let z = QuantizedVec::encode(&[-0.0, 0.0], 8, &mut rng).decode();
+        assert!(z.iter().all(|&x| x == 0.0));
+        let c = QuantizedVec::encode(&[f64::MIN_POSITIVE; 4], 8, &mut rng).decode();
+        assert!(c.iter().all(|&x| x == f64::MIN_POSITIVE));
+    }
+
+    /// The wire-byte ledger is exact: a 16-byte range header plus codes
+    /// bit-packed to the ceiling byte — including widths that straddle
+    /// byte boundaries — and every emitted code actually fits in `bits`.
+    #[test]
+    fn bit_budget_accounting_is_exact() {
+        let mut rng = Rng::new(6);
+        // (bits, len, expected) = 16 + ceil(len·bits / 8)
+        for (bits, len, expected) in [
+            (1u8, 8usize, 17u64), // one packed byte
+            (1, 9, 18),           // ninth bit spills into a second byte
+            (3, 5, 18),           // 15 bits → 2 bytes
+            (12, 3, 21),          // 36 bits → 5 bytes
+            (24, 1000, 3016),
+            (24, 1, 19), // header dominates tiny vectors…
+        ] {
+            let v: Vec<f64> = (0..len).map(|i| i as f64).collect();
+            let q = QuantizedVec::encode(&v, bits, &mut rng);
+            assert_eq!(q.wire_bytes(), expected, "bits={bits} len={len}");
+            assert_eq!(q.codes.len(), len);
+            let levels = (1u32 << bits) - 1;
+            assert!(q.codes.iter().all(|&c| c <= levels), "code overflows {bits} bits");
+        }
+        // …so quantization only pays off past the header: at d = 1 even
+        // 24-bit codes cost more than raw f64, while at d = 1000 the ratio
+        // approaches bits/64
+        assert!(QuantizedVec::encode(&[1.0], 24, &mut rng).wire_bytes() > f64_wire_bytes(1));
+        let big: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        let q = QuantizedVec::encode(&big, 16, &mut rng);
+        assert!(q.wire_bytes() * 4 < f64_wire_bytes(1000) * 2, "16-bit ≈ a quarter of f64");
+    }
 }
 
 impl QuantizedVec {

@@ -306,4 +306,67 @@ mod tests {
         let bad = TriggerConfig { xi: vec![0.1, 0.2] };
         assert!(!bad.is_nonincreasing());
     }
+
+    /// Cold start, k < D: only the k recorded differences count (the
+    /// paper's θ^{1−D} = … = θ¹ zero-padding), so the RHS ramps
+    /// monotonically while the ring fills and saturates at exactly k = D —
+    /// the next equal-valued push evicts the oldest entry and leaves the
+    /// RHS unchanged.
+    #[test]
+    fn cold_start_history_ramps_and_saturates_at_d() {
+        let d = 5;
+        let t = TriggerConfig::uniform(d, 0.2);
+        let mut h = DiffHistory::new(d);
+        assert!(h.is_empty());
+        let (alpha, m) = (0.5, 4);
+        let mut prev = -1.0;
+        for k in 1..=d {
+            h.push(2.0);
+            assert_eq!(h.len(), k);
+            assert_eq!(h.get(k), 2.0);
+            assert_eq!(h.get(k + 1), 0.0, "beyond the recorded prefix must read zero");
+            let rhs = t.rhs(alpha, m, &h);
+            let expect = 0.2 * 2.0 * k as f64 / (alpha * alpha * (m * m) as f64);
+            assert!((rhs - expect).abs() < 1e-12, "k={k}: rhs {rhs} vs {expect}");
+            assert!(rhs > prev, "k={k}: the trigger must loosen monotonically while filling");
+            prev = rhs;
+        }
+        h.push(2.0);
+        assert_eq!(h.len(), d, "length saturates at D");
+        assert!((t.rhs(alpha, m, &h) - prev).abs() < 1e-12, "RHS is flat past the ramp");
+    }
+
+    /// The PS2 staleness cap fires at age = D *exactly*. With the drift
+    /// rule muted (enormous ξ makes the RHS unbeatable after round 1), a
+    /// worker contacted in round 1 — the k = 0 cold start, where no cached
+    /// iterate exists and contact is unconditional — is left alone through
+    /// round D and force-contacted in round D + 1, so every upload gap is
+    /// exactly D rounds. PS1 under the same settings never contacts again.
+    #[test]
+    fn ps2_staleness_cap_fires_at_exactly_age_d() {
+        use crate::coordinator::{run, Algorithm, RunOptions};
+        use crate::data::synthetic;
+        use crate::grad::{BatchSpec, NativeEngine};
+        let p = synthetic::linreg_increasing_l(4, 20, 6, 77);
+        let d = 4;
+        let mk = |rule| {
+            let opts = RunOptions {
+                max_iters: 13,
+                d_history: d,
+                ps_xi: 1e30,
+                batch: BatchSpec::Fixed(2),
+                lasg_rule: Some(rule),
+                ..Default::default()
+            };
+            run(&p, Algorithm::LasgPs, &opts, &NativeEngine::new(&p))
+        };
+        let ps2 = mk(LasgRule::Ps2);
+        for (mi, evs) in ps2.upload_events.iter().enumerate() {
+            assert_eq!(evs, &[1, 5, 9, 13], "worker {mi}: cap must fire at age D exactly");
+        }
+        let ps1 = mk(LasgRule::Ps1);
+        for (mi, evs) in ps1.upload_events.iter().enumerate() {
+            assert_eq!(evs, &[1], "worker {mi}: no cap ⇒ only the cold-start contact");
+        }
+    }
 }

@@ -1,0 +1,352 @@
+//! Fleet-scale simulation study — LAG at 10³–10⁵ workers on virtual time.
+//!
+//! The paper's experiments stop at M = 27 workers; this study asks what
+//! lazy aggregation buys at fleet scale, where the leader's network link
+//! and the slowest worker's compute — not the math — bound each round.
+//! The discrete-event simulator ([`crate::sim`], DESIGN.md §15) runs the
+//! exact coordinator math of the sequential driver on a virtual clock, so
+//! a 10⁵-worker round costs milliseconds of host time and the reported
+//! cluster-seconds, leader-link bytes, and uploads-to-accuracy are exact,
+//! not sampled.
+//!
+//! The grid is fleet size × compute heterogeneity × algorithm:
+//!
+//! * sizes — {1 000, 10 000, 100 000} (`--quick`: {64, 256, 1024});
+//! * heterogeneity — every worker identical (`uniform`) vs a lognormal
+//!   compute-speed distribution (`lognormal`, σ = 0.8: a heavy straggler
+//!   tail, the regime LAG's skip rules were designed for);
+//! * algorithms — GD, LAG-PS, LAG-WK, and the stochastic LASG-WK.
+//!
+//! Within one fleet size the two heterogeneity classes run the *same*
+//! problem and produce **byte-identical traces** — only simulated time
+//! and the leader-link schedule move. That separation (the sim owns
+//! time, the coordinator owns math) is pinned by
+//! `tests/sim_differential.rs`; this study is where it pays off:
+//! uploads-to-accuracy columns can be compared across timing models
+//! without a determinism caveat.
+//!
+//! Artifacts under `out_dir/fleet/`: per-run CSV traces, one `fleet.csv`
+//! summary table, and one `fleet.json` report — all deterministic (CI
+//! byte-compares them across `--sched-threads` values).
+
+use super::{ExpContext, ProblemKey};
+use crate::coordinator::{Algorithm, RunOptions};
+use crate::grad::{BatchSpec, NativeEngine};
+use crate::metrics::RunTrace;
+use crate::sim::{simulate, ComputeSpec, NetSpec, SimOptions, SimStats};
+use crate::util::json::Json;
+
+/// The algorithms of the study, in submission (and report) order.
+pub const ALGOS: [Algorithm; 4] =
+    [Algorithm::Gd, Algorithm::LagPs, Algorithm::LagWk, Algorithm::LasgWk];
+
+/// The compute-heterogeneity axis: `(label, model)`.
+pub fn heterogeneity() -> [(&'static str, ComputeSpec); 2] {
+    [
+        ("uniform", ComputeSpec::Uniform { grad_ns: 1_000_000 }),
+        ("lognormal", ComputeSpec::LogNormal { median_ns: 1_000_000, sigma: 0.8, seed: 5 }),
+    ]
+}
+
+/// Fleet sizes swept (quick mode keeps the same 16× spacing, CI-sized).
+pub fn sizes(quick: bool) -> Vec<usize> {
+    if quick {
+        vec![64, 256, 1024]
+    } else {
+        vec![1_000, 10_000, 100_000]
+    }
+}
+
+/// Problem for an M-worker fleet: tiny shards (the per-round cost at
+/// 10⁵ workers must stay bounded), per-worker smoothness spanning one
+/// decade — the heterogeneous regime where lazy triggers shine.
+pub fn key(m: usize) -> ProblemKey {
+    ProblemKey::SynLinregSpread { m, n: 4, d: 6, spread_centi: 100, seed: 404 }
+}
+
+/// The shared-leader network every cell runs under: all M links funnel
+/// through one leader NIC — the bottleneck that makes *uploads*, not
+/// FLOPs, the scaling currency.
+fn net() -> NetSpec {
+    NetSpec::SharedLeader { latency_ns: 20_000, gbps: 10.0 }
+}
+
+/// One cell of the grid, simulated. Deterministic in its arguments.
+pub fn run_cell(
+    ctx: &ExpContext,
+    m: usize,
+    compute: ComputeSpec,
+    algo: Algorithm,
+) -> anyhow::Result<(RunTrace, SimStats)> {
+    let p = ctx.problem(&key(m))?;
+    let opts = RunOptions {
+        max_iters: ctx.cap(300),
+        target_err: Some(ctx.target()),
+        record_every: 1,
+        seed: 1,
+        batch: BatchSpec::Fixed(2),
+        threads: 1,
+        ..Default::default()
+    };
+    let sopts = SimOptions { net: net(), compute, sim_seed: 7, ..Default::default() };
+    let e = NativeEngine::new(&p);
+    let rep = simulate(&p, algo, &opts, &sopts, &e)?;
+    Ok((rep.trace, rep.stats))
+}
+
+/// One summary row of the study.
+pub struct FleetRow {
+    /// Fleet size M.
+    pub size: usize,
+    /// Heterogeneity label (`uniform` / `lognormal`).
+    pub het: &'static str,
+    /// The run's trace (records, upload events, convergence).
+    pub trace: RunTrace,
+    /// The run's simulated-time and wire-volume stats.
+    pub stats: SimStats,
+}
+
+/// Run the full grid through the run-level scheduler, rows in
+/// size-major, heterogeneity-, then [`ALGOS`]-order.
+pub fn run_grid(ctx: &ExpContext) -> anyhow::Result<Vec<FleetRow>> {
+    let mut labels = Vec::new();
+    let mut jobs = Vec::new();
+    for &m in &sizes(ctx.quick) {
+        for (het, compute) in heterogeneity() {
+            for algo in ALGOS {
+                labels.push((m, het));
+                let ctx2 = ctx.clone();
+                jobs.push(move |_ws: &mut crate::coordinator::RunWorkspace| {
+                    run_cell(&ctx2, m, compute, algo)
+                });
+            }
+        }
+    }
+    let results: anyhow::Result<Vec<_>> =
+        ctx.scheduler().scatter(jobs).into_iter().collect();
+    Ok(labels
+        .into_iter()
+        .zip(results?)
+        .map(|((size, het), (trace, stats))| FleetRow { size, het, trace, stats })
+        .collect())
+}
+
+/// Render the summary table as CSV (deterministic bytes).
+pub fn rows_csv(rows: &[FleetRow]) -> String {
+    let mut out = String::from(
+        "size,het,algorithm,rounds,converged_iter,uploads,uploads_at_target,downloads,\
+         bytes_up,bytes_down,sim_seconds,cluster_compute_seconds,final_err\n",
+    );
+    for r in rows {
+        let t = &r.trace;
+        let last_k = t.records.last().map(|rec| rec.k).unwrap_or(0);
+        out.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{},{},{:.6},{:.3},{:.9e}\n",
+            r.size,
+            r.het,
+            t.algo,
+            last_k,
+            t.converged_iter.map(|k| k.to_string()).unwrap_or_default(),
+            t.total_uploads(),
+            t.uploads_at_target.map(|u| u.to_string()).unwrap_or_default(),
+            t.total_downloads(),
+            r.stats.bytes_up,
+            r.stats.bytes_down,
+            r.stats.sim_ns as f64 / 1e9,
+            r.stats.cluster_compute_ns as f64 / 1e9,
+            t.final_err(),
+        ));
+    }
+    out
+}
+
+/// Render the study as deterministic report JSON.
+pub fn rows_json(rows: &[FleetRow]) -> Json {
+    let jrows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("size", Json::Num(r.size as f64)),
+                ("het", Json::Str(r.het.into())),
+                ("algorithm", Json::Str(r.trace.algo.clone())),
+                ("uploads", Json::Num(r.trace.total_uploads() as f64)),
+                (
+                    "uploads_at_target",
+                    r.trace
+                        .uploads_at_target
+                        .map(|u| Json::Num(u as f64))
+                        .unwrap_or(Json::Null),
+                ),
+                (
+                    "converged_iter",
+                    r.trace
+                        .converged_iter
+                        .map(|k| Json::Num(k as f64))
+                        .unwrap_or(Json::Null),
+                ),
+                ("bytes_up", Json::Num(r.stats.bytes_up as f64)),
+                ("bytes_down", Json::Num(r.stats.bytes_down as f64)),
+                ("sim_seconds", Json::Num(r.stats.sim_ns as f64 / 1e9)),
+                (
+                    "cluster_compute_seconds",
+                    Json::Num(r.stats.cluster_compute_ns as f64 / 1e9),
+                ),
+                ("final_err", Json::Num(r.trace.final_err())),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("study", Json::Str("fleet".into())),
+        ("net", Json::Str(net().name().into())),
+        ("rows", Json::Arr(jrows)),
+    ])
+}
+
+fn print_rows(rows: &[FleetRow]) {
+    println!(
+        "{:>7} {:>10} {:<8} {:>9} {:>12} {:>12} {:>12} {:>12}",
+        "size", "het", "algo", "rounds", "uploads", "MB up", "sim secs", "final_err"
+    );
+    println!("{}", "-".repeat(88));
+    for r in rows {
+        println!(
+            "{:>7} {:>10} {:<8} {:>9} {:>12} {:>12.2} {:>12.3} {:>12.3e}",
+            r.size,
+            r.het,
+            r.trace.algo,
+            r.trace.records.last().map(|rec| rec.k).unwrap_or(0),
+            r.trace.total_uploads(),
+            r.stats.bytes_up as f64 / (1024.0 * 1024.0),
+            r.stats.sim_ns as f64 / 1e9,
+            r.trace.final_err(),
+        );
+    }
+}
+
+/// Run the fleet study: the full grid, per-run traces, `fleet.csv` and
+/// `fleet.json` under `out_dir/fleet/`.
+///
+/// Always runs on the native engine: the AOT PJRT artifacts are compiled
+/// per problem shape, and a 10⁵-worker sweep is exactly the case where
+/// re-lowering per size would dominate. A PJRT context is downgraded
+/// with a note instead of failing halfway through `exp all`.
+pub fn run(ctx: &ExpContext) -> anyhow::Result<()> {
+    let native_ctx;
+    let ctx = if ctx.engine == super::EngineKind::Native {
+        ctx
+    } else {
+        println!("fleet: the simulation sweep uses the native kernels");
+        native_ctx = ExpContext { engine: super::EngineKind::Native, ..ctx.clone() };
+        &native_ctx
+    };
+    println!(
+        "fleet study: sizes {:?}, shared-leader net, {} algorithms",
+        sizes(ctx.quick),
+        ALGOS.len()
+    );
+    let rows = run_grid(ctx)?;
+    print_rows(&rows);
+
+    // the headline: LAG-PS's upload savings over GD, per size, on the
+    // straggler-tail fleet
+    for &m in &sizes(ctx.quick) {
+        let find = |name: &str| {
+            rows.iter()
+                .find(|r| r.size == m && r.het == "lognormal" && r.trace.algo == name)
+        };
+        if let (Some(gd), Some(ps)) = (find("gd"), find("lag-ps")) {
+            println!(
+                "M = {m}: lag-ps uploaded {} vs gd {} ({:.1}x fewer), \
+                 leader took {:.2} MB vs {:.2} MB",
+                ps.trace.total_uploads(),
+                gd.trace.total_uploads(),
+                gd.trace.total_uploads() as f64 / ps.trace.total_uploads().max(1) as f64,
+                ps.stats.bytes_up as f64 / (1024.0 * 1024.0),
+                gd.stats.bytes_up as f64 / (1024.0 * 1024.0),
+            );
+        }
+    }
+
+    let dir = std::path::Path::new(&ctx.out_dir).join("fleet");
+    std::fs::create_dir_all(&dir)?;
+    for r in &rows {
+        r.trace
+            .write_csv(dir.join(format!("{}-{}-{}.csv", r.size, r.het, r.trace.algo)))?;
+    }
+    std::fs::write(dir.join("fleet.csv"), rows_csv(&rows))?;
+    std::fs::write(dir.join("fleet.json"), rows_json(&rows).to_string())?;
+    println!("wrote {}/fleet", ctx.out_dir);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_ctx() -> ExpContext {
+        ExpContext { quick: true, ..Default::default() }
+    }
+
+    /// The study's claims at a test-sized fleet: LAG-PS converges with
+    /// strictly fewer uploads (and leader-link bytes) than GD, and the
+    /// straggler-tail fleet costs more simulated time than the uniform
+    /// one while producing the identical trace.
+    #[test]
+    fn lag_ps_saves_uploads_and_heterogeneity_only_moves_time() {
+        let ctx = tiny_ctx();
+        let m = 16;
+        let [(_, uni), (_, logn)] = heterogeneity();
+        let (gd, gd_stats) = run_cell(&ctx, m, uni, Algorithm::Gd).unwrap();
+        let (ps, ps_stats) = run_cell(&ctx, m, uni, Algorithm::LagPs).unwrap();
+        assert!(gd.converged_iter.is_some(), "gd must reach the quick target");
+        assert!(ps.converged_iter.is_some(), "lag-ps must reach the quick target");
+        assert!(
+            ps.total_uploads() < gd.total_uploads(),
+            "lag-ps {} uploads vs gd {}",
+            ps.total_uploads(),
+            gd.total_uploads()
+        );
+        assert!(ps_stats.bytes_up < gd_stats.bytes_up);
+
+        // same cell on the straggler-tail fleet: identical math, slower
+        // virtual clock (the lognormal tail stretches every round barrier)
+        let (ps2, ps2_stats) = run_cell(&ctx, m, logn, Algorithm::LagPs).unwrap();
+        assert_eq!(ps2.records, ps.records, "compute model leaked into the math");
+        assert_eq!(ps2.upload_events, ps.upload_events);
+        assert!(
+            ps2_stats.sim_ns > ps_stats.sim_ns,
+            "a straggler tail must cost virtual time: {} vs {}",
+            ps2_stats.sim_ns,
+            ps_stats.sim_ns
+        );
+    }
+
+    /// The emitted artifacts are deterministic bytes: two grids at a small
+    /// size serialize identically, and every (size, het, algo) cell is
+    /// present.
+    #[test]
+    fn report_bytes_are_deterministic_and_complete() {
+        let ctx = tiny_ctx();
+        let build = || {
+            let mut rows = Vec::new();
+            for (het, compute) in heterogeneity() {
+                for algo in [Algorithm::Gd, Algorithm::LagPs] {
+                    let (trace, stats) = run_cell(&ctx, 12, compute, algo).unwrap();
+                    rows.push(FleetRow { size: 12, het, trace, stats });
+                }
+            }
+            rows
+        };
+        let a = build();
+        let b = build();
+        assert_eq!(rows_csv(&a), rows_csv(&b));
+        assert_eq!(rows_json(&a).to_string(), rows_json(&b).to_string());
+        let csv = rows_csv(&a);
+        for het in ["uniform", "lognormal"] {
+            for algo in ["gd", "lag-ps"] {
+                assert!(csv.contains(&format!("12,{het},{algo},")), "missing cell in {csv}");
+            }
+        }
+        assert!(csv.lines().count() == 5, "header + 4 rows");
+    }
+}

@@ -11,6 +11,7 @@
 //! | fig7   | logreg on (simulated) Gisette | [`fig7`] |
 //! | table5 | uploads to ε = 1e-8 for M ∈ {9, 18, 27} | [`table5`] |
 //! | lasg   | stochastic follow-up: SGD vs LASG-WK/PS uploads-to-accuracy | [`lasg`] |
+//! | fleet  | fleet-scale simulation: 10³–10⁵ workers on virtual time | [`fleet`] |
 
 pub mod fig2;
 pub mod fig3;
@@ -18,6 +19,7 @@ pub mod fig4;
 pub mod fig5;
 pub mod fig6;
 pub mod fig7;
+pub mod fleet;
 pub mod lasg;
 pub mod nonconvex;
 pub mod report;
@@ -235,9 +237,12 @@ pub fn run_experiment(id: &str, ctx: &ExpContext) -> anyhow::Result<()> {
         "table5" => table5::run(ctx),
         "nonconvex" | "theorem3" => nonconvex::run(ctx),
         "lasg" => lasg::run(ctx),
+        "fleet" => fleet::run(ctx),
         "all" => {
-            let ids =
-                ["fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "table5", "nonconvex", "lasg"];
+            let ids = [
+                "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "table5", "nonconvex", "lasg",
+                "fleet",
+            ];
             for id in ids {
                 println!("\n================ {id} ================");
                 run_experiment(id, ctx)?;
@@ -253,7 +258,9 @@ pub fn run_experiment(id: &str, ctx: &ExpContext) -> anyhow::Result<()> {
             Ok(())
         }
         other => {
-            anyhow::bail!("unknown experiment '{other}' (fig2..fig7, table5, nonconvex, lasg, all)")
+            anyhow::bail!(
+                "unknown experiment '{other}' (fig2..fig7, table5, nonconvex, lasg, fleet, all)"
+            )
         }
     }
 }

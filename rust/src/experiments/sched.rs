@@ -30,7 +30,7 @@
 use crate::coordinator::pool;
 use crate::coordinator::RunWorkspace;
 use crate::coordinator::{Algorithm, RunOptions};
-use crate::data::{synthetic, Problem};
+use crate::data::{synthetic, Problem, Task};
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
@@ -92,6 +92,25 @@ pub enum ProblemKey {
         /// Generator seed.
         seed: u64,
     },
+    /// Synthetic linreg with per-worker smoothness log-spaced over a
+    /// controlled number of decades — the fleet-simulation study's
+    /// heterogeneity knob. Unlike the geometric `Increasing` profile
+    /// (which overflows past a few hundred workers), explicit targets
+    /// stay finite at any M.
+    SynLinregSpread {
+        /// Worker count.
+        m: usize,
+        /// Rows per worker.
+        n: usize,
+        /// Feature dimension.
+        d: usize,
+        /// Smoothness spread in centi-decades — an integer so the key
+        /// stays `Eq + Hash` (100 ⇔ L_m spanning one decade; 0 ⇔ a
+        /// homogeneous fleet).
+        spread_centi: u32,
+        /// Generator seed.
+        seed: u64,
+    },
 }
 
 impl ProblemKey {
@@ -110,6 +129,13 @@ impl ProblemKey {
             ProblemKey::Gisette => super::fig7::problem(),
             ProblemKey::SynSparseLogreg { m, n, d, density_ppm, seed } => {
                 Ok(synthetic::sparse_logreg(m, n, d, density_ppm as f64 / 1e6, seed))
+            }
+            ProblemKey::SynLinregSpread { m, n, d, spread_centi, seed } => {
+                let spread = spread_centi as f64 / 100.0;
+                let denom = (m - 1).max(1) as f64;
+                let targets: Vec<f64> =
+                    (0..m).map(|i| 10f64.powf(spread * i as f64 / denom)).collect();
+                Ok(synthetic::synthetic_with_targets(Task::LinReg, &targets, n, d, seed))
             }
         }
     }

@@ -47,6 +47,7 @@ pub mod grad;
 pub mod linalg;
 pub mod metrics;
 pub mod runtime;
+pub mod sim;
 #[cfg(feature = "pjrt")]
 pub mod transformer;
 pub mod util;

@@ -1,7 +1,7 @@
 //! `lag` — the leader CLI.
 //!
 //! ```text
-//! lag exp <fig2|fig3|fig4|fig5|fig6|fig7|table5|nonconvex|lasg|all>
+//! lag exp <fig2|fig3|fig4|fig5|fig6|fig7|table5|nonconvex|lasg|fleet|all>
 //!         [--engine pjrt|native] [--artifacts DIR] [--out DIR] [--quick]
 //!         [--sched-threads N]
 //! lag train --task linreg|logreg
@@ -25,6 +25,7 @@ fn main() {
         Some("exp") => cmd_exp(&args),
         Some("run") => cmd_run(&args),
         Some("train") => cmd_train(&args),
+        Some("sim") => cmd_sim(&args),
         Some("info") => cmd_info(&args),
         Some("leader") => cmd_leader(&args),
         Some("worker") => cmd_worker(&args),
@@ -47,10 +48,20 @@ fn print_help() {
         "lag — Lazily Aggregated Gradient (NeurIPS 2018) reproduction\n\n\
          subcommands:\n  \
          exp <id>     regenerate a paper figure/table (fig2..fig7, table5, nonconvex,\n               \
-         lasg, all); 'lasg' is the stochastic SGD-vs-LASG study\n  \
+         lasg, fleet, all); 'lasg' is the stochastic SGD-vs-LASG study,\n               \
+         'fleet' the 10^3..10^5-worker simulated-fleet scaling study\n  \
          run          execute a declarative JSON run config: lag run --config cfg.json\n  \
          train        run one algorithm on a synthetic problem (stochastic algorithms\n               \
          sgd|lasg-wk|lasg-ps take --batch full|N|0.N and --lasg-rule wk1|wk2|ps1|ps2)\n  \
+         sim          discrete-event fleet simulation on virtual time (DESIGN.md §15):\n               \
+         --m 100000 workers on one host, byte-identical math to 'train'.\n               \
+         [--algo A] [--iters N] [--target E] [--spread DECADES]\n               \
+         network: [--net ideal|constant|shared-leader|per-link] [--latency-us N]\n               \
+         [--gbps X] [--net-spread X] [--net-seed S]; compute: [--compute\n               \
+         uniform|lognormal|two-class] [--grad-us N] [--sigma X] [--slow-mult X]\n               \
+         [--slow-frac X] [--compute-seed S] [--compute-rotation K];\n               \
+         pacing on virtual time: [--deadline-ms N] [--max-staleness D];\n               \
+         [--sim-seed S] [--config cfg.json] [--trace-out F] [--stats-out F]\n  \
          leader       parameter server: --addr 0.0.0.0:7070 --m 9 [--algo lag-wk]\n               \
          [--runtime service|tcp] [--min-workers K] [--join-timeout-ms N]\n               \
          [--round-timeout-ms N] [--checkpoint F --checkpoint-every K] [--resume F]\n               \
@@ -180,6 +191,149 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     println!("{}", trace.summary());
     if let Some(out) = args.opt("trace-out") {
         trace.write_csv(out)?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+/// Discrete-event fleet simulation (`lag sim`): the exact coordinator
+/// math of `train` driven by a virtual clock, so 10⁵-worker fleets run on
+/// one host in seconds. Problem and models come from flags or a config
+/// file's `"sim"` section; results land as a trace CSV plus a stats JSON
+/// (both deterministic — two identical invocations byte-compare equal).
+fn cmd_sim(args: &Args) -> anyhow::Result<()> {
+    use lag::sim::{simulate, ComputeSpec, NetSpec, SimOptions};
+    use lag::util::json::Json;
+
+    let (problem, algo, opts, sopts) = if let Some(path) = args.opt("config") {
+        let cfg = lag::config::RunConfig::from_file(path)?;
+        let sopts = cfg.sim.clone().unwrap_or_default().to_options();
+        (cfg.problem.build()?, cfg.algorithm, cfg.options, sopts)
+    } else {
+        let task = match args.opt_or("task", "linreg").as_str() {
+            "linreg" => Task::LinReg,
+            "logreg" => Task::LogReg { lam: args.opt_f64("lam", 1e-3)? },
+            other => anyhow::bail!("unknown task '{other}'"),
+        };
+        let m = args.opt_usize("m", 1000)?;
+        let n = args.opt_usize("n", 4)?;
+        let d = args.opt_usize("d", 6)?;
+        let seed = args.opt_usize("seed", 1234)? as u64;
+        anyhow::ensure!(m >= 1, "--m must be at least 1");
+        // per-worker smoothness log-spaced over --spread decades (0 ⇒ a
+        // homogeneous fleet); explicit targets stay finite at any M,
+        // unlike the geometric 'increasing' profile
+        let spread = args.opt_f64("spread", 1.0)?;
+        let denom = (m - 1).max(1) as f64;
+        let targets: Vec<f64> =
+            (0..m).map(|i| 10f64.powf(spread * i as f64 / denom)).collect();
+        let problem = synthetic::synthetic_with_targets(task, &targets, n, d, seed);
+        let algo = Algorithm::parse(&args.opt_or("algo", "lag-wk"))?;
+        let opts = RunOptions {
+            max_iters: args.opt_usize("iters", 100)?,
+            target_err: args.opt("target").map(|s| s.parse()).transpose()?,
+            wk_xi: args.opt_f64("wk-xi", 0.1)?,
+            ps_xi: args.opt_f64("ps-xi", 1.0)?,
+            d_history: args.opt_usize("d-history", 10)?,
+            seed,
+            batch: BatchSpec::parse(&args.opt_or("batch", "full"))?,
+            lasg_rule: args.opt("lasg-rule").map(LasgRule::parse).transpose()?,
+            ..Default::default()
+        };
+        let sopts = SimOptions {
+            net: NetSpec::parse(
+                &args.opt_or("net", "ideal"),
+                (args.opt_f64("latency-us", 0.0)? * 1000.0) as u64,
+                args.opt_f64("gbps", 10.0)?,
+                args.opt_f64("net-spread", 0.5)?,
+                args.opt_usize("net-seed", 0)? as u64,
+            )?,
+            compute: ComputeSpec::parse(
+                &args.opt_or("compute", "uniform"),
+                (args.opt_f64("grad-us", 1000.0)? * 1000.0) as u64,
+                args.opt_f64("sigma", 0.5)?,
+                args.opt_f64("slow-mult", 10.0)?,
+                args.opt_f64("slow-frac", 0.1)?,
+                args.opt_usize("compute-seed", 0)? as u64,
+            )?,
+            sim_seed: args.opt_usize("sim-seed", 0)? as u64,
+            compute_rotation: args.opt_usize("compute-rotation", 0)?,
+            round_deadline_ns: args
+                .opt("deadline-ms")
+                .map(|s| s.parse::<u64>())
+                .transpose()
+                .map_err(|_| anyhow::anyhow!("--deadline-ms: expected milliseconds"))?
+                .map(|ms| ms * 1_000_000),
+            max_staleness: args.opt_usize("max-staleness", 0)?,
+            ..Default::default()
+        };
+        (problem, algo, opts, sopts)
+    };
+
+    println!(
+        "sim: {} on {} (M = {}, d = {}, net {}, compute {})",
+        algo.name(),
+        problem.name,
+        problem.m(),
+        problem.d,
+        sopts.net.name(),
+        sopts.compute.name(),
+    );
+    let rep = match EngineKind::parse(&args.opt_or("engine", "native"))? {
+        EngineKind::Native => {
+            simulate(&problem, algo, &opts, &sopts, &NativeEngine::new(&problem))?
+        }
+        EngineKind::Pjrt => {
+            let e = PjrtEngine::new(&problem, args.opt_or("artifacts", "artifacts"))?;
+            simulate(&problem, algo, &opts, &sopts, &e)?
+        }
+    };
+    println!("{}", rep.trace.summary());
+    let st = &rep.stats;
+    println!(
+        "virtual time: {:.3} cluster-seconds ({:.1} worker-compute-seconds across the fleet)",
+        st.sim_ns as f64 / 1e9,
+        st.cluster_compute_ns as f64 / 1e9,
+    );
+    println!(
+        "leader link: {:.1} KB down, {:.1} KB up; {} events; joins {}, evictions {}, \
+         forced skips {}",
+        st.bytes_down as f64 / 1024.0,
+        st.bytes_up as f64 / 1024.0,
+        st.events_processed,
+        st.joins,
+        st.evictions,
+        st.forced_skips,
+    );
+    if let Some(out) = args.opt("trace-out") {
+        rep.trace.write_csv(out)?;
+        println!("wrote {out}");
+    }
+    if let Some(out) = args.opt("stats-out") {
+        let j = Json::obj(vec![
+            ("sim_seconds", Json::Num(st.sim_ns as f64 / 1e9)),
+            (
+                "cluster_compute_seconds",
+                Json::Num(st.cluster_compute_ns as f64 / 1e9),
+            ),
+            ("bytes_down", Json::Num(st.bytes_down as f64)),
+            ("bytes_up", Json::Num(st.bytes_up as f64)),
+            ("events", Json::Num(st.events_processed as f64)),
+            ("joins", Json::Num(st.joins as f64)),
+            ("retries", Json::Num(st.retries as f64)),
+            ("evictions", Json::Num(st.evictions as f64)),
+            ("forced_skips", Json::Num(st.forced_skips as f64)),
+            ("uploads", Json::Num(rep.trace.total_uploads() as f64)),
+            ("downloads", Json::Num(rep.trace.total_downloads() as f64)),
+            (
+                "converged_iter",
+                rep.trace
+                    .converged_iter
+                    .map(|k| Json::Num(k as f64))
+                    .unwrap_or(Json::Null),
+            ),
+        ]);
+        std::fs::write(out, j.to_string())?;
         println!("wrote {out}");
     }
     Ok(())

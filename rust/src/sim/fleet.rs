@@ -1,0 +1,200 @@
+//! Per-worker compute-speed models for the fleet simulator.
+//!
+//! A [`FleetModel`] is just a per-worker gradient-evaluation time in
+//! nanoseconds, drawn once at construction from a seeded [`Rng`] fork
+//! chain (ascending worker order, so the model is a pure function of
+//! `(spec, m)`). Heterogeneity here is what makes LAG's story
+//! interesting at scale: under a round barrier the fleet moves at the
+//! speed of its slowest member, and under deadline pacing the slow tail
+//! turns into forced skips.
+
+use crate::util::rng::Rng;
+
+/// How per-worker gradient times are distributed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ComputeSpec {
+    /// Every worker takes exactly `grad_ns` per gradient.
+    Uniform {
+        /// Per-gradient compute time in nanoseconds.
+        grad_ns: u64,
+    },
+    /// Log-normal times: worker `s` takes `median_ns · exp(sigma · z_s)`
+    /// with `z_s` a standard normal from the fork chain of `seed` — the
+    /// classic long-tail straggler distribution.
+    LogNormal {
+        /// Median per-gradient time in nanoseconds.
+        median_ns: u64,
+        /// Log-scale spread (0 ⇒ uniform).
+        sigma: f64,
+        /// Seed for the per-worker draws.
+        seed: u64,
+    },
+    /// A two-class fleet: a `slow_fraction` of workers run at
+    /// `fast_ns · slow_mult`, the rest at `fast_ns` (phones vs servers).
+    TwoClass {
+        /// Fast-class per-gradient time in nanoseconds.
+        fast_ns: u64,
+        /// Slowdown multiplier for the slow class.
+        slow_mult: f64,
+        /// Fraction of workers in the slow class, in [0, 1].
+        slow_fraction: f64,
+        /// Seed for the class assignment.
+        seed: u64,
+    },
+}
+
+impl ComputeSpec {
+    /// Model name as used by `lag sim --compute` and the `exp fleet` CSV.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ComputeSpec::Uniform { .. } => "uniform",
+            ComputeSpec::LogNormal { .. } => "lognormal",
+            ComputeSpec::TwoClass { .. } => "two-class",
+        }
+    }
+
+    /// Build a spec from CLI/config fields. `kind` is one of
+    /// `uniform | lognormal | two-class`.
+    pub fn parse(
+        kind: &str,
+        grad_ns: u64,
+        sigma: f64,
+        slow_mult: f64,
+        slow_fraction: f64,
+        seed: u64,
+    ) -> anyhow::Result<ComputeSpec> {
+        anyhow::ensure!(sigma >= 0.0, "sigma must be nonnegative, got {sigma}");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&slow_fraction),
+            "slow fraction must be in [0, 1], got {slow_fraction}"
+        );
+        anyhow::ensure!(slow_mult >= 1.0, "slow multiplier must be ≥ 1, got {slow_mult}");
+        Ok(match kind {
+            "uniform" => ComputeSpec::Uniform { grad_ns },
+            "lognormal" => ComputeSpec::LogNormal { median_ns: grad_ns, sigma, seed },
+            "two-class" => {
+                ComputeSpec::TwoClass { fast_ns: grad_ns, slow_mult, slow_fraction, seed }
+            }
+            other => anyhow::bail!(
+                "unknown compute model '{other}' (uniform|lognormal|two-class)"
+            ),
+        })
+    }
+}
+
+/// Instantiated per-worker compute times.
+#[derive(Debug, Clone)]
+pub struct FleetModel {
+    /// Nanoseconds per gradient evaluation, indexed by worker.
+    pub grad_ns: Vec<u64>,
+}
+
+impl FleetModel {
+    /// Draw an `m`-worker fleet from `spec` (ascending-order fork chain).
+    pub fn build(spec: &ComputeSpec, m: usize) -> FleetModel {
+        let grad_ns = match *spec {
+            ComputeSpec::Uniform { grad_ns } => vec![grad_ns; m],
+            ComputeSpec::LogNormal { median_ns, sigma, seed } => {
+                let mut rng = Rng::new(seed);
+                (0..m)
+                    .map(|s| {
+                        let mut r = rng.fork(s as u64);
+                        let z = r.normal();
+                        ((median_ns as f64) * (sigma * z).exp()).max(1.0) as u64
+                    })
+                    .collect()
+            }
+            ComputeSpec::TwoClass { fast_ns, slow_mult, slow_fraction, seed } => {
+                let mut rng = Rng::new(seed);
+                (0..m)
+                    .map(|s| {
+                        let mut r = rng.fork(s as u64);
+                        if r.uniform() < slow_fraction {
+                            ((fast_ns as f64) * slow_mult).max(1.0) as u64
+                        } else {
+                            fast_ns
+                        }
+                    })
+                    .collect()
+            }
+        };
+        FleetModel { grad_ns }
+    }
+
+    /// The same fleet with the speed↔worker assignment rotated by `rot`:
+    /// worker `s` gets the speed that worker `(s + rot) mod m` had. This
+    /// permutes *timing identities only* — the differential suite asserts
+    /// that with a fixed problem and seeds, rotation cannot change any
+    /// aggregate trajectory (DESIGN.md §15).
+    pub fn rotated(&self, rot: usize) -> FleetModel {
+        let m = self.grad_ns.len();
+        if m == 0 {
+            return self.clone();
+        }
+        FleetModel {
+            grad_ns: (0..m).map(|s| self.grad_ns[(s + rot) % m]).collect(),
+        }
+    }
+
+    /// Fleet size.
+    pub fn len(&self) -> usize {
+        self.grad_ns.len()
+    }
+
+    /// True iff the fleet is empty.
+    pub fn is_empty(&self) -> bool {
+        self.grad_ns.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_is_deterministic() {
+        let spec = ComputeSpec::LogNormal { median_ns: 1_000_000, sigma: 0.8, seed: 3 };
+        let a = FleetModel::build(&spec, 32);
+        let b = FleetModel::build(&spec, 32);
+        assert_eq!(a.grad_ns, b.grad_ns);
+        assert!(a.grad_ns.iter().any(|t| t != &a.grad_ns[0]), "lognormal should spread");
+    }
+
+    #[test]
+    fn prefix_stability_across_fleet_sizes() {
+        // fork chains are keyed by worker index: growing the fleet must not
+        // change the speeds of existing workers
+        let spec = ComputeSpec::LogNormal { median_ns: 1_000_000, sigma: 0.5, seed: 11 };
+        let small = FleetModel::build(&spec, 8);
+        let big = FleetModel::build(&spec, 64);
+        assert_eq!(small.grad_ns[..], big.grad_ns[..8]);
+    }
+
+    #[test]
+    fn rotation_permutes_multiset() {
+        let spec = ComputeSpec::TwoClass {
+            fast_ns: 100,
+            slow_mult: 10.0,
+            slow_fraction: 0.25,
+            seed: 7,
+        };
+        let a = FleetModel::build(&spec, 16);
+        let b = a.rotated(5);
+        let mut sa = a.grad_ns.clone();
+        let mut sb = b.grad_ns.clone();
+        sa.sort_unstable();
+        sb.sort_unstable();
+        assert_eq!(sa, sb, "rotation must preserve the speed multiset");
+        assert_ne!(a.grad_ns, b.grad_ns, "…while actually moving assignments");
+        assert_eq!(a.grad_ns, a.rotated(16).grad_ns, "full rotation is identity");
+    }
+
+    #[test]
+    fn parse_rejects_nonsense() {
+        assert!(ComputeSpec::parse("uniform", 100, 0.0, 1.0, 0.0, 0).is_ok());
+        assert!(ComputeSpec::parse("quantum", 100, 0.0, 1.0, 0.0, 0).is_err());
+        assert!(ComputeSpec::parse("lognormal", 100, -0.5, 1.0, 0.0, 0).is_err());
+        assert!(ComputeSpec::parse("two-class", 100, 0.0, 0.5, 0.5, 0).is_err());
+        assert!(ComputeSpec::parse("two-class", 100, 0.0, 2.0, 1.5, 0).is_err());
+    }
+}

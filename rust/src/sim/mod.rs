@@ -1,0 +1,34 @@
+//! Discrete-event fleet simulator: LAG at 10⁵–10⁶ workers on virtual
+//! time.
+//!
+//! The real TCP service (`coordinator/service.rs`) tops out at what one
+//! host's sockets can carry — about 64 workers in the soak suite. This
+//! module runs the *same* algorithm code over a simulated fleet instead:
+//! a deterministic event queue over a `u64`-nanosecond virtual clock
+//! ([`event`]), pluggable network models ([`net`]), per-worker
+//! compute-speed distributions ([`fleet`]), and a simulated leader
+//! ([`runner`]) that drives the existing [`ParameterServer`] and
+//! [`TriggerConfig`] — the sim owns **time**, the coordinator owns
+//! **math**, so every upload/skip decision is the one the real system
+//! would make.
+//!
+//! The contract with the real implementations is enforced, not assumed:
+//! `tests/sim_differential.rs` pins zero-delay sim traces byte-identical
+//! to the sequential driver for every paper algorithm, and sim fault
+//! schedules to the service's round-boundary semantics on the same
+//! [`FaultPlan`](crate::coordinator::FaultPlan). See DESIGN.md §15 for
+//! the determinism and equivalence arguments, and `lag sim` / `lag exp
+//! fleet` for the CLI surface.
+//!
+//! [`ParameterServer`]: crate::coordinator::ParameterServer
+//! [`TriggerConfig`]: crate::coordinator::TriggerConfig
+
+pub mod event;
+pub mod fleet;
+pub mod net;
+pub mod runner;
+
+pub use event::{EventId, EventQueue};
+pub use fleet::{ComputeSpec, FleetModel};
+pub use net::{NetModel, NetSpec};
+pub use runner::{simulate, SimOptions, SimReport, SimStats};

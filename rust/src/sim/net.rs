@@ -1,0 +1,260 @@
+//! Pluggable network models for the fleet simulator.
+//!
+//! A model answers one question: *given that a frame of `bytes` is handed
+//! to the transport at virtual time `sent_at`, when does it arrive?* Three
+//! families are provided (plus the zero-delay [`NetSpec::Ideal`] used by
+//! the differential tests):
+//!
+//! * **constant** — every link has the same latency and bandwidth and
+//!   links are independent (an idealized full-bisection fabric);
+//! * **shared-leader** — all traffic serializes through the leader's NIC,
+//!   a single FIFO resource per direction; this is the model where
+//!   LAG's skipped uploads buy the most simulated wall-clock, because
+//!   every avoided frame shortens the queue for everyone else;
+//! * **per-link** — each worker draws its own latency and bandwidth from
+//!   a seeded [`Rng`] fork chain (heterogeneous last-mile links).
+//!
+//! Wire sizes mirror `coordinator/wire.rs` framing to first order: a
+//! fixed [`FRAME_OVERHEAD`] per frame (length header, tags, CRC trailer)
+//! plus 16 bytes of round metadata plus `8·d` bytes per f64 payload
+//! vector. The sim's byte counters are *modeled* accounting, not captured
+//! traffic — the differential suite compares decisions and trajectories,
+//! never these byte totals, against the socket service.
+
+use crate::util::rng::Rng;
+
+/// Fixed per-frame framing cost (length prefix + tag + CRC trailer).
+pub const FRAME_OVERHEAD: u64 = 24;
+
+/// Modeled size of a `Round{k, rhs, θ}` broadcast frame.
+pub fn round_frame_bytes(d: usize) -> u64 {
+    FRAME_OVERHEAD + 16 + 8 * d as u64
+}
+
+/// Modeled size of an upload reply carrying a `d`-vector delta.
+pub fn delta_frame_bytes(d: usize) -> u64 {
+    FRAME_OVERHEAD + 16 + 8 * d as u64
+}
+
+/// Modeled size of a skip reply (round id, no payload).
+pub fn skip_frame_bytes() -> u64 {
+    FRAME_OVERHEAD + 16
+}
+
+/// Modeled size of the `Assign` frame a joining worker receives
+/// (`cached = true` when the leader ships a cached `d`-vector with it).
+pub fn assign_frame_bytes(d: usize, cached: bool) -> u64 {
+    FRAME_OVERHEAD + 16 + if cached { 8 * d as u64 } else { 0 }
+}
+
+/// Which network the fleet runs over.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum NetSpec {
+    /// Zero latency, infinite bandwidth — every frame arrives the instant
+    /// it is sent. The differential tests run here: with no delay, the
+    /// sim's round structure collapses onto the sequential driver's.
+    Ideal,
+    /// Identical independent links: `latency_ns` one-way delay plus
+    /// `gbps` of dedicated bandwidth per link.
+    Constant {
+        /// One-way link latency in nanoseconds.
+        latency_ns: u64,
+        /// Per-link bandwidth in gigabits per second.
+        gbps: f64,
+    },
+    /// The leader's NIC is a shared FIFO bottleneck: frames serialize
+    /// through `gbps` of total capacity per direction, then take
+    /// `latency_ns` to propagate.
+    SharedLeader {
+        /// One-way propagation latency in nanoseconds.
+        latency_ns: u64,
+        /// Total leader-link bandwidth in gigabits per second.
+        gbps: f64,
+    },
+    /// Heterogeneous independent links: worker `s` draws latency in
+    /// `latency_ns · [1−spread, 1+spread]` and bandwidth in
+    /// `gbps · [1−spread, 1+spread]` from the fork chain of `seed`.
+    PerLink {
+        /// Median one-way latency in nanoseconds.
+        latency_ns: u64,
+        /// Median per-link bandwidth in gigabits per second.
+        gbps: f64,
+        /// Relative half-width of the latency/bandwidth draw, in [0, 1).
+        spread: f64,
+        /// Seed for the per-worker draws.
+        seed: u64,
+    },
+}
+
+impl NetSpec {
+    /// Model name as used by `lag sim --net` and the `exp fleet` CSV.
+    pub fn name(&self) -> &'static str {
+        match self {
+            NetSpec::Ideal => "ideal",
+            NetSpec::Constant { .. } => "constant",
+            NetSpec::SharedLeader { .. } => "shared-leader",
+            NetSpec::PerLink { .. } => "per-link",
+        }
+    }
+
+    /// Build a spec from CLI/config fields. `kind` is one of
+    /// `ideal | constant | shared-leader | per-link`.
+    pub fn parse(
+        kind: &str,
+        latency_ns: u64,
+        gbps: f64,
+        spread: f64,
+        seed: u64,
+    ) -> anyhow::Result<NetSpec> {
+        anyhow::ensure!(gbps > 0.0, "network bandwidth must be positive, got {gbps}");
+        anyhow::ensure!(
+            (0.0..1.0).contains(&spread),
+            "network spread must be in [0, 1), got {spread}"
+        );
+        Ok(match kind {
+            "ideal" => NetSpec::Ideal,
+            "constant" => NetSpec::Constant { latency_ns, gbps },
+            "shared-leader" | "shared" => NetSpec::SharedLeader { latency_ns, gbps },
+            "per-link" => NetSpec::PerLink { latency_ns, gbps, spread, seed },
+            other => anyhow::bail!(
+                "unknown network model '{other}' (ideal|constant|shared-leader|per-link)"
+            ),
+        })
+    }
+}
+
+/// Nanoseconds to push `bytes` through `gbps` (ceil; ≥ 1 ns for a
+/// nonempty frame so FIFO queueing can never collapse to zero width).
+fn tx_ns(bytes: u64, gbps: f64) -> u64 {
+    if bytes == 0 {
+        return 0;
+    }
+    ((bytes as f64 * 8.0 / gbps).ceil() as u64).max(1)
+}
+
+/// One direction of a single shared FIFO resource.
+#[derive(Debug, Clone, Copy, Default)]
+struct FifoLink {
+    busy_until: u64,
+}
+
+impl FifoLink {
+    /// Serialize a frame through the link: transmission starts when the
+    /// link frees up, arrival is transmission end plus propagation.
+    fn send(&mut self, sent_at: u64, tx: u64, latency: u64) -> u64 {
+        let start = self.busy_until.max(sent_at);
+        self.busy_until = start + tx;
+        self.busy_until + latency
+    }
+}
+
+/// Instantiated network state for one fleet (owns the shared-link FIFO
+/// clocks and the per-worker link parameters).
+pub struct NetModel {
+    spec: NetSpec,
+    /// Per-worker (latency_ns, gbps); empty for homogeneous models.
+    links: Vec<(u64, f64)>,
+    down: FifoLink,
+    up: FifoLink,
+}
+
+impl NetModel {
+    /// Instantiate `spec` for an `m`-worker fleet. Per-link draws happen
+    /// here, in ascending worker order, so the model is a pure function of
+    /// `(spec, m)`.
+    pub fn new(spec: &NetSpec, m: usize) -> NetModel {
+        let links = match *spec {
+            NetSpec::PerLink { latency_ns, gbps, spread, seed } => {
+                let mut rng = Rng::new(seed);
+                (0..m)
+                    .map(|s| {
+                        let mut r = rng.fork(s as u64);
+                        let lat = latency_ns as f64 * (1.0 + spread * (2.0 * r.uniform() - 1.0));
+                        let bw = gbps * (1.0 + spread * (2.0 * r.uniform() - 1.0));
+                        (lat.max(0.0) as u64, bw)
+                    })
+                    .collect()
+            }
+            _ => Vec::new(),
+        };
+        NetModel { spec: *spec, links, down: FifoLink::default(), up: FifoLink::default() }
+    }
+
+    fn arrival(&mut self, s: usize, sent_at: u64, bytes: u64, is_down: bool) -> u64 {
+        match self.spec {
+            NetSpec::Ideal => sent_at,
+            NetSpec::Constant { latency_ns, gbps } => sent_at + tx_ns(bytes, gbps) + latency_ns,
+            NetSpec::SharedLeader { latency_ns, gbps } => {
+                let tx = tx_ns(bytes, gbps);
+                let link = if is_down { &mut self.down } else { &mut self.up };
+                link.send(sent_at, tx, latency_ns)
+            }
+            NetSpec::PerLink { .. } => {
+                let (lat, bw) = self.links[s];
+                sent_at + tx_ns(bytes, bw) + lat
+            }
+        }
+    }
+
+    /// Arrival time of a leader→worker frame handed off at `sent_at`.
+    pub fn down_arrival(&mut self, s: usize, sent_at: u64, bytes: u64) -> u64 {
+        self.arrival(s, sent_at, bytes, true)
+    }
+
+    /// Arrival time of a worker→leader frame handed off at `sent_at`.
+    pub fn up_arrival(&mut self, s: usize, sent_at: u64, bytes: u64) -> u64 {
+        self.arrival(s, sent_at, bytes, false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_is_zero_delay() {
+        let mut n = NetModel::new(&NetSpec::Ideal, 4);
+        assert_eq!(n.down_arrival(0, 17, 1 << 20), 17);
+        assert_eq!(n.up_arrival(3, 17, 1 << 20), 17);
+    }
+
+    #[test]
+    fn constant_adds_latency_plus_transmission() {
+        // 1 Gbps → 8 ns per byte
+        let mut n = NetModel::new(&NetSpec::Constant { latency_ns: 100, gbps: 1.0 }, 2);
+        assert_eq!(n.down_arrival(0, 0, 1000), 8000 + 100);
+        // independent links: the second frame at the same instant sees no queue
+        assert_eq!(n.down_arrival(1, 0, 1000), 8000 + 100);
+    }
+
+    #[test]
+    fn shared_leader_serializes_frames() {
+        let mut n = NetModel::new(&NetSpec::SharedLeader { latency_ns: 10, gbps: 1.0 }, 2);
+        // two 1000-byte frames handed off at t = 0 queue behind each other
+        let a = n.up_arrival(0, 0, 1000);
+        let b = n.up_arrival(1, 0, 1000);
+        assert_eq!(a, 8000 + 10);
+        assert_eq!(b, 16_000 + 10);
+        // ... but the down direction is an independent resource
+        assert_eq!(n.down_arrival(0, 0, 1000), 8000 + 10);
+    }
+
+    #[test]
+    fn per_link_is_deterministic_and_heterogeneous() {
+        let spec = NetSpec::PerLink { latency_ns: 1000, gbps: 1.0, spread: 0.5, seed: 5 };
+        let mut a = NetModel::new(&spec, 16);
+        let mut b = NetModel::new(&spec, 16);
+        let ta: Vec<u64> = (0..16).map(|s| a.up_arrival(s, 0, 4096)).collect();
+        let tb: Vec<u64> = (0..16).map(|s| b.up_arrival(s, 0, 4096)).collect();
+        assert_eq!(ta, tb, "same (spec, m) must give identical links");
+        assert!(ta.iter().any(|t| t != &ta[0]), "links should differ across workers");
+    }
+
+    #[test]
+    fn parse_rejects_nonsense() {
+        assert!(NetSpec::parse("ideal", 0, 10.0, 0.0, 0).is_ok());
+        assert!(NetSpec::parse("warp", 0, 10.0, 0.0, 0).is_err());
+        assert!(NetSpec::parse("constant", 0, 0.0, 0.0, 0).is_err());
+        assert!(NetSpec::parse("per-link", 0, 1.0, 1.5, 0).is_err());
+    }
+}

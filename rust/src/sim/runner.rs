@@ -1,0 +1,1162 @@
+//! The simulated leader: LAG over virtual time.
+//!
+//! The division of labor is strict — **the sim owns time, the
+//! coordinator owns math**. Every trigger evaluation goes through the
+//! real [`TriggerConfig`], every aggregate mutation through the real
+//! [`ParameterServer`] (`absorb`/`apply_delta`/`evict`/`step`), every
+//! stochastic batch through the real `grad::batch` sampler. The sim
+//! contributes only *when* things happen: frame arrival times from
+//! [`NetModel`], per-worker compute times from [`FleetModel`], and the
+//! deterministic [`EventQueue`] ordering them.
+//!
+//! Two execution modes, selected by the options:
+//!
+//! * **pure** (no faults, no deadline pacing) — every round is a full
+//!   barrier, so arrival order provably cannot reach the math: decisions
+//!   depend only on `(θᵏ, per-worker caches, rhs)`, all fixed at round
+//!   start, and the server folds uploads in ascending shard order at the
+//!   barrier exactly like `coordinator/run.rs`. This mode therefore
+//!   supports **all eight algorithms** and is pinned *byte-identical* to
+//!   the sequential driver by `tests/sim_differential.rs`.
+//! * **service** (a [`FaultPlan`] and/or a round deadline) — mirrors the
+//!   `coordinator/service.rs` round loop: broadcast-style algorithms
+//!   only (`gd|lag-wk`), worker-side caches with delta uploads, diverted
+//!   straggler replies parked as in-flight rounds, deadline parking with
+//!   forced skips, staleness-capped forced uploads, and scheduled
+//!   evict/rejoin with contribution eviction — the same round-boundary
+//!   semantics the socket service commits, minus the sockets.
+
+use crate::coordinator::{
+    Algorithm, EvictCause, FaultPlan, LasgRule, ParameterServer, RunOptions, TriggerConfig,
+};
+use crate::data::Problem;
+use crate::grad::{batch, GradEngine};
+use crate::linalg::{axpy, dist2};
+use crate::metrics::{IterRecord, RunTrace, TraceMeta, TraceRecorder};
+use crate::sim::event::EventQueue;
+use crate::sim::fleet::{ComputeSpec, FleetModel};
+use crate::sim::net::{self, NetModel, NetSpec};
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// A worker reply: `Some(vec)` = upload payload, `None` = skip frame.
+type Reply = Option<Vec<f64>>;
+
+/// Simulator knobs, layered on top of the driver's [`RunOptions`].
+#[derive(Debug, Clone)]
+pub struct SimOptions {
+    /// Network model.
+    pub net: NetSpec,
+    /// Per-worker compute-time model.
+    pub compute: ComputeSpec,
+    /// Seed for the event queue's equal-timestamp tie-breaking.
+    pub sim_seed: u64,
+    /// Rotate the compute-speed↔worker assignment by this many slots —
+    /// a pure *timing identity* permutation (see
+    /// [`FleetModel::rotated`]); the differential suite asserts it can
+    /// never change a trajectory.
+    pub compute_rotation: usize,
+    /// Scheduled straggle/drop/rejoin plan (service mode). The `io`
+    /// byte-level fault section must be disabled: the sim has no sockets
+    /// to corrupt.
+    pub faults: FaultPlan,
+    /// Deadline-paced rounds in virtual nanoseconds (service mode):
+    /// commit each round this long after broadcast with whatever
+    /// uploads arrived, carrying laggards as forced skips.
+    pub round_deadline_ns: Option<u64>,
+    /// Staleness cap D under pacing: force-wait (and force-upload) any
+    /// member whose upload age would exceed D rounds (0 ⇒ uncapped).
+    pub max_staleness: usize,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions {
+            net: NetSpec::Ideal,
+            compute: ComputeSpec::Uniform { grad_ns: 0 },
+            sim_seed: 0,
+            compute_rotation: 0,
+            faults: FaultPlan::default(),
+            round_deadline_ns: None,
+            max_staleness: 0,
+        }
+    }
+}
+
+/// What the virtual clock and the modeled wire saw.
+#[derive(Debug, Clone, Default)]
+pub struct SimStats {
+    /// Final virtual time (simulated wall-clock of the whole run).
+    pub sim_ns: u64,
+    /// Total busy nanoseconds across all workers (simulated
+    /// cluster-seconds — what the fleet's power bill scales with).
+    pub cluster_compute_ns: u64,
+    /// Modeled leader→worker bytes.
+    pub bytes_down: u64,
+    /// Modeled worker→leader bytes (the leader-link upload volume LAG
+    /// attacks).
+    pub bytes_up: u64,
+    /// Shards granted (service mode; counts rejoins).
+    pub joins: u64,
+    /// Re-grants of a previously owned shard (service mode).
+    pub retries: u64,
+    /// Members evicted (service mode).
+    pub evictions: u64,
+    /// Rounds a member was carried as an in-flight straggler at a commit
+    /// (service mode; the pacing degradation metric).
+    pub forced_skips: u64,
+    /// `(shard, cause)` log of every eviction, in order (service mode).
+    pub eviction_causes: Vec<(u32, EvictCause)>,
+    /// Events delivered by the queue.
+    pub events_processed: u64,
+    /// Final iterate.
+    pub final_theta: Vec<f64>,
+}
+
+/// A finished simulation: the algorithmic trace (same shape the real
+/// drivers emit) plus the virtual-time accounting.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Iteration/upload trace, comparable against `run()`/`run_service()`.
+    pub trace: RunTrace,
+    /// Virtual-clock and modeled-wire counters.
+    pub stats: SimStats,
+}
+
+/// Simulator events. Payloads carry the round id so a reply landing
+/// rounds later (deadline parking, diverted stragglers) still routes to
+/// the round that produced it.
+enum SimEv {
+    /// `Round{k, rhs, θ}` reached worker `s`.
+    DownArrive { s: usize, k: usize },
+    /// Worker `s` finished its gradient for round `k`.
+    ComputeDone { s: usize, k: usize },
+    /// Worker `s`'s reply for round `k` reached the leader:
+    /// `Some(delta)` = upload, `None` = skip.
+    UpArrive { s: usize, k: usize, upload: Reply },
+    /// Round `k`'s pacing deadline fired.
+    Pace { k: usize },
+}
+
+/// Run `algo` on `problem` over simulated time. Deterministic for fixed
+/// seeds; see the module docs for the pure/service mode split.
+///
+/// ```
+/// use lag::coordinator::{Algorithm, RunOptions};
+/// use lag::grad::NativeEngine;
+/// use lag::sim::{simulate, SimOptions};
+///
+/// let p = lag::data::synthetic::linreg_increasing_l(4, 15, 6, 42);
+/// let opts = RunOptions { max_iters: 50, threads: 1, ..Default::default() };
+/// let e = NativeEngine::new(&p);
+/// let rep = simulate(&p, Algorithm::LagWk, &opts, &SimOptions::default(), &e).unwrap();
+/// // zero-delay sim ≡ the sequential driver
+/// let seq = lag::coordinator::run(&p, Algorithm::LagWk, &opts, &NativeEngine::new(&p));
+/// assert_eq!(rep.trace.records, seq.records);
+/// ```
+pub fn simulate(
+    problem: &Problem,
+    algo: Algorithm,
+    opts: &RunOptions,
+    sopts: &SimOptions,
+    engine: &dyn GradEngine,
+) -> anyhow::Result<SimReport> {
+    anyhow::ensure!(
+        !sopts.faults.io.is_enabled(),
+        "the simulator models time, not wire bytes — io fault injection needs the real service"
+    );
+    let service_mode = !sopts.faults.is_empty() || sopts.round_deadline_ns.is_some();
+    if service_mode {
+        anyhow::ensure!(
+            matches!(algo, Algorithm::Gd | Algorithm::LagWk),
+            "simulated service rounds implement the broadcast-style algorithms (gd|lag-wk), \
+             got {}",
+            algo.name()
+        );
+        let m = problem.m();
+        for &(_, s) in &sopts.faults.drop_after {
+            anyhow::ensure!(s < m, "drop_after names shard {s} but M = {m}");
+        }
+        for &(_, s) in &sopts.faults.admit_at {
+            anyhow::ensure!(s < m, "admit_at names shard {s} but M = {m}");
+        }
+        for &(fk, s, rk) in &sopts.faults.straggle {
+            anyhow::ensure!(s < m, "straggle names shard {s} but M = {m}");
+            anyhow::ensure!(rk > fk, "straggle window must reply after it falls ({fk} ≥ {rk})");
+        }
+        Ok(sim_service(problem, algo, opts, sopts, engine))
+    } else {
+        Ok(sim_pure(problem, algo, opts, sopts, engine))
+    }
+}
+
+/// One contacted worker in a pure-mode round, for the timing layer.
+struct Contact {
+    s: usize,
+    /// Gradient evaluations this worker performed this round (2 under
+    /// the LASG-WK2 stale-iterate re-evaluation).
+    evals: u32,
+    /// Whether the reply carries a payload (upload) or is a skip frame.
+    uploaded: bool,
+    /// Whether a reply is sent at all (LAG-PS non-contacts never hear
+    /// from the leader and send nothing; this is always true for
+    /// workers in the contact list).
+    replies: bool,
+}
+
+/// Pure mode: a bit-exact mirror of `coordinator/run.rs`'s sequential
+/// arms, with virtual time layered per round. See DESIGN.md §15 for the
+/// argument that the barrier makes the layering sound.
+fn sim_pure(
+    problem: &Problem,
+    algo: Algorithm,
+    opts: &RunOptions,
+    sopts: &SimOptions,
+    engine: &dyn GradEngine,
+) -> SimReport {
+    let m = problem.m();
+    let d = problem.d;
+    let alpha = opts.alpha.unwrap_or_else(|| algo.default_alpha(problem.l_total, m));
+    let xi = match algo {
+        Algorithm::LagWk | Algorithm::LasgWk => opts.wk_xi,
+        Algorithm::LagPs | Algorithm::LasgPs => opts.ps_xi,
+        _ => 0.0,
+    };
+    let trigger = TriggerConfig::uniform(opts.d_history, xi);
+    let lasg_rule = match algo {
+        Algorithm::LasgWk => {
+            let r = opts.lasg_rule.unwrap_or(LasgRule::Wk2);
+            assert!(r.is_worker_side(), "lasg-wk needs a worker-side rule, got {}", r.name());
+            Some(r)
+        }
+        Algorithm::LasgPs => {
+            let r = opts.lasg_rule.unwrap_or(LasgRule::Ps1);
+            assert!(!r.is_worker_side(), "lasg-ps needs a server-side rule, got {}", r.name());
+            Some(r)
+        }
+        _ => None,
+    };
+    let theta0 = opts.theta0.clone().unwrap_or_else(|| vec![0.0; d]);
+    let mut server = ParameterServer::new(d, m, opts.d_history, theta0);
+    let mut rng = Rng::new(opts.seed);
+
+    // worker-cache mirror of RunWorkspace (its fields are private)
+    let mut cached: Vec<Vec<f64>> = vec![vec![0.0; d]; m];
+    let mut has_cached = vec![false; m];
+    let mut grad = vec![0.0; d];
+    let mut grad_old = vec![0.0; d];
+    let mut rows: Vec<u32> = Vec::new();
+
+    let mut uploads = 0u64;
+    let mut downloads = 0u64;
+    let mut grad_evals = 0u64;
+    let mut events: Vec<Vec<usize>> = vec![Vec::new(); m];
+    let mut records = Vec::with_capacity(opts.max_iters / opts.record_every + 2);
+    let mut thetas: Vec<Vec<f64>> = Vec::new();
+    records.push(IterRecord {
+        k: 0,
+        obj_err: problem.obj_err(&server.theta),
+        cum_uploads: 0,
+        cum_downloads: 0,
+        cum_grad_evals: 0,
+    });
+    if opts.record_thetas {
+        thetas.push(server.theta.clone());
+    }
+    let mut converged_iter = None;
+    let mut uploads_at_target = None;
+
+    // timing layer
+    let fleet = FleetModel::build(&sopts.compute, m).rotated(sopts.compute_rotation);
+    let mut netm = NetModel::new(&sopts.net, m);
+    let mut q: EventQueue<SimEv> = EventQueue::new(sopts.sim_seed);
+    let mut stats = SimStats::default();
+    let mut contacts: Vec<Contact> = Vec::with_capacity(m);
+    let t_start = Instant::now();
+
+    // upload of the fresh gradient `g` from worker `mi` — the exact
+    // `apply_upload` of run.rs against the local cache mirror
+    let mut apply_upload = |server: &mut ParameterServer,
+                            cached: &mut [Vec<f64>],
+                            has_cached: &mut [bool],
+                            uploads: &mut u64,
+                            events: &mut [Vec<usize>],
+                            mi: usize,
+                            k: usize,
+                            g: &[f64]| {
+        if has_cached[mi] {
+            server.absorb(mi, g, Some(&cached[mi]));
+        } else {
+            server.absorb(mi, g, None);
+            has_cached[mi] = true;
+        }
+        server.stamp_upload(mi, k);
+        cached[mi].copy_from_slice(g);
+        *uploads += 1;
+        events[mi].push(k);
+    };
+
+    for k in 1..=opts.max_iters {
+        contacts.clear();
+        match algo {
+            Algorithm::Gd => {
+                downloads += m as u64;
+                for mi in 0..m {
+                    engine.grad_into(mi, &server.theta, &mut grad);
+                    grad_evals += 1;
+                    apply_upload(
+                        &mut server,
+                        &mut cached,
+                        &mut has_cached,
+                        &mut uploads,
+                        &mut events,
+                        mi,
+                        k,
+                        &grad,
+                    );
+                    contacts.push(Contact { s: mi, evals: 1, uploaded: true, replies: true });
+                }
+            }
+            Algorithm::LagWk => {
+                downloads += m as u64;
+                let rhs = trigger.rhs(alpha, m, &server.history);
+                for mi in 0..m {
+                    engine.grad_into(mi, &server.theta, &mut grad);
+                    grad_evals += 1;
+                    let violated =
+                        !has_cached[mi] || trigger.wk_violated(dist2(&cached[mi], &grad), rhs);
+                    if violated {
+                        apply_upload(
+                            &mut server,
+                            &mut cached,
+                            &mut has_cached,
+                            &mut uploads,
+                            &mut events,
+                            mi,
+                            k,
+                            &grad,
+                        );
+                    }
+                    contacts.push(Contact { s: mi, evals: 1, uploaded: violated, replies: true });
+                }
+            }
+            Algorithm::LagPs => {
+                let rhs = trigger.rhs(alpha, m, &server.history);
+                let mut contact_set = Vec::new();
+                for mi in 0..m {
+                    let violated = match server.hat_dist_sq(mi) {
+                        None => true,
+                        Some(d2) => trigger.ps_violated(problem.l_m[mi], d2, rhs),
+                    };
+                    if violated {
+                        contact_set.push(mi);
+                    }
+                }
+                downloads += contact_set.len() as u64;
+                for &mi in &contact_set {
+                    engine.grad_into(mi, &server.theta, &mut grad);
+                    grad_evals += 1;
+                    apply_upload(
+                        &mut server,
+                        &mut cached,
+                        &mut has_cached,
+                        &mut uploads,
+                        &mut events,
+                        mi,
+                        k,
+                        &grad,
+                    );
+                    contacts.push(Contact { s: mi, evals: 1, uploaded: true, replies: true });
+                }
+            }
+            Algorithm::CycIag => {
+                let mi = (k - 1) % m;
+                downloads += 1;
+                engine.grad_into(mi, &server.theta, &mut grad);
+                grad_evals += 1;
+                apply_upload(
+                    &mut server,
+                    &mut cached,
+                    &mut has_cached,
+                    &mut uploads,
+                    &mut events,
+                    mi,
+                    k,
+                    &grad,
+                );
+                contacts.push(Contact { s: mi, evals: 1, uploaded: true, replies: true });
+            }
+            Algorithm::NumIag => {
+                let mi = rng.weighted(&problem.l_m);
+                downloads += 1;
+                engine.grad_into(mi, &server.theta, &mut grad);
+                grad_evals += 1;
+                apply_upload(
+                    &mut server,
+                    &mut cached,
+                    &mut has_cached,
+                    &mut uploads,
+                    &mut events,
+                    mi,
+                    k,
+                    &grad,
+                );
+                contacts.push(Contact { s: mi, evals: 1, uploaded: true, replies: true });
+            }
+            Algorithm::Sgd => {
+                downloads += m as u64;
+                for mi in 0..m {
+                    stoch_grad_into(
+                        problem,
+                        engine,
+                        opts,
+                        mi,
+                        k,
+                        &server.theta,
+                        &mut rows,
+                        &mut grad,
+                    );
+                    grad_evals += 1;
+                    apply_upload(
+                        &mut server,
+                        &mut cached,
+                        &mut has_cached,
+                        &mut uploads,
+                        &mut events,
+                        mi,
+                        k,
+                        &grad,
+                    );
+                    contacts.push(Contact { s: mi, evals: 1, uploaded: true, replies: true });
+                }
+            }
+            Algorithm::LasgWk => {
+                downloads += m as u64;
+                let rhs = trigger.rhs(alpha, m, &server.history);
+                let rule = lasg_rule.expect("resolved above");
+                for mi in 0..m {
+                    stoch_grad_into(
+                        problem,
+                        engine,
+                        opts,
+                        mi,
+                        k,
+                        &server.theta,
+                        &mut rows,
+                        &mut grad,
+                    );
+                    grad_evals += 1;
+                    let mut evals = 1u32;
+                    let violated = if !has_cached[mi] {
+                        true
+                    } else if rule == LasgRule::Wk1 {
+                        trigger.wk_violated(dist2(&cached[mi], &grad), rhs)
+                    } else {
+                        let hat = server.hat_theta[mi].as_ref().expect("cached ⇒ contacted");
+                        stoch_grad_same_batch(problem, engine, opts, mi, hat, &rows, &mut grad_old);
+                        grad_evals += 1;
+                        evals = 2;
+                        trigger.wk_violated(dist2(&grad_old, &grad), rhs)
+                    };
+                    if violated {
+                        apply_upload(
+                            &mut server,
+                            &mut cached,
+                            &mut has_cached,
+                            &mut uploads,
+                            &mut events,
+                            mi,
+                            k,
+                            &grad,
+                        );
+                    }
+                    contacts.push(Contact { s: mi, evals, uploaded: violated, replies: true });
+                }
+            }
+            Algorithm::LasgPs => {
+                let rhs = trigger.rhs(alpha, m, &server.history);
+                let rule = lasg_rule.expect("resolved above");
+                let mut contact_set = Vec::new();
+                for mi in 0..m {
+                    let violated = match server.hat_dist_sq(mi) {
+                        None => true,
+                        Some(d2) => {
+                            let drift = trigger.ps_violated(problem.l_m[mi], d2, rhs);
+                            if rule == LasgRule::Ps2 {
+                                let age = server.upload_age(mi, k).unwrap_or(usize::MAX);
+                                drift || age >= trigger.d()
+                            } else {
+                                drift
+                            }
+                        }
+                    };
+                    if violated {
+                        contact_set.push(mi);
+                    }
+                }
+                downloads += contact_set.len() as u64;
+                for &mi in &contact_set {
+                    stoch_grad_into(
+                        problem,
+                        engine,
+                        opts,
+                        mi,
+                        k,
+                        &server.theta,
+                        &mut rows,
+                        &mut grad,
+                    );
+                    grad_evals += 1;
+                    apply_upload(
+                        &mut server,
+                        &mut cached,
+                        &mut has_cached,
+                        &mut uploads,
+                        &mut events,
+                        mi,
+                        k,
+                        &grad,
+                    );
+                    contacts.push(Contact { s: mi, evals: 1, uploaded: true, replies: true });
+                }
+            }
+        }
+
+        // ---- timing layer: this round's wire + compute legs, drained
+        // through the event queue to the round barrier ----
+        let t0 = q.now();
+        for c in &contacts {
+            let db = net::round_frame_bytes(d);
+            stats.bytes_down += db;
+            let arr = netm.down_arrival(c.s, t0, db);
+            q.schedule(arr, SimEv::DownArrive { s: c.s, k });
+        }
+        let mut replies_left = contacts.iter().filter(|c| c.replies).count();
+        // evals/uploaded lookups for the drain loop (contacts are few or
+        // all-m; a direct-indexed map keeps this O(1) per event)
+        let mut evals_of: HashMap<usize, (u32, bool)> = HashMap::with_capacity(contacts.len());
+        for c in &contacts {
+            evals_of.insert(c.s, (c.evals, c.uploaded));
+        }
+        while replies_left > 0 {
+            let (at, ev) = q.pop().expect("sim wedged: barrier round with no events left");
+            match ev {
+                SimEv::DownArrive { s, k: _ } => {
+                    let (evals, _) = evals_of[&s];
+                    let busy = fleet.grad_ns[s] * evals as u64;
+                    stats.cluster_compute_ns += busy;
+                    q.schedule(at + busy, SimEv::ComputeDone { s, k });
+                }
+                SimEv::ComputeDone { s, k: _ } => {
+                    let (_, uploaded) = evals_of[&s];
+                    let ub =
+                        if uploaded { net::delta_frame_bytes(d) } else { net::skip_frame_bytes() };
+                    stats.bytes_up += ub;
+                    let arr = netm.up_arrival(s, at, ub);
+                    q.schedule(arr, SimEv::UpArrive { s, k, upload: None });
+                }
+                SimEv::UpArrive { .. } => {
+                    replies_left -= 1;
+                }
+                SimEv::Pace { .. } => unreachable!("pure mode schedules no pacing"),
+            }
+        }
+
+        // ---- the exact run.rs epilogue ----
+        server.step(alpha);
+        if opts.record_thetas {
+            thetas.push(server.theta.clone());
+        }
+        if k % opts.eval_every != 0 && k != opts.max_iters {
+            continue;
+        }
+        let obj = problem.obj_err(&server.theta);
+        let at_target = opts.target_err.map(|t| obj <= t).unwrap_or(false);
+        if k % opts.record_every == 0 || k == opts.max_iters || at_target {
+            records.push(IterRecord {
+                k,
+                obj_err: obj,
+                cum_uploads: uploads,
+                cum_downloads: downloads,
+                cum_grad_evals: grad_evals,
+            });
+        }
+        if at_target && converged_iter.is_none() {
+            converged_iter = Some(k);
+            uploads_at_target = Some(uploads);
+            if opts.stop_at_target {
+                break;
+            }
+        }
+    }
+
+    stats.sim_ns = q.now();
+    stats.events_processed = q.processed();
+    stats.final_theta = server.theta.clone();
+    SimReport {
+        trace: RunTrace {
+            // plain algorithm name: sim traces interleave with real ones
+            // in study tables, and the engine field carries the marker
+            algo: algo.name().to_string(),
+            problem: problem.name.clone(),
+            engine: format!("{}-sim", engine.name()),
+            m,
+            alpha,
+            records,
+            upload_events: events,
+            converged_iter,
+            uploads_at_target,
+            wall_secs: t_start.elapsed().as_secs_f64(),
+            thetas,
+        },
+        stats,
+    }
+}
+
+/// The stochastic gradient of run.rs's `StochCtx::grad_into`, free-standing.
+#[allow(clippy::too_many_arguments)]
+fn stoch_grad_into(
+    problem: &Problem,
+    engine: &dyn GradEngine,
+    opts: &RunOptions,
+    mi: usize,
+    k: usize,
+    theta: &[f64],
+    rows: &mut Vec<u32>,
+    out: &mut [f64],
+) -> f64 {
+    let n_real = problem.workers[mi].n_real;
+    match batch::plan(opts.batch, n_real) {
+        None => engine.grad_into(mi, theta, out),
+        Some((_, scale)) => {
+            batch::sample_rows_into(opts.batch, n_real, opts.seed, mi, k as u64, rows);
+            engine.grad_batch_into(mi, theta, rows, scale, out)
+        }
+    }
+}
+
+/// The stale-iterate same-batch evaluation of run.rs's
+/// `StochCtx::grad_same_batch`, free-standing.
+fn stoch_grad_same_batch(
+    problem: &Problem,
+    engine: &dyn GradEngine,
+    opts: &RunOptions,
+    mi: usize,
+    theta: &[f64],
+    rows: &[u32],
+    out: &mut [f64],
+) -> f64 {
+    let n_real = problem.workers[mi].n_real;
+    match batch::plan(opts.batch, n_real) {
+        None => engine.grad_into(mi, theta, out),
+        Some((b, scale)) => {
+            debug_assert_eq!(rows.len(), b, "rows must come from this round's sample");
+            engine.grad_batch_into(mi, theta, rows, scale, out)
+        }
+    }
+}
+
+/// A reply the simulated leader is still waiting on (the service's
+/// `Inflight`, minus the screening anchor it never needs here).
+struct Pend {
+    /// Round the reply answers.
+    k: usize,
+    /// `Some(rk)` — a diverted straggler due at round `rk`'s commit;
+    /// `None` — parked at a pacing deadline, ripe as soon as it arrives.
+    due: Option<usize>,
+    /// `Some(Some(δ))` upload, `Some(None)` skip, `None` still in flight.
+    delta: Option<Reply>,
+}
+
+/// Per-round broadcast context for in-flight rounds: the θ and rhs the
+/// frame carried (a parked worker may compute against a θ the leader has
+/// since stepped past).
+struct Flight {
+    theta: Vec<f64>,
+    rhs: f64,
+    /// Members ordered to upload unconditionally (staleness cap) — the
+    /// forced `Round` variant carries rhs = −∞.
+    force: Vec<usize>,
+    /// Compute legs still outstanding; the context is dropped at zero.
+    left: usize,
+}
+
+/// Service mode: the `coordinator/service.rs` round loop over virtual
+/// time. Single-threaded and socket-free, but round-boundary semantics —
+/// broadcast sets, delta routing, parking, ripeness, commit order,
+/// eviction causes — are a line-for-line mirror, which is what
+/// `tests/sim_differential.rs` pins against the real service.
+///
+/// The commit gate re-scans membership per delivered event (O(m) each,
+/// the obviously-correct transcription of the service's wakeup check), so
+/// this mode is sized for service-scale fleets (≤ ~10⁴ workers); the
+/// 10⁵–10⁶ regime runs in pure mode, whose barrier is counter-based.
+fn sim_service(
+    problem: &Problem,
+    algo: Algorithm,
+    opts: &RunOptions,
+    sopts: &SimOptions,
+    engine: &dyn GradEngine,
+) -> SimReport {
+    let m = problem.m();
+    let d = problem.d;
+    let alpha = opts.alpha.unwrap_or_else(|| algo.default_alpha(problem.l_total, m));
+    let xi = if algo == Algorithm::LagWk { opts.wk_xi } else { 0.0 };
+    let trigger = TriggerConfig::uniform(opts.d_history, xi);
+    let theta0 = opts.theta0.clone().unwrap_or_else(|| vec![0.0; d]);
+    let mut server = ParameterServer::new(d, m, opts.d_history, theta0);
+    let pacing = sopts.round_deadline_ns.is_some();
+
+    // leader-side membership + telescoped contributions
+    let mut owned = vec![false; m];
+    let mut ever_owned = vec![false; m];
+    let mut contrib: Vec<Option<Vec<f64>>> = vec![None; m];
+    let mut pending: Vec<Option<Pend>> = (0..m).map(|_| None).collect();
+    let mut admit_round: Vec<Option<usize>> = vec![None; m];
+    // worker-side session caches (= the gradient each worker last uploaded)
+    let mut wk_cached: Vec<Option<Vec<f64>>> = vec![None; m];
+    let mut free_at = vec![0u64; m];
+
+    let mut uploads = 0u64;
+    let mut downloads = 0u64;
+    let mut events: Vec<Vec<usize>> = vec![Vec::new(); m];
+    let mut recorder = TraceRecorder::new(
+        opts.record_every,
+        opts.max_iters,
+        opts.target_err,
+        opts.stop_at_target,
+        0,
+        problem.obj_err(&server.theta),
+    );
+
+    let fleet = FleetModel::build(&sopts.compute, m).rotated(sopts.compute_rotation);
+    let mut netm = NetModel::new(&sopts.net, m);
+    let mut q: EventQueue<SimEv> = EventQueue::new(sopts.sim_seed);
+    let mut stats = SimStats::default();
+    let mut in_flight: HashMap<usize, Flight> = HashMap::new();
+    let mut grad = vec![0.0; d];
+    let t_start = Instant::now();
+
+    // the whole fleet is present at startup (the soak harness spawns every
+    // worker before the leader's first round)
+    for s in 0..m {
+        owned[s] = true;
+        ever_owned[s] = true;
+        stats.joins += 1;
+        stats.bytes_down += net::assign_frame_bytes(d, false);
+    }
+
+    for k in 1..=opts.max_iters {
+        // Phase A: admissions of held rejoiners whose round has come
+        for s in 0..m {
+            if let Some(r) = admit_round[s] {
+                if r <= k && !owned[s] {
+                    admit_round[s] = None;
+                    owned[s] = true;
+                    stats.joins += 1;
+                    if ever_owned[s] {
+                        stats.retries += 1;
+                    }
+                    ever_owned[s] = true;
+                    // Assign carries the leader's cached contribution —
+                    // None after an eviction, forcing a full first upload
+                    wk_cached[s] = contrib[s].clone();
+                    stats.bytes_down += net::assign_frame_bytes(d, contrib[s].is_some());
+                }
+            }
+        }
+
+        // Phase B: wait/force sets, rhs, broadcast
+        let mut wait_member = vec![false; m];
+        let mut force: Vec<usize> = Vec::new();
+        if pacing {
+            for s in 0..m {
+                if !owned[s] {
+                    continue;
+                }
+                match server.hat_iter[s] {
+                    None => wait_member[s] = true,
+                    Some(last) => {
+                        if sopts.max_staleness > 0 && k - last >= sopts.max_staleness {
+                            wait_member[s] = true;
+                            if pending[s].is_none() {
+                                force.push(s);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let rhs = trigger.rhs(alpha, m, &server.history);
+        let t0 = q.now();
+        let mut participants = vec![false; m];
+        let mut deltas: Vec<Option<Reply>> = (0..m).map(|_| None).collect();
+        let mut n_participants = 0usize;
+        for s in 0..m {
+            if owned[s] && pending[s].is_none() {
+                participants[s] = true;
+                n_participants += 1;
+                downloads += 1;
+                let db = net::round_frame_bytes(d);
+                stats.bytes_down += db;
+                let arr = netm.down_arrival(s, t0, db);
+                q.schedule(arr, SimEv::DownArrive { s, k });
+            }
+        }
+        in_flight
+            .insert(k, Flight { theta: server.theta.clone(), rhs, force, left: n_participants });
+
+        // straggle injection: divert the reply of scheduled stragglers
+        // into a pending slot due at their reply round
+        for &(fk, s, rk) in &sopts.faults.straggle {
+            if fk == k && participants[s] && !wait_member[s] && pending[s].is_none() {
+                participants[s] = false;
+                pending[s] = Some(Pend { k, due: Some(rk), delta: None });
+            }
+        }
+
+        let pace_ev = sopts
+            .round_deadline_ns
+            .map(|p| q.schedule(t0.saturating_add(p), SimEv::Pace { k }));
+
+        // collect until the commit gate opens: no on-time participant
+        // outstanding, no due (or must-wait) pending reply missing
+        loop {
+            let outstanding =
+                (0..m).any(|s| participants[s] && deltas[s].is_none());
+            let blocked = (0..m).any(|s| {
+                pending[s].as_ref().is_some_and(|p| {
+                    p.delta.is_none()
+                        && (p.due.is_some_and(|r| r <= k) || (p.due.is_none() && wait_member[s]))
+                })
+            });
+            if !outstanding && !blocked {
+                break;
+            }
+            let (at, ev) = q.pop().expect("sim wedged: commit gate blocked with no events");
+            match ev {
+                SimEv::DownArrive { s, k: rk } => {
+                    let start = at.max(free_at[s]);
+                    let busy = fleet.grad_ns[s];
+                    stats.cluster_compute_ns += busy;
+                    free_at[s] = start + busy;
+                    q.schedule(free_at[s], SimEv::ComputeDone { s, k: rk });
+                }
+                SimEv::ComputeDone { s, k: rk } => {
+                    let fl = in_flight.get_mut(&rk).expect("compute for a dropped round");
+                    engine.grad_into(s, &fl.theta, &mut grad);
+                    let eff_rhs =
+                        if fl.force.contains(&s) { f64::NEG_INFINITY } else { fl.rhs };
+                    // worker protocol: empty cache ⇒ full upload; else
+                    // upload δ = g − cache iff the trigger fires
+                    let upload = match &wk_cached[s] {
+                        None => {
+                            let g = grad.clone();
+                            wk_cached[s] = Some(g.clone());
+                            Some(g)
+                        }
+                        Some(c) => {
+                            if trigger.wk_violated(dist2(c, &grad), eff_rhs) {
+                                let dv: Vec<f64> =
+                                    grad.iter().zip(c.iter()).map(|(g, c)| g - c).collect();
+                                wk_cached[s] = Some(grad.clone());
+                                Some(dv)
+                            } else {
+                                None
+                            }
+                        }
+                    };
+                    fl.left -= 1;
+                    if fl.left == 0 {
+                        in_flight.remove(&rk);
+                    }
+                    let ub = if upload.is_some() {
+                        net::delta_frame_bytes(d)
+                    } else {
+                        net::skip_frame_bytes()
+                    };
+                    stats.bytes_up += ub;
+                    let arr = netm.up_arrival(s, at, ub);
+                    q.schedule(arr, SimEv::UpArrive { s, k: rk, upload });
+                }
+                SimEv::UpArrive { s, k: rk, upload } => {
+                    // route exactly like the service collect loop
+                    if let Some(p) = pending[s].as_mut() {
+                        if p.delta.is_none() && rk == p.k {
+                            p.delta = Some(upload);
+                        }
+                        // anything else: a reply from a session that was
+                        // since evicted — the socket would be gone
+                    } else if participants[s] && rk == k && deltas[s].is_none() {
+                        deltas[s] = Some(upload);
+                    }
+                }
+                SimEv::Pace { k: pk } => {
+                    if pk == k {
+                        // deadline: park every outstanding non-wait
+                        // participant as an in-flight reply
+                        for s in 0..m {
+                            if participants[s] && deltas[s].is_none() && !wait_member[s] {
+                                participants[s] = false;
+                                pending[s] = Some(Pend { k, due: None, delta: None });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if let Some(id) = pace_ev {
+            q.cancel(id); // round closed before (or exactly at) its deadline
+        }
+
+        // commit: ripe pending first, then on-time replies, ascending
+        // shard order — then the step
+        for s in 0..m {
+            let ripe = pending[s]
+                .as_ref()
+                .is_some_and(|p| p.delta.is_some() && p.due.is_none_or(|r| r <= k));
+            if ripe {
+                let p = pending[s].take().expect("ripe checked above");
+                if let Some(Some(dv)) = p.delta {
+                    server.apply_delta(s, &dv);
+                    server.stamp_upload(s, p.k);
+                    match contrib[s].as_mut() {
+                        Some(c) => axpy(1.0, &dv, c),
+                        None => contrib[s] = Some(dv.clone()),
+                    }
+                    uploads += 1;
+                    events[s].push(p.k);
+                }
+            } else if participants[s] {
+                if let Some(Some(dv)) = deltas[s].take() {
+                    server.apply_delta(s, &dv);
+                    server.stamp_upload(s, k);
+                    match contrib[s].as_mut() {
+                        Some(c) => axpy(1.0, &dv, c),
+                        None => contrib[s] = Some(dv.clone()),
+                    }
+                    uploads += 1;
+                    events[s].push(k);
+                }
+            }
+        }
+        server.step(alpha);
+
+        // degradation accounting: every member still carried in flight at
+        // this commit is a forced skip
+        for s in 0..m {
+            if owned[s] && pending[s].is_some() {
+                stats.forced_skips += 1;
+            }
+        }
+
+        // scheduled drops (post-step, like the service): evict the
+        // member's telescoped contribution and hold its rejoin round
+        for &(fk, s) in &sopts.faults.drop_after {
+            if fk == k && owned[s] {
+                if let Some(g) = contrib[s].take() {
+                    server.evict(s, &g);
+                } else {
+                    server.hat_theta[s] = None;
+                    server.hat_iter[s] = None;
+                }
+                pending[s] = None;
+                owned[s] = false;
+                stats.evictions += 1;
+                stats.eviction_causes.push((s as u32, EvictCause::Scheduled));
+                admit_round[s] = sopts
+                    .faults
+                    .admit_at
+                    .iter()
+                    .filter(|&&(r, fs)| fs == s && r > k)
+                    .map(|&(r, _)| r)
+                    .min();
+            }
+        }
+
+        let obj = problem.obj_err(&server.theta);
+        if recorder.on_iter(k, obj, uploads, downloads, downloads) {
+            break;
+        }
+    }
+
+    stats.sim_ns = q.now();
+    stats.events_processed = q.processed();
+    stats.final_theta = server.theta.clone();
+    let trace = recorder.into_trace(
+        TraceMeta {
+            algo: algo.name().to_string(),
+            problem: problem.name.clone(),
+            engine: format!("{}-sim", engine.name()),
+            m,
+            alpha,
+        },
+        events,
+        t_start.elapsed().as_secs_f64(),
+    );
+    SimReport { trace, stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::run;
+    use crate::data::synthetic;
+    use crate::grad::NativeEngine;
+
+    fn toy() -> Problem {
+        synthetic::linreg_increasing_l(5, 20, 8, 11)
+    }
+
+    fn bits(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn zero_delay_pure_mode_matches_run_for_every_algorithm() {
+        let p = toy();
+        let opts = RunOptions { max_iters: 60, threads: 1, ..Default::default() };
+        for algo in [
+            Algorithm::Gd,
+            Algorithm::LagWk,
+            Algorithm::LagPs,
+            Algorithm::CycIag,
+            Algorithm::NumIag,
+        ] {
+            let seq = run(&p, algo, &opts, &NativeEngine::new(&p));
+            let sim =
+                simulate(&p, algo, &opts, &SimOptions::default(), &NativeEngine::new(&p)).unwrap();
+            assert_eq!(sim.trace.records, seq.records, "{algo:?} records drifted");
+            assert_eq!(sim.trace.upload_events, seq.upload_events, "{algo:?} uploads drifted");
+        }
+    }
+
+    #[test]
+    fn network_and_compute_models_never_touch_the_math() {
+        let p = toy();
+        let opts = RunOptions { max_iters: 40, threads: 1, ..Default::default() };
+        let ideal =
+            simulate(&p, Algorithm::LagWk, &opts, &SimOptions::default(), &NativeEngine::new(&p))
+                .unwrap();
+        let slow = SimOptions {
+            net: NetSpec::SharedLeader { latency_ns: 50_000, gbps: 1.0 },
+            compute: ComputeSpec::LogNormal { median_ns: 2_000_000, sigma: 1.0, seed: 4 },
+            ..Default::default()
+        };
+        let loaded =
+            simulate(&p, Algorithm::LagWk, &opts, &slow, &NativeEngine::new(&p)).unwrap();
+        assert_eq!(ideal.trace.records, loaded.trace.records);
+        assert_eq!(bits(&ideal.stats.final_theta), bits(&loaded.stats.final_theta));
+        assert!(loaded.stats.sim_ns > 0, "a loaded network must take virtual time");
+        assert!(loaded.stats.cluster_compute_ns > 0);
+    }
+
+    #[test]
+    fn service_mode_rejects_non_broadcast_algorithms() {
+        let p = toy();
+        let opts = RunOptions { max_iters: 5, threads: 1, ..Default::default() };
+        let sopts = SimOptions {
+            faults: FaultPlan { straggle: vec![(2, 1, 4)], ..Default::default() },
+            ..Default::default()
+        };
+        let err = simulate(&p, Algorithm::LagPs, &opts, &sopts, &NativeEngine::new(&p))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("broadcast-style"), "{err}");
+    }
+
+    #[test]
+    fn service_mode_counts_straggle_windows_as_forced_skips() {
+        let p = toy();
+        let opts = RunOptions {
+            max_iters: 20,
+            target_err: None,
+            stop_at_target: false,
+            threads: 1,
+            ..Default::default()
+        };
+        let sopts = SimOptions {
+            faults: FaultPlan { straggle: vec![(3, 1, 6), (8, 4, 11)], ..Default::default() },
+            ..Default::default()
+        };
+        let rep = simulate(&p, Algorithm::LagWk, &opts, &sopts, &NativeEngine::new(&p)).unwrap();
+        assert_eq!(rep.stats.forced_skips, (6 - 3) + (11 - 8));
+        assert_eq!(rep.stats.evictions, 0);
+        // the diverted round-3 decision lands stamped with its own round
+        assert!(rep.trace.upload_events[1].iter().all(|&k| k != 4 && k != 5));
+    }
+
+    #[test]
+    fn service_mode_drop_and_rejoin_evicts_and_readmits() {
+        let p = toy();
+        let opts = RunOptions {
+            max_iters: 25,
+            target_err: None,
+            stop_at_target: false,
+            threads: 1,
+            ..Default::default()
+        };
+        let sopts = SimOptions {
+            faults: FaultPlan {
+                drop_after: vec![(5, 2)],
+                admit_at: vec![(9, 2)],
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let rep = simulate(&p, Algorithm::LagWk, &opts, &sopts, &NativeEngine::new(&p)).unwrap();
+        assert_eq!(rep.stats.evictions, 1);
+        assert_eq!(rep.stats.eviction_causes, vec![(2, EvictCause::Scheduled)]);
+        assert_eq!(rep.stats.joins, p.m() as u64 + 1);
+        assert_eq!(rep.stats.retries, 1);
+        let evs = &rep.trace.upload_events[2];
+        assert!(evs.iter().all(|&k| !(6..9).contains(&k)), "dark window violated: {evs:?}");
+        assert!(evs.contains(&9), "rejoin must force a full first-contact upload: {evs:?}");
+    }
+
+    #[test]
+    fn pacing_converges_and_counts_skips_under_heterogeneous_compute() {
+        let p = toy();
+        let opts = RunOptions {
+            max_iters: 800,
+            target_err: Some(1e-6),
+            threads: 1,
+            ..Default::default()
+        };
+        // pick a class-assignment seed that actually mixes the classes, so
+        // at least one worker is 50x slower than the deadline allows
+        let seed = (0..64)
+            .find(|&sd| {
+                let spec = ComputeSpec::TwoClass {
+                    fast_ns: 1_000,
+                    slow_mult: 50.0,
+                    slow_fraction: 0.5,
+                    seed: sd,
+                };
+                let f = FleetModel::build(&spec, p.m());
+                f.grad_ns.contains(&1_000) && f.grad_ns.iter().any(|&t| t > 1_000)
+            })
+            .expect("some seed must mix a 50/50 two-class fleet");
+        let sopts = SimOptions {
+            compute: ComputeSpec::TwoClass {
+                fast_ns: 1_000,
+                slow_mult: 50.0,
+                slow_fraction: 0.5,
+                seed,
+            },
+            round_deadline_ns: Some(10_000),
+            max_staleness: 10,
+            ..Default::default()
+        };
+        let rep = simulate(&p, Algorithm::LagWk, &opts, &sopts, &NativeEngine::new(&p)).unwrap();
+        assert!(rep.trace.converged_iter.is_some(), "final_err={}", rep.trace.final_err());
+        assert!(rep.stats.forced_skips > 0, "a 50x straggler must trip the pacer");
+        // staleness cap D: no inter-upload gap beyond D rounds while paced
+        for evs in &rep.trace.upload_events {
+            for w in evs.windows(2) {
+                assert!(w[1] - w[0] <= 10, "staleness cap violated: {evs:?}");
+            }
+        }
+    }
+}

@@ -143,4 +143,89 @@ mod tests {
         let mut b = Backoff::new(&BackoffPolicy::none());
         assert!(b.next_delay().is_none());
     }
+
+    /// The exponent clamps at 2^20 and the multiply saturates, so even a
+    /// pathological policy (huge base, effectively-unbounded cap, a long
+    /// retry budget) yields finite delays that plateau instead of
+    /// panicking on overflow.
+    #[test]
+    fn exponent_saturates_and_never_overflows() {
+        let policy = BackoffPolicy {
+            base: Duration::from_secs(3600),
+            cap: Duration::MAX,
+            max_retries: 30,
+            seed: 11,
+        };
+        let mut b = Backoff::new(&policy);
+        let plateau = policy.base.saturating_mul(1 << 20);
+        for n in 0..30 {
+            let d = b.next_delay().expect("attempt within budget");
+            let raw = policy.base.saturating_mul(1u32 << n.min(20));
+            assert!(d >= raw.mul_f64(0.5) && d <= raw, "n={n} d={d:?}");
+            if n >= 20 {
+                assert!(d <= plateau, "n={n}: the exponent must clamp at 2^20");
+            }
+        }
+        assert!(b.next_delay().is_none());
+
+        // the degenerate extreme: base already saturated — every delay is
+        // a jittered Duration::MAX, never a panic
+        let mut b = Backoff::new(&BackoffPolicy {
+            base: Duration::MAX,
+            cap: Duration::MAX,
+            max_retries: 3,
+            seed: 12,
+        });
+        for _ in 0..3 {
+            let d = b.next_delay().unwrap();
+            assert!(d >= Duration::MAX.mul_f64(0.5));
+        }
+    }
+
+    /// Over many seeds and full schedules, every delay stays inside the
+    /// jitter envelope `[raw/2, raw]` with `raw ≤ cap` — the no-thundering-
+    /// herd bound callers rely on, checked exhaustively rather than on one
+    /// lucky stream.
+    #[test]
+    fn every_delay_in_every_schedule_respects_cap_and_jitter_bounds() {
+        let base = Duration::from_millis(10);
+        let cap = Duration::from_millis(200);
+        for seed in 0..32 {
+            let mut b = Backoff::new(&BackoffPolicy { base, cap, max_retries: 12, seed });
+            let mut n = 0u32;
+            while let Some(d) = b.next_delay() {
+                let raw = base.saturating_mul(1 << n.min(20)).min(cap);
+                assert!(d <= cap, "seed {seed} attempt {n}: {d:?} above the cap");
+                assert!(
+                    d >= raw.mul_f64(0.5) && d <= raw,
+                    "seed {seed} attempt {n}: {d:?} outside [{:?}, {raw:?}]",
+                    raw.mul_f64(0.5)
+                );
+                n += 1;
+            }
+            assert_eq!(n, 12, "seed {seed}: schedule length");
+        }
+    }
+
+    /// A worker that keeps succeeding (connect, serve, lose the leader,
+    /// reconnect) resets after every success: the budget never exhausts
+    /// across arbitrarily many productive cycles, every delay stays at the
+    /// first-attempt size, and the jitter stream keeps advancing.
+    #[test]
+    fn repeated_productive_resets_never_exhaust_the_budget() {
+        let policy = BackoffPolicy { max_retries: 2, seed: 9, ..Default::default() };
+        let mut b = Backoff::new(&policy);
+        let mut delays = Vec::new();
+        for cycle in 0..50 {
+            let d = b.next_delay().unwrap_or_else(|| panic!("cycle {cycle} exhausted"));
+            // always the attempt-0 envelope: [base/2, base]
+            assert!(d >= policy.base.mul_f64(0.5) && d <= policy.base, "cycle {cycle}: {d:?}");
+            delays.push(d);
+            b.reset();
+            assert_eq!(b.attempts(), 0);
+        }
+        delays.sort_unstable();
+        delays.dedup();
+        assert!(delays.len() > 10, "jitter must keep advancing across resets");
+    }
 }

@@ -1,0 +1,97 @@
+//! Shared integration-test harness: spawn a loopback fleet, collect
+//! traces, byte-compare runs.
+//!
+//! Every integration binary that drives the leader/worker service — the
+//! churn soak, the straggler soak, and the sim differential suite — used
+//! to carry its own copy of these helpers; they live here now so the
+//! byte-comparison discipline (f64 bit signatures, upload-event equality,
+//! final-iterate bits) is defined once.
+
+// Each integration test binary compiles this module independently and
+// uses a different subset of it.
+#![allow(dead_code)]
+
+use lag::coordinator::{
+    run_service, serve_worker, Algorithm, FaultPlan, IterRecord, RunOptions, RunTrace,
+    ServiceOptions, ServiceStats, WorkerConfig, WorkerExit,
+};
+use lag::data::Problem;
+use std::net::TcpListener;
+use std::time::Duration;
+
+/// Per-test wall-clock budget. Generous for debug builds; release CI
+/// finishes far inside it. A hang blows the budget loudly instead of
+/// wedging the job until the CI runner's timeout.
+pub const WALL_BUDGET: Duration = Duration::from_secs(120);
+
+/// Service options for deterministic loopback soaks: timeouts far beyond
+/// any loopback latency (so nothing times out spuriously) and a tight
+/// tick so pacing decisions are prompt.
+pub fn sopts() -> ServiceOptions {
+    ServiceOptions {
+        join_timeout: Duration::from_secs(60),
+        round_timeout: Duration::from_secs(60),
+        heartbeat_timeout: Duration::from_secs(60),
+        tick: Duration::from_millis(1),
+        ..Default::default()
+    }
+}
+
+/// Byte-comparison signature of a record stream: iteration, objective
+/// error to the f64 bit, and the communication counters.
+pub fn record_sig(records: &[IterRecord]) -> Vec<(usize, u64, u64, u64)> {
+    records.iter().map(|r| (r.k, r.obj_err.to_bits(), r.cum_uploads, r.cum_downloads)).collect()
+}
+
+/// Bit pattern of an f64 vector (the only honest way to compare iterates).
+pub fn theta_bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Env-sized fleet: `var` parsed as a worker count, clamped to ≥ `min`,
+/// falling back to `default`. Used as `LAG_SOAK_WORKERS` by the soaks and
+/// `LAG_SIM_WORKERS` by the sim differential suite.
+pub fn env_fleet(var: &str, default: usize, min: usize) -> usize {
+    std::env::var(var)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .map(|n: usize| n.max(min))
+        .unwrap_or(default)
+}
+
+/// Leader plus a rejoining preferred-shard fleet on loopback: spawns the
+/// service and one worker thread per shard (each rejoining after any
+/// eviction until the leader says `Shutdown`), and returns the leader's
+/// trace and stats.
+pub fn drive(
+    p: &Problem,
+    algo: Algorithm,
+    opts: &RunOptions,
+    so: &ServiceOptions,
+    faults: &FaultPlan,
+) -> (RunTrace, ServiceStats) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::scope(|scope| {
+        let leader = scope.spawn(|| run_service(listener, p, algo, opts, so, faults).unwrap());
+        for s in 0..p.m() {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                let cfg = WorkerConfig {
+                    preferred: Some(s),
+                    heartbeat_interval: Duration::from_millis(20),
+                    leader_timeout: Duration::from_secs(90),
+                    ..Default::default()
+                };
+                loop {
+                    match serve_worker(&addr, p, &cfg) {
+                        Ok(o) if o.exit == WorkerExit::Shutdown => break,
+                        Ok(_) => std::thread::sleep(Duration::from_millis(2)), // evicted: rejoin
+                        Err(_) => break, // leader gone
+                    }
+                }
+            });
+        }
+        leader.join().unwrap()
+    })
+}

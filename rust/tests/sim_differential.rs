@@ -1,0 +1,357 @@
+//! Differential suite pinning the discrete-event fleet simulator to the
+//! real implementations (DESIGN.md §15). The simulator is useful only if
+//! it is *not* a second implementation that can drift, so every claim is
+//! tested against the code that defines the truth:
+//!
+//! 1. **Sim ≡ sequential driver.** With zero network delay the sim's
+//!    trace — records to the f64 bit, upload events, every recorded
+//!    iterate — must be byte-identical to `coordinator::run` for all
+//!    eight algorithms (the paper's five full-batch methods and the
+//!    LASG stochastic family).
+//! 2. **Sim ≡ service round semantics.** On the same `FaultPlan`, the
+//!    sim must reproduce the socket service's round-boundary behavior
+//!    exactly: records, upload events, final iterate, eviction causes,
+//!    forced skips, joins.
+//! 3. **Scale determinism.** Two identical-seed runs at
+//!    `LAG_SIM_WORKERS` (default 2000; CI runs 100000 in release) must
+//!    byte-compare equal, and permuting worker *timing identities*
+//!    (compute-speed rotation) must not change any aggregate trajectory
+//!    — timing may move, math may not.
+//! 4. **Event-queue properties.** Equal-timestamp events never reorder
+//!    across runs, the virtual clock is monotone, and no event is lost
+//!    or double-delivered under interleaved cancel/reschedule.
+//!
+//! CI runs this with
+//! `LAG_SIM_WORKERS=100000 cargo test --release --test sim_differential`.
+
+mod common;
+
+use common::{drive, env_fleet, record_sig, sopts, theta_bits, WALL_BUDGET};
+use lag::coordinator::{run, Algorithm, EvictCause, FaultPlan, RunOptions};
+use lag::data::{synthetic, Problem, Task};
+use lag::grad::{BatchSpec, NativeEngine};
+use lag::sim::{simulate, ComputeSpec, EventQueue, NetSpec, SimOptions};
+use lag::util::rng::Rng;
+use std::time::Instant;
+
+/// Differential fleet size: `LAG_SIM_WORKERS`, default 2000 (debug-
+/// friendly); the CI sim job sets 100000 in release.
+fn sim_fleet_size() -> usize {
+    env_fleet("LAG_SIM_WORKERS", 2000, 64)
+}
+
+/// A heterogeneous fleet problem that stays numerically sane at any M:
+/// per-worker smoothness log-spaced over one decade (the `Increasing`
+/// profile overflows at large M, so big fleets use explicit targets).
+fn spread_problem(m: usize, n: usize, d: usize, seed: u64) -> Problem {
+    let denom = (m - 1).max(1) as f64;
+    let targets: Vec<f64> =
+        (0..m).map(|i| 10f64.powf(i as f64 / denom)).collect();
+    synthetic::synthetic_with_targets(Task::LinReg, &targets, n, d, seed)
+}
+
+/// Every algorithm the sequential driver implements, with the batch spec
+/// the stochastic family needs.
+fn all_algorithms() -> Vec<(Algorithm, BatchSpec)> {
+    vec![
+        (Algorithm::Gd, BatchSpec::Full),
+        (Algorithm::LagWk, BatchSpec::Full),
+        (Algorithm::LagPs, BatchSpec::Full),
+        (Algorithm::CycIag, BatchSpec::Full),
+        (Algorithm::NumIag, BatchSpec::Full),
+        (Algorithm::Sgd, BatchSpec::Fixed(4)),
+        (Algorithm::LasgWk, BatchSpec::Fixed(4)),
+        (Algorithm::LasgPs, BatchSpec::Fixed(4)),
+    ]
+}
+
+// ---------------------------------------------------------------------
+// (a) zero-delay sim ≡ sequential run.rs, all algorithms
+// ---------------------------------------------------------------------
+
+#[test]
+fn zero_delay_sim_is_byte_identical_to_sequential_driver() {
+    let p = synthetic::linreg_increasing_l(16, 8, 6, 9001);
+    for (algo, batch) in all_algorithms() {
+        let opts = RunOptions {
+            max_iters: 80,
+            record_every: 1,
+            record_thetas: true,
+            threads: 1,
+            batch,
+            ..Default::default()
+        };
+        let seq = run(&p, algo, &opts, &NativeEngine::new(&p));
+        let rep = simulate(&p, algo, &opts, &SimOptions::default(), &NativeEngine::new(&p))
+            .unwrap();
+        // records carry the objective (f64 bits), uploads, downloads,
+        // gradient evaluations — every trigger decision is visible here
+        assert_eq!(rep.trace.records, seq.records, "{algo:?}: records drifted");
+        assert_eq!(
+            record_sig(&rep.trace.records),
+            record_sig(&seq.records),
+            "{algo:?}: objective bits drifted"
+        );
+        assert_eq!(rep.trace.upload_events, seq.upload_events, "{algo:?}: uploads drifted");
+        assert_eq!(rep.trace.thetas.len(), seq.thetas.len());
+        for (ka, (a, b)) in rep.trace.thetas.iter().zip(&seq.thetas).enumerate() {
+            assert_eq!(theta_bits(a), theta_bits(b), "{algo:?}: iterate {ka} drifted");
+        }
+        assert_eq!(rep.trace.converged_iter, seq.converged_iter);
+        assert_eq!(rep.trace.alpha, seq.alpha);
+    }
+}
+
+/// The equivalence must hold however slow the modeled fleet is: network
+/// and compute models may move virtual time only.
+#[test]
+fn loaded_network_and_compute_models_never_touch_the_math() {
+    let p = synthetic::linreg_increasing_l(16, 8, 6, 9001);
+    let opts =
+        RunOptions { max_iters: 60, record_every: 1, threads: 1, ..Default::default() };
+    let seq = run(&p, Algorithm::LagPs, &opts, &NativeEngine::new(&p));
+    for net in [
+        NetSpec::Constant { latency_ns: 200_000, gbps: 0.1 },
+        NetSpec::SharedLeader { latency_ns: 50_000, gbps: 1.0 },
+        NetSpec::PerLink { latency_ns: 100_000, gbps: 0.5, spread: 0.9, seed: 5 },
+    ] {
+        let sopts_sim = SimOptions {
+            net,
+            compute: ComputeSpec::LogNormal { median_ns: 3_000_000, sigma: 1.2, seed: 8 },
+            sim_seed: 17,
+            ..Default::default()
+        };
+        let rep =
+            simulate(&p, Algorithm::LagPs, &opts, &sopts_sim, &NativeEngine::new(&p)).unwrap();
+        assert_eq!(record_sig(&rep.trace.records), record_sig(&seq.records));
+        assert_eq!(rep.trace.upload_events, seq.upload_events);
+        assert!(rep.stats.sim_ns > 0, "{net:?}: a loaded fleet must take virtual time");
+    }
+}
+
+// ---------------------------------------------------------------------
+// (b) sim ≡ service.rs round-boundary semantics on the same FaultPlan
+// ---------------------------------------------------------------------
+
+#[test]
+fn sim_matches_service_round_semantics_on_the_same_fault_plan() {
+    let m = 12;
+    let p = synthetic::linreg_increasing_l(m, 8, 6, 9002);
+    let opts = RunOptions { max_iters: 30, record_every: 1, ..Default::default() };
+    // straggle windows plus a scheduled drop/rejoin, all boundary-aligned
+    let faults = FaultPlan {
+        straggle: vec![(5, 3, 8), (14, 9, 17)],
+        drop_after: vec![(10, 6)],
+        admit_at: vec![(15, 6)],
+        ..Default::default()
+    };
+
+    let t0 = Instant::now();
+    let (svc_trace, svc_stats) = drive(&p, Algorithm::LagWk, &opts, &sopts(), &faults);
+    assert!(t0.elapsed() < WALL_BUDGET, "service run blew the wall budget");
+
+    let sopts_sim = SimOptions { faults: faults.clone(), ..Default::default() };
+    let rep = simulate(&p, Algorithm::LagWk, &opts, &sopts_sim, &NativeEngine::new(&p)).unwrap();
+
+    assert_eq!(record_sig(&rep.trace.records), record_sig(&svc_trace.records));
+    assert_eq!(rep.trace.upload_events, svc_trace.upload_events);
+    assert_eq!(theta_bits(&rep.stats.final_theta), theta_bits(&svc_stats.final_theta));
+    assert_eq!(rep.stats.evictions, svc_stats.evictions);
+    assert_eq!(rep.stats.eviction_causes, svc_stats.eviction_causes);
+    assert_eq!(rep.stats.forced_skips, svc_stats.forced_skips);
+    assert_eq!(rep.stats.joins, svc_stats.joins);
+    assert_eq!(rep.stats.retries, svc_stats.retries);
+    assert_eq!(rep.stats.eviction_causes, vec![(6, EvictCause::Scheduled)]);
+}
+
+/// Same contract for plain GD (rhs = 0): the upload-event structure is
+/// then decided entirely by the fault machinery, isolating it from the
+/// trigger.
+#[test]
+fn sim_matches_service_under_gd_with_straggle_windows() {
+    let m = 8;
+    let p = synthetic::linreg_increasing_l(m, 8, 5, 9004);
+    let opts = RunOptions { max_iters: 24, record_every: 1, ..Default::default() };
+    let faults =
+        FaultPlan { straggle: vec![(4, 1, 7), (4, 5, 6), (12, 1, 15)], ..Default::default() };
+
+    let (svc_trace, svc_stats) = drive(&p, Algorithm::Gd, &opts, &sopts(), &faults);
+    let sopts_sim = SimOptions { faults: faults.clone(), ..Default::default() };
+    let rep = simulate(&p, Algorithm::Gd, &opts, &sopts_sim, &NativeEngine::new(&p)).unwrap();
+
+    assert_eq!(record_sig(&rep.trace.records), record_sig(&svc_trace.records));
+    assert_eq!(rep.trace.upload_events, svc_trace.upload_events);
+    assert_eq!(theta_bits(&rep.stats.final_theta), theta_bits(&svc_stats.final_theta));
+    assert_eq!(rep.stats.forced_skips, svc_stats.forced_skips);
+    let expected: u64 = [(4u64, 7u64), (4, 6), (12, 15)].iter().map(|&(f, r)| r - f).sum();
+    assert_eq!(rep.stats.forced_skips, expected);
+}
+
+// ---------------------------------------------------------------------
+// (c) scale: identical seeds byte-compare equal; timing identities
+//     cannot change trajectories
+// ---------------------------------------------------------------------
+
+#[test]
+fn identical_seed_large_fleet_runs_byte_compare_equal() {
+    let m = sim_fleet_size();
+    let p = spread_problem(m, 4, 6, 9003);
+    let opts = RunOptions { max_iters: 25, record_every: 1, threads: 1, ..Default::default() };
+    let sopts_sim = SimOptions {
+        net: NetSpec::SharedLeader { latency_ns: 20_000, gbps: 40.0 },
+        compute: ComputeSpec::LogNormal { median_ns: 1_000_000, sigma: 0.7, seed: 21 },
+        sim_seed: 99,
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let a = simulate(&p, Algorithm::LagWk, &opts, &sopts_sim, &NativeEngine::new(&p)).unwrap();
+    let b = simulate(&p, Algorithm::LagWk, &opts, &sopts_sim, &NativeEngine::new(&p)).unwrap();
+    assert!(
+        t0.elapsed() < WALL_BUDGET,
+        "two {m}-worker sim runs blew the wall budget: {:?}",
+        t0.elapsed()
+    );
+
+    assert_eq!(record_sig(&a.trace.records), record_sig(&b.trace.records));
+    assert_eq!(a.trace.upload_events, b.trace.upload_events);
+    assert_eq!(theta_bits(&a.stats.final_theta), theta_bits(&b.stats.final_theta));
+    // the timing layer is deterministic too: virtual clock, event count,
+    // modeled wire volume all byte-compare
+    assert_eq!(a.stats.sim_ns, b.stats.sim_ns);
+    assert_eq!(a.stats.events_processed, b.stats.events_processed);
+    assert_eq!(a.stats.bytes_up, b.stats.bytes_up);
+    assert_eq!(a.stats.bytes_down, b.stats.bytes_down);
+    assert_eq!(a.stats.cluster_compute_ns, b.stats.cluster_compute_ns);
+    assert!(a.stats.sim_ns > 0);
+}
+
+#[test]
+fn permuting_timing_identities_cannot_change_aggregate_trajectories() {
+    let m = sim_fleet_size();
+    let p = spread_problem(m, 4, 6, 9003);
+    let opts = RunOptions { max_iters: 20, record_every: 1, threads: 1, ..Default::default() };
+    let base_sim = SimOptions {
+        net: NetSpec::PerLink { latency_ns: 50_000, gbps: 5.0, spread: 0.6, seed: 31 },
+        compute: ComputeSpec::LogNormal { median_ns: 500_000, sigma: 0.9, seed: 32 },
+        sim_seed: 7,
+        ..Default::default()
+    };
+    let base = simulate(&p, Algorithm::LagPs, &opts, &base_sim, &NativeEngine::new(&p)).unwrap();
+    for rot in [1, m / 3 + 1] {
+        let rotated = SimOptions { compute_rotation: rot, ..base_sim.clone() };
+        let r = simulate(&p, Algorithm::LagPs, &opts, &rotated, &NativeEngine::new(&p)).unwrap();
+        // timing identities moved; the math must not notice
+        assert_eq!(
+            record_sig(&r.trace.records),
+            record_sig(&base.trace.records),
+            "rotation {rot} changed the trajectory"
+        );
+        assert_eq!(r.trace.upload_events, base.trace.upload_events);
+        assert_eq!(theta_bits(&r.stats.final_theta), theta_bits(&base.stats.final_theta));
+    }
+}
+
+// ---------------------------------------------------------------------
+// (d) event-queue properties
+// ---------------------------------------------------------------------
+
+/// Equal-timestamp delivery order is a pure function of the queue seed —
+/// across independent queue instances and regardless of how many distinct
+/// timestamps surround the collisions.
+#[test]
+fn equal_timestamp_events_never_reorder_across_runs() {
+    let drain = |seed: u64| -> Vec<(u64, usize)> {
+        let mut q = EventQueue::new(seed);
+        // 400 events over 40 timestamps: ~10-way collisions everywhere
+        for i in 0..400usize {
+            q.schedule((i % 40) as u64, i);
+        }
+        let mut out = Vec::new();
+        while let Some(ev) = q.pop() {
+            out.push(ev);
+        }
+        out
+    };
+    let a = drain(123);
+    let b = drain(123);
+    assert_eq!(a, b, "same seed must replay the identical delivery order");
+    assert_ne!(
+        drain(124),
+        a,
+        "a different seed must break ties differently (not insertion order)"
+    );
+    // within each timestamp the order is seed-chosen, but time still
+    // dominates: the (time, …) key is globally sorted
+    assert!(a.windows(2).all(|w| w[0].0 <= w[1].0));
+}
+
+/// Randomized interleaving of schedule/cancel/reschedule/pop: whatever
+/// the interleaving, the clock is monotone and exactly the live events
+/// are delivered — none lost, none duplicated.
+#[test]
+fn queue_never_loses_events_under_interleaved_cancel_reschedule() {
+    use std::collections::HashMap;
+
+    for trial in 0..20u64 {
+        let mut rng = Rng::new(0xD15C_0000 + trial);
+        let mut q: EventQueue<u64> = EventQueue::new(trial);
+        // payload -> live event id; every payload scheduled exactly once
+        let mut live: HashMap<u64, u64> = HashMap::new();
+        let mut delivered: Vec<u64> = Vec::new();
+        let mut next_payload = 0u64;
+        let mut last_time = 0u64;
+        for _ in 0..600 {
+            match rng.next_u64() % 5 {
+                // schedule a fresh payload at a random future time
+                0 | 1 => {
+                    let at = q.now() + rng.next_u64() % 50;
+                    let id = q.schedule(at, next_payload);
+                    live.insert(next_payload, id);
+                    next_payload += 1;
+                }
+                // cancel a random live event
+                2 => {
+                    if let Some(&payload) = live.keys().next() {
+                        let id = live.remove(&payload).unwrap();
+                        assert!(q.cancel(id), "live event refused cancellation");
+                    }
+                }
+                // reschedule a random live event to a new future time
+                3 => {
+                    if let Some(&payload) = live.keys().next() {
+                        let id = live[&payload];
+                        let at = q.now() + rng.next_u64() % 50;
+                        let new_id = q.reschedule(id, at, payload);
+                        live.insert(payload, new_id);
+                    }
+                }
+                // deliver one event
+                _ => {
+                    if let Some((at, payload)) = q.pop() {
+                        assert!(at >= last_time, "virtual clock went backwards");
+                        last_time = at;
+                        assert!(
+                            live.remove(&payload).is_some(),
+                            "delivered a cancelled or duplicate event: {payload}"
+                        );
+                        delivered.push(payload);
+                    }
+                }
+            }
+        }
+        // drain: everything still live must arrive exactly once
+        while let Some((at, payload)) = q.pop() {
+            assert!(at >= last_time);
+            last_time = at;
+            assert!(live.remove(&payload).is_some(), "lost track of {payload}");
+            delivered.push(payload);
+        }
+        assert!(live.is_empty(), "trial {trial}: {} events never delivered", live.len());
+        assert!(q.is_empty());
+        // no payload delivered twice
+        let mut seen = delivered.clone();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), delivered.len(), "trial {trial}: duplicate delivery");
+    }
+}

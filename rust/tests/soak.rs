@@ -20,80 +20,21 @@
 //! CI runs this with `cargo test --release --test soak`; locally a smaller
 //! fleet can be chosen via the env var, e.g. `LAG_SOAK_WORKERS=16`.
 
+mod common;
+
+use common::{drive, env_fleet, record_sig, sopts, theta_bits, WALL_BUDGET};
 use lag::coordinator::{
-    run_service, serve_worker, Algorithm, FaultConfig, FaultPlan, IterRecord, RunOptions,
-    RunTrace, ServiceOptions, ServiceStats, WorkerConfig, WorkerExit,
+    run_service, serve_worker, Algorithm, FaultConfig, FaultPlan, RunOptions, ServiceOptions,
+    WorkerConfig, WorkerExit,
 };
-use lag::data::{synthetic, Problem};
+use lag::data::synthetic;
 use std::net::TcpListener;
 use std::time::{Duration, Instant};
 
 /// Fleet size: `LAG_SOAK_WORKERS`, default 64 — the acceptance bar.
 /// Clamped to ≥ 8 so the churn fault plan always has shards to drop.
 fn fleet_size() -> usize {
-    std::env::var("LAG_SOAK_WORKERS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .map(|n: usize| n.max(8))
-        .unwrap_or(64)
-}
-
-/// Per-test wall-clock budget. Generous for debug builds; release CI
-/// finishes far inside it. A hang — the bug class this PR exists to kill —
-/// blows the budget instead of wedging the job until the runner times out.
-const WALL_BUDGET: Duration = Duration::from_secs(120);
-
-fn sopts() -> ServiceOptions {
-    ServiceOptions {
-        join_timeout: Duration::from_secs(60),
-        round_timeout: Duration::from_secs(60),
-        heartbeat_timeout: Duration::from_secs(60),
-        tick: Duration::from_millis(1),
-        ..Default::default()
-    }
-}
-
-/// Leader plus a rejoining preferred-shard fleet on loopback.
-fn drive(
-    p: &Problem,
-    opts: &RunOptions,
-    so: &ServiceOptions,
-    faults: &FaultPlan,
-) -> (RunTrace, ServiceStats) {
-    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-    let addr = listener.local_addr().unwrap().to_string();
-    std::thread::scope(|scope| {
-        let leader = scope.spawn(|| {
-            run_service(listener, p, Algorithm::LagWk, opts, so, faults).unwrap()
-        });
-        for s in 0..p.m() {
-            let addr = addr.clone();
-            scope.spawn(move || {
-                let cfg = WorkerConfig {
-                    preferred: Some(s),
-                    heartbeat_interval: Duration::from_millis(20),
-                    leader_timeout: Duration::from_secs(90),
-                    ..Default::default()
-                };
-                loop {
-                    match serve_worker(&addr, p, &cfg) {
-                        Ok(o) if o.exit == WorkerExit::Shutdown => break,
-                        Ok(_) => std::thread::sleep(Duration::from_millis(2)), // evicted: rejoin
-                        Err(_) => break, // leader gone
-                    }
-                }
-            });
-        }
-        leader.join().unwrap()
-    })
-}
-
-fn record_sig(records: &[IterRecord]) -> Vec<(usize, u64, u64, u64)> {
-    records.iter().map(|r| (r.k, r.obj_err.to_bits(), r.cum_uploads, r.cum_downloads)).collect()
-}
-
-fn theta_bits(v: &[f64]) -> Vec<u64> {
-    v.iter().map(|x| x.to_bits()).collect()
+    env_fleet("LAG_SOAK_WORKERS", 64, 8)
 }
 
 /// The headline soak: a ≥ 64-worker fleet with a dozen scheduled
@@ -126,8 +67,8 @@ fn churn_soak_is_byte_identical_across_runs() {
     faults.io = FaultConfig::timing_only(fault_seed);
 
     let t0 = Instant::now();
-    let (ta, sa) = drive(&p, &opts, &sopts(), &faults);
-    let (tb, sb) = drive(&p, &opts, &sopts(), &faults);
+    let (ta, sa) = drive(&p, Algorithm::LagWk, &opts, &sopts(), &faults);
+    let (tb, sb) = drive(&p, Algorithm::LagWk, &opts, &sopts(), &faults);
     let elapsed = t0.elapsed();
     assert!(elapsed < WALL_BUDGET, "soak blew the wall budget: {elapsed:?}");
 

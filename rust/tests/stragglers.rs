@@ -21,72 +21,18 @@
 //!
 //! CI runs this with `cargo test --release --test stragglers`.
 
+mod common;
+
+use common::{drive, record_sig, sopts, theta_bits, WALL_BUDGET};
 use lag::coordinator::{
-    run_service, serve_worker, Algorithm, FaultPlan, FrameDecoder, IterRecord, RunOptions,
-    RunTrace, ServiceOptions, ServiceStats, WireMsg, WorkerConfig, WorkerExit,
+    run_service, serve_worker, Algorithm, FaultPlan, FrameDecoder, RunOptions, ServiceOptions,
+    WireMsg, WorkerConfig, WorkerExit,
 };
-use lag::data::{synthetic, Problem};
+use lag::data::synthetic;
 use lag::grad::worker_grad;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::time::{Duration, Instant};
-
-/// Per-test wall budget: a wedged pace loop must fail loudly, not hang
-/// the job until the CI runner's timeout.
-const WALL_BUDGET: Duration = Duration::from_secs(120);
-
-fn sopts() -> ServiceOptions {
-    ServiceOptions {
-        join_timeout: Duration::from_secs(60),
-        round_timeout: Duration::from_secs(60),
-        heartbeat_timeout: Duration::from_secs(60),
-        tick: Duration::from_millis(1),
-        ..Default::default()
-    }
-}
-
-fn record_sig(records: &[IterRecord]) -> Vec<(usize, u64, u64, u64)> {
-    records.iter().map(|r| (r.k, r.obj_err.to_bits(), r.cum_uploads, r.cum_downloads)).collect()
-}
-
-fn theta_bits(v: &[f64]) -> Vec<u64> {
-    v.iter().map(|x| x.to_bits()).collect()
-}
-
-/// Leader + a preferred-shard rejoining fleet on loopback.
-fn drive(
-    p: &Problem,
-    algo: Algorithm,
-    opts: &RunOptions,
-    so: &ServiceOptions,
-    faults: &FaultPlan,
-) -> (RunTrace, ServiceStats) {
-    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-    let addr = listener.local_addr().unwrap().to_string();
-    std::thread::scope(|scope| {
-        let leader =
-            scope.spawn(|| run_service(listener, p, algo, opts, so, faults).unwrap());
-        for s in 0..p.m() {
-            let addr = addr.clone();
-            scope.spawn(move || {
-                let cfg = WorkerConfig {
-                    preferred: Some(s),
-                    heartbeat_interval: Duration::from_millis(20),
-                    leader_timeout: Duration::from_secs(90),
-                    ..Default::default()
-                };
-                loop {
-                    match serve_worker(&addr, p, &cfg) {
-                        Ok(o) if o.exit == WorkerExit::Shutdown => break,
-                        Ok(_) => std::thread::sleep(Duration::from_millis(2)),
-                        Err(_) => break,
-                    }
-                }
-            });
-        }
-        leader.join().unwrap()
-    })
-}
 
 /// The headline soak: 16 workers, 2 of them straggling through three
 /// scheduled windows, a staleness cap of D = 6, and deadline pacing
